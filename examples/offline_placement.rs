@@ -1,0 +1,94 @@
+//! Offline-phase walkthrough: profiling → affinity → knee-point r
+//! selection → hierarchical grouping → dynamic replication, with every
+//! intermediate artifact printed.
+//!
+//! This is the "Fig. 2(a)+(b)" example: it shows exactly what the
+//! offline phase computes before any request is served.
+//!
+//! Run: `cargo run --release --example offline_placement`
+
+use grace_moe::bench::Table;
+use grace_moe::cluster::Topology;
+use grace_moe::grouping::{hierarchical, select_r, tradeoff_curve};
+use grace_moe::placement::{LayerPlacement, ReplicationMode};
+use grace_moe::profile::{size_deviation, ModelProfile};
+use grace_moe::stats::Rng;
+use grace_moe::trace::{Profile, TraceGen};
+
+fn main() {
+    let topo = Topology::two_by_two();
+    let experts = 64;
+
+    // --- profiling: record expert selections, build affinity + loads ---
+    let trace = TraceGen {
+        experts,
+        top_k: 8,
+        layers: 4,
+        profile: Profile::Math,
+        seed: 2024,
+    }
+    .generate(2048);
+    let profile = ModelProfile::from_trace(&trace);
+    let lp = &profile.layers[0];
+    println!("profiled 2048 tokens; layer-0 expert load: min {:.0} max \
+              {:.0}",
+             lp.load.iter().cloned().fold(f64::INFINITY, f64::min),
+             lp.load.iter().cloned().fold(0.0, f64::max));
+
+    // top co-activated pairs — the affinity signal grouping exploits
+    let mut pairs = Vec::new();
+    for i in 0..experts {
+        for j in (i + 1)..experts {
+            pairs.push((lp.affinity[(i, j)], i, j));
+        }
+    }
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    println!("hottest co-activation pairs: {:?}",
+             pairs[..5]
+                 .iter()
+                 .map(|&(a, i, j)| format!("({i},{j})×{a:.0}"))
+                 .collect::<Vec<_>>());
+
+    // --- knee-point selection of the non-uniformity ratio r -------------
+    let candidates = [0.0, 0.05, 0.1, 0.15, 0.25, 0.4, 0.6, 1.0];
+    let mut rng = Rng::new(1);
+    let curve = tradeoff_curve(lp, 4, &candidates, &mut rng);
+    let mut t = Table::new(&["r", "U(r)", "S(r)"]);
+    for (r, u, s) in &curve {
+        t.row(vec![format!("{r:.2}"), format!("{u:.4}"),
+                   format!("{s:.3}")]);
+    }
+    println!("\n{}", t.render());
+    let r_star = select_r(lp, 4, &candidates, &mut rng);
+    println!("knee point: r* = {r_star}");
+
+    // --- hierarchical grouping + dynamic replication ---------------------
+    println!("\nper-layer placement (hierarchical grouping, r = {r_star}):");
+    for (l, lp) in profile.layers.iter().enumerate() {
+        let groups = hierarchical(lp, &topo, r_star, &mut rng);
+        let placement = LayerPlacement::build(lp, groups,
+                                              ReplicationMode::Dynamic);
+        let sizes: Vec<usize> =
+            placement.groups.iter().map(Vec::len).collect();
+        println!(
+            "  layer {l}: sizes {:?} (S = {:.2}, U = {:.3}); loads {:?}; \
+             ρ-driven replication: {} hot experts → gpus {:?}; polling \
+             weights {:?}",
+            sizes,
+            size_deviation(&placement.groups, experts),
+            lp.affinity_utilization(&placement.groups),
+            placement
+                .pre_loads
+                .iter()
+                .map(|w| *w as i64)
+                .collect::<Vec<_>>(),
+            placement.replication.hot_experts.len(),
+            placement.replication.replica_gpus,
+            placement
+                .polling
+                .iter()
+                .map(|w| format!("{w:.2}"))
+                .collect::<Vec<_>>()
+        );
+    }
+}

@@ -1,0 +1,151 @@
+"""AOT compile path: lower every L2 computation to HLO *text* artifacts.
+
+Run once by ``make artifacts``; python never appears on the request path.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` —
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+
+* ``{variant}_{artifact}.hlo.txt``  — one HLO module per computation,
+* ``{variant}_weights.bin``         — deterministic f32-LE weight blob,
+* ``manifest.json``                 — shapes, dims, weight offsets; the
+  single source of truth the rust side parses (rust/src/runtime/manifest.rs).
+
+The manifest also records an input fingerprint so ``make artifacts`` is a
+no-op when nothing changed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec_json(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(np.dtype(s.dtype))}
+
+
+def _source_fingerprint() -> str:
+    """Hash of every python source that feeds the artifacts."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in sorted(os.walk(base)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def build_variant(cfg: model.ModelConfig, outdir: str, manifest: dict,
+                  verbose: bool = True) -> None:
+    arts = {}
+    for name, fn, specs in model.artifact_specs(cfg):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{cfg.name}_{name}.hlo.txt"
+        with open(os.path.join(outdir, fname), "w") as f:
+            f.write(text)
+        arts[name] = {
+            "file": fname,
+            "inputs": [_spec_json(s) for s in specs],
+        }
+        if verbose:
+            print(f"  {fname}: {len(text)} chars")
+
+    # Weight blob: concatenated f32-LE tensors in a fixed order, with
+    # offsets (in floats) recorded in the manifest.
+    params = model.init_params(cfg)
+    order = ["emb", "wqkv", "wo", "wg", "w1", "w3", "w2"]
+    offsets = {}
+    pos = 0
+    chunks = []
+    for key in order:
+        a = np.asarray(params[key], dtype=np.float32)
+        offsets[key] = {"offset": pos, "shape": list(a.shape)}
+        pos += a.size
+        chunks.append(a.reshape(-1))
+    blob = np.concatenate(chunks).astype("<f4")
+    wfile = f"{cfg.name}_weights.bin"
+    blob.tofile(os.path.join(outdir, wfile))
+    if verbose:
+        print(f"  {wfile}: {blob.size * 4} bytes")
+
+    manifest["variants"][cfg.name] = {
+        "config": {
+            "experts": cfg.experts, "top_k": cfg.top_k,
+            "layers": cfg.layers, "paper_layers": cfg.paper_layers,
+            "hidden": cfg.hidden, "ffn": cfg.ffn, "heads": cfg.heads,
+            "vocab": cfg.vocab, "tile_t": cfg.tile_t, "tile_m": cfg.tile_m,
+            "cap_tiles": cfg.cap_tiles, "ctx": cfg.ctx,
+        },
+        "artifacts": arts,
+        "weights": {"file": wfile, "tensors": offsets},
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory (default: ../artifacts)")
+    ap.add_argument("--variants", default=",".join(model.VARIANTS),
+                    help="comma-separated variant names")
+    ap.add_argument("--force", action="store_true",
+                    help="rebuild even if the fingerprint matches")
+    args = ap.parse_args()
+
+    outdir = args.out
+    os.makedirs(outdir, exist_ok=True)
+    manifest_path = os.path.join(outdir, "manifest.json")
+    fp = _source_fingerprint()
+
+    if not args.force and os.path.exists(manifest_path):
+        try:
+            with open(manifest_path) as f:
+                old = json.load(f)
+            if old.get("fingerprint") == fp and all(
+                    v in old.get("variants", {})
+                    for v in args.variants.split(",")):
+                print(f"artifacts up to date (fingerprint {fp[:12]}…)")
+                return 0
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    manifest = {"fingerprint": fp, "variants": {}}
+    for vname in args.variants.split(","):
+        cfg = model.VARIANTS[vname]
+        print(f"building {vname} "
+              f"(E={cfg.experts} K={cfg.top_k} L={cfg.layers} "
+              f"H={cfg.hidden} F={cfg.ffn})")
+        build_variant(cfg, outdir, manifest)
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {manifest_path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,221 @@
+"""L1 Pallas kernels: grouped expert FFN (the MoE compute hot-spot).
+
+This is the TPU re-think of the MegaBlocks/Triton grouped GEMM the paper
+builds on (see DESIGN.md §Hardware-Adaptation):
+
+* the Triton version assigns one *threadblock* per (expert block, tile) and
+  uses shared memory for operand staging; here the same schedule is a Pallas
+  ``grid`` whose ``BlockSpec`` index maps stream token tiles HBM→VMEM,
+* accumulation happens in VMEM-resident output blocks (f32),
+* tiles are shaped in MXU-friendly multiples (the tiny CPU-interpret configs
+  use smaller tiles, but the BlockSpec structure is identical),
+* the scatter/combine step is done outside the kernel with a segment-sum
+  (TPUs have no fast global atomics).
+
+Two variants are provided and tested against ``ref.grouped_ffn_ref``:
+
+``grouped_ffn_masked``
+    grid = (m_tiles, E): every (tile, expert) pair computes the full tile
+    FFN and accumulates a row-masked result. Simple, shape-agnostic, and the
+    fallback used when expert alignment is unavailable. Compute cost is
+    ``T × E`` tile-FFNs.
+
+``grouped_ffn_tiled``
+    grid = (m_tiles,): the dispatch buffer is *expert-aligned* (each
+    expert's rows padded to a tile multiple) and a scalar-prefetched
+    ``tile_expert`` map drives the weight ``BlockSpec`` index map, so each
+    tile loads exactly one expert's weights. Compute cost is ``T`` tile-FFNs
+    — this is the production variant lowered into the AOT artifacts.
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom calls); real-TPU resource estimates are derived from the BlockSpecs
+in ``python/compile/kernels/ANALYSIS.md``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import ref
+
+
+def _silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+# ---------------------------------------------------------------------------
+# Variant 1: masked accumulation, grid = (m_tiles, E)
+# ---------------------------------------------------------------------------
+
+
+def _masked_kernel(offs_ref, x_ref, w1_ref, w3_ref, w2_ref, o_ref, *,
+                   tile_m: int):
+    """One (token-tile, expert) step of the masked grouped FFN."""
+    m = pl.program_id(0)
+    e = pl.program_id(1)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    start = offs_ref[e]
+    end = offs_ref[e + 1]
+    row = m * tile_m + jax.lax.broadcasted_iota(jnp.int32, (tile_m, 1), 0)
+    mask = (row >= start) & (row < end)  # [tile_m, 1]
+
+    x = x_ref[...]
+    w1 = w1_ref[0]
+    w3 = w3_ref[0]
+    w2 = w2_ref[0]
+    h = _silu(jnp.dot(x, w1, preferred_element_type=jnp.float32))
+    h = h * jnp.dot(x, w3, preferred_element_type=jnp.float32)
+    y = jnp.dot(h, w2, preferred_element_type=jnp.float32)
+    o_ref[...] += jnp.where(mask, y, 0.0).astype(o_ref.dtype)
+
+
+def grouped_ffn_masked(xs: jax.Array, sizes: jax.Array, w1: jax.Array,
+                       w3: jax.Array, w2: jax.Array,
+                       tile_m: int = 32) -> jax.Array:
+    """Grouped expert FFN over a sorted dispatch buffer (masked variant).
+
+    Args / returns match :func:`ref.grouped_ffn_ref`.
+    """
+    T, H = xs.shape
+    E, _, F = w1.shape
+    if T % tile_m != 0:
+        raise ValueError(f"T={T} must be a multiple of tile_m={tile_m}")
+    m_tiles = T // tile_m
+    # offs[e] .. offs[e+1] is expert e's row range in the sorted buffer.
+    offs = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(sizes).astype(jnp.int32)])
+
+    kernel = functools.partial(_masked_kernel, tile_m=tile_m)
+    return pl.pallas_call(
+        kernel,
+        grid=(m_tiles, E),
+        in_specs=[
+            pl.BlockSpec((E + 1,), lambda m, e: (0,)),         # offsets
+            pl.BlockSpec((tile_m, H), lambda m, e: (m, 0)),    # x tile
+            pl.BlockSpec((1, H, F), lambda m, e: (e, 0, 0)),   # w1[e]
+            pl.BlockSpec((1, H, F), lambda m, e: (e, 0, 0)),   # w3[e]
+            pl.BlockSpec((1, F, H), lambda m, e: (e, 0, 0)),   # w2[e]
+        ],
+        out_specs=pl.BlockSpec((tile_m, H), lambda m, e: (m, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, H), xs.dtype),
+        interpret=True,
+    )(offs, xs, w1, w3, w2)
+
+
+# ---------------------------------------------------------------------------
+# Variant 2: expert-aligned tiles, grid = (m_tiles,)
+# ---------------------------------------------------------------------------
+
+
+def _tiled_kernel(te_ref, x_ref, w1_ref, w3_ref, w2_ref, o_ref, *,
+                  tile_m: int):
+    """One token-tile step; the tile's expert weights were selected by the
+    scalar-prefetch-driven BlockSpec index maps, so the body is a dense
+    tile FFN. Tiles whose expert id is E (padding tiles) emit zeros."""
+    m = pl.program_id(0)
+    is_pad = te_ref[m] < 0
+    x = x_ref[...]
+    w1 = w1_ref[0]
+    w3 = w3_ref[0]
+    w2 = w2_ref[0]
+    h = _silu(jnp.dot(x, w1, preferred_element_type=jnp.float32))
+    h = h * jnp.dot(x, w3, preferred_element_type=jnp.float32)
+    y = jnp.dot(h, w2, preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.where(is_pad, 0.0, y).astype(o_ref.dtype)
+
+
+def grouped_ffn_tiled(xs: jax.Array, tile_expert: jax.Array, w1: jax.Array,
+                      w3: jax.Array, w2: jax.Array,
+                      tile_m: int = 32) -> jax.Array:
+    """Grouped expert FFN over an *expert-aligned* dispatch buffer.
+
+    Args:
+      xs: ``[T, H]`` dispatch buffer in which every tile of ``tile_m`` rows
+        belongs to a single expert (the dispatcher pads each expert's rows
+        to a multiple of ``tile_m``).
+      tile_expert: ``[T / tile_m]`` i32; expert id of each tile, ``-1`` for
+        all-padding tiles.
+      w1, w3: ``[E, H, F]``; w2: ``[E, F, H]``.
+    Returns:
+      ``[T, H]``; rows of padding tiles are zero. Rows that are padding
+      *within* a live tile compute garbage and must be dropped by the
+      combine step (their ``dst`` is the drop slot) — this mirrors the
+      MegaBlocks contract.
+    """
+    T, H = xs.shape
+    E, _, F = w1.shape
+    if T % tile_m != 0:
+        raise ValueError(f"T={T} must be a multiple of tile_m={tile_m}")
+    m_tiles = T // tile_m
+    if tile_expert.shape != (m_tiles,):
+        raise ValueError(f"tile_expert must be [{m_tiles}]")
+
+    kernel = functools.partial(_tiled_kernel, tile_m=tile_m)
+
+    # `tile_expert` doubles as the scalar prefetch operand: the weight
+    # BlockSpec index maps read it to select the expert block for each tile.
+    # Padding tiles (-1) clamp to expert 0; the kernel masks their output.
+    def widx(m, te):
+        return (jnp.maximum(te[m], 0), 0, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(m_tiles,),
+            in_specs=[
+                pl.BlockSpec((tile_m, H), lambda m, te: (m, 0)),
+                pl.BlockSpec((1, H, F), widx),
+                pl.BlockSpec((1, H, F), widx),
+                pl.BlockSpec((1, F, H), lambda m, te:
+                             (jnp.maximum(te[m], 0), 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((tile_m, H), lambda m, te: (m, 0)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((T, H), xs.dtype),
+        interpret=True,
+    )(tile_expert, xs, w1, w3, w2)
+
+
+def align_dispatch(eid, tile_m: int, capacity_tiles: int):
+    """Host-side helper: build an expert-aligned layout from per-row expert
+    ids (numpy; used by tests and by the rust engine's python mirror).
+
+    Returns (perm, tile_expert, dst) where ``perm[i]`` is the source row for
+    aligned slot ``i`` (or -1 for padding), ``tile_expert`` the per-tile
+    expert map, and ``dst`` the inverse scatter map.
+    """
+    import numpy as np
+
+    eid = np.asarray(eid)
+    E = int(eid.max(initial=-1)) + 1
+    slots = []
+    tile_expert = []
+    for e in range(E):
+        rows = np.nonzero(eid == e)[0]
+        if len(rows) == 0:
+            continue
+        pad = (-len(rows)) % tile_m
+        slots.extend(rows.tolist() + [-1] * pad)
+        tile_expert.extend([e] * ((len(rows) + pad) // tile_m))
+    total_tiles = capacity_tiles
+    if len(tile_expert) > total_tiles:
+        raise ValueError("capacity exceeded")
+    slots.extend([-1] * ((total_tiles - len(tile_expert)) * tile_m))
+    tile_expert.extend([-1] * (total_tiles - len(tile_expert)))
+    perm = np.asarray(slots, dtype=np.int32)
+    tile_expert = np.asarray(tile_expert, dtype=np.int32)
+    n_rows = len(eid)
+    dst = np.full(perm.shape, n_rows, dtype=np.int32)  # n_rows == drop slot
+    live = perm >= 0
+    dst[live] = perm[live]
+    return perm, tile_expert, dst

@@ -1,0 +1,183 @@
+"""Pure-jnp reference oracle for the L1 Pallas kernels.
+
+Everything in this file is deliberately written with plain `jax.numpy`
+primitives (no pallas, no custom calls) so that it can serve as the
+correctness oracle for the kernels in this package. The pytest suite in
+``python/tests`` asserts ``assert_allclose(kernel(...), ref(...))`` over
+randomized shapes and dtypes (hypothesis sweeps).
+
+Conventions
+-----------
+The grouped expert FFN operates on a *dispatch buffer*: a ``[T, H]`` array of
+token copies that has already been sorted by destination expert. ``sizes[e]``
+gives the number of rows assigned to local expert ``e``; rows beyond
+``sum(sizes)`` are padding and must map to zeros in the output. Experts use
+the SwiGLU parameterisation ``y = (silu(x @ w1) * (x @ w3)) @ w2`` used by
+OLMoE / DeepSeek-V2 / Qwen3 (Table 3 of the paper).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def silu(x: jax.Array) -> jax.Array:
+    """Numerically plain SiLU: x * sigmoid(x)."""
+    return x * jax.nn.sigmoid(x)
+
+
+def expert_ffn_ref(x: jax.Array, w1: jax.Array, w3: jax.Array,
+                   w2: jax.Array) -> jax.Array:
+    """Single-expert SwiGLU FFN: ``(silu(x w1) * (x w3)) w2``.
+
+    Args:
+      x: ``[T, H]`` tokens.
+      w1, w3: ``[H, F]`` up/gate projections.
+      w2: ``[F, H]`` down projection.
+    Returns:
+      ``[T, H]``.
+    """
+    return (silu(x @ w1) * (x @ w3)) @ w2
+
+
+def sizes_to_expert_ids(sizes: jax.Array, total_rows: int) -> jax.Array:
+    """Expand per-expert row counts into a per-row expert id vector.
+
+    Rows past ``sum(sizes)`` get id ``E`` (one past the last expert) so that
+    they can be masked out. Implemented with a cumulative-sum comparison so it
+    stays jit-friendly (no dynamic shapes).
+    """
+    ends = jnp.cumsum(sizes)  # [E]
+    row = jnp.arange(total_rows)[:, None]  # [T, 1]
+    # Number of expert-ends that are <= row index == expert id of the row.
+    return jnp.sum(row >= ends[None, :], axis=1)
+
+
+def grouped_ffn_ref(xs: jax.Array, sizes: jax.Array, w1: jax.Array,
+                    w3: jax.Array, w2: jax.Array) -> jax.Array:
+    """Reference grouped expert FFN over a sorted dispatch buffer.
+
+    Args:
+      xs: ``[T, H]`` dispatch buffer, rows sorted by expert; rows beyond
+        ``sum(sizes)`` are padding.
+      sizes: ``[E]`` int32 per-expert row counts (may contain zeros).
+      w1, w3: ``[E, H, F]`` expert up/gate weights.
+      w2: ``[E, F, H]`` expert down weights.
+    Returns:
+      ``[T, H]``; padding rows are exactly zero.
+    """
+    T = xs.shape[0]
+    E = sizes.shape[0]
+    eid = sizes_to_expert_ids(sizes, T)  # [T], == E for padding rows
+    out = jnp.zeros_like(xs)
+    for e in range(E):
+        y = expert_ffn_ref(xs, w1[e], w3[e], w2[e])
+        out = jnp.where((eid == e)[:, None], y, out)
+    return out
+
+
+def topk_iterative(probs: jax.Array, k: int):
+    """Top-k by k rounds of argmax + masking.
+
+    Functionally equivalent to ``jax.lax.top_k`` (ties broken toward the
+    lower index, like top_k), but lowers to plain reduce/select HLO ops.
+    This matters for the AOT path: jax ≥ 0.7 lowers ``lax.top_k`` to a
+    ``topk(…, largest=true)`` HLO instruction that xla_extension 0.5.1's
+    text parser rejects; the iterative form round-trips cleanly.
+    """
+    T = probs.shape[0]
+    p = probs
+    vals, idxs = [], []
+    rows = jnp.arange(T)
+    for _ in range(k):
+        i = jnp.argmax(p, axis=-1)
+        v = p[rows, i]
+        vals.append(v)
+        idxs.append(i)
+        p = p.at[rows, i].set(-jnp.inf)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def gate_ref(x: jax.Array, wg: jax.Array, k: int):
+    """Reference top-k softmax gate (softmax-then-topk, renormalised).
+
+    Args:
+      x: ``[T, H]`` tokens.
+      wg: ``[H, E]`` gate projection.
+      k: number of experts per token.
+    Returns:
+      ``(weights [T, k], indices [T, k] i32)`` with weights summing to 1
+      across k (OLMoE-style renormalisation).
+    """
+    logits = x @ wg
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = topk_iterative(probs, k)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)
+    return topw.astype(x.dtype), topi.astype(jnp.int32)
+
+
+def combine_ref(ys: jax.Array, gate_w: jax.Array, dst: jax.Array,
+                num_tokens: int) -> jax.Array:
+    """Reference combine: weighted scatter-add of expert outputs.
+
+    Args:
+      ys: ``[Td, H]`` per-copy expert outputs (dispatch order).
+      gate_w: ``[Td]`` gate weight per copy.
+      dst: ``[Td]`` i32 destination token slot per copy; ``num_tokens`` (one
+        past the end) marks padding copies, which are dropped.
+      num_tokens: number of output token slots.
+    Returns:
+      ``[num_tokens, H]``.
+    """
+    weighted = ys * gate_w[:, None]
+    return jax.ops.segment_sum(weighted, dst, num_segments=num_tokens + 1)[
+        :num_tokens]
+
+
+def attention_ref(x: jax.Array, wqkv: jax.Array, wo: jax.Array,
+                  n_heads: int, valid_len=None) -> jax.Array:
+    """Reference pre-LN causal self-attention block with residual.
+
+    Args:
+      x: ``[T, H]``.
+      wqkv: ``[H, 3H]`` fused QKV projection.
+      wo: ``[H, H]`` output projection.
+      n_heads: head count (H must divide evenly).
+      valid_len: optional number of valid (non-padding) rows; padding rows
+        are masked out of the attention and pass through unchanged.
+    Returns:
+      ``[T, H]`` = x + attn(LN(x)).
+    """
+    T, H = x.shape
+    hd = H // n_heads
+    xn = layernorm_ref(x)
+    qkv = xn @ wqkv
+    q, kk, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(a):
+        return a.reshape(T, n_heads, hd).transpose(1, 0, 2)  # [nh, T, hd]
+
+    q, kk, v = heads(q), heads(kk), heads(v)
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, dtype=x.dtype))
+    scores = jnp.einsum("hqd,hkd->hqk", q, kk) * scale
+    mask = jnp.tril(jnp.ones((T, T), dtype=bool))
+    if valid_len is not None:
+        vl = jnp.asarray(valid_len)
+        mask = mask & (jnp.arange(T) < vl)[None, :]
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,hkd->hqd", probs, v)
+    ctx = ctx.transpose(1, 0, 2).reshape(T, H)
+    out = x + ctx @ wo
+    if valid_len is not None:
+        vl = jnp.asarray(valid_len)
+        out = jnp.where((jnp.arange(T) < vl)[:, None], out, x)
+    return out
+
+
+def layernorm_ref(x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Plain layernorm (no learned scale/shift) used by the tiny models."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps)

@@ -1,0 +1,239 @@
+"""L2: the JAX MoE transformer used by the rust engine.
+
+This module defines three *architecture-faithful but scaled-down* MoE model
+variants mirroring Table 3 of the paper (same top-k and expert counts,
+reduced hidden dims / layer counts so the CPU-PJRT interpret path stays
+fast), plus the jit-able computations that ``aot.py`` lowers to HLO text:
+
+=====================  =====================================================
+artifact               computation
+=====================  =====================================================
+``{V}_gate``           pre-LN + top-k softmax gate (returns the normalised
+                       activations so rust can dispatch them directly)
+``{V}_grouped_ffn``    the L1 Pallas grouped expert FFN over an
+                       expert-aligned dispatch buffer (one per-GPU call)
+``{V}_expert_ffn``     single-expert SwiGLU FFN (per-expert baseline path +
+                       compute-cost calibration)
+``{V}_attention``      causal self-attention block with valid-length mask
+``{V}_embed``          token embedding lookup
+``{V}_lmhead``         tied-embedding logits
+``{V}_moe_layer_full`` the whole MoE layer on one device — the *lossless
+                       oracle* the rust engine checks distributed execution
+                       against (paper §1: "lossless co-optimization")
+=====================  =====================================================
+
+The rust side never imports python; it reads ``artifacts/manifest.json``
+(written by ``aot.py``) for all shape metadata.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import grouped_ffn_tiled, ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static architecture of one tiny model variant.
+
+    Attributes mirror Table 3 of the paper: ``experts``/``top_k``/(real)
+    ``paper_layers`` are faithful; ``hidden``/``ffn``/``layers`` are scaled
+    down for the CPU interpret path. ``tile_t`` is the padded token tile the
+    gate/FFN artifacts are compiled for; ``tile_m`` the Pallas row-tile;
+    ``cap_tiles`` the per-call dispatch capacity of the grouped FFN
+    artifact; ``ctx`` the attention context capacity.
+    """
+
+    name: str
+    experts: int
+    top_k: int
+    layers: int
+    paper_layers: int
+    hidden: int
+    ffn: int
+    heads: int
+    vocab: int
+    tile_t: int = 64
+    tile_m: int = 8
+    cap_tiles: int = 96
+    ctx: int = 192
+
+    @property
+    def cap_rows(self) -> int:
+        return self.cap_tiles * self.tile_m
+
+
+#: Table 3 of the paper, scaled: same TOP_K / EXPERTS; layer counts and
+#: hidden dims reduced (paper values kept in ``paper_layers`` and mirrored
+#: in the rust simulator configs, which use the full-scale numbers).
+VARIANTS: dict[str, ModelConfig] = {
+    "olmoe_tiny": ModelConfig(
+        name="olmoe_tiny", experts=64, top_k=8, layers=4, paper_layers=16,
+        hidden=64, ffn=128, heads=4, vocab=512),
+    "dsv2_tiny": ModelConfig(
+        name="dsv2_tiny", experts=64, top_k=6, layers=4, paper_layers=26,
+        hidden=64, ffn=96, heads=4, vocab=512),
+    "qwen3_tiny": ModelConfig(
+        name="qwen3_tiny", experts=128, top_k=8, layers=4, paper_layers=48,
+        hidden=64, ffn=128, heads=4, vocab=512),
+}
+
+
+# ---------------------------------------------------------------------------
+# Per-artifact computations (all pure functions of their array arguments)
+# ---------------------------------------------------------------------------
+
+
+def gate_fn(cfg: ModelConfig, x, wg):
+    """Pre-LN + top-k gate. Returns (xn, topw, topi)."""
+    xn = ref.layernorm_ref(x)
+    topw, topi = ref.gate_ref(xn, wg, cfg.top_k)
+    return xn, topw, topi
+
+
+def grouped_ffn_fn(cfg: ModelConfig, xa, tile_expert, w1, w3, w2):
+    """The L1 Pallas kernel over an expert-aligned per-GPU dispatch buffer."""
+    return (grouped_ffn_tiled(xa, tile_expert, w1, w3, w2,
+                              tile_m=cfg.tile_m),)
+
+
+def expert_ffn_fn(cfg: ModelConfig, x, w1, w3, w2):
+    """Single-expert FFN (used by per-expert engine mode + calibration)."""
+    del cfg
+    return (ref.expert_ffn_ref(x, w1, w3, w2),)
+
+
+def attention_fn(cfg: ModelConfig, x, wqkv, wo, valid_len):
+    return (ref.attention_ref(x, wqkv, wo, cfg.heads, valid_len),)
+
+
+def embed_fn(cfg: ModelConfig, ids, emb):
+    del cfg
+    return (jnp.take(emb, ids, axis=0),)
+
+
+def lmhead_fn(cfg: ModelConfig, x, emb):
+    del cfg
+    return (x @ emb.T,)
+
+
+def moe_layer_full_fn(cfg: ModelConfig, x, wg, w1, w3, w2):
+    """Whole MoE layer (LN → gate → all experts → combine → residual) on a
+    single device. This is the lossless oracle: any distributed placement
+    and routing must reproduce these numerics bit-for-bit up to float
+    reassociation."""
+    xn = ref.layernorm_ref(x)
+    topw, topi = ref.gate_ref(xn, wg, cfg.top_k)
+    # Dense evaluation of every expert on every token, then a sparse
+    # combine with the top-k weight matrix.
+    h = ref.silu(jnp.einsum("th,ehf->etf", xn, w1))
+    h = h * jnp.einsum("th,ehf->etf", xn, w3)
+    y_all = jnp.einsum("etf,efh->eth", h, w2)  # [E, T, H]
+    T = x.shape[0]
+    sel = jnp.zeros((T, cfg.experts), x.dtype)
+    sel = sel.at[jnp.arange(T)[:, None], topi].set(topw)
+    y = jnp.einsum("te,eth->th", sel, y_all)
+    return (x + y,)
+
+
+def moe_block_fn(cfg: ModelConfig, x, wqkv, wo, wg, w1, w3, w2, valid_len):
+    """attention + full MoE layer (single-device reference block)."""
+    (a,) = attention_fn(cfg, x, wqkv, wo, valid_len)
+    return moe_layer_full_fn(cfg, a, wg, w1, w3, w2)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model single-device reference (used by python tests and by the
+# end-to-end losslessness check)
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    """Deterministic random weights for one variant.
+
+    Weights cross the python→rust boundary as plain f32 little-endian
+    binary blobs written by ``aot.py`` next to the HLO artifacts
+    (``{V}_weights.bin`` + manifest entries), so both sides share bytes
+    rather than having to agree on an RNG implementation.
+    """
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 7)
+    c = cfg
+    s_h = 1.0 / jnp.sqrt(c.hidden)
+    s_f = 1.0 / jnp.sqrt(c.ffn)
+    return {
+        "emb": jax.random.normal(ks[0], (c.vocab, c.hidden)) * 0.02,
+        "wqkv": jax.random.normal(
+            ks[1], (c.layers, c.hidden, 3 * c.hidden)) * s_h,
+        "wo": jax.random.normal(ks[2], (c.layers, c.hidden, c.hidden)) * s_h,
+        "wg": jax.random.normal(ks[3], (c.layers, c.hidden, c.experts)) * s_h,
+        "w1": jax.random.normal(
+            ks[4], (c.layers, c.experts, c.hidden, c.ffn)) * s_h,
+        "w3": jax.random.normal(
+            ks[5], (c.layers, c.experts, c.hidden, c.ffn)) * s_h,
+        "w2": jax.random.normal(
+            ks[6], (c.layers, c.experts, c.ffn, c.hidden)) * s_f,
+    }
+
+
+def forward_ref(cfg: ModelConfig, params, ids, valid_len=None):
+    """Single-device full forward pass: ids [C] → logits [C, V]."""
+    (x,) = embed_fn(cfg, ids, params["emb"])
+    for l in range(cfg.layers):
+        (x,) = moe_block_fn(cfg, x, params["wqkv"][l], params["wo"][l],
+                            params["wg"][l], params["w1"][l],
+                            params["w3"][l], params["w2"][l],
+                            valid_len if valid_len is not None
+                            else ids.shape[0])
+    (logits,) = lmhead_fn(cfg, x, params["emb"])
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry consumed by aot.py
+# ---------------------------------------------------------------------------
+
+
+def artifact_specs(cfg: ModelConfig):
+    """(name, fn, [ShapeDtypeStruct…]) for every artifact of one variant."""
+    c = cfg
+    f32 = jnp.float32
+    i32 = jnp.int32
+
+    def S(shape, dt=f32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    return [
+        ("gate",
+         functools.partial(gate_fn, c),
+         [S((c.tile_t, c.hidden)), S((c.hidden, c.experts))]),
+        ("grouped_ffn",
+         functools.partial(grouped_ffn_fn, c),
+         [S((c.cap_rows, c.hidden)), S((c.cap_tiles,), i32),
+          S((c.experts, c.hidden, c.ffn)), S((c.experts, c.hidden, c.ffn)),
+          S((c.experts, c.ffn, c.hidden))]),
+        ("expert_ffn",
+         functools.partial(expert_ffn_fn, c),
+         [S((c.tile_t, c.hidden)), S((c.hidden, c.ffn)),
+          S((c.hidden, c.ffn)), S((c.ffn, c.hidden))]),
+        ("attention",
+         functools.partial(attention_fn, c),
+         [S((c.ctx, c.hidden)), S((c.hidden, 3 * c.hidden)),
+          S((c.hidden, c.hidden)), S((), i32)]),
+        ("embed",
+         functools.partial(embed_fn, c),
+         [S((c.ctx,), i32), S((c.vocab, c.hidden))]),
+        ("lmhead",
+         functools.partial(lmhead_fn, c),
+         [S((c.ctx, c.hidden)), S((c.vocab, c.hidden))]),
+        ("moe_layer_full",
+         functools.partial(moe_layer_full_fn, c),
+         [S((c.tile_t, c.hidden)), S((c.hidden, c.experts)),
+          S((c.experts, c.hidden, c.ffn)), S((c.experts, c.hidden, c.ffn)),
+          S((c.experts, c.ffn, c.hidden))]),
+    ]

@@ -1,0 +1,202 @@
+"""L1 kernel correctness: Pallas grouped FFN vs the pure-jnp oracle.
+
+The CORE correctness signal of the compute stack: hypothesis sweeps shapes,
+dtypes, and (pathological) size distributions and asserts allclose against
+``ref.grouped_ffn_ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (align_dispatch, grouped_ffn_masked,
+                             grouped_ffn_tiled, ref)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk(rng, T, H, F, E, dtype=np.float32):
+    xs = rng.standard_normal((T, H)).astype(dtype)
+    w1 = (rng.standard_normal((E, H, F)) * 0.1).astype(dtype)
+    w3 = (rng.standard_normal((E, H, F)) * 0.1).astype(dtype)
+    w2 = (rng.standard_normal((E, F, H)) * 0.1).astype(dtype)
+    return xs, w1, w3, w2
+
+
+def _sizes(rng, E, total):
+    """Random per-expert sizes summing to <= total, incl. zeros."""
+    cuts = np.sort(rng.integers(0, total + 1, size=E - 1))
+    sizes = np.diff(np.concatenate([[0], cuts, [rng.integers(0, total + 1)]]))
+    sizes = np.maximum(sizes, 0)
+    while sizes.sum() > total:
+        i = int(np.argmax(sizes))
+        sizes[i] -= sizes.sum() - total
+    return sizes.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# masked variant
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tiles=st.integers(1, 6),
+    tile_m=st.sampled_from([4, 8, 16]),
+    H=st.sampled_from([8, 16, 32]),
+    F=st.sampled_from([8, 24, 64]),
+    E=st.integers(1, 9),
+)
+def test_masked_matches_ref(seed, tiles, tile_m, H, F, E):
+    rng = np.random.default_rng(seed)
+    T = tiles * tile_m
+    xs, w1, w3, w2 = _mk(rng, T, H, F, E)
+    sizes = _sizes(rng, E, T)
+    want = ref.grouped_ffn_ref(jnp.asarray(xs), jnp.asarray(sizes),
+                               w1, w3, w2)
+    got = grouped_ffn_masked(jnp.asarray(xs), jnp.asarray(sizes),
+                             w1, w3, w2, tile_m=tile_m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_masked_all_padding():
+    rng = np.random.default_rng(0)
+    xs, w1, w3, w2 = _mk(rng, 32, 16, 24, 4)
+    sizes = np.zeros(4, np.int32)
+    got = grouped_ffn_masked(jnp.asarray(xs), jnp.asarray(sizes),
+                             w1, w3, w2, tile_m=8)
+    np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+
+def test_masked_single_expert_equals_dense_ffn():
+    rng = np.random.default_rng(1)
+    xs, w1, w3, w2 = _mk(rng, 32, 16, 24, 1)
+    sizes = np.array([32], np.int32)
+    got = grouped_ffn_masked(jnp.asarray(xs), jnp.asarray(sizes),
+                             w1, w3, w2, tile_m=8)
+    want = ref.expert_ffn_ref(jnp.asarray(xs), w1[0], w3[0], w2[0])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_masked_rejects_misaligned_T():
+    rng = np.random.default_rng(2)
+    xs, w1, w3, w2 = _mk(rng, 30, 16, 24, 2)
+    with pytest.raises(ValueError):
+        grouped_ffn_masked(jnp.asarray(xs), jnp.zeros(2, jnp.int32),
+                           w1, w3, w2, tile_m=8)
+
+
+# ---------------------------------------------------------------------------
+# tiled (expert-aligned, scalar-prefetch) variant — the production kernel
+# ---------------------------------------------------------------------------
+
+
+def _run_tiled(rng, T, H, F, E, tile_m, cap_tiles):
+    xs, w1, w3, w2 = _mk(rng, T, H, F, E)
+    sizes = _sizes(rng, E, T)
+    total = int(sizes.sum())
+    eid = np.repeat(np.arange(E), sizes)
+    perm, tile_expert, dst = align_dispatch(eid, tile_m, cap_tiles)
+    xa = np.zeros((cap_tiles * tile_m, H), np.float32)
+    live = perm >= 0
+    xa[live] = xs[perm[live]]
+    ya = np.asarray(grouped_ffn_tiled(
+        jnp.asarray(xa), jnp.asarray(tile_expert), w1, w3, w2,
+        tile_m=tile_m))
+    out = np.zeros((T, H), np.float32)
+    out[dst[live]] = ya[live]
+    want = np.asarray(ref.grouped_ffn_ref(
+        jnp.asarray(xs), jnp.asarray(sizes), w1, w3, w2))
+    return out[:total], want[:total]
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    tile_m=st.sampled_from([4, 8]),
+    H=st.sampled_from([8, 16]),
+    F=st.sampled_from([8, 24]),
+    E=st.integers(1, 8),
+)
+def test_tiled_matches_ref(seed, tile_m, H, F, E):
+    rng = np.random.default_rng(seed)
+    T = 48
+    # worst-case alignment pad: one (tile_m - 1) per live expert
+    cap_tiles = (T + E * (tile_m - 1)) // tile_m + 1
+    got, want = _run_tiled(rng, T, H, F, E, tile_m, cap_tiles)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_tiled_padding_tiles_emit_zeros():
+    rng = np.random.default_rng(3)
+    H, F, E, tile_m = 16, 24, 3, 8
+    xs, w1, w3, w2 = _mk(rng, 16, H, F, E)
+    eid = np.array([0] * 16)
+    perm, tile_expert, dst = align_dispatch(eid, tile_m, capacity_tiles=6)
+    assert list(tile_expert) == [0, 0, -1, -1, -1, -1]
+    xa = np.zeros((48, H), np.float32)
+    xa[perm >= 0] = xs[perm[perm >= 0]]
+    # poison padding-tile inputs: output must still be exactly zero there
+    xa[16:] = 7.7
+    ya = np.asarray(grouped_ffn_tiled(
+        jnp.asarray(xa), jnp.asarray(tile_expert), w1, w3, w2,
+        tile_m=tile_m))
+    np.testing.assert_array_equal(ya[16:], 0.0)
+
+
+def test_tiled_bf16_close_to_f32():
+    rng = np.random.default_rng(4)
+    H, F, E, tile_m = 16, 24, 2, 8
+    xs, w1, w3, w2 = _mk(rng, 16, H, F, E)
+    eid = np.array([0] * 10 + [1] * 6)
+    perm, tile_expert, dst = align_dispatch(eid, tile_m, capacity_tiles=4)
+    xa = np.zeros((32, H), np.float32)
+    xa[perm >= 0] = xs[perm[perm >= 0]]
+    y32 = np.asarray(grouped_ffn_tiled(
+        jnp.asarray(xa), jnp.asarray(tile_expert), w1, w3, w2,
+        tile_m=tile_m))
+    yb = np.asarray(grouped_ffn_tiled(
+        jnp.asarray(xa, jnp.bfloat16), jnp.asarray(tile_expert),
+        jnp.asarray(w1, jnp.bfloat16), jnp.asarray(w3, jnp.bfloat16),
+        jnp.asarray(w2, jnp.bfloat16), tile_m=tile_m)).astype(np.float32)
+    np.testing.assert_allclose(yb, y32, rtol=0.1, atol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# align_dispatch properties (host-side layout helper)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    n=st.integers(0, 100),
+    E=st.integers(1, 10),
+    tile_m=st.sampled_from([2, 4, 8]),
+)
+def test_align_dispatch_properties(seed, n, E, tile_m):
+    rng = np.random.default_rng(seed)
+    eid = rng.integers(0, E, size=n)
+    cap = (n + E * (tile_m - 1)) // tile_m + 1
+    perm, tile_expert, dst = align_dispatch(eid, tile_m, cap)
+    assert perm.shape == (cap * tile_m,)
+    assert tile_expert.shape == (cap,)
+    live = perm >= 0
+    # every source row appears exactly once
+    assert sorted(perm[live].tolist()) == list(range(n))
+    # each live slot's tile expert equals its source row's expert
+    for slot in np.nonzero(live)[0]:
+        assert tile_expert[slot // tile_m] == eid[perm[slot]]
+    # dst inverts perm for live slots; padding slots map to the drop slot n
+    assert (dst[live] == perm[live]).all()
+    assert (dst[~live] == n).all()
+
+
+def test_align_dispatch_capacity_error():
+    with pytest.raises(ValueError):
+        align_dispatch(np.array([0, 1, 2, 3]), 4, capacity_tiles=2)

@@ -1,0 +1,140 @@
+//! Figure 1 — the communication / load-balance trade-off that motivates
+//! GRACE-MoE (OLMoE, 2 nodes × 2 GPUs/node).
+//!
+//! (a) grouping uniformity constraint vs cross-device traffic and load
+//!     imbalance: Vanilla vs C2R(uniform) vs HG(r sweep) vs fully
+//!     non-uniform. Expected shape: relaxing uniformity reduces traffic
+//!     but inflates the GPU-load std.
+//! (b) number of replicated experts (Rep-Act-x on top of HG) vs load
+//!     balance: a few replicas help a lot, then returns diminish.
+//!
+//! Run: `cargo bench --bench fig1_tradeoff`
+
+use grace_moe::baselines::{GroupingStrategy, SystemSpec};
+use grace_moe::bench::Table;
+use grace_moe::cluster::Topology;
+use grace_moe::config::{ModelSpec, Workload};
+use grace_moe::engine::simulate;
+use grace_moe::engine::sim::SimConfig;
+use grace_moe::placement::ReplicationMode;
+use grace_moe::profile::ModelProfile;
+use grace_moe::replication::predict_loads;
+use grace_moe::routing::RoutingPolicy;
+use grace_moe::stats::{Rng, Summary};
+use grace_moe::trace::TraceGen;
+
+fn main() {
+    let cfg = SimConfig::new(
+        ModelSpec::olmoe(),
+        Topology::two_by_two(),
+        Workload::heavy_i(),
+    );
+
+    // ---- (a) uniformity constraint sweep -------------------------------
+    println!("=== Fig 1a: grouping uniformity vs traffic & imbalance ===");
+    let mut t = Table::new(&[
+        "GROUPING",
+        "CROSS (GB)",
+        "INTRA (GB)",
+        "A2A (ms)",
+        "LOAD STD",
+    ]);
+    let variants: Vec<(&str, SystemSpec)> = vec![
+        ("vanilla", SystemSpec::vanilla()),
+        ("c2r(uniform)", SystemSpec::c2r()),
+        ("uniform+hsc", {
+            let mut s = SystemSpec::occult();
+            s.comm = grace_moe::comm::CommModel::Hsc;
+            s
+        }),
+        ("hg(r=0.05)", hg(0.05)),
+        ("hg(r=0.15)", hg(0.15)),
+        ("hg(r=0.40)", hg(0.40)),
+        ("fully-non-uniform", {
+            let mut s = hg(0.15);
+            s.grouping = GroupingStrategy::FullyNonUniform;
+            s.name = "fully";
+            s
+        }),
+    ];
+    for (label, sys) in &variants {
+        let m = simulate(sys, &cfg);
+        t.row(vec![
+            label.to_string(),
+            format!("{:.3}", m.cross_bytes / 1e9),
+            format!("{:.3}", m.intra_bytes / 1e9),
+            format!("{:.2}", m.a2a_time * 1e3),
+            format!("{:.1}", m.mean_load_std()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // ---- (b) Rep-Act-x sweep -------------------------------------------
+    // Replicate the x most-activated experts of each layer's heaviest HG
+    // group onto every other GPU and report the predicted load balance
+    // (the paper's Fig 1b uses the same predicted-load machinery as §4.3).
+    println!("=== Fig 1b: # replicated experts vs load balance ===");
+    let trace = TraceGen {
+        experts: 64,
+        top_k: 8,
+        layers: 16,
+        profile: grace_moe::trace::Profile::Text,
+        seed: 42,
+    }
+    .generate(2048);
+    let profile = ModelProfile::from_trace(&trace);
+    let mut rng = Rng::new(1);
+    let mut t = Table::new(&["REP-ACT-x", "MEAN GROUP-LOAD STD",
+                             "PEAK/MEAN"]);
+    for x in [0usize, 1, 2, 4, 8, 12, 16] {
+        let mut stds = Vec::new();
+        let mut skews = Vec::new();
+        for lp in &profile.layers {
+            let groups =
+                grace_moe::grouping::hierarchical(lp, &cfg.topo, 0.15,
+                                                  &mut rng);
+            let loads: Vec<f64> =
+                groups.iter().map(|g| lp.group_load(g)).collect();
+            let heavy = lp.heaviest_group(&groups);
+            // Rep-Act-x: top-x experts of the heaviest group, one replica
+            // on every other GPU.
+            let mut ranked = groups[heavy].clone();
+            ranked.sort_by(|&a, &b| {
+                lp.load[b].partial_cmp(&lp.load[a]).unwrap()
+            });
+            let hot: Vec<usize> =
+                ranked.into_iter().take(x).collect();
+            let w_r: f64 = hot.iter().map(|&e| lp.load[e]).sum();
+            let n_rep = loads.len() - 1;
+            let rep = grace_moe::replication::Replication {
+                hot_experts: hot,
+                replica_gpus: (0..loads.len())
+                    .filter(|&g| g != heavy)
+                    .collect(),
+                n_replica: n_rep,
+                w_max: loads[heavy],
+                w_r,
+            };
+            let post = predict_loads(&loads, heavy, &rep);
+            let s = Summary::of(&post);
+            stds.push(s.std());
+            skews.push(s.max() / s.mean());
+        }
+        t.row(vec![
+            format!("{x}"),
+            format!("{:.1}", Summary::of(&stds).mean()),
+            format!("{:.3}", Summary::of(&skews).mean()),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(expected: sharp improvement for small x, then plateau — \
+              moderate replication suffices)");
+}
+
+fn hg(r: f64) -> SystemSpec {
+    let mut s = SystemSpec::grace(r);
+    s.replication = ReplicationMode::None;
+    s.routing = RoutingPolicy::Primary;
+    s.name = "hg";
+    s
+}

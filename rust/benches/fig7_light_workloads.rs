@@ -1,0 +1,60 @@
+//! Figure 7 (Appendix A.5) — end-to-end latency and MoE layer time under
+//! *lighter* workloads on the 2 nodes × 4 GPUs/node cluster:
+//! (i) bs=64, prefill=128, decode=16 and (ii) bs=128, prefill=64,
+//! decode=32.
+//!
+//! Expected shape: same ordering as Fig. 4 — GRACE-MoE stays ahead of all
+//! baselines even when communication pressure is reduced.
+//!
+//! Run: `cargo bench --bench fig7_light_workloads`
+
+use grace_moe::baselines::SystemSpec;
+use grace_moe::cluster::Topology;
+use grace_moe::config::{ModelSpec, Workload};
+use grace_moe::engine::sim::{build_placement, simulate_with_placement,
+                             SimConfig};
+use grace_moe::placement::Placement;
+use grace_moe::report;
+use std::collections::HashMap;
+
+fn main() {
+    let systems = SystemSpec::fig4_systems(0.15);
+    let workloads = [Workload::light_i(), Workload::light_ii()];
+    let topo = Topology::two_by_four();
+
+    for model in ModelSpec::all() {
+        let mut placements: HashMap<String, Placement> = HashMap::new();
+        for workload in &workloads {
+            let cfg =
+                SimConfig::new(model.clone(), topo.clone(), *workload);
+            let names: Vec<&str> =
+                systems.iter().map(|s| s.name).collect();
+            let runs: Vec<_> = systems
+                .iter()
+                .map(|s| {
+                    let key =
+                        format!("{:?}{:?}", s.grouping, s.replication);
+                    let p = placements
+                        .entry(key)
+                        .or_insert_with(|| build_placement(s, &cfg));
+                    simulate_with_placement(s, &cfg, p)
+                })
+                .collect();
+            println!(
+                "\n=== Fig7: model={} cluster=2x4 workload={} ===",
+                model.name,
+                workload.label()
+            );
+            println!("{}", report::e2e_table(&names, &runs).render());
+            let grace = runs.last().unwrap().e2e_time;
+            let best_baseline = runs[..runs.len() - 1]
+                .iter()
+                .map(|m| m.e2e_time)
+                .fold(f64::INFINITY, f64::min);
+            println!(
+                "GRACE vs best baseline: {:.2}x",
+                best_baseline / grace
+            );
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Hot-path microbenchmarks (the §Perf L3 profile targets).
+//!
+//! Covers the request-path components: routing decisions (WRR/TAR),
+//! traffic-matrix construction, collective cost models, the full
+//! per-layer simulation step, offline spectral grouping, and (when
+//! artifacts are present) PJRT artifact execution.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use grace_moe::baselines::SystemSpec;
+use grace_moe::bench::{bench, bench_auto};
+use grace_moe::cluster::Topology;
+use grace_moe::comm::model::{flat_all_to_all, hsc};
+use grace_moe::comm::traffic::{per_copy, two_stage, Dispatch};
+use grace_moe::config::{ModelSpec, Workload};
+use grace_moe::engine::simulate;
+use grace_moe::engine::sim::{build_placement, SimConfig};
+use grace_moe::routing::{Router, RoutingPolicy};
+use grace_moe::stats::Rng;
+
+fn main() {
+    let topo = Topology::two_by_two();
+    let model = ModelSpec::olmoe();
+    let cfg = SimConfig::new(model.clone(), topo.clone(),
+                             Workload::heavy_i());
+    let sys = SystemSpec::grace(0.15);
+    let placement = build_placement(&sys, &cfg);
+
+    // ---- routing --------------------------------------------------------
+    let lp = &placement.layers[0];
+    let mut rng = Rng::new(1);
+    for policy in [RoutingPolicy::Primary, RoutingPolicy::Wrr,
+                   RoutingPolicy::Tar] {
+        let router = Router::new(lp, &topo, policy);
+        let r = bench(
+            &format!("route 4096x8 ({})", policy.name()),
+            3,
+            30,
+            || {
+                let mut acc = 0usize;
+                for t in 0..4096usize {
+                    for k in 0..8usize {
+                        acc += router.route(t % 4, (t * 7 + k * 13) % 64,
+                                            &mut rng);
+                    }
+                }
+                acc
+            },
+        );
+        println!("{}", r.report_line());
+    }
+
+    // ---- traffic construction + comm models -----------------------------
+    let dispatches: Vec<Dispatch> = (0..4096)
+        .map(|t| Dispatch {
+            src: t % 4,
+            dsts: (0..8).map(|k| (t * 7 + k * 13) % 4).collect(),
+        })
+        .collect();
+    let r = bench("traffic per_copy 4096x8", 3, 50, || {
+        per_copy(&dispatches, 4, 4096.0)
+    });
+    println!("{}", r.report_line());
+    let r = bench("traffic two_stage 4096x8", 3, 50, || {
+        two_stage(&dispatches, &topo, 4096.0)
+    });
+    println!("{}", r.report_line());
+
+    let m = per_copy(&dispatches, 4, 4096.0);
+    let ts = two_stage(&dispatches, &topo, 4096.0);
+    let mut rng2 = Rng::new(2);
+    let r = bench("comm flat_all_to_all", 3, 200, || {
+        flat_all_to_all(&m, &topo, &mut rng2)
+    });
+    println!("{}", r.report_line());
+    let r = bench("comm hsc", 3, 200, || {
+        hsc(&ts, &topo, 0.0, &mut rng2)
+    });
+    println!("{}", r.report_line());
+
+    // ---- end-to-end simulation steps ------------------------------------
+    let r = bench_auto("simulate olmoe 2x2 grace (full run)", 2.0, || {
+        simulate(&sys, &cfg)
+    });
+    println!("{}", r.report_line());
+
+    // ---- offline grouping (spectral) -------------------------------------
+    let r = bench_auto("build_placement olmoe 16L hierarchical", 3.0, || {
+        build_placement(&sys, &cfg)
+    });
+    println!("{}", r.report_line());
+
+    // ---- PJRT execution (needs artifacts) --------------------------------
+    let dir = std::path::Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        use grace_moe::engine::real::RealModel;
+        let rm = RealModel::load(dir, "olmoe_tiny").expect("load model");
+        let c = rm.cfg.clone();
+        let x: Vec<f32> = (0..c.tile_t * c.hidden)
+            .map(|i| ((i % 17) as f32 - 8.0) * 0.05)
+            .collect();
+        let r = bench("pjrt gate (64 tokens)", 3, 50, || {
+            rm.gate(&x, 0).expect("gate")
+        });
+        println!("{}", r.report_line());
+        let xa = vec![0.1f32; c.cap_rows() * c.hidden];
+        let te: Vec<i32> = (0..c.cap_tiles)
+            .map(|i| if i < 8 { (i % 4) as i32 } else { -1 })
+            .collect();
+        let r = bench("pjrt grouped_ffn (cap buffer)", 3, 20, || {
+            rm.grouped_ffn(0, &xa, &te).expect("ffn")
+        });
+        println!("{}", r.report_line());
+        let r = bench("pjrt moe_layer_full oracle", 3, 20, || {
+            rm.moe_layer_oracle(&x, 0).expect("oracle")
+        });
+        println!("{}", r.report_line());
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts`)");
+    }
+}

@@ -1,0 +1,68 @@
+//! Table 1 / Figure 5 / Figure 8 — component analysis.
+//!
+//! Incremental ladder Occult → Occult+HSC → HG+HSC → +FR+WRR → +DR+WRR →
+//! +DR+TAR on 2 nodes × 2 GPUs/node, workload (i), averaged over the three
+//! models, reported as relative changes vs Occult (Table 1), as
+//! end-to-end latency / MoE-layer time (Fig 5), and as absolute metric
+//! values (Fig 8).
+//!
+//! Expected shape: HSC cuts A2A time / cross traffic and raises intra
+//! traffic; HG cuts communication further but inflates idle time and load
+//! std; DR+WRR recovers idle/load; TAR trims the traffic DR+WRR added at
+//! a small idle/std cost; the full ladder beats Occult end-to-end
+//! (paper: 1.45× / 1.31× / 1.31×).
+//!
+//! Run: `cargo bench --bench tab1_components`
+
+use grace_moe::baselines::SystemSpec;
+use grace_moe::cluster::Topology;
+use grace_moe::config::{ModelSpec, Workload};
+use grace_moe::engine::simulate;
+use grace_moe::engine::sim::SimConfig;
+use grace_moe::metrics::RunMetrics;
+use grace_moe::report;
+
+fn main() {
+    let ladder = SystemSpec::table1_ladder(0.15);
+    let names: Vec<&str> = ladder.iter().map(|s| s.name).collect();
+    let models = ModelSpec::all();
+
+    // Per-model runs (Fig 8 absolute values) + model-averaged Table 1.
+    let mut averaged: Vec<RunMetrics> =
+        (0..ladder.len()).map(|_| RunMetrics::default()).collect();
+    for model in &models {
+        let cfg = SimConfig::new(
+            model.clone(),
+            Topology::two_by_two(),
+            Workload::heavy_i(),
+        );
+        let runs: Vec<RunMetrics> =
+            ladder.iter().map(|s| simulate(s, &cfg)).collect();
+        println!("\n=== Fig 8 (absolute): model={} ===", model.name);
+        println!("{}", report::e2e_table(&names, &runs).render());
+        for (acc, r) in averaged.iter_mut().zip(&runs) {
+            acc.accumulate(r);
+        }
+    }
+
+    println!("\n=== Table 1: relative to Occult, averaged over models ===");
+    println!("{}", report::table1(&names, &averaged).render());
+
+    println!("=== Fig 5: end-to-end speedup of the full ladder vs Occult \
+              (paper: 1.45x / 1.31x / 1.31x) ===");
+    for model in &models {
+        let cfg = SimConfig::new(
+            model.clone(),
+            Topology::two_by_two(),
+            Workload::heavy_i(),
+        );
+        let occ = simulate(&ladder[0], &cfg);
+        let full = simulate(&ladder[5], &cfg);
+        println!(
+            "  {:<10} {:.2}x  (moe layer {:.2}x)",
+            model.name,
+            occ.e2e_time / full.e2e_time,
+            occ.moe_layer_time / full.moe_layer_time
+        );
+    }
+}

@@ -1,0 +1,179 @@
+//! Bench harness (criterion is unavailable offline): warmup + timed
+//! iterations + robust summary, plus a tiny table printer shared by the
+//! paper-figure benches under `benches/`.
+
+use crate::stats::Summary;
+use std::time::Instant;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    /// Per-iteration wall time in seconds.
+    pub secs: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.secs.mean() * 1e3
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.secs.p50() * 1e3
+    }
+
+    pub fn p99_ms(&self) -> f64 {
+        self.secs.p99() * 1e3
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>10.4} ms/iter  (p50 {:>9.4}, p99 {:>9.4}, n={})",
+            self.name,
+            self.mean_ms(),
+            self.p50_ms(),
+            self.p99_ms(),
+            self.iters
+        )
+    }
+}
+
+/// Run `f` with `warmup` untimed then `iters` timed iterations.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize,
+                mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        secs: Summary::of(&samples),
+    }
+}
+
+/// Auto-scale iteration count so one case takes roughly `target_secs`.
+pub fn bench_auto<T>(name: &str, target_secs: f64,
+                     mut f: impl FnMut() -> T) -> BenchResult {
+    // Calibrate with a single run.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_secs / once) as usize).clamp(3, 10_000);
+    bench(name, (iters / 10).max(1), iters, f)
+}
+
+/// Fixed-width text table used by the paper-figure benches.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "ragged table row");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> =
+            self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let line = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(c, s)| format!("{:>w$}", s, w = widths[c]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&line(&self.header));
+        out.push('\n');
+        out.push_str(
+            &widths
+                .iter()
+                .map(|w| "-".repeat(*w))
+                .collect::<Vec<_>>()
+                .join("  "),
+        );
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&line(row));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a fraction as the paper's "+x.xx% / -x.xx%" convention.
+pub fn pct(frac: f64) -> String {
+    format!("{}{:.2}%", if frac >= 0.0 { "+" } else { "" }, frac * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_times_something() {
+        let r = bench("spin", 2, 10, || {
+            let mut s = 0u64;
+            for i in 0..10_000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.secs.mean() > 0.0);
+        assert!(r.p99_ms() >= r.p50_ms());
+    }
+
+    #[test]
+    fn auto_scales_iters() {
+        let r = bench_auto("fast", 0.01, || 1 + 1);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["metric", "value"]);
+        t.row(vec!["a2a".into(), "-35.19%".into()]);
+        t.row(vec!["idle".into(), "+0.02%".into()]);
+        let s = t.render();
+        assert!(s.contains("metric"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn pct_formatting() {
+        assert_eq!(pct(-0.3519), "-35.19%");
+        assert_eq!(pct(1.0013), "+100.13%");
+    }
+}

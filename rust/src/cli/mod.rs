@@ -1,0 +1,140 @@
+//! Minimal CLI argument parser (no `clap` offline): subcommands,
+//! `--key value` / `--key=value` options, `--flag` booleans, positionals.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("option --{0} requires a value")]
+    MissingValue(String),
+    #[error("option --{key}: {msg}")]
+    BadValue { key: String, msg: String },
+}
+
+impl Args {
+    /// Parse raw argv (excluding the program name). `known_flags` lists
+    /// boolean options that never take a value; everything else starting
+    /// with `--` consumes the next token (or its `=`-suffix).
+    pub fn parse<I, S>(argv: I, known_flags: &[&str]) -> Result<Args, CliError>
+    where
+        I: IntoIterator<Item = S>,
+        S: Into<String>,
+    {
+        let toks: Vec<String> = argv.into_iter().map(Into::into).collect();
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < toks.len() {
+            let t = &toks[i];
+            if let Some(name) = t.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&name) {
+                    args.flags.push(name.to_string());
+                } else if i + 1 < toks.len() {
+                    args.options
+                        .insert(name.to_string(), toks[i + 1].clone());
+                    i += 1;
+                } else {
+                    return Err(CliError::MissingValue(name.to_string()));
+                }
+            } else if args.subcommand.is_none() && args.positionals.is_empty()
+            {
+                args.subcommand = Some(t.clone());
+            } else {
+                args.positionals.push(t.clone());
+            }
+            i += 1;
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.options.get(key).map(String::as_str).unwrap_or(default)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| CliError::BadValue {
+                key: key.into(),
+                msg: format!("'{s}' is not a non-negative integer"),
+            }),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| CliError::BadValue {
+                key: key.into(),
+                msg: format!("'{s}' is not a number"),
+            }),
+        }
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(s) => s.parse().map_err(|_| CliError::BadValue {
+                key: key.into(),
+                msg: format!("'{s}' is not a u64"),
+            }),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = Args::parse(
+            vec!["serve", "--model", "olmoe_tiny", "--verbose",
+                 "--nodes=2", "input.json"],
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.str_or("model", "x"), "olmoe_tiny");
+        assert_eq!(a.usize_or("nodes", 1).unwrap(), 2);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["input.json"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(vec!["--model"], &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(vec!["--n", "abc"], &[]).unwrap();
+        assert!(a.usize_or("n", 1).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(Vec::<String>::new(), &[]).unwrap();
+        assert_eq!(a.usize_or("n", 7).unwrap(), 7);
+        assert_eq!(a.str_or("s", "d"), "d");
+        assert!(!a.flag("x"));
+    }
+}

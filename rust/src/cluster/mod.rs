@@ -1,0 +1,169 @@
+//! Cluster topology model: nodes, GPUs, and the bandwidth hierarchy.
+//!
+//! The paper's testbed is 2 nodes × 4 A100s: NVLink inside a node
+//! (50 GB/s per direction) and 25 Gbps Ethernet across nodes. All
+//! communication models in [`crate::comm`] and all locality decisions in
+//! [`crate::routing`] are parameterised by this topology.
+//!
+//! GPU ids are globally dense: gpu `g` lives on node `g / gpus_per_node`.
+
+/// Global GPU identifier.
+pub type GpuId = usize;
+/// Node identifier.
+pub type NodeId = usize;
+
+/// Physical cluster description + link parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Topology {
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    /// Intra-node (NVLink) bandwidth, bytes/second per GPU pair direction.
+    pub intra_bw: f64,
+    /// Cross-node NIC bandwidth, bytes/second per node (shared by all its
+    /// GPUs — the paper's scarce resource).
+    pub inter_bw: f64,
+    /// Per-message latency floors, seconds.
+    pub intra_lat: f64,
+    pub inter_lat: f64,
+    /// Per-collective-stage kernel launch + sync overhead, seconds.
+    pub launch_overhead: f64,
+    /// Relative straggler jitter (std of per-rank slowdown); cross-node
+    /// global synchronization pays the *max* over ranks of this.
+    pub jitter: f64,
+    /// Per-GPU HBM capacity in bytes (placement/replication accounting).
+    pub hbm_bytes: f64,
+}
+
+impl Topology {
+    /// Paper testbed defaults: NVLink 50 GB/s, 25 Gbps Ethernet, A100-80GB.
+    pub fn paper_testbed(nodes: usize, gpus_per_node: usize) -> Self {
+        Topology {
+            nodes,
+            gpus_per_node,
+            intra_bw: 50e9,
+            inter_bw: 25e9 / 8.0, // 25 Gbps = 3.125 GB/s
+            intra_lat: 5e-6,
+            inter_lat: 50e-6,
+            launch_overhead: 20e-6,
+            jitter: 0.08,
+            hbm_bytes: 80e9,
+        }
+    }
+
+    /// The paper's two evaluation scales.
+    pub fn two_by_two() -> Self {
+        Self::paper_testbed(2, 2)
+    }
+
+    pub fn two_by_four() -> Self {
+        Self::paper_testbed(2, 4)
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.nodes * self.gpus_per_node
+    }
+
+    #[inline]
+    pub fn node_of(&self, gpu: GpuId) -> NodeId {
+        gpu / self.gpus_per_node
+    }
+
+    #[inline]
+    pub fn same_node(&self, a: GpuId, b: GpuId) -> bool {
+        self.node_of(a) == self.node_of(b)
+    }
+
+    /// GPUs hosted on `node`.
+    pub fn gpus_of(&self, node: NodeId) -> std::ops::Range<GpuId> {
+        node * self.gpus_per_node..(node + 1) * self.gpus_per_node
+    }
+
+    /// Locality tier of a transfer (the hierarchy of §4.3):
+    /// 0 = same GPU, 1 = same node, 2 = cross node.
+    pub fn tier(&self, src: GpuId, dst: GpuId) -> u8 {
+        if src == dst {
+            0
+        } else if self.same_node(src, dst) {
+            1
+        } else {
+            2
+        }
+    }
+
+    /// Point-to-point bandwidth for a (src, dst) pair, bytes/sec.
+    /// Same-GPU moves are treated as free (HBM-local).
+    pub fn bw(&self, src: GpuId, dst: GpuId) -> f64 {
+        match self.tier(src, dst) {
+            0 => f64::INFINITY,
+            1 => self.intra_bw,
+            _ => self.inter_bw,
+        }
+    }
+
+    /// Per-message latency floor for a pair, seconds.
+    pub fn lat(&self, src: GpuId, dst: GpuId) -> f64 {
+        match self.tier(src, dst) {
+            0 => 0.0,
+            1 => self.intra_lat,
+            _ => self.inter_lat,
+        }
+    }
+
+    /// Validate invariants (used by config loading).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes == 0 || self.gpus_per_node == 0 {
+            return Err("topology must have ≥1 node and ≥1 gpu/node".into());
+        }
+        if self.intra_bw <= 0.0 || self.inter_bw <= 0.0 {
+            return Err("bandwidths must be positive".into());
+        }
+        if self.inter_bw > self.intra_bw {
+            return Err(
+                "cross-node bw exceeding intra-node bw is outside the \
+                 paper's regime"
+                    .into(),
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_testbed_shape() {
+        let t = Topology::two_by_four();
+        assert_eq!(t.num_gpus(), 8);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert!(t.same_node(5, 7));
+        assert!(!t.same_node(3, 4));
+        assert_eq!(t.gpus_of(1).collect::<Vec<_>>(), vec![4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn tiers_and_links() {
+        let t = Topology::two_by_two();
+        assert_eq!(t.tier(1, 1), 0);
+        assert_eq!(t.tier(0, 1), 1);
+        assert_eq!(t.tier(1, 2), 2);
+        assert_eq!(t.bw(1, 1), f64::INFINITY);
+        assert_eq!(t.bw(0, 1), 50e9);
+        assert!((t.bw(0, 2) - 3.125e9).abs() < 1.0);
+        assert!(t.lat(0, 2) > t.lat(0, 1));
+    }
+
+    #[test]
+    fn validation() {
+        assert!(Topology::two_by_two().validate().is_ok());
+        let mut bad = Topology::two_by_two();
+        bad.inter_bw = bad.intra_bw * 2.0;
+        assert!(bad.validate().is_err());
+        bad = Topology::two_by_two();
+        bad.nodes = 0;
+        assert!(bad.validate().is_err());
+    }
+}

@@ -1,0 +1,30 @@
+//! Communication substrate: All-to-All models for multi-node MoE dispatch.
+//!
+//! Three implementations of the MoE dispatch/combine collective, matching
+//! the paper's §3/§5 taxonomy:
+//!
+//! * [`model::flat_all_to_all`] — the baseline **flat global All-to-All**:
+//!   one synchronous collective over all ranks; global synchronization is
+//!   limited by the slowest link and pays the straggler maximum.
+//! * [`model::staged_hierarchical`] — **conventional hierarchical A2A**:
+//!   cross-node rail groups then intra-node redistribution. Fewer
+//!   cross-node bytes (node-level dedup) but extra kernel launches and
+//!   *progress decoupling*: independently-progressing groups contend for
+//!   the shared NIC and force spin-waiting, amplifying tail latency.
+//! * [`model::hsc`] — the paper's **hierarchical sparse communication**:
+//!   physically global but logically sparse. Stage 1 is a single global
+//!   zero-padded collective (one launch, an *implicit barrier* that softly
+//!   aligns nodes — jitter is paid once, without decoupling), stage 2 is
+//!   isolated intra-node redistribution, and stage 1 is overlapped with
+//!   intra-node routing-decision compute via fine-grained pipelining.
+//!
+//! [`traffic`] builds the byte matrices these models consume from
+//! per-token dispatch decisions, including the node-level deduplication
+//! ("tokens routed to multiple experts on the same destination are
+//! transmitted only once").
+
+pub mod model;
+pub mod traffic;
+
+pub use model::{CommModel, CommReport};
+pub use traffic::{Dispatch, TrafficMatrix, TwoStageTraffic};

@@ -1,0 +1,298 @@
+//! Traffic-matrix construction from per-token dispatch decisions.
+//!
+//! The engine resolves routing into one [`Dispatch`] per token (source GPU
+//! plus the destination GPU of each of its top-k expert assignments);
+//! this module aggregates those into byte matrices under the different
+//! transfer-granularity semantics of each collective:
+//!
+//! * per-copy: one transfer per expert assignment (flat A2A baseline),
+//! * per-GPU dedup: one transfer per distinct destination GPU,
+//! * two-stage: node-level dedup for the cross-node stage, GPU-level dedup
+//!   for the intra-node stage (hierarchical A2A and HSC).
+
+use crate::cluster::{GpuId, Topology};
+
+/// Routing outcome for one token at one MoE layer: where it lives and the
+/// GPU hosting each of its selected expert instances.
+#[derive(Clone, Debug)]
+pub struct Dispatch {
+    pub src: GpuId,
+    pub dsts: Vec<GpuId>,
+}
+
+/// Dense per-(src,dst) byte counts. The diagonal (same-GPU "transfers") is
+/// tracked but free for timing; tier classification splits the rest into
+/// intra-node and cross-node bytes.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrafficMatrix {
+    n: usize,
+    bytes: Vec<f64>,
+    msgs: Vec<u64>,
+}
+
+impl TrafficMatrix {
+    pub fn zeros(num_gpus: usize) -> Self {
+        TrafficMatrix {
+            n: num_gpus,
+            bytes: vec![0.0; num_gpus * num_gpus],
+            msgs: vec![0; num_gpus * num_gpus],
+        }
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn add(&mut self, src: GpuId, dst: GpuId, bytes: f64) {
+        self.bytes[src * self.n + dst] += bytes;
+        self.msgs[src * self.n + dst] += 1;
+    }
+
+    #[inline]
+    pub fn get(&self, src: GpuId, dst: GpuId) -> f64 {
+        self.bytes[src * self.n + dst]
+    }
+
+    #[inline]
+    pub fn msg_count(&self, src: GpuId, dst: GpuId) -> u64 {
+        self.msgs[src * self.n + dst]
+    }
+
+    pub fn total_bytes(&self) -> f64 {
+        self.bytes.iter().sum()
+    }
+
+    /// Bytes crossing node boundaries.
+    pub fn cross_node_bytes(&self, topo: &Topology) -> f64 {
+        self.fold_tier(topo, 2)
+    }
+
+    /// Bytes moving between GPUs within a node (excludes same-GPU).
+    pub fn intra_node_bytes(&self, topo: &Topology) -> f64 {
+        self.fold_tier(topo, 1)
+    }
+
+    fn fold_tier(&self, topo: &Topology, tier: u8) -> f64 {
+        let mut total = 0.0;
+        for s in 0..self.n {
+            for d in 0..self.n {
+                if topo.tier(s, d) == tier {
+                    total += self.get(s, d);
+                }
+            }
+        }
+        total
+    }
+
+    /// Egress bytes per GPU (excluding the free diagonal).
+    pub fn egress(&self, gpu: GpuId) -> f64 {
+        (0..self.n)
+            .filter(|&d| d != gpu)
+            .map(|d| self.get(gpu, d))
+            .sum()
+    }
+
+    /// Ingress bytes per GPU (excluding the free diagonal).
+    pub fn ingress(&self, gpu: GpuId) -> f64 {
+        (0..self.n)
+            .filter(|&s| s != gpu)
+            .map(|s| self.get(s, gpu))
+            .sum()
+    }
+}
+
+/// The two-stage decomposition used by hierarchical A2A and HSC:
+/// `cross` carries node-deduplicated cross-node transfers (landing on the
+/// rail-aligned peer GPU), `intra` the per-node redistribution (one matrix
+/// over the global GPU id space; entries are always intra-node).
+#[derive(Clone, Debug)]
+pub struct TwoStageTraffic {
+    pub cross: TrafficMatrix,
+    pub intra: TrafficMatrix,
+}
+
+/// Flat A2A: one transfer per expert assignment (no dedup) — what Tutel /
+/// MegaBlocks / vanilla EP dispatch does.
+pub fn per_copy(dispatches: &[Dispatch], num_gpus: usize,
+                token_bytes: f64) -> TrafficMatrix {
+    let mut m = TrafficMatrix::zeros(num_gpus);
+    for d in dispatches {
+        for &dst in &d.dsts {
+            m.add(d.src, dst, token_bytes);
+        }
+    }
+    m
+}
+
+/// GPU-level dedup: one transfer per distinct destination GPU per token.
+pub fn per_gpu_dedup(dispatches: &[Dispatch], num_gpus: usize,
+                     token_bytes: f64) -> TrafficMatrix {
+    let mut m = TrafficMatrix::zeros(num_gpus);
+    let mut seen = vec![false; num_gpus];
+    for d in dispatches {
+        for &dst in &d.dsts {
+            if !seen[dst] {
+                seen[dst] = true;
+                m.add(d.src, dst, token_bytes);
+            }
+        }
+        for &dst in &d.dsts {
+            seen[dst] = false;
+        }
+    }
+    m
+}
+
+/// Rail-aligned landing GPU: cross-node transfers land on the GPU of the
+/// destination node with the same local index as the source GPU (so every
+/// NIC flow has a fixed peer — the "physically global" group of §5).
+pub fn landing_gpu(topo: &Topology, src: GpuId, dst_node: usize) -> GpuId {
+    dst_node * topo.gpus_per_node + (src % topo.gpus_per_node)
+}
+
+/// Two-stage traffic with node-level dedup (§5): each token is sent to
+/// each remote destination *node* at most once (stage 1, landing on the
+/// rail-aligned peer), then redistributed to the destination GPUs within
+/// each node (stage 2, GPU-level dedup).
+pub fn two_stage(dispatches: &[Dispatch], topo: &Topology,
+                 token_bytes: f64) -> TwoStageTraffic {
+    let n = topo.num_gpus();
+    let mut cross = TrafficMatrix::zeros(n);
+    let mut intra = TrafficMatrix::zeros(n);
+    let mut node_seen = vec![false; topo.nodes];
+    let mut gpu_seen = vec![false; n];
+    for d in dispatches {
+        let src_node = topo.node_of(d.src);
+        // Stage 1: one copy per distinct remote destination node.
+        for &dst in &d.dsts {
+            let dn = topo.node_of(dst);
+            if dn != src_node && !node_seen[dn] {
+                node_seen[dn] = true;
+                cross.add(d.src, landing_gpu(topo, d.src, dn), token_bytes);
+            }
+        }
+        // Stage 2: within each destination node, move the (single) landed
+        // copy to each distinct destination GPU.
+        for &dst in &d.dsts {
+            if gpu_seen[dst] {
+                continue;
+            }
+            gpu_seen[dst] = true;
+            let dn = topo.node_of(dst);
+            let local_src = if dn == src_node {
+                d.src
+            } else {
+                landing_gpu(topo, d.src, dn)
+            };
+            if local_src != dst {
+                intra.add(local_src, dst, token_bytes);
+            } else {
+                // Same-GPU landing: record a free diagonal move so token
+                // conservation checks still see the copy.
+                intra.add(local_src, dst, 0.0);
+            }
+        }
+        for &dst in &d.dsts {
+            gpu_seen[dst] = false;
+            node_seen[topo.node_of(dst)] = false;
+        }
+    }
+    TwoStageTraffic { cross, intra }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> Topology {
+        Topology::two_by_two() // gpus 0,1 on node 0; 2,3 on node 1
+    }
+
+    #[test]
+    fn per_copy_counts_every_assignment() {
+        let d = vec![Dispatch { src: 0, dsts: vec![1, 1, 2] }];
+        let m = per_copy(&d, 4, 10.0);
+        assert_eq!(m.get(0, 1), 20.0);
+        assert_eq!(m.get(0, 2), 10.0);
+        assert_eq!(m.total_bytes(), 30.0);
+        assert_eq!(m.msg_count(0, 1), 2);
+    }
+
+    #[test]
+    fn per_gpu_dedup_collapses_same_gpu() {
+        let d = vec![Dispatch { src: 0, dsts: vec![1, 1, 2, 2, 2] }];
+        let m = per_gpu_dedup(&d, 4, 10.0);
+        assert_eq!(m.get(0, 1), 10.0);
+        assert_eq!(m.get(0, 2), 10.0);
+        assert_eq!(m.total_bytes(), 20.0);
+    }
+
+    #[test]
+    fn dedup_state_resets_between_tokens() {
+        let d = vec![
+            Dispatch { src: 0, dsts: vec![1] },
+            Dispatch { src: 0, dsts: vec![1] },
+        ];
+        let m = per_gpu_dedup(&d, 4, 10.0);
+        assert_eq!(m.get(0, 1), 20.0, "two tokens = two transfers");
+    }
+
+    #[test]
+    fn two_stage_dedups_at_node_level() {
+        let t = topo();
+        // token on gpu 0 → experts on gpus 2 and 3 (both node 1)
+        let d = vec![Dispatch { src: 0, dsts: vec![2, 3] }];
+        let ts = two_stage(&d, &t, 10.0);
+        // one cross-node copy, landing rail-aligned on gpu 2 (0 % 2 == 0)
+        assert_eq!(ts.cross.get(0, 2), 10.0);
+        assert_eq!(ts.cross.total_bytes(), 10.0);
+        // redistribution 2→3 inside node 1, plus free diagonal 2→2
+        assert_eq!(ts.intra.get(2, 3), 10.0);
+        assert_eq!(ts.intra.get(2, 2), 0.0);
+        assert_eq!(ts.intra.msg_count(2, 2), 1);
+    }
+
+    #[test]
+    fn two_stage_local_tokens_skip_cross() {
+        let t = topo();
+        let d = vec![Dispatch { src: 1, dsts: vec![0, 1] }];
+        let ts = two_stage(&d, &t, 8.0);
+        assert_eq!(ts.cross.total_bytes(), 0.0);
+        assert_eq!(ts.intra.get(1, 0), 8.0);
+    }
+
+    #[test]
+    fn two_stage_landing_is_rail_aligned() {
+        let t = Topology::two_by_four();
+        // src gpu 5 (node 1, local idx 1) → expert on gpu 0 (node 0)
+        let d = vec![Dispatch { src: 5, dsts: vec![0] }];
+        let ts = two_stage(&d, &t, 4.0);
+        assert_eq!(ts.cross.get(5, 1), 4.0, "lands on node0's local idx 1");
+        assert_eq!(ts.intra.get(1, 0), 4.0);
+    }
+
+    #[test]
+    fn tier_classification() {
+        let t = topo();
+        let mut m = TrafficMatrix::zeros(4);
+        m.add(0, 1, 5.0); // intra node 0
+        m.add(0, 2, 7.0); // cross
+        m.add(3, 3, 9.0); // same gpu
+        assert_eq!(m.intra_node_bytes(&t), 5.0);
+        assert_eq!(m.cross_node_bytes(&t), 7.0);
+        assert_eq!(m.egress(0), 12.0);
+        assert_eq!(m.ingress(2), 7.0);
+        assert_eq!(m.egress(3), 0.0, "diagonal excluded");
+    }
+
+    #[test]
+    fn node_dedup_saves_vs_gpu_dedup_exactly_when_multi_gpu_node() {
+        let t = topo();
+        let d = vec![Dispatch { src: 0, dsts: vec![2, 3] }];
+        let flat = per_gpu_dedup(&d, 4, 10.0);
+        let ts = two_stage(&d, &t, 10.0);
+        assert_eq!(flat.cross_node_bytes(&t), 20.0);
+        assert_eq!(ts.cross.cross_node_bytes(&t), 10.0);
+    }
+}

@@ -1,0 +1,240 @@
+//! Experiment configuration: model specs (paper Table 3), workloads
+//! (§6.2), and the GPU compute-cost model the simulator uses.
+//!
+//! Two families of model descriptions exist on purpose:
+//!
+//! * [`ModelSpec`] — the *paper-scale* architectures (full hidden dims and
+//!   layer counts) used by the timing simulator, where per-token costs are
+//!   analytic;
+//! * the *tiny* variants in `artifacts/manifest.json` (same top-k and
+//!   expert counts, scaled-down dims) used by the execute-mode engine for
+//!   real numerics through PJRT ([`crate::runtime`]).
+
+use crate::configio::Value;
+
+/// Paper-scale MoE model architecture (Table 3 + public model cards).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// Matching tiny-variant name in artifacts/manifest.json.
+    pub tiny_variant: &'static str,
+    pub experts: usize,
+    pub top_k: usize,
+    pub moe_layers: usize,
+    pub hidden: usize,
+    /// Per-expert FFN intermediate dim.
+    pub ffn: usize,
+    /// Activation bytes per element (bf16 inference, §6.1).
+    pub act_bytes: usize,
+}
+
+impl ModelSpec {
+    /// OLMoE: 64 experts, top-8, 16 MoE layers, 6.92 B params.
+    pub fn olmoe() -> Self {
+        ModelSpec {
+            name: "olmoe",
+            tiny_variant: "olmoe_tiny",
+            experts: 64,
+            top_k: 8,
+            moe_layers: 16,
+            hidden: 2048,
+            ffn: 1024,
+            act_bytes: 2,
+        }
+    }
+
+    /// DeepSeek-V2-Lite-Chat: 64 experts, top-6, 26 MoE layers, 15.7 B.
+    pub fn dsv2_lite() -> Self {
+        ModelSpec {
+            name: "dsv2_lite",
+            tiny_variant: "dsv2_tiny",
+            experts: 64,
+            top_k: 6,
+            moe_layers: 26,
+            hidden: 2048,
+            ffn: 1408,
+            act_bytes: 2,
+        }
+    }
+
+    /// Qwen3-30B-A3B: 128 experts, top-8, 48 MoE layers, 30.5 B.
+    pub fn qwen3() -> Self {
+        ModelSpec {
+            name: "qwen3",
+            tiny_variant: "qwen3_tiny",
+            experts: 128,
+            top_k: 8,
+            moe_layers: 48,
+            hidden: 2048,
+            ffn: 768,
+            act_bytes: 2,
+        }
+    }
+
+    pub fn all() -> Vec<ModelSpec> {
+        vec![Self::olmoe(), Self::dsv2_lite(), Self::qwen3()]
+    }
+
+    pub fn by_name(name: &str) -> Option<ModelSpec> {
+        Self::all().into_iter().find(|m| m.name == name)
+    }
+
+    /// Bytes moved per token copy in A2A dispatch (one hidden vector).
+    pub fn token_bytes(&self) -> f64 {
+        (self.hidden * self.act_bytes) as f64
+    }
+
+    /// FLOPs of one expert FFN applied to one token (3 GEMMs, 2 flops/MAC).
+    pub fn expert_flops_per_token(&self) -> f64 {
+        (3 * 2 * self.hidden * self.ffn) as f64
+    }
+
+    /// Parameter bytes of one expert (w1, w3, w2 in bf16).
+    pub fn expert_bytes(&self) -> f64 {
+        (3 * self.hidden * self.ffn * 2) as f64
+    }
+
+    /// FLOPs of the dense (attention + norms) part per token per layer.
+    pub fn dense_flops_per_token(&self) -> f64 {
+        // qkv + out projections dominate: 4·H² MACs → 8·H² flops
+        (8 * self.hidden * self.hidden) as f64
+    }
+}
+
+/// GPU compute model for the simulator: A100-SXM4 bf16.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GpuModel {
+    /// Peak bf16 throughput, FLOP/s.
+    pub peak_flops: f64,
+    /// Achieved fraction of peak for grouped expert GEMMs.
+    pub moe_efficiency: f64,
+    /// Achieved fraction of peak for dense attention blocks.
+    pub dense_efficiency: f64,
+    /// Fixed per-layer kernel overhead, seconds.
+    pub layer_overhead: f64,
+}
+
+impl GpuModel {
+    pub fn a100() -> Self {
+        GpuModel {
+            peak_flops: 312e12,
+            moe_efficiency: 0.32,
+            dense_efficiency: 0.50,
+            layer_overhead: 30e-6,
+        }
+    }
+
+    /// Seconds to run `tokens` token-expert FFNs of `spec` on one GPU.
+    pub fn moe_time(&self, spec: &ModelSpec, tokens: f64) -> f64 {
+        tokens * spec.expert_flops_per_token()
+            / (self.peak_flops * self.moe_efficiency)
+    }
+
+    pub fn dense_time(&self, spec: &ModelSpec, tokens: f64) -> f64 {
+        tokens * spec.dense_flops_per_token()
+            / (self.peak_flops * self.dense_efficiency)
+    }
+}
+
+/// Inference workload (paper §6.2): `batch` sequences, `prefill` prompt
+/// tokens each, `decode` generated tokens each.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Workload {
+    pub batch: usize,
+    pub prefill: usize,
+    pub decode: usize,
+}
+
+impl Workload {
+    /// Workload (i) of §6.2: bs=256, prefill=128, decode=16.
+    pub fn heavy_i() -> Self {
+        Workload { batch: 256, prefill: 128, decode: 16 }
+    }
+
+    /// Workload (ii) of §6.2: bs=512, prefill=64, decode=32.
+    pub fn heavy_ii() -> Self {
+        Workload { batch: 512, prefill: 64, decode: 32 }
+    }
+
+    /// Appendix A.5 light workloads (2×4 cluster).
+    pub fn light_i() -> Self {
+        Workload { batch: 64, prefill: 128, decode: 16 }
+    }
+
+    pub fn light_ii() -> Self {
+        Workload { batch: 128, prefill: 64, decode: 32 }
+    }
+
+    pub fn label(&self) -> String {
+        format!("bs{}-pf{}-dec{}", self.batch, self.prefill, self.decode)
+    }
+
+    /// Total tokens pushed through every MoE layer.
+    pub fn total_tokens(&self) -> usize {
+        self.batch * (self.prefill + self.decode)
+    }
+
+    pub fn from_value(v: &Value) -> Result<Workload, String> {
+        Ok(Workload {
+            batch: v.req_usize("batch").map_err(|e| e.to_string())?,
+            prefill: v.req_usize("prefill").map_err(|e| e.to_string())?,
+            decode: v.req_usize("decode").map_err(|e| e.to_string())?,
+        })
+    }
+
+    pub fn to_value(&self) -> Value {
+        Value::object(vec![
+            ("batch", Value::from(self.batch)),
+            ("prefill", Value::from(self.prefill)),
+            ("decode", Value::from(self.decode)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_is_faithful() {
+        let o = ModelSpec::olmoe();
+        assert_eq!((o.experts, o.top_k, o.moe_layers), (64, 8, 16));
+        let d = ModelSpec::dsv2_lite();
+        assert_eq!((d.experts, d.top_k, d.moe_layers), (64, 6, 26));
+        let q = ModelSpec::qwen3();
+        assert_eq!((q.experts, q.top_k, q.moe_layers), (128, 8, 48));
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(ModelSpec::by_name("qwen3").unwrap().experts, 128);
+        assert!(ModelSpec::by_name("gpt5").is_none());
+    }
+
+    #[test]
+    fn cost_model_sane() {
+        let spec = ModelSpec::olmoe();
+        let gpu = GpuModel::a100();
+        // one token through one expert: 6·2048·1024 ≈ 12.6 MFLOP
+        assert!((spec.expert_flops_per_token() - 12_582_912.0).abs() < 1.0);
+        let t = gpu.moe_time(&spec, 1000.0);
+        assert!(t > 0.0 && t < 1e-2, "1000 token-experts ≈ {t}s");
+        assert!(gpu.dense_time(&spec, 1.0) < gpu.moe_time(&spec, 8.0));
+        assert_eq!(spec.token_bytes(), 4096.0);
+    }
+
+    #[test]
+    fn workload_roundtrip() {
+        let w = Workload::heavy_i();
+        assert_eq!(w.total_tokens(), 256 * 144);
+        assert_eq!(w.label(), "bs256-pf128-dec16");
+        let v = w.to_value();
+        assert_eq!(Workload::from_value(&v).unwrap(), w);
+    }
+
+    #[test]
+    fn workload_from_bad_value_errors() {
+        let v = Value::object(vec![("batch", Value::from(1usize))]);
+        assert!(Workload::from_value(&v).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Config/serialization substrate: a self-contained JSON parser and
+//! writer (no serde available offline).
+//!
+//! Used for the AOT `artifacts/manifest.json` handshake with the python
+//! compile path, for experiment/cluster/workload config files, and for
+//! machine-readable bench output.
+
+pub mod json;
+pub mod value;
+
+pub use json::{parse, to_string, to_string_pretty};
+pub use value::{Value, ValueError};

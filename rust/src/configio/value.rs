@@ -1,0 +1,227 @@
+//! Dynamically-typed config value tree with typed accessors.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON-style value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Array(Vec<Value>),
+    Object(BTreeMap<String, Value>),
+}
+
+/// Typed-access errors with a path-ish message for debuggability.
+#[derive(Debug, thiserror::Error)]
+pub enum ValueError {
+    #[error("missing key '{0}'")]
+    Missing(String),
+    #[error("'{key}': expected {want}, got {got}")]
+    Type { key: String, want: &'static str, got: &'static str },
+}
+
+impl Value {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Value::Null => "null",
+            Value::Bool(_) => "bool",
+            Value::Num(_) => "number",
+            Value::Str(_) => "string",
+            Value::Array(_) => "array",
+            Value::Object(_) => "object",
+        }
+    }
+
+    pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Object(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        match self {
+            Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 => {
+                Some(*x as usize)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// Object member lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_object().and_then(|m| m.get(key))
+    }
+
+    /// Required typed getters (errors carry the key for diagnostics).
+    pub fn req(&self, key: &str) -> Result<&Value, ValueError> {
+        self.get(key).ok_or_else(|| ValueError::Missing(key.into()))
+    }
+
+    pub fn req_usize(&self, key: &str) -> Result<usize, ValueError> {
+        let v = self.req(key)?;
+        v.as_usize().ok_or_else(|| ValueError::Type {
+            key: key.into(),
+            want: "non-negative integer",
+            got: v.kind(),
+        })
+    }
+
+    pub fn req_f64(&self, key: &str) -> Result<f64, ValueError> {
+        let v = self.req(key)?;
+        v.as_f64().ok_or_else(|| ValueError::Type {
+            key: key.into(),
+            want: "number",
+            got: v.kind(),
+        })
+    }
+
+    pub fn req_str(&self, key: &str) -> Result<&str, ValueError> {
+        let v = self.req(key)?;
+        v.as_str().ok_or_else(|| ValueError::Type {
+            key: key.into(),
+            want: "string",
+            got: v.kind(),
+        })
+    }
+
+    pub fn req_array(&self, key: &str) -> Result<&[Value], ValueError> {
+        let v = self.req(key)?;
+        v.as_array().ok_or_else(|| ValueError::Type {
+            key: key.into(),
+            want: "array",
+            got: v.kind(),
+        })
+    }
+
+    /// Optional getter with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Builder helpers.
+    pub fn object(pairs: Vec<(&str, Value)>) -> Value {
+        Value::Object(
+            pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+        )
+    }
+
+    pub fn array<I: IntoIterator<Item = Value>>(items: I) -> Value {
+        Value::Array(items.into_iter().collect())
+    }
+
+    pub fn num<T: Into<f64>>(x: T) -> Value {
+        Value::Num(x.into())
+    }
+
+    pub fn str(s: impl Into<String>) -> Value {
+        Value::Str(s.into())
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", super::json::to_string(self))
+    }
+}
+
+impl From<usize> for Value {
+    fn from(x: usize) -> Value {
+        Value::Num(x as f64)
+    }
+}
+
+impl From<f64> for Value {
+    fn from(x: f64) -> Value {
+        Value::Num(x)
+    }
+}
+
+impl From<&str> for Value {
+    fn from(s: &str) -> Value {
+        Value::Str(s.to_string())
+    }
+}
+
+impl From<bool> for Value {
+    fn from(b: bool) -> Value {
+        Value::Bool(b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn typed_getters() {
+        let v = Value::object(vec![
+            ("n", Value::from(5usize)),
+            ("x", Value::from(1.5)),
+            ("s", Value::from("hi")),
+        ]);
+        assert_eq!(v.req_usize("n").unwrap(), 5);
+        assert_eq!(v.req_f64("x").unwrap(), 1.5);
+        assert_eq!(v.req_str("s").unwrap(), "hi");
+        assert!(matches!(v.req_usize("x"), Err(ValueError::Type { .. })));
+        assert!(matches!(v.req_str("zzz"), Err(ValueError::Missing(_))));
+    }
+
+    #[test]
+    fn defaults() {
+        let v = Value::object(vec![("a", Value::from(2usize))]);
+        assert_eq!(v.usize_or("a", 9), 2);
+        assert_eq!(v.usize_or("b", 9), 9);
+        assert_eq!(v.str_or("c", "d"), "d");
+    }
+
+    #[test]
+    fn negative_is_not_usize() {
+        let v = Value::Num(-3.0);
+        assert_eq!(v.as_usize(), None);
+        assert_eq!(v.as_f64(), Some(-3.0));
+    }
+}

@@ -1,0 +1,18 @@
+//! The MoE inference engine.
+//!
+//! Two execution modes share the same placement/routing/communication
+//! decisions:
+//!
+//! * [`sim`] — the *timing* engine: drives the full GRACE-MoE pipeline
+//!   (profile → group → replicate → route → communicate → compute) over
+//!   paper-scale models and the [`crate::cluster::Topology`] cost model.
+//!   All evaluation tables/figures are generated from this mode.
+//! * [`real`] — the *numerics* engine: executes the tiny AOT-compiled
+//!   model variants through PJRT ([`crate::runtime`]), performing actual
+//!   dispatch/combine in rust, and validates losslessness against the
+//!   single-device oracle artifact.
+
+pub mod real;
+pub mod sim;
+
+pub use sim::{simulate, simulate_with_placement, SimConfig};

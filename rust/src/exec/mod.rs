@@ -1,0 +1,293 @@
+//! Execution substrate: a small fixed-size thread pool + bounded channels
+//! (tokio is unavailable offline; the serving front needs worker
+//! parallelism and backpressure, not an async reactor).
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolState {
+    queue: VecDeque<Job>,
+    shutdown: bool,
+    in_flight: usize,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    work_ready: Condvar,
+    all_done: Condvar,
+}
+
+/// Fixed-size worker pool with `join`-until-idle semantics.
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        assert!(threads > 0);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                queue: VecDeque::new(),
+                shutdown: false,
+                in_flight: 0,
+            }),
+            work_ready: Condvar::new(),
+            all_done: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("grace-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { shared, workers }
+    }
+
+    /// Submit a job.
+    pub fn submit(&self, job: impl FnOnce() + Send + 'static) {
+        let mut st = self.shared.state.lock().unwrap();
+        assert!(!st.shutdown, "submit after shutdown");
+        st.queue.push_back(Box::new(job));
+        drop(st);
+        self.shared.work_ready.notify_one();
+    }
+
+    /// Block until every submitted job has finished.
+    pub fn join(&self) {
+        let mut st = self.shared.state.lock().unwrap();
+        while !st.queue.is_empty() || st.in_flight > 0 {
+            st = self.shared.all_done.wait(st).unwrap();
+        }
+    }
+
+    /// Map a slice in parallel, preserving order.
+    pub fn map<T, R>(&self, items: Vec<T>,
+                     f: impl Fn(T) -> R + Send + Sync + 'static) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+    {
+        let n = items.len();
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let f = Arc::new(f);
+        for (i, item) in items.into_iter().enumerate() {
+            let results = results.clone();
+            let f = f.clone();
+            self.submit(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+            });
+        }
+        self.join();
+        Arc::try_unwrap(results)
+            .unwrap_or_else(|_| panic!("outstanding refs"))
+            .into_inner()
+            .unwrap()
+            .into_iter()
+            .map(|o| o.expect("job dropped"))
+            .collect()
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if let Some(j) = st.queue.pop_front() {
+                    st.in_flight += 1;
+                    break j;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.work_ready.wait(st).unwrap();
+            }
+        };
+        job();
+        let mut st = shared.state.lock().unwrap();
+        st.in_flight -= 1;
+        if st.queue.is_empty() && st.in_flight == 0 {
+            shared.all_done.notify_all();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_ready.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Bounded MPSC channel with blocking `send` (backpressure for the
+/// serving front's admission queue).
+pub struct BoundedQueue<T> {
+    inner: Arc<QueueShared<T>>,
+}
+
+struct QueueShared<T> {
+    state: Mutex<(VecDeque<T>, bool)>, // (items, closed)
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl<T> Clone for BoundedQueue<T> {
+    fn clone(&self) -> Self {
+        BoundedQueue { inner: self.inner.clone() }
+    }
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        BoundedQueue {
+            inner: Arc::new(QueueShared {
+                state: Mutex::new((VecDeque::new(), false)),
+                not_full: Condvar::new(),
+                not_empty: Condvar::new(),
+                cap,
+            }),
+        }
+    }
+
+    /// Blocking send; returns Err(item) if the queue is closed.
+    pub fn send(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if st.1 {
+                return Err(item);
+            }
+            if st.0.len() < self.inner.cap {
+                st.0.push_back(item);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Blocking receive; None when closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            if let Some(item) = st.0.pop_front() {
+                self.inner.not_full.notify_one();
+                return Some(item);
+            }
+            if st.1 {
+                return None;
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Drain up to `max` items without blocking beyond the first.
+    pub fn recv_batch(&self, max: usize) -> Vec<T> {
+        let mut out = Vec::new();
+        if let Some(first) = self.recv() {
+            out.push(first);
+            let mut st = self.inner.state.lock().unwrap();
+            while out.len() < max {
+                match st.0.pop_front() {
+                    Some(x) => out.push(x),
+                    None => break,
+                }
+            }
+            self.inner.not_full.notify_all();
+        }
+        out
+    }
+
+    pub fn close(&self) {
+        let mut st = self.inner.state.lock().unwrap();
+        st.1 = true;
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.state.lock().unwrap().0.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = counter.clone();
+            pool.submit(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn pool_map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let out = pool.map((0..50).collect::<Vec<usize>>(), |x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn queue_roundtrip_and_close() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(4);
+        q.send(1).unwrap();
+        q.send(2).unwrap();
+        assert_eq!(q.recv(), Some(1));
+        q.close();
+        assert!(q.send(3).is_err());
+        assert_eq!(q.recv(), Some(2));
+        assert_eq!(q.recv(), None);
+    }
+
+    #[test]
+    fn queue_backpressure_blocks_until_drained() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(1);
+        q.send(0).unwrap();
+        let q2 = q.clone();
+        let t = std::thread::spawn(move || q2.send(1).is_ok());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.recv(), Some(0));
+        assert!(t.join().unwrap());
+        assert_eq!(q.recv(), Some(1));
+    }
+
+    #[test]
+    fn recv_batch_drains_up_to_max() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(16);
+        for i in 0..10 {
+            q.send(i).unwrap();
+        }
+        let b = q.recv_batch(4);
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        assert_eq!(q.len(), 6);
+    }
+}

@@ -1,0 +1,470 @@
+//! Expert grouping — the paper's communication-centric optimization
+//! (§4.1, Algorithms 1–2).
+//!
+//! * [`fully_nonuniform`] — spectral clustering on the affinity matrix
+//!   with group sizes driven purely by affinity structure,
+//! * [`controlled_nonuniform`] — Algorithm 2: sizes bounded to
+//!   `[E−δ, E+δ]` with `δ = max(1, round(E·r))`,
+//! * [`uniform`] — the Occult/C2R-style equal-size baseline (`δ = 0`),
+//! * [`select_r`] — knee-point selection on the (S(r), U(r)) trade-off
+//!   curve (Eqs. 1–2, Appendix A.1),
+//! * [`hierarchical`] — two-level grouping for multi-node topologies:
+//!   fully non-uniform across nodes (cross-node traffic is the scarce
+//!   resource), controlled non-uniform across GPUs within a node.
+
+use crate::cluster::Topology;
+use crate::linalg::{spectral_cluster, Matrix};
+use crate::profile::{size_deviation, LayerProfile};
+use crate::stats::Rng;
+
+/// A grouping of one layer's experts: `groups[d]` lists the expert ids of
+/// group `d`. Always a partition of `0..experts`.
+pub type Grouping = Vec<Vec<usize>>;
+
+/// Intra-group affinity score of expert `e` against group `gs`
+/// (Algorithm 1 restricted to one candidate expert).
+pub fn affinity_to_group(aff: &Matrix, e: usize, gs: &[usize]) -> f64 {
+    gs.iter().filter(|&&j| j != e).map(|&j| aff[(e, j)]).sum()
+}
+
+/// Total intra-group affinity score (Algorithm 1).
+pub fn group_score(aff: &Matrix, gs: &[usize]) -> f64 {
+    let mut s = 0.0;
+    for (i, &a) in gs.iter().enumerate() {
+        for &b in &gs[i + 1..] {
+            s += aff[(a, b)];
+        }
+    }
+    s
+}
+
+/// Check that `groups` is a partition of `0..experts` (test/debug aid and
+/// a hard invariant of every public function here).
+pub fn is_partition(groups: &Grouping, experts: usize) -> bool {
+    let mut seen = vec![false; experts];
+    let mut count = 0;
+    for g in groups {
+        for &e in g {
+            if e >= experts || seen[e] {
+                return false;
+            }
+            seen[e] = true;
+            count += 1;
+        }
+    }
+    count == experts
+}
+
+/// Fully non-uniform grouping: spectral clusters used as-is, except that
+/// empty groups are repaired (each group must host ≥ `min_size` experts so
+/// that every device owns at least one expert).
+pub fn fully_nonuniform(profile: &LayerProfile, d: usize, min_size: usize,
+                        rng: &mut Rng) -> Grouping {
+    let e = profile.experts();
+    assert!(d >= 1 && d * min_size.max(1) <= e,
+            "cannot form {d} groups of ≥{min_size} from {e} experts");
+    let assign = spectral_cluster(&profile.affinity, d, rng, 4);
+    let mut groups: Grouping = vec![Vec::new(); d];
+    for (ex, &g) in assign.iter().enumerate() {
+        groups[g].push(ex);
+    }
+    repair_min_sizes(&mut groups, &profile.affinity, min_size.max(1));
+    groups
+}
+
+/// Move weakest-affinity experts from the largest groups into groups that
+/// are below `min_size`.
+fn repair_min_sizes(groups: &mut Grouping, aff: &Matrix, min_size: usize) {
+    loop {
+        let Some(needy) =
+            (0..groups.len()).find(|&g| groups[g].len() < min_size)
+        else {
+            break;
+        };
+        let donor = (0..groups.len())
+            .filter(|&g| g != needy && groups[g].len() > min_size)
+            .max_by_key(|&g| groups[g].len())
+            .expect("no donor group while repairing sizes");
+        // weakest member of the donor (least intra-group affinity)
+        let (idx, _) = groups[donor]
+            .iter()
+            .enumerate()
+            .map(|(i, &ex)| {
+                (i, affinity_to_group(aff, ex, &groups[donor]))
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let ex = groups[donor].swap_remove(idx);
+        groups[needy].push(ex);
+    }
+}
+
+/// Controlled non-uniform grouping — Algorithm 2 of the paper.
+///
+/// Group sizes are restricted to `[max(1, E−δ), E+δ]` with
+/// `E = ⌊n/D⌋`, `δ = max(1, round(E·r))`.
+pub fn controlled_nonuniform(profile: &LayerProfile, d: usize, r: f64,
+                             rng: &mut Rng) -> Grouping {
+    let e_total = profile.experts();
+    let e_ideal = e_total / d;
+    assert!(e_ideal >= 1, "more groups than experts");
+    let delta = ((e_ideal as f64 * r).round() as usize).max(1);
+    let num_min = e_ideal.saturating_sub(delta).max(1);
+    let num_max = e_ideal + delta;
+    bounded_grouping(profile, d, num_min, num_max, rng)
+}
+
+/// Uniform grouping (Occult / C2R baseline): every group exactly `⌊n/D⌋`
+/// or `⌈n/D⌉` (exactly equal when `D | n`, as in every paper config).
+pub fn uniform(profile: &LayerProfile, d: usize, rng: &mut Rng) -> Grouping {
+    let e_total = profile.experts();
+    assert!(d <= e_total, "more groups than experts");
+    let lo = e_total / d;
+    let hi = e_total.div_ceil(d);
+    bounded_grouping(profile, d, lo.max(1), hi, rng)
+}
+
+/// Shared size-bounded refinement: spectral seed → trim oversized groups
+/// (keep top-`num_max` by affinity, overflow to Ω) → re-assign Ω to the
+/// highest-affinity group with space → top up undersized groups from the
+/// oversized ones (weakest-affinity members move).
+fn bounded_grouping(profile: &LayerProfile, d: usize, num_min: usize,
+                    num_max: usize, rng: &mut Rng) -> Grouping {
+    let e_total = profile.experts();
+    let aff = &profile.affinity;
+    assert!(d * num_min <= e_total && e_total <= d * num_max,
+            "bounds infeasible: {d} groups of [{num_min},{num_max}] for \
+             {e_total} experts");
+
+    let assign = spectral_cluster(aff, d, rng, 4);
+    let mut groups: Grouping = vec![Vec::new(); d];
+    for (ex, &g) in assign.iter().enumerate() {
+        groups[g].push(ex);
+    }
+
+    // Trim oversized groups: keep the top-num_max experts by intra-group
+    // affinity, push the rest to Ω.
+    let mut omega: Vec<usize> = Vec::new();
+    for g in groups.iter_mut() {
+        if g.len() > num_max {
+            let snapshot = g.clone();
+            g.sort_by(|&a, &b| {
+                affinity_to_group(aff, b, &snapshot)
+                    .partial_cmp(&affinity_to_group(aff, a, &snapshot))
+                    .unwrap()
+            });
+            omega.extend(g.split_off(num_max));
+        }
+    }
+
+    // Assign Ω members to the group with highest affinity among those
+    // with spare capacity.
+    for ex in omega {
+        let dst = (0..d)
+            .filter(|&g| groups[g].len() < num_max)
+            .max_by(|&a, &b| {
+                affinity_to_group(aff, ex, &groups[a])
+                    .partial_cmp(&affinity_to_group(aff, ex, &groups[b]))
+                    .unwrap()
+            })
+            .expect("capacity must exist (d*num_max >= experts)");
+        groups[dst].push(ex);
+    }
+
+    // Top up undersized groups by pulling the weakest-affinity experts out
+    // of groups that have slack above num_min.
+    loop {
+        let Some(needy) = (0..d)
+            .filter(|&g| groups[g].len() < num_min)
+            .min_by_key(|&g| groups[g].len())
+        else {
+            break;
+        };
+        // donor: the group with most slack; tie-break by weakest member
+        let donor = (0..d)
+            .filter(|&g| g != needy && groups[g].len() > num_min)
+            .max_by_key(|&g| groups[g].len())
+            .expect("donor must exist (d*num_min <= experts)");
+        let (idx, _) = groups[donor]
+            .iter()
+            .enumerate()
+            .map(|(i, &ex)| {
+                // prefer the member that most prefers the needy group
+                let leave = affinity_to_group(aff, ex, &groups[donor]);
+                let join = affinity_to_group(aff, ex, &groups[needy]);
+                (i, leave - join)
+            })
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        let ex = groups[donor].swap_remove(idx);
+        groups[needy].push(ex);
+    }
+    groups
+}
+
+/// Sweep candidate non-uniformity ratios and return
+/// `(r, U(r), S(r))` triples (Eqs. 1–2).
+pub fn tradeoff_curve(profile: &LayerProfile, d: usize, candidates: &[f64],
+                      rng: &mut Rng) -> Vec<(f64, f64, f64)> {
+    candidates
+        .iter()
+        .map(|&r| {
+            let g = controlled_nonuniform(profile, d, r, rng);
+            (
+                r,
+                profile.affinity_utilization(&g),
+                size_deviation(&g, profile.experts()),
+            )
+        })
+        .collect()
+}
+
+/// Knee-point selection of the non-uniformity ratio (Appendix A.1): on
+/// the normalized (S, U) curve, pick the candidate with maximum distance
+/// above the chord from the first to the last point — the point where
+/// affinity gain per unit of size disparity starts saturating.
+pub fn select_r(profile: &LayerProfile, d: usize, candidates: &[f64],
+                rng: &mut Rng) -> f64 {
+    assert!(!candidates.is_empty());
+    let curve = tradeoff_curve(profile, d, candidates, rng);
+    if curve.len() == 1 {
+        return curve[0].0;
+    }
+    let (umin, umax) = min_max(curve.iter().map(|c| c.1));
+    let (smin, smax) = min_max(curve.iter().map(|c| c.2));
+    let nu = |u: f64| {
+        if umax > umin { (u - umin) / (umax - umin) } else { 0.0 }
+    };
+    let ns = |s: f64| {
+        if smax > smin { (s - smin) / (smax - smin) } else { 0.0 }
+    };
+    // Chord from first to last candidate in normalized (S, U) space.
+    let (x0, y0) = (ns(curve[0].2), nu(curve[0].1));
+    let (x1, y1) =
+        (ns(curve[curve.len() - 1].2), nu(curve[curve.len() - 1].1));
+    let mut best = (curve[0].0, f64::NEG_INFINITY);
+    for &(r, u, s) in &curve {
+        let (x, y) = (ns(s), nu(u));
+        // signed distance above the chord
+        let d = if (x1 - x0).abs() < 1e-12 {
+            y - y0
+        } else {
+            y - (y0 + (y1 - y0) * (x - x0) / (x1 - x0))
+        };
+        if d > best.1 {
+            best = (r, d);
+        }
+    }
+    best.0
+}
+
+fn min_max(vals: impl Iterator<Item = f64>) -> (f64, f64) {
+    vals.fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), v| {
+        (lo.min(v), hi.max(v))
+    })
+}
+
+/// Hierarchical grouping for one layer (paper §4.1 "Hierarchical Grouping
+/// for Distributed Expert Placement"): fully non-uniform across nodes,
+/// controlled non-uniform across GPUs within each node. Returns one group
+/// per GPU, indexed by global GPU id.
+pub fn hierarchical(profile: &LayerProfile, topo: &Topology, r: f64,
+                    rng: &mut Rng) -> Grouping {
+    let g_per_node = topo.gpus_per_node;
+    // Level 1: node groups (each must be splittable into g_per_node
+    // non-empty GPU groups).
+    let node_groups = if topo.nodes == 1 {
+        vec![(0..profile.experts()).collect::<Vec<usize>>()]
+    } else {
+        fully_nonuniform(profile, topo.nodes, g_per_node, rng)
+    };
+
+    // Level 2: split each node group into per-GPU groups with controlled
+    // non-uniformity (local expert ids remapped through the node group).
+    let mut out: Grouping = vec![Vec::new(); topo.num_gpus()];
+    for (node, members) in node_groups.iter().enumerate() {
+        let sub = sub_profile(profile, members);
+        let local = controlled_nonuniform(&sub, g_per_node, r, rng);
+        for (gi, lg) in local.into_iter().enumerate() {
+            let gpu = node * g_per_node + gi;
+            out[gpu] = lg.into_iter().map(|li| members[li]).collect();
+        }
+    }
+    out
+}
+
+/// Restrict a layer profile to an expert subset (ids renumbered 0..len).
+pub fn sub_profile(profile: &LayerProfile, members: &[usize])
+                   -> LayerProfile {
+    let m = members.len();
+    let aff = Matrix::from_fn(m, m, |i, j| {
+        profile.affinity[(members[i], members[j])]
+    });
+    LayerProfile {
+        affinity: aff,
+        load: members.iter().map(|&e| profile.load[e]).collect(),
+        tokens: profile.tokens,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profile::ModelProfile;
+    use crate::testutil::{check, prop_assert};
+    use crate::trace::{Profile, TraceGen};
+
+    fn profile(experts: usize, top_k: usize, seed: u64) -> LayerProfile {
+        let t = TraceGen {
+            experts,
+            top_k,
+            layers: 1,
+            profile: Profile::Text,
+            seed,
+        }
+        .generate(512);
+        ModelProfile::from_trace(&t).layers.remove(0)
+    }
+
+    #[test]
+    fn uniform_sizes_exact() {
+        let p = profile(64, 8, 1);
+        let g = uniform(&p, 4, &mut Rng::new(1));
+        assert!(is_partition(&g, 64));
+        assert!(g.iter().all(|gr| gr.len() == 16));
+    }
+
+    #[test]
+    fn controlled_sizes_within_bounds() {
+        let p = profile(64, 8, 2);
+        for r in [0.1, 0.15, 0.3, 0.5] {
+            let g = controlled_nonuniform(&p, 4, r, &mut Rng::new(2));
+            assert!(is_partition(&g, 64));
+            let e = 16usize;
+            let delta = ((e as f64 * r).round() as usize).max(1);
+            for gr in &g {
+                assert!(
+                    gr.len() >= e - delta && gr.len() <= e + delta,
+                    "r={r}: size {} outside [{},{}]",
+                    gr.len(),
+                    e - delta,
+                    e + delta
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn nonuniform_captures_more_affinity_than_uniform() {
+        let p = profile(64, 8, 3);
+        let mut rng = Rng::new(3);
+        let gu = uniform(&p, 4, &mut rng);
+        let gf = fully_nonuniform(&p, 4, 1, &mut rng);
+        let gc = controlled_nonuniform(&p, 4, 0.3, &mut rng);
+        let uu = p.affinity_utilization(&gu);
+        let uf = p.affinity_utilization(&gf);
+        let uc = p.affinity_utilization(&gc);
+        // Fig. 1a ordering: relaxing the constraint exploits affinity
+        assert!(uf >= uc - 0.02, "fully {uf} vs controlled {uc}");
+        assert!(uc >= uu - 0.02, "controlled {uc} vs uniform {uu}");
+        assert!(uf > uu, "fully {uf} must beat uniform {uu}");
+    }
+
+    #[test]
+    fn fully_nonuniform_respects_min_size() {
+        let p = profile(32, 4, 4);
+        let g = fully_nonuniform(&p, 4, 2, &mut Rng::new(4));
+        assert!(is_partition(&g, 32));
+        assert!(g.iter().all(|gr| gr.len() >= 2));
+    }
+
+    #[test]
+    fn hierarchical_partitions_across_gpus() {
+        let p = profile(64, 8, 5);
+        let topo = Topology::two_by_two();
+        let g = hierarchical(&p, &topo, 0.15, &mut Rng::new(5));
+        assert_eq!(g.len(), 4);
+        assert!(is_partition(&g, 64));
+        assert!(g.iter().all(|gr| !gr.is_empty()));
+    }
+
+    #[test]
+    fn hierarchical_concentrates_affinity_within_nodes() {
+        let p = profile(64, 8, 6);
+        let topo = Topology::two_by_two();
+        let g = hierarchical(&p, &topo, 0.15, &mut Rng::new(6));
+        // node-level affinity utilization (union of a node's gpu groups)
+        let node0: Vec<usize> =
+            g[0].iter().chain(&g[1]).copied().collect();
+        let node1: Vec<usize> =
+            g[2].iter().chain(&g[3]).copied().collect();
+        let u_nodes =
+            p.affinity_utilization(&vec![node0, node1]);
+        let u_gpus = p.affinity_utilization(&g);
+        assert!(u_nodes >= u_gpus, "node-level captures ≥ gpu-level");
+        // and both should beat random chance by a margin
+        assert!(u_nodes > 0.5, "u_nodes={u_nodes}");
+    }
+
+    #[test]
+    fn select_r_is_in_candidates_and_interior_on_curved_tradeoff() {
+        let p = profile(64, 8, 7);
+        let cands = [0.0, 0.1, 0.15, 0.25, 0.4, 0.6, 1.0];
+        let r = select_r(&p, 4, &cands, &mut Rng::new(7));
+        assert!(cands.contains(&r));
+    }
+
+    #[test]
+    fn tradeoff_curve_monotone_in_s_bound() {
+        let p = profile(64, 8, 8);
+        let curve =
+            tradeoff_curve(&p, 4, &[0.05, 0.5], &mut Rng::new(8));
+        // allowing more deviation can only increase the S bound in effect;
+        // empirical S should not shrink dramatically
+        assert_eq!(curve.len(), 2);
+        assert!(curve[1].2 >= curve[0].2 - 1e-9,
+                "S(0.5) {} < S(0.05) {}", curve[1].2, curve[0].2);
+    }
+
+    #[test]
+    fn group_score_matches_alg1() {
+        let mut aff = Matrix::zeros(3, 3);
+        aff[(0, 1)] = 2.0;
+        aff[(1, 0)] = 2.0;
+        aff[(1, 2)] = 5.0;
+        aff[(2, 1)] = 5.0;
+        assert_eq!(group_score(&aff, &[0, 1, 2]), 7.0);
+        assert_eq!(affinity_to_group(&aff, 0, &[1, 2]), 2.0);
+    }
+
+    #[test]
+    fn property_partition_invariant_across_configs() {
+        check(25, |rng| {
+            let experts = [16, 32, 64][rng.index(3)];
+            let d = [2, 4, 8][rng.index(3)];
+            let r = rng.f64();
+            let p = profile(experts, 4, rng.next_u64());
+            let g = controlled_nonuniform(&p, d, r, rng);
+            prop_assert(is_partition(&g, experts), "not a partition")?;
+            let e = experts / d;
+            let delta = ((e as f64 * r).round() as usize).max(1);
+            for gr in &g {
+                prop_assert(
+                    gr.len() >= e.saturating_sub(delta).max(1)
+                        && gr.len() <= e + delta,
+                    format!("size {} outside bounds", gr.len()),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sub_profile_renumbers() {
+        let p = profile(8, 2, 9);
+        let sub = sub_profile(&p, &[3, 5, 7]);
+        assert_eq!(sub.experts(), 3);
+        assert_eq!(sub.load[0], p.load[3]);
+        assert_eq!(sub.affinity[(0, 1)], p.affinity[(3, 5)]);
+    }
+}

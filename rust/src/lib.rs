@@ -1,0 +1,62 @@
+//! # GRACE-MoE
+//!
+//! Reproduction of *"GRACE-MoE: Grouping and Replication with
+//! Locality-Aware Routing for Efficient Distributed MoE Inference"*
+//! (Han et al., 2025).
+//!
+//! GRACE-MoE jointly optimizes the two conflicting bottlenecks of
+//! distributed Sparse-MoE inference — All-to-All communication overhead and
+//! computational load imbalance — through:
+//!
+//! * **offline non-uniform hierarchical expert grouping** on an expert
+//!   co-activation affinity matrix ([`grouping`]),
+//! * **dynamic expert replication** driven by the load-skew factor
+//!   `ρ = W_max / W̄` ([`replication`]),
+//! * **online locality-aware routing**: weighted round-robin with load
+//!   prediction + topology-aware locality preference ([`routing`]),
+//! * a **hierarchical sparse communication** substrate replacing flat
+//!   global All-to-All ([`comm`]).
+//!
+//! This crate is the L3 coordinator of a three-layer rust + JAX + Pallas
+//! stack: the JAX/Pallas compute graph is AOT-lowered to HLO text at build
+//! time (`make artifacts`) and executed from rust through the PJRT C API
+//! ([`runtime`]); python never runs on the request path.
+//!
+//! Architecture tour (bottom-up):
+//!
+//! | layer | modules |
+//! |---|---|
+//! | substrates | [`stats`], [`linalg`], [`configio`], [`cli`], [`testutil`], [`bench`], [`exec`] |
+//! | cluster model | [`cluster`], [`comm`] |
+//! | profiling | [`trace`], [`profile`] |
+//! | GRACE algorithms | [`grouping`], [`replication`], [`routing`], [`placement`] |
+//! | engine | [`engine`], [`runtime`], [`server`] |
+//! | evaluation | [`baselines`], [`metrics`], [`report`] |
+
+pub mod bench;
+pub mod cli;
+pub mod configio;
+pub mod linalg;
+pub mod stats;
+pub mod testutil;
+
+pub mod cluster;
+pub mod comm;
+
+pub mod profile;
+pub mod trace;
+
+pub mod grouping;
+pub mod placement;
+pub mod replication;
+pub mod routing;
+
+pub mod config;
+pub mod engine;
+pub mod exec;
+pub mod runtime;
+pub mod server;
+
+pub mod baselines;
+pub mod metrics;
+pub mod report;

@@ -1,0 +1,189 @@
+//! k-means++ clustering on embedded rows (final step of spectral
+//! clustering). Deterministic given the caller-supplied RNG seed.
+
+use crate::stats::Rng;
+
+/// Result of a k-means run.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    /// Cluster id per point, in `[0, k)`.
+    pub assignment: Vec<usize>,
+    /// Final centroids, `k × dim`.
+    pub centroids: Vec<Vec<f64>>,
+    /// Sum of squared distances to assigned centroids.
+    pub inertia: f64,
+    /// Iterations executed until convergence (or the cap).
+    pub iterations: usize,
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// k-means++ with Lloyd iterations.
+///
+/// Empty clusters are re-seeded with the point farthest from its centroid,
+/// so the result always uses exactly `k` clusters when `points.len() >= k`.
+pub fn kmeans(points: &[Vec<f64>], k: usize, rng: &mut Rng,
+              max_iters: usize) -> KMeansResult {
+    let n = points.len();
+    assert!(k > 0 && n >= k, "kmeans: need at least k={k} points, got {n}");
+    let dim = points[0].len();
+
+    // k-means++ seeding.
+    let mut centroids: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centroids.push(points[rng.index(n)].clone());
+    let mut d2: Vec<f64> =
+        points.iter().map(|p| dist2(p, &centroids[0])).collect();
+    while centroids.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            // all points coincide with some centroid; pick any
+            rng.index(n)
+        } else {
+            let mut x = rng.f64() * total;
+            let mut pick = n - 1;
+            for (i, &d) in d2.iter().enumerate() {
+                x -= d;
+                if x <= 0.0 {
+                    pick = i;
+                    break;
+                }
+            }
+            pick
+        };
+        centroids.push(points[next].clone());
+        for (i, p) in points.iter().enumerate() {
+            let d = dist2(p, centroids.last().unwrap());
+            if d < d2[i] {
+                d2[i] = d;
+            }
+        }
+    }
+
+    let mut assignment = vec![0usize; n];
+    let mut iterations = 0;
+    for it in 0..max_iters {
+        iterations = it + 1;
+        // Assign.
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let mut best = 0;
+            let mut bd = f64::INFINITY;
+            for (c, cen) in centroids.iter().enumerate() {
+                let d = dist2(p, cen);
+                if d < bd {
+                    bd = d;
+                    best = c;
+                }
+            }
+            if assignment[i] != best {
+                assignment[i] = best;
+                changed = true;
+            }
+        }
+        // Update.
+        let mut sums = vec![vec![0.0; dim]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in points.iter().enumerate() {
+            counts[assignment[i]] += 1;
+            for (s, &x) in sums[assignment[i]].iter_mut().zip(p) {
+                *s += x;
+            }
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // Re-seed with the farthest point from its centroid.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        dist2(&points[a], &centroids[assignment[a]])
+                            .partial_cmp(&dist2(
+                                &points[b],
+                                &centroids[assignment[b]],
+                            ))
+                            .unwrap()
+                    })
+                    .unwrap();
+                centroids[c] = points[far].clone();
+                changed = true;
+            } else {
+                for (j, s) in sums[c].iter().enumerate() {
+                    centroids[c][j] = s / counts[c] as f64;
+                }
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+    }
+
+    let inertia = points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| dist2(p, &centroids[assignment[i]]))
+        .sum();
+    KMeansResult { assignment, centroids, inertia, iterations }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob(center: (f64, f64), n: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+        (0..n)
+            .map(|_| {
+                vec![
+                    center.0 + 0.1 * rng.gaussian(),
+                    center.1 + 0.1 * rng.gaussian(),
+                ]
+            })
+            .collect()
+    }
+
+    #[test]
+    fn separates_obvious_blobs() {
+        let mut rng = Rng::new(1);
+        let mut pts = blob((0.0, 0.0), 20, &mut rng);
+        pts.extend(blob((10.0, 10.0), 20, &mut rng));
+        pts.extend(blob((0.0, 10.0), 20, &mut rng));
+        let r = kmeans(&pts, 3, &mut rng, 50);
+        // points in the same blob share a cluster id
+        for chunk in [0..20, 20..40, 40..60] {
+            let ids: Vec<usize> =
+                chunk.clone().map(|i| r.assignment[i]).collect();
+            assert!(ids.iter().all(|&c| c == ids[0]), "{chunk:?}: {ids:?}");
+        }
+        assert!(r.inertia < 5.0);
+    }
+
+    #[test]
+    fn k_equals_n() {
+        let mut rng = Rng::new(2);
+        let pts: Vec<Vec<f64>> =
+            (0..5).map(|i| vec![i as f64 * 3.0]).collect();
+        let r = kmeans(&pts, 5, &mut rng, 20);
+        let mut ids = r.assignment.clone();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 5, "each point its own cluster");
+        assert!(r.inertia < 1e-12);
+    }
+
+    #[test]
+    fn identical_points_dont_crash() {
+        let mut rng = Rng::new(3);
+        let pts = vec![vec![1.0, 1.0]; 10];
+        let r = kmeans(&pts, 3, &mut rng, 20);
+        assert_eq!(r.assignment.len(), 10);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let pts: Vec<Vec<f64>> = (0..30)
+            .map(|i| vec![(i % 7) as f64, (i % 3) as f64])
+            .collect();
+        let a = kmeans(&pts, 4, &mut Rng::new(9), 50);
+        let b = kmeans(&pts, 4, &mut Rng::new(9), 50);
+        assert_eq!(a.assignment, b.assignment);
+    }
+}

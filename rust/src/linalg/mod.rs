@@ -1,0 +1,23 @@
+//! Linear-algebra substrate for spectral clustering.
+//!
+//! The paper's grouping phase (§4.1) applies spectral clustering to the
+//! expert affinity matrix. No BLAS/LAPACK crates are available offline, so
+//! this module implements the needed pieces directly:
+//!
+//! * [`matrix::Matrix`] — dense row-major f64 matrix,
+//! * [`jacobi::eigh`] — cyclic Jacobi eigendecomposition for symmetric
+//!   matrices (affinity matrices are ≤ 128×128, where Jacobi is both
+//!   simple and accurate),
+//! * [`kmeans`] — k-means++ on embedded rows,
+//! * [`spectral`] — normalized-Laplacian spectral embedding
+//!   (Ng–Jordan–Weiss).
+
+pub mod jacobi;
+pub mod kmeans;
+pub mod matrix;
+pub mod spectral;
+
+pub use jacobi::eigh;
+pub use kmeans::{kmeans, KMeansResult};
+pub use matrix::Matrix;
+pub use spectral::{spectral_cluster, spectral_embedding};

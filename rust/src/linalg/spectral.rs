@@ -1,0 +1,133 @@
+//! Normalized spectral clustering (Ng–Jordan–Weiss) on affinity matrices.
+//!
+//! This is the clustering primitive behind the paper's §4.1: "Spectral
+//! clustering produces groups with dense intra-connections and sparse
+//! inter-connections, aligning with our communication-centric goal."
+//!
+//! Pipeline: symmetric-normalized Laplacian `L = I − D^{-1/2} A D^{-1/2}`
+//! → k smallest eigenvectors ([`crate::linalg::eigh`]) → row-normalize →
+//! k-means++ on the embedding.
+
+use super::jacobi::eigh;
+use super::kmeans::kmeans;
+use super::matrix::Matrix;
+use crate::stats::Rng;
+
+/// Spectral embedding: rows of the k smallest normalized-Laplacian
+/// eigenvectors, row-normalized to the unit sphere.
+pub fn spectral_embedding(affinity: &Matrix, k: usize) -> Vec<Vec<f64>> {
+    let n = affinity.rows();
+    assert!(affinity.is_symmetric(1e-9), "affinity must be symmetric");
+    assert!(k >= 1 && k <= n);
+
+    // Degree (add a tiny floor so isolated experts don't divide by zero).
+    let deg: Vec<f64> = (0..n)
+        .map(|i| affinity.row(i).iter().sum::<f64>().max(1e-12))
+        .collect();
+    let mut lap = Matrix::from_fn(n, n, |i, j| {
+        let norm = -affinity[(i, j)] / (deg[i] * deg[j]).sqrt();
+        if i == j { 1.0 + norm } else { norm }
+    });
+    // Symmetrize against float error before Jacobi.
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let m = 0.5 * (lap[(i, j)] + lap[(j, i)]);
+            lap[(i, j)] = m;
+            lap[(j, i)] = m;
+        }
+    }
+
+    let (_vals, vecs) = eigh(&lap);
+    // k smallest eigenvalues = first k columns (eigh sorts ascending).
+    let mut rows: Vec<Vec<f64>> = (0..n)
+        .map(|i| (0..k).map(|c| vecs[(i, c)]).collect())
+        .collect();
+    for r in &mut rows {
+        let norm = r.iter().map(|x| x * x).sum::<f64>().sqrt();
+        if norm > 1e-12 {
+            for x in r.iter_mut() {
+                *x /= norm;
+            }
+        }
+    }
+    rows
+}
+
+/// Full spectral clustering: returns a cluster id in `[0, k)` per node.
+///
+/// Runs k-means++ `restarts` times and keeps the lowest-inertia result
+/// (spectral + Lloyd is sensitive to seeding; restarts make the offline
+/// grouping phase stable).
+pub fn spectral_cluster(affinity: &Matrix, k: usize, rng: &mut Rng,
+                        restarts: usize) -> Vec<usize> {
+    let emb = spectral_embedding(affinity, k);
+    let mut best: Option<(f64, Vec<usize>)> = None;
+    for _ in 0..restarts.max(1) {
+        let r = kmeans(&emb, k, rng, 100);
+        if best.as_ref().map_or(true, |(bi, _)| r.inertia < *bi) {
+            best = Some((r.inertia, r.assignment));
+        }
+    }
+    best.unwrap().1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Block-diagonal affinity with `k` planted communities.
+    fn planted(n_per: usize, k: usize, p_in: f64, p_out: f64,
+               rng: &mut Rng) -> Matrix {
+        let n = n_per * k;
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let same = i / n_per == j / n_per;
+                let w = if same { p_in } else { p_out } * (0.5 + rng.f64());
+                a[(i, j)] = w;
+                a[(j, i)] = w;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn recovers_planted_communities() {
+        let mut rng = Rng::new(31);
+        let a = planted(8, 3, 1.0, 0.02, &mut rng);
+        let ids = spectral_cluster(&a, 3, &mut rng, 5);
+        for b in 0..3 {
+            let block: Vec<usize> =
+                (b * 8..(b + 1) * 8).map(|i| ids[i]).collect();
+            assert!(
+                block.iter().all(|&c| c == block[0]),
+                "block {b} split: {block:?}"
+            );
+        }
+        // blocks land in distinct clusters
+        let mut reps: Vec<usize> = (0..3).map(|b| ids[b * 8]).collect();
+        reps.sort_unstable();
+        reps.dedup();
+        assert_eq!(reps.len(), 3);
+    }
+
+    #[test]
+    fn embedding_rows_unit_norm() {
+        let mut rng = Rng::new(37);
+        let a = planted(5, 2, 1.0, 0.1, &mut rng);
+        let emb = spectral_embedding(&a, 2);
+        for r in emb {
+            let norm: f64 = r.iter().map(|x| x * x).sum::<f64>().sqrt();
+            assert!((norm - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn isolated_nodes_dont_crash() {
+        let a = Matrix::zeros(6, 6);
+        let mut rng = Rng::new(41);
+        let ids = spectral_cluster(&a, 2, &mut rng, 2);
+        assert_eq!(ids.len(), 6);
+        assert!(ids.iter().all(|&c| c < 2));
+    }
+}

@@ -1,0 +1,283 @@
+//! `grace-moe` — launcher CLI for the GRACE-MoE reproduction.
+//!
+//! Subcommands:
+//!
+//! * `simulate`  — run the paper-scale timing engine for one
+//!   model × system × workload × cluster and print the metric table.
+//! * `compare`   — run the full Fig.-4 system set on one configuration.
+//! * `components`— the Table-1 incremental component ladder.
+//! * `serve`     — execute-mode serving demo on the tiny AOT model
+//!   (requires `make artifacts`).
+//! * `placement` — show the offline phase's grouping/replication decisions.
+
+use grace_moe::baselines::SystemSpec;
+use grace_moe::cli::Args;
+use grace_moe::cluster::Topology;
+use grace_moe::config::{ModelSpec, Workload};
+use grace_moe::engine::real::{place_real, profile_real, RealModel};
+use grace_moe::engine::{simulate, SimConfig};
+use grace_moe::placement::ReplicationMode;
+use grace_moe::report;
+use grace_moe::routing::RoutingPolicy;
+use grace_moe::server::{MoEServer, Request, ServerConfig};
+use grace_moe::stats::Rng;
+use grace_moe::trace::Profile;
+use std::sync::Arc;
+
+const USAGE: &str = "\
+grace-moe — GRACE-MoE distributed MoE inference (paper reproduction)
+
+USAGE:
+  grace-moe <simulate|compare|components|serve|placement> [options]
+
+COMMON OPTIONS:
+  --model <olmoe|dsv2_lite|qwen3>   model (default olmoe)
+  --nodes <n>                       nodes (default 2)
+  --gpus <n>                        GPUs per node (default 2)
+  --batch / --prefill / --decode    workload (default 256/128/16)
+  --dataset <text|math|code|mixed>  serving trace profile (default text)
+  --placement-dataset <...>         profiling profile (default = dataset)
+  --r <ratio>                       non-uniformity ratio (default 0.15)
+  --seed <u64>                      run seed (default 42)
+  --json                            machine-readable output
+
+SERVE OPTIONS (tiny AOT model; run `make artifacts` first):
+  --variant <olmoe_tiny|dsv2_tiny|qwen3_tiny>
+  --requests <n>  --prompt <len>  --new-tokens <n>
+  --policy <primary|wrr|tar>
+  --artifacts <dir>                 artifacts dir (default ./artifacts)
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match run(argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: Vec<String>) -> anyhow::Result<()> {
+    let args = Args::parse(argv, &["json", "help"])?;
+    if args.flag("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "simulate" => cmd_simulate(&args),
+        "compare" => cmd_compare(&args),
+        "components" => cmd_components(&args),
+        "serve" => cmd_serve(&args),
+        "placement" => cmd_placement(&args),
+        other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
+    }
+}
+
+fn sim_config(args: &Args) -> anyhow::Result<SimConfig> {
+    let model = ModelSpec::by_name(args.str_or("model", "olmoe"))
+        .ok_or_else(|| anyhow::anyhow!("unknown model"))?;
+    let topo = Topology::paper_testbed(
+        args.usize_or("nodes", 2)?,
+        args.usize_or("gpus", 2)?,
+    );
+    topo.validate().map_err(|e| anyhow::anyhow!(e))?;
+    let workload = Workload {
+        batch: args.usize_or("batch", 256)?,
+        prefill: args.usize_or("prefill", 128)?,
+        decode: args.usize_or("decode", 16)?,
+    };
+    let mut cfg = SimConfig::new(model, topo, workload);
+    let ds = args.str_or("dataset", "text");
+    cfg.serve_profile = Profile::from_name(ds)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{ds}'"))?;
+    let pds = args.str_or("placement-dataset", ds).to_string();
+    cfg.placement_profile = Profile::from_name(&pds)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset '{pds}'"))?;
+    cfg.seed = args.u64_or("seed", 42)?;
+    Ok(cfg)
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let cfg = sim_config(args)?;
+    let r = args.f64_or("r", 0.15)?;
+    let sys = match args.str_or("system", "grace") {
+        "grace" => SystemSpec::grace(r),
+        "occult" => SystemSpec::occult(),
+        "vanilla" => SystemSpec::vanilla(),
+        "tutel" => SystemSpec::tutel(),
+        "megablocks" => SystemSpec::megablocks(),
+        "vllm" => SystemSpec::vllm(),
+        "c2r" => SystemSpec::c2r(),
+        other => anyhow::bail!("unknown system '{other}'"),
+    };
+    let m = simulate(&sys, &cfg);
+    if args.flag("json") {
+        println!(
+            "{}",
+            grace_moe::configio::to_string_pretty(&report::metrics_json(
+                sys.name, &m
+            ))
+        );
+    } else {
+        println!("{}", report::e2e_table(&[sys.name], &[m]).render());
+    }
+    Ok(())
+}
+
+fn cmd_compare(args: &Args) -> anyhow::Result<()> {
+    let cfg = sim_config(args)?;
+    let r = args.f64_or("r", 0.15)?;
+    let systems = SystemSpec::fig4_systems(r);
+    let names: Vec<&str> = systems.iter().map(|s| s.name).collect();
+    let runs: Vec<_> =
+        systems.iter().map(|s| simulate(s, &cfg)).collect();
+    if args.flag("json") {
+        let named: Vec<(&str, &grace_moe::metrics::RunMetrics)> =
+            names.iter().copied().zip(runs.iter()).collect();
+        println!(
+            "{}",
+            grace_moe::configio::to_string_pretty(&report::runs_json(
+                &named
+            ))
+        );
+    } else {
+        println!(
+            "model={} cluster={}x{} workload={}",
+            cfg.model.name,
+            cfg.topo.nodes,
+            cfg.topo.gpus_per_node,
+            cfg.workload.label()
+        );
+        println!("{}", report::e2e_table(&names, &runs).render());
+    }
+    Ok(())
+}
+
+fn cmd_components(args: &Args) -> anyhow::Result<()> {
+    let cfg = sim_config(args)?;
+    let r = args.f64_or("r", 0.15)?;
+    let ladder = SystemSpec::table1_ladder(r);
+    let names: Vec<&str> = ladder.iter().map(|s| s.name).collect();
+    let runs: Vec<_> =
+        ladder.iter().map(|s| simulate(s, &cfg)).collect();
+    println!("{}", report::table1(&names, &runs).render());
+    println!("{}", report::e2e_table(&names, &runs).render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let variant = args.str_or("variant", "olmoe_tiny");
+    let policy = match args.str_or("policy", "tar") {
+        "primary" => RoutingPolicy::Primary,
+        "wrr" => RoutingPolicy::Wrr,
+        "tar" => RoutingPolicy::Tar,
+        other => anyhow::bail!("unknown policy '{other}'"),
+    };
+    let topo = Topology::paper_testbed(
+        args.usize_or("nodes", 2)?,
+        args.usize_or("gpus", 2)?,
+    );
+    let n_requests = args.usize_or("requests", 4)?;
+    let prompt_len = args.usize_or("prompt", 24)?;
+    let new_tokens = args.usize_or("new-tokens", 8)?;
+    let seed = args.u64_or("seed", 42)?;
+
+    eprintln!("loading {variant} from {dir}…");
+    let model = Arc::new(RealModel::load(dir, variant)?);
+    eprintln!("profiling real gate…");
+    let trace = profile_real(&model, 2, seed)?;
+    let placement = Arc::new(place_real(
+        &model,
+        &topo,
+        &trace,
+        ReplicationMode::Dynamic,
+        args.f64_or("r", 0.15)?,
+        seed,
+    ));
+    let server = MoEServer::new(
+        model,
+        placement,
+        topo,
+        policy,
+        ServerConfig {
+            max_batch: args.usize_or("max-batch", 8)?,
+            queue_cap: 64,
+            seed,
+            ffn_mode: if args.str_or("ffn", "per-expert") == "pallas" {
+                grace_moe::engine::real::FfnMode::GroupedPallas
+            } else {
+                grace_moe::engine::real::FfnMode::PerExpert
+            },
+        },
+    );
+    let mut rng = Rng::new(seed);
+    let requests: Vec<Request> = (0..n_requests)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..prompt_len)
+                .map(|_| rng.index(server.model.cfg.vocab) as i32)
+                .collect(),
+            max_new_tokens: new_tokens,
+        })
+        .collect();
+    eprintln!("serving {n_requests} requests (policy={})…",
+              policy.name());
+    let (responses, metrics) = server.serve(requests)?;
+    for r in &responses {
+        println!(
+            "request {}: {} tokens in {:.1} ms — {:?}",
+            r.id,
+            r.tokens.len(),
+            r.latency * 1e3,
+            r.tokens
+        );
+    }
+    if let Some(s) = metrics.latency_summary() {
+        println!(
+            "latency mean {:.1} ms  p50 {:.1} ms  p99 {:.1} ms",
+            s.mean() * 1e3,
+            s.p50() * 1e3,
+            s.p99() * 1e3
+        );
+    }
+    println!("throughput: {:.1} tok/s", metrics.throughput_tps());
+    Ok(())
+}
+
+fn cmd_placement(args: &Args) -> anyhow::Result<()> {
+    let cfg = sim_config(args)?;
+    let sys = SystemSpec::grace(args.f64_or("r", 0.15)?);
+    let p = grace_moe::engine::sim::build_placement(&sys, &cfg);
+    println!(
+        "model={} experts={} gpus={} layers={}",
+        cfg.model.name,
+        p.experts,
+        p.num_gpus,
+        p.layers.len()
+    );
+    for (l, lp) in p.layers.iter().enumerate().take(4) {
+        println!("layer {l}:");
+        for (g, group) in lp.groups.iter().enumerate() {
+            println!(
+                "  gpu {g}: {} experts, load {:.0}, polling {:.3}",
+                group.len(),
+                lp.pre_loads[g],
+                lp.polling[g]
+            );
+        }
+        println!(
+            "  replication: {} hot experts → gpus {:?} (ρ-driven n={})",
+            lp.replication.hot_experts.len(),
+            lp.replication.replica_gpus,
+            lp.replication.n_replica
+        );
+    }
+    println!(
+        "replication overhead: {:.2}% extra instances",
+        p.replication_overhead() * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,145 @@
+//! Metric accumulators for the paper's evaluation quantities (§6.1):
+//! All-to-All time and traffic, GPU idle time, mean per-layer GPU-load
+//! standard deviation, MoE layer time, and end-to-end latency.
+
+use crate::stats::Summary;
+
+/// Metrics of one inference run (one model × system × workload × cluster).
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Total All-to-All communication time, seconds.
+    pub a2a_time: f64,
+    /// Cross-node bytes moved by A2A.
+    pub cross_bytes: f64,
+    /// Intra-node bytes moved by A2A.
+    pub intra_bytes: f64,
+    /// Total GPU idle time (sum over GPUs of sync-wait), seconds.
+    pub idle_time: f64,
+    /// Per-layer GPU-load standard deviations (tokens) — the paper
+    /// reports the mean over layers.
+    pub layer_load_std: Vec<f64>,
+    /// Total MoE-layer time (comm + expert compute + sync), seconds.
+    pub moe_layer_time: f64,
+    /// End-to-end latency, seconds.
+    pub e2e_time: f64,
+    /// Collective launches issued.
+    pub launches: usize,
+    /// Tokens processed (MoE tokens across all layers).
+    pub tokens: usize,
+}
+
+impl RunMetrics {
+    pub fn mean_load_std(&self) -> f64 {
+        if self.layer_load_std.is_empty() {
+            0.0
+        } else {
+            Summary::of(&self.layer_load_std).mean()
+        }
+    }
+
+    /// Accumulate another run segment (e.g. decode steps onto prefill).
+    pub fn accumulate(&mut self, other: &RunMetrics) {
+        self.a2a_time += other.a2a_time;
+        self.cross_bytes += other.cross_bytes;
+        self.intra_bytes += other.intra_bytes;
+        self.idle_time += other.idle_time;
+        self.layer_load_std
+            .extend(other.layer_load_std.iter().copied());
+        self.moe_layer_time += other.moe_layer_time;
+        self.e2e_time += other.e2e_time;
+        self.launches += other.launches;
+        self.tokens += other.tokens;
+    }
+
+    /// The five Table-1 metrics as (name, value) pairs.
+    pub fn table1_metrics(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("all_to_all_time", self.a2a_time),
+            ("cross_node_traffic", self.cross_bytes),
+            ("intra_node_traffic", self.intra_bytes),
+            ("gpu_idle_time", self.idle_time),
+            ("avg_gpu_load_std", self.mean_load_std()),
+        ]
+    }
+}
+
+/// Serving-side metrics (per-request latencies, throughput).
+#[derive(Clone, Debug, Default)]
+pub struct ServeMetrics {
+    /// Per-request end-to-end latencies, seconds.
+    pub latencies: Vec<f64>,
+    /// Tokens generated.
+    pub generated_tokens: usize,
+    /// Wall-clock of the serving window, seconds.
+    pub wall_time: f64,
+}
+
+impl ServeMetrics {
+    pub fn latency_summary(&self) -> Option<Summary> {
+        if self.latencies.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&self.latencies))
+        }
+    }
+
+    pub fn throughput_tps(&self) -> f64 {
+        if self.wall_time <= 0.0 {
+            0.0
+        } else {
+            self.generated_tokens as f64 / self.wall_time
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_load_std() {
+        let m = RunMetrics {
+            layer_load_std: vec![1.0, 3.0],
+            ..Default::default()
+        };
+        assert_eq!(m.mean_load_std(), 2.0);
+        assert_eq!(RunMetrics::default().mean_load_std(), 0.0);
+    }
+
+    #[test]
+    fn accumulate_sums() {
+        let mut a = RunMetrics {
+            a2a_time: 1.0,
+            cross_bytes: 10.0,
+            layer_load_std: vec![1.0],
+            tokens: 5,
+            ..Default::default()
+        };
+        let b = a.clone();
+        a.accumulate(&b);
+        assert_eq!(a.a2a_time, 2.0);
+        assert_eq!(a.cross_bytes, 20.0);
+        assert_eq!(a.layer_load_std.len(), 2);
+        assert_eq!(a.tokens, 10);
+    }
+
+    #[test]
+    fn table1_exposes_five_metrics() {
+        let m = RunMetrics::default();
+        let t = m.table1_metrics();
+        assert_eq!(t.len(), 5);
+        assert_eq!(t[0].0, "all_to_all_time");
+    }
+
+    #[test]
+    fn serve_throughput() {
+        let s = ServeMetrics {
+            latencies: vec![0.1, 0.2],
+            generated_tokens: 100,
+            wall_time: 2.0,
+        };
+        assert_eq!(s.throughput_tps(), 50.0);
+        assert!(s.latency_summary().unwrap().mean() > 0.0);
+        assert_eq!(ServeMetrics::default().throughput_tps(), 0.0);
+    }
+}

@@ -1,0 +1,295 @@
+//! Placement: the per-layer expert → GPU map assembled from grouping +
+//! replication, with the predicted-load polling weights routing consumes,
+//! and HBM memory accounting.
+
+use crate::cluster::{GpuId, Topology};
+use crate::grouping::Grouping;
+use crate::profile::{LayerProfile, ModelProfile};
+use crate::replication::{self, Replication};
+
+/// How replicas are chosen when building a placement.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicationMode {
+    /// No replicas (pure grouping).
+    None,
+    /// Fixed single-replica baseline (FR).
+    Fixed,
+    /// Dynamic replication driven by load skew (DR, Eq. 3).
+    Dynamic,
+}
+
+/// Expert placement for one MoE layer.
+#[derive(Clone, Debug)]
+pub struct LayerPlacement {
+    /// Primary expert set per GPU (`groups[gpu]`).
+    pub groups: Grouping,
+    /// Primary GPU per expert.
+    pub primary: Vec<GpuId>,
+    /// All instances per expert, primary first (secondaries appended in
+    /// replica-GPU order).
+    pub instances: Vec<Vec<GpuId>>,
+    /// The replication decision that produced `instances`.
+    pub replication: Replication,
+    /// Pre-replication per-GPU loads (profiling units: tokens).
+    pub pre_loads: Vec<f64>,
+    /// Eq. 4 predicted post-replication per-GPU loads.
+    pub predicted: Vec<f64>,
+    /// WRR polling weights (inverse predicted loads, normalized).
+    pub polling: Vec<f64>,
+}
+
+/// Whole-model placement plan.
+#[derive(Clone, Debug)]
+pub struct Placement {
+    pub layers: Vec<LayerPlacement>,
+    pub experts: usize,
+    pub num_gpus: usize,
+}
+
+impl LayerPlacement {
+    pub fn build(profile: &LayerProfile, groups: Grouping,
+                 mode: ReplicationMode) -> LayerPlacement {
+        let experts = profile.experts();
+        let mut primary = vec![usize::MAX; experts];
+        for (gpu, g) in groups.iter().enumerate() {
+            for &e in g {
+                primary[e] = gpu;
+            }
+        }
+        assert!(primary.iter().all(|&p| p != usize::MAX),
+                "groups must cover all experts");
+
+        let replication = match mode {
+            ReplicationMode::None => Replication::none(),
+            ReplicationMode::Fixed => {
+                replication::fixed_replication(profile, &groups)
+            }
+            ReplicationMode::Dynamic => {
+                replication::dynamic_replication(profile, &groups)
+            }
+        };
+
+        let mut instances: Vec<Vec<GpuId>> =
+            primary.iter().map(|&p| vec![p]).collect();
+        for &e in &replication.hot_experts {
+            for &g in &replication.replica_gpus {
+                if !instances[e].contains(&g) {
+                    instances[e].push(g);
+                }
+            }
+        }
+
+        let pre_loads: Vec<f64> =
+            groups.iter().map(|g| profile.group_load(g)).collect();
+        let heavy = profile.heaviest_group(&groups);
+        let predicted =
+            replication::predict_loads(&pre_loads, heavy, &replication);
+        let polling = replication::polling_weights(&predicted);
+
+        LayerPlacement {
+            groups,
+            primary,
+            instances,
+            replication,
+            pre_loads,
+            predicted,
+            polling,
+        }
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Total expert instances hosted by `gpu` (primaries + secondaries).
+    pub fn instances_on(&self, gpu: GpuId) -> usize {
+        self.instances.iter().filter(|is| is.contains(&gpu)).count()
+    }
+}
+
+impl Placement {
+    /// Build a whole-model placement by applying `group_fn` per layer.
+    pub fn build(profile: &ModelProfile, mode: ReplicationMode,
+                 mut group_fn: impl FnMut(&LayerProfile) -> Grouping)
+                 -> Placement {
+        let layers: Vec<LayerPlacement> = profile
+            .layers
+            .iter()
+            .map(|lp| LayerPlacement::build(lp, group_fn(lp), mode))
+            .collect();
+        let experts = layers[0].primary.len();
+        let num_gpus = layers[0].num_gpus();
+        Placement { layers, experts, num_gpus }
+    }
+
+    /// Peak per-GPU expert-instance count across layers (memory proxy).
+    pub fn max_instances_per_gpu(&self) -> usize {
+        (0..self.num_gpus)
+            .map(|g| {
+                self.layers
+                    .iter()
+                    .map(|l| l.instances_on(g))
+                    .max()
+                    .unwrap_or(0)
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Total parameter bytes per GPU given per-expert weight bytes
+    /// (summed over layers — each layer's experts are distinct tensors).
+    pub fn bytes_per_gpu(&self, expert_bytes: f64) -> Vec<f64> {
+        (0..self.num_gpus)
+            .map(|g| {
+                self.layers
+                    .iter()
+                    .map(|l| l.instances_on(g) as f64 * expert_bytes)
+                    .sum()
+            })
+            .collect()
+    }
+
+    /// Check the placement fits in HBM (paper §6.3: "keeping the
+    /// parameter footprint within device memory limits").
+    pub fn check_memory(&self, topo: &Topology, expert_bytes: f64)
+                        -> Result<(), String> {
+        for (g, &b) in self.bytes_per_gpu(expert_bytes).iter().enumerate() {
+            if b > topo.hbm_bytes {
+                return Err(format!(
+                    "gpu {g}: {b:.3e} B of experts exceeds HBM \
+                     {:.3e} B",
+                    topo.hbm_bytes
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Replication overhead: secondary instances / primary instances.
+    pub fn replication_overhead(&self) -> f64 {
+        let mut primaries = 0usize;
+        let mut secondaries = 0usize;
+        for l in &self.layers {
+            for is in &l.instances {
+                primaries += 1;
+                secondaries += is.len() - 1;
+            }
+        }
+        secondaries as f64 / primaries as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grouping;
+    use crate::stats::Rng;
+    use crate::testutil::{check, prop_assert};
+    use crate::trace::{Profile, TraceGen};
+
+    fn model_profile(experts: usize, layers: usize) -> ModelProfile {
+        let t = TraceGen {
+            experts,
+            top_k: 4,
+            layers,
+            profile: Profile::Math,
+            seed: 77,
+        }
+        .generate(512);
+        ModelProfile::from_trace(&t)
+    }
+
+    fn hg_placement(mode: ReplicationMode) -> Placement {
+        let mp = model_profile(32, 3);
+        let topo = Topology::two_by_two();
+        let mut rng = Rng::new(1);
+        Placement::build(&mp, mode, |lp| {
+            grouping::hierarchical(lp, &topo, 0.15, &mut rng)
+        })
+    }
+
+    #[test]
+    fn primary_map_inverts_groups() {
+        let p = hg_placement(ReplicationMode::None);
+        for l in &p.layers {
+            for (gpu, g) in l.groups.iter().enumerate() {
+                for &e in g {
+                    assert_eq!(l.primary[e], gpu);
+                    assert_eq!(l.instances[e], vec![gpu]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_adds_secondaries_only_for_hot_experts() {
+        let p = hg_placement(ReplicationMode::Dynamic);
+        let mut any = false;
+        for l in &p.layers {
+            for (e, is) in l.instances.iter().enumerate() {
+                if is.len() > 1 {
+                    any = true;
+                    assert!(l.replication.hot_experts.contains(&e));
+                    assert_eq!(is[0], l.primary[e], "primary stays first");
+                    for &g in &is[1..] {
+                        assert!(l.replication.replica_gpus.contains(&g));
+                    }
+                }
+            }
+        }
+        assert!(any, "skewed profile should trigger replication");
+    }
+
+    #[test]
+    fn replication_overhead_is_bounded() {
+        let none = hg_placement(ReplicationMode::None);
+        let dr = hg_placement(ReplicationMode::Dynamic);
+        assert_eq!(none.replication_overhead(), 0.0);
+        let o = dr.replication_overhead();
+        assert!(o > 0.0 && o < 1.0,
+                "DR should replicate a small subset, got {o}");
+    }
+
+    #[test]
+    fn memory_check_flags_tiny_hbm() {
+        let p = hg_placement(ReplicationMode::Dynamic);
+        let mut topo = Topology::two_by_two();
+        assert!(p.check_memory(&topo, 1e6).is_ok());
+        topo.hbm_bytes = 1.0;
+        assert!(p.check_memory(&topo, 1e6).is_err());
+    }
+
+    #[test]
+    fn bytes_per_gpu_counts_instances() {
+        let p = hg_placement(ReplicationMode::None);
+        let bytes = p.bytes_per_gpu(10.0);
+        let total: f64 = bytes.iter().sum();
+        // no replication: every expert exactly once per layer
+        assert_eq!(total, (32 * 3) as f64 * 10.0);
+    }
+
+    #[test]
+    fn property_instances_distinct_and_primary_first() {
+        check(20, |rng| {
+            let mp = model_profile(16 + 16 * rng.index(2), 2);
+            let topo = Topology::two_by_two();
+            let mode = [ReplicationMode::Fixed, ReplicationMode::Dynamic]
+                [rng.index(2)];
+            let p = Placement::build(&mp, mode, |lp| {
+                grouping::hierarchical(lp, &topo, 0.2, rng)
+            });
+            for l in &p.layers {
+                for (e, is) in l.instances.iter().enumerate() {
+                    let mut d = is.clone();
+                    d.sort_unstable();
+                    d.dedup();
+                    prop_assert(d.len() == is.len(), "dup instance gpus")?;
+                    prop_assert(is[0] == l.primary[e], "primary first")?;
+                }
+                let s: f64 = l.polling.iter().sum();
+                prop_assert((s - 1.0).abs() < 1e-9, "polling normalized")?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,231 @@
+//! Profiling: turn gate traces into the statistics the offline phase
+//! consumes (paper Fig. 2a): per-layer **expert affinity matrices**
+//! (co-activation frequency) and **load statistics**.
+//!
+//! Definitions (paper §3 and footnote 1):
+//! * *affinity* `A[i][j]` — frequency with which experts `i` and `j` are
+//!   co-activated by the same token,
+//! * *load* of an expert — number of tokens assigned to it; of a group /
+//!   GPU — the sum over its experts.
+
+use crate::linalg::Matrix;
+use crate::trace::{GateTrace, LayerTrace};
+
+/// Per-layer profiling output.
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    /// Symmetric co-activation counts, `experts × experts`, zero diagonal.
+    pub affinity: Matrix,
+    /// Tokens assigned to each expert.
+    pub load: Vec<f64>,
+    /// Tokens profiled.
+    pub tokens: usize,
+}
+
+/// Whole-model profile (one [`LayerProfile`] per MoE layer).
+#[derive(Clone, Debug)]
+pub struct ModelProfile {
+    pub layers: Vec<LayerProfile>,
+}
+
+impl LayerProfile {
+    pub fn from_trace(layer: &LayerTrace) -> LayerProfile {
+        let e = layer.experts;
+        let mut affinity = Matrix::zeros(e, e);
+        let mut load = vec![0.0; e];
+        for tok in &layer.tokens {
+            for (i, &a) in tok.iter().enumerate() {
+                load[a as usize] += 1.0;
+                for &b in &tok[i + 1..] {
+                    affinity[(a as usize, b as usize)] += 1.0;
+                    affinity[(b as usize, a as usize)] += 1.0;
+                }
+            }
+        }
+        LayerProfile { affinity, load, tokens: layer.tokens.len() }
+    }
+
+    pub fn experts(&self) -> usize {
+        self.load.len()
+    }
+
+    /// Total load of an expert subset.
+    pub fn group_load(&self, group: &[usize]) -> f64 {
+        group.iter().map(|&e| self.load[e]).sum()
+    }
+
+    /// Load skew factor ρ = W_max / W̄ over a grouping (paper §4.2).
+    pub fn load_skew(&self, groups: &[Vec<usize>]) -> f64 {
+        assert!(!groups.is_empty());
+        let loads: Vec<f64> =
+            groups.iter().map(|g| self.group_load(g)).collect();
+        let mean = loads.iter().sum::<f64>() / loads.len() as f64;
+        if mean == 0.0 {
+            return 1.0;
+        }
+        loads.iter().cloned().fold(0.0, f64::max) / mean
+    }
+
+    /// Index of the heaviest group.
+    pub fn heaviest_group(&self, groups: &[Vec<usize>]) -> usize {
+        (0..groups.len())
+            .max_by(|&a, &b| {
+                self.group_load(&groups[a])
+                    .partial_cmp(&self.group_load(&groups[b]))
+                    .unwrap()
+            })
+            .expect("non-empty groups")
+    }
+
+    /// Intra-group affinity utilization U(r) (paper Eq. 1): the fraction
+    /// of total pairwise affinity captured inside groups.
+    pub fn affinity_utilization(&self, groups: &[Vec<usize>]) -> f64 {
+        let e = self.experts();
+        let mut total = 0.0;
+        for i in 0..e {
+            for j in (i + 1)..e {
+                total += self.affinity[(i, j)];
+            }
+        }
+        if total == 0.0 {
+            return 1.0;
+        }
+        let mut intra = 0.0;
+        for g in groups {
+            for (gi, &i) in g.iter().enumerate() {
+                for &j in &g[gi + 1..] {
+                    intra += self.affinity[(i, j)];
+                }
+            }
+        }
+        intra / total
+    }
+}
+
+impl ModelProfile {
+    pub fn from_trace(trace: &GateTrace) -> ModelProfile {
+        ModelProfile {
+            layers: trace
+                .layers
+                .iter()
+                .map(LayerProfile::from_trace)
+                .collect(),
+        }
+    }
+
+    pub fn num_layers(&self) -> usize {
+        self.layers.len()
+    }
+}
+
+/// Group-size deviation S(r) (paper Eq. 2): RMS deviation of group sizes
+/// from the ideal `E = n / D`.
+pub fn size_deviation(groups: &[Vec<usize>], experts: usize) -> f64 {
+    let d = groups.len() as f64;
+    let ideal = experts as f64 / d;
+    let ss: f64 = groups
+        .iter()
+        .map(|g| {
+            let diff = g.len() as f64 - ideal;
+            diff * diff
+        })
+        .sum();
+    (ss / d).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{LayerTrace, Profile, TraceGen};
+
+    fn tiny_layer() -> LayerTrace {
+        LayerTrace {
+            experts: 4,
+            top_k: 2,
+            tokens: vec![
+                vec![0, 1],
+                vec![0, 1],
+                vec![0, 2],
+                vec![3, 2],
+            ],
+        }
+    }
+
+    #[test]
+    fn affinity_counts_pairs_symmetrically() {
+        let p = LayerProfile::from_trace(&tiny_layer());
+        assert_eq!(p.affinity[(0, 1)], 2.0);
+        assert_eq!(p.affinity[(1, 0)], 2.0);
+        assert_eq!(p.affinity[(0, 2)], 1.0);
+        assert_eq!(p.affinity[(2, 3)], 1.0);
+        assert_eq!(p.affinity[(0, 3)], 0.0);
+        assert_eq!(p.affinity[(0, 0)], 0.0, "zero diagonal");
+    }
+
+    #[test]
+    fn load_counts_tokens_per_expert() {
+        let p = LayerProfile::from_trace(&tiny_layer());
+        assert_eq!(p.load, vec![3.0, 2.0, 2.0, 1.0]);
+        assert_eq!(p.tokens, 4);
+    }
+
+    #[test]
+    fn group_load_and_skew() {
+        let p = LayerProfile::from_trace(&tiny_layer());
+        let groups = vec![vec![0, 1], vec![2, 3]];
+        assert_eq!(p.group_load(&groups[0]), 5.0);
+        assert_eq!(p.group_load(&groups[1]), 3.0);
+        assert!((p.load_skew(&groups) - 5.0 / 4.0).abs() < 1e-12);
+        assert_eq!(p.heaviest_group(&groups), 0);
+    }
+
+    #[test]
+    fn affinity_utilization_bounds() {
+        let p = LayerProfile::from_trace(&tiny_layer());
+        let all_in_one = vec![vec![0, 1, 2, 3]];
+        assert!((p.affinity_utilization(&all_in_one) - 1.0).abs() < 1e-12);
+        let singletons: Vec<Vec<usize>> =
+            (0..4).map(|e| vec![e]).collect();
+        assert_eq!(p.affinity_utilization(&singletons), 0.0);
+        let mixed = vec![vec![0, 1], vec![2, 3]];
+        let u = p.affinity_utilization(&mixed);
+        assert!(u > 0.0 && u < 1.0);
+    }
+
+    #[test]
+    fn size_deviation_matches_eq2() {
+        // 4 experts, 2 groups, sizes (3,1): ideal 2, dev = sqrt((1+1)/2)=1
+        let groups = vec![vec![0, 1, 2], vec![3]];
+        assert!((size_deviation(&groups, 4) - 1.0).abs() < 1e-12);
+        let even = vec![vec![0, 1], vec![2, 3]];
+        assert_eq!(size_deviation(&even, 4), 0.0);
+    }
+
+    #[test]
+    fn profile_from_generated_trace_is_consistent() {
+        let trace = TraceGen {
+            experts: 32,
+            top_k: 4,
+            layers: 2,
+            profile: Profile::Text,
+            seed: 11,
+        }
+        .generate(256);
+        let p = ModelProfile::from_trace(&trace);
+        assert_eq!(p.num_layers(), 2);
+        for lp in &p.layers {
+            // total load = tokens * k
+            let total: f64 = lp.load.iter().sum();
+            assert_eq!(total, 256.0 * 4.0);
+            // affinity total = tokens * C(k,2) * 2 (symmetric)
+            let mut aff = 0.0;
+            for i in 0..32 {
+                for j in 0..32 {
+                    aff += lp.affinity[(i, j)];
+                }
+            }
+            assert_eq!(aff, 256.0 * 6.0 * 2.0);
+            assert!(lp.affinity.is_symmetric(0.0));
+        }
+    }
+}

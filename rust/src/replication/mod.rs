@@ -1,0 +1,351 @@
+//! Expert replication — the paper's computational-load-balance-centric
+//! optimization (§4.2).
+//!
+//! * [`dynamic_replication`] — the DR strategy: the number of replicas is
+//!   driven by the load-skew factor `ρ = W_max / W̄` (Eq. 3,
+//!   `n_replica = min(max(1, ⌊ρ⌋), n_gpu − 1)`); hot experts are the
+//!   top-loaded experts of the *heaviest group* whose cumulative load
+//!   exceeds `W_max · n_replica / (1 + n_replica)`; replicas land on the
+//!   `n_replica` most underutilized GPUs.
+//! * [`fixed_replication`] — the FR baseline of §6.3 RQ2: one replica of
+//!   the overloaded experts of the heaviest group on the least-loaded GPU.
+//! * [`predict_loads`] — Eq. 4 load prediction, which feeds the WRR
+//!   polling weights of [`crate::routing`].
+
+use crate::cluster::GpuId;
+use crate::grouping::Grouping;
+use crate::profile::LayerProfile;
+
+/// Replication decision for one layer.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Replication {
+    /// Experts replicated (primary copies stay in their group).
+    pub hot_experts: Vec<usize>,
+    /// GPUs receiving one secondary copy of *each* hot expert.
+    pub replica_gpus: Vec<GpuId>,
+    /// `n_replica` of Eq. 3 (`replica_gpus.len()`).
+    pub n_replica: usize,
+    /// Pre-replication load of the heaviest group (`W_max`).
+    pub w_max: f64,
+    /// Total pre-replication load of the replicated experts (`W_r`).
+    pub w_r: f64,
+}
+
+impl Replication {
+    /// No replication (HG-only configurations).
+    pub fn none() -> Replication {
+        Replication::default()
+    }
+
+    pub fn is_none(&self) -> bool {
+        self.hot_experts.is_empty()
+    }
+}
+
+/// Eq. 3: `n_replica = min(max(1, ⌊ρ⌋), n_gpu − 1)`.
+pub fn replica_count(rho: f64, n_gpu: usize) -> usize {
+    assert!(n_gpu >= 2, "replication needs ≥ 2 GPUs");
+    (rho.floor() as usize).max(1).min(n_gpu - 1)
+}
+
+/// The paper's hot-expert rule: rank the heaviest group's experts by
+/// individual load (descending) and take the minimal prefix whose
+/// cumulative load exceeds `W_max · n_replica / (1 + n_replica)`.
+fn hot_experts_of_group(profile: &LayerProfile, group: &[usize],
+                        w_max: f64, n_replica: usize) -> Vec<usize> {
+    let threshold = w_max * n_replica as f64 / (1.0 + n_replica as f64);
+    let mut ranked: Vec<usize> = group.to_vec();
+    ranked.sort_by(|&a, &b| {
+        profile.load[b].partial_cmp(&profile.load[a]).unwrap()
+    });
+    let mut hot = Vec::new();
+    let mut cum = 0.0;
+    for e in ranked {
+        if cum > threshold {
+            break;
+        }
+        cum += profile.load[e];
+        hot.push(e);
+    }
+    hot
+}
+
+/// Dynamic replication driven by load skew (paper §4.2).
+///
+/// `groups[g]` is the expert set of GPU `g` (one group per GPU after
+/// hierarchical grouping).
+pub fn dynamic_replication(profile: &LayerProfile, groups: &Grouping)
+                           -> Replication {
+    let n_gpu = groups.len();
+    assert!(n_gpu >= 2);
+    let loads: Vec<f64> =
+        groups.iter().map(|g| profile.group_load(g)).collect();
+    let mean = loads.iter().sum::<f64>() / n_gpu as f64;
+    if mean == 0.0 {
+        return Replication::none();
+    }
+    let heavy = profile.heaviest_group(groups);
+    let w_max = loads[heavy];
+    let rho = w_max / mean;
+    let n_replica = replica_count(rho, n_gpu);
+
+    let hot = hot_experts_of_group(profile, &groups[heavy], w_max,
+                                   n_replica);
+    let w_r: f64 = hot.iter().map(|&e| profile.load[e]).sum();
+
+    // The n_replica most underutilized GPUs (excluding the hot group's
+    // own GPU — its primaries already live there).
+    let mut order: Vec<GpuId> =
+        (0..n_gpu).filter(|&g| g != heavy).collect();
+    order.sort_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap());
+    let replica_gpus: Vec<GpuId> =
+        order.into_iter().take(n_replica).collect();
+
+    Replication {
+        hot_experts: hot,
+        n_replica: replica_gpus.len(),
+        replica_gpus,
+        w_max,
+        w_r,
+    }
+}
+
+/// Fixed-replica baseline (FR, §6.3 RQ2): one replica of the heaviest
+/// group's overloaded experts onto the single least-loaded GPU.
+pub fn fixed_replication(profile: &LayerProfile, groups: &Grouping)
+                         -> Replication {
+    let n_gpu = groups.len();
+    assert!(n_gpu >= 2);
+    let loads: Vec<f64> =
+        groups.iter().map(|g| profile.group_load(g)).collect();
+    let mean = loads.iter().sum::<f64>() / n_gpu as f64;
+    if mean == 0.0 {
+        return Replication::none();
+    }
+    let heavy = profile.heaviest_group(groups);
+    let w_max = loads[heavy];
+    // "overloaded experts": those above the group's per-expert mean load
+    let group = &groups[heavy];
+    let gmean = w_max / group.len() as f64;
+    let mut hot: Vec<usize> = group
+        .iter()
+        .copied()
+        .filter(|&e| profile.load[e] > gmean)
+        .collect();
+    if hot.is_empty() {
+        // degenerate flat group: take the single heaviest expert
+        hot = vec![*group
+            .iter()
+            .max_by(|&&a, &&b| {
+                profile.load[a].partial_cmp(&profile.load[b]).unwrap()
+            })
+            .unwrap()];
+    }
+    let w_r: f64 = hot.iter().map(|&e| profile.load[e]).sum();
+    let dst = (0..n_gpu)
+        .filter(|&g| g != heavy)
+        .min_by(|&a, &b| loads[a].partial_cmp(&loads[b]).unwrap())
+        .unwrap();
+    Replication {
+        hot_experts: hot,
+        replica_gpus: vec![dst],
+        n_replica: 1,
+        w_max,
+        w_r,
+    }
+}
+
+/// Eq. 4 load prediction: post-replication per-GPU loads.
+///
+/// With per-instance load `W_p = W_max / (n_replica + 1)` (as printed in
+/// the paper — note it divides the *group* max, not `W_r`):
+/// the heaviest GPU drops to `W'_max = W_max − W_r + W_p`, every
+/// replica-hosting GPU rises to `W'_i = W_i + W_p`.
+pub fn predict_loads(pre_loads: &[f64], heavy: usize, rep: &Replication)
+                     -> Vec<f64> {
+    let mut post = pre_loads.to_vec();
+    if rep.is_none() {
+        return post;
+    }
+    let w_p = rep.w_max / (rep.n_replica as f64 + 1.0);
+    post[heavy] = rep.w_max - rep.w_r + w_p;
+    for &g in &rep.replica_gpus {
+        post[g] += w_p;
+    }
+    post
+}
+
+/// Polling weights for WRR (paper §4.3): inversely proportional to the
+/// predicted loads, normalized to sum to 1.
+pub fn polling_weights(predicted: &[f64]) -> Vec<f64> {
+    let eps = 1e-9;
+    let inv: Vec<f64> =
+        predicted.iter().map(|&w| 1.0 / (w + eps)).collect();
+    let total: f64 = inv.iter().sum();
+    inv.into_iter().map(|w| w / total).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::testutil::{check, prop_assert};
+
+    /// Profile with explicit per-expert loads (affinity unused here).
+    fn profile_with_loads(loads: Vec<f64>) -> LayerProfile {
+        let n = loads.len();
+        LayerProfile {
+            affinity: Matrix::zeros(n, n),
+            load: loads,
+            tokens: 100,
+        }
+    }
+
+    #[test]
+    fn eq3_replica_count() {
+        assert_eq!(replica_count(0.4, 4), 1, "max(1, ⌊ρ⌋) floor");
+        assert_eq!(replica_count(1.0, 4), 1);
+        assert_eq!(replica_count(2.9, 4), 2);
+        assert_eq!(replica_count(9.0, 4), 3, "capped at n_gpu − 1");
+        assert_eq!(replica_count(9.0, 2), 1);
+    }
+
+    #[test]
+    fn dynamic_selects_hot_prefix_of_heaviest_group() {
+        // gpu0 hosts experts {0,1,2}: loads 50, 30, 4 → heaviest (84)
+        // gpu1 {3}: 10, gpu2 {4}: 2, gpu3 {5}: 0
+        let p = profile_with_loads(vec![50.0, 30.0, 4.0, 10.0, 2.0, 0.0]);
+        let groups =
+            vec![vec![0, 1, 2], vec![3], vec![4], vec![5]];
+        let rep = dynamic_replication(&p, &groups);
+        // ρ = 84 / 24 = 3.5 → n = min(3, 3) = 3
+        assert_eq!(rep.n_replica, 3);
+        // threshold = 84·3/4 = 63: 50 < 63 (take), 50+30=80 > 63 stop after
+        assert_eq!(rep.hot_experts, vec![0, 1]);
+        assert_eq!(rep.w_r, 80.0);
+        // replicas on most underutilized gpus: 3 (0), 2 (2), 1 (10)
+        assert_eq!(rep.replica_gpus, vec![3, 2, 1]);
+    }
+
+    #[test]
+    fn dynamic_never_targets_heavy_gpu() {
+        check(50, |rng| {
+            let n_exp = 8 + rng.index(24);
+            let loads: Vec<f64> =
+                (0..n_exp).map(|_| rng.index(100) as f64).collect();
+            let p = profile_with_loads(loads);
+            let n_gpu = 2 + rng.index(6);
+            let groups = random_groups(rng, n_exp, n_gpu);
+            let rep = dynamic_replication(&p, &groups);
+            if rep.is_none() {
+                return Ok(());
+            }
+            let heavy = p.heaviest_group(&groups);
+            prop_assert(!rep.replica_gpus.contains(&heavy),
+                        "replica on the heavy gpu")?;
+            prop_assert(rep.n_replica <= n_gpu - 1, "Eq.3 cap")?;
+            prop_assert(
+                rep.hot_experts.iter().all(|e| groups[heavy].contains(e)),
+                "hot experts from heaviest group only",
+            )?;
+            // replica gpus distinct
+            let mut rg = rep.replica_gpus.clone();
+            rg.sort_unstable();
+            rg.dedup();
+            prop_assert(rg.len() == rep.replica_gpus.len(), "dup gpus")
+        });
+    }
+
+    fn random_groups(rng: &mut crate::stats::Rng, n_exp: usize,
+                     n_gpu: usize) -> Grouping {
+        let mut groups: Grouping = vec![Vec::new(); n_gpu];
+        for e in 0..n_exp {
+            groups[rng.index(n_gpu)].push(e);
+        }
+        // guarantee non-empty
+        for g in 0..n_gpu {
+            if groups[g].is_empty() {
+                let donor =
+                    (0..n_gpu).max_by_key(|&d| groups[d].len()).unwrap();
+                let e = groups[donor].pop().unwrap();
+                groups[g].push(e);
+            }
+        }
+        groups
+    }
+
+    #[test]
+    fn fixed_uses_single_least_loaded_gpu() {
+        let p = profile_with_loads(vec![50.0, 30.0, 4.0, 10.0, 2.0, 0.0]);
+        let groups = vec![vec![0, 1, 2], vec![3], vec![4], vec![5]];
+        let rep = fixed_replication(&p, &groups);
+        assert_eq!(rep.n_replica, 1);
+        assert_eq!(rep.replica_gpus, vec![3]);
+        // overloaded = above group mean 28: experts 0 (50) and 1 (30)
+        assert_eq!(rep.hot_experts, vec![0, 1]);
+    }
+
+    #[test]
+    fn zero_load_yields_no_replication() {
+        let p = profile_with_loads(vec![0.0; 8]);
+        let groups = vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]];
+        assert!(dynamic_replication(&p, &groups).is_none());
+        assert!(fixed_replication(&p, &groups).is_none());
+    }
+
+    #[test]
+    fn eq4_prediction() {
+        let pre = vec![84.0, 10.0, 2.0, 0.0];
+        let rep = Replication {
+            hot_experts: vec![0, 1],
+            replica_gpus: vec![3, 2, 1],
+            n_replica: 3,
+            w_max: 84.0,
+            w_r: 80.0,
+        };
+        let post = predict_loads(&pre, 0, &rep);
+        let w_p = 84.0 / 4.0;
+        assert_eq!(post[0], 84.0 - 80.0 + w_p);
+        assert_eq!(post[1], 10.0 + w_p);
+        assert_eq!(post[2], 2.0 + w_p);
+        assert_eq!(post[3], 0.0 + w_p);
+    }
+
+    #[test]
+    fn prediction_reduces_imbalance() {
+        check(40, |rng| {
+            let n_gpu = 3 + rng.index(5);
+            let n_exp = n_gpu * 4;
+            // skewed loads: one very hot expert
+            let mut loads = vec![1.0; n_exp];
+            loads[0] = 50.0 + rng.index(100) as f64;
+            let p = profile_with_loads(loads.clone());
+            let groups: Grouping = (0..n_gpu)
+                .map(|g| (g * 4..(g + 1) * 4).collect())
+                .collect();
+            let rep = dynamic_replication(&p, &groups);
+            let pre: Vec<f64> =
+                groups.iter().map(|g| p.group_load(g)).collect();
+            let heavy = p.heaviest_group(&groups);
+            let post = predict_loads(&pre, heavy, &rep);
+            let max_pre = pre.iter().cloned().fold(0.0, f64::max);
+            let max_post = post.iter().cloned().fold(0.0, f64::max);
+            prop_assert(max_post <= max_pre + 1e-9,
+                        format!("peak rose: {max_pre} → {max_post}"))
+        });
+    }
+
+    #[test]
+    fn polling_weights_inverse_and_normalized() {
+        let w = polling_weights(&[10.0, 20.0, 40.0]);
+        assert!((w.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(w[0] > w[1] && w[1] > w[2]);
+        assert!((w[0] / w[1] - 2.0).abs() < 1e-6, "inverse proportional");
+    }
+
+    #[test]
+    fn polling_weights_handle_zero_load() {
+        let w = polling_weights(&[0.0, 1.0]);
+        assert!(w[0] > 0.99, "idle gpu takes almost all weight");
+    }
+}

@@ -1,0 +1,130 @@
+//! Experiment reporting: the paper-shaped tables (relative-to-baseline
+//! component analysis, per-system end-to-end comparisons) and JSON export
+//! for downstream plotting.
+
+use crate::bench::{pct, Table};
+use crate::configio::Value;
+use crate::metrics::RunMetrics;
+use crate::stats::summary::rel_change;
+
+/// Table 1: relative change of each metric vs the baseline system (first
+/// column), in the paper's row order.
+pub fn table1(names: &[&str], runs: &[RunMetrics]) -> Table {
+    assert_eq!(names.len(), runs.len());
+    assert!(!runs.is_empty());
+    let base = &runs[0];
+    let mut header = vec!["METRIC"];
+    header.extend_from_slice(names);
+    let mut t = Table::new(&header);
+    let rows: [(&str, fn(&RunMetrics) -> f64); 5] = [
+        ("ALL-TO-ALL TIME", |m| m.a2a_time),
+        ("CROSS-NODE TRAFFIC", |m| m.cross_bytes),
+        ("INTRA-NODE TRAFFIC", |m| m.intra_bytes),
+        ("GPU IDLE TIME", |m| m.idle_time),
+        ("AVG. GPU LOAD STD.", |m| m.mean_load_std()),
+    ];
+    for (label, get) in rows {
+        let mut cells = vec![label.to_string()];
+        for m in runs {
+            let rc = rel_change(get(base), get(m));
+            cells.push(if std::ptr::eq(m, base) {
+                "0.00".to_string()
+            } else {
+                pct(rc)
+            });
+        }
+        t.row(cells);
+    }
+    t
+}
+
+/// End-to-end comparison row set (Fig. 4 / Fig. 7 style): absolute
+/// latencies (ms) plus speedup vs the first system.
+pub fn e2e_table(names: &[&str], runs: &[RunMetrics]) -> Table {
+    assert_eq!(names.len(), runs.len());
+    let mut t = Table::new(&[
+        "SYSTEM",
+        "E2E (ms)",
+        "MOE LAYER (ms)",
+        "A2A (ms)",
+        "SPEEDUP",
+    ]);
+    let base = runs[0].e2e_time;
+    for (n, m) in names.iter().zip(runs) {
+        t.row(vec![
+            n.to_string(),
+            format!("{:.2}", m.e2e_time * 1e3),
+            format!("{:.2}", m.moe_layer_time * 1e3),
+            format!("{:.2}", m.a2a_time * 1e3),
+            format!("{:.2}x", base / m.e2e_time),
+        ]);
+    }
+    t
+}
+
+/// JSON export of one run's metrics (machine-readable bench output).
+pub fn metrics_json(name: &str, m: &RunMetrics) -> Value {
+    Value::object(vec![
+        ("system", Value::str(name)),
+        ("e2e_ms", Value::num(m.e2e_time * 1e3)),
+        ("moe_layer_ms", Value::num(m.moe_layer_time * 1e3)),
+        ("a2a_ms", Value::num(m.a2a_time * 1e3)),
+        ("cross_gb", Value::num(m.cross_bytes / 1e9)),
+        ("intra_gb", Value::num(m.intra_bytes / 1e9)),
+        ("idle_ms", Value::num(m.idle_time * 1e3)),
+        ("avg_load_std", Value::num(m.mean_load_std())),
+        ("launches", Value::from(m.launches)),
+        ("tokens", Value::from(m.tokens)),
+    ])
+}
+
+/// Aggregate several named runs into a JSON array.
+pub fn runs_json(named: &[(&str, &RunMetrics)]) -> Value {
+    Value::array(named.iter().map(|(n, m)| metrics_json(n, m)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m(a2a: f64, e2e: f64) -> RunMetrics {
+        RunMetrics {
+            a2a_time: a2a,
+            e2e_time: e2e,
+            moe_layer_time: e2e * 0.6,
+            cross_bytes: a2a * 1e9,
+            intra_bytes: a2a * 2e9,
+            idle_time: 0.01,
+            layer_load_std: vec![1.0],
+            launches: 2,
+            tokens: 100,
+        }
+    }
+
+    #[test]
+    fn table1_relative_format() {
+        let runs = vec![m(1.0, 2.0), m(0.6481, 2.0)];
+        let t = table1(&["occult", "occult+hsc"], &runs);
+        let s = t.render();
+        assert!(s.contains("-35.19%"), "{s}");
+        assert!(s.contains("ALL-TO-ALL TIME"));
+    }
+
+    #[test]
+    fn e2e_table_speedups() {
+        let runs = vec![m(1.0, 2.0), m(0.5, 1.0)];
+        let t = e2e_table(&["occult", "grace"], &runs);
+        let s = t.render();
+        assert!(s.contains("2.00x"), "{s}");
+        assert!(s.contains("1.00x"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let v = metrics_json("grace", &m(0.1, 0.5));
+        let text = crate::configio::to_string(&v);
+        let back = crate::configio::parse(&text).unwrap();
+        assert_eq!(back.req_str("system").unwrap(), "grace");
+        assert!((back.req_f64("e2e_ms").unwrap() - 500.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,262 @@
+//! Online routing policies — which replica executes a token's expert
+//! (paper §4.3, Algorithms 3–4).
+//!
+//! * [`RoutingPolicy::Primary`] — no choice: the expert's primary GPU
+//!   (every non-replicated system).
+//! * [`RoutingPolicy::Wrr`] — Algorithm 3: weighted round-robin over all
+//!   instances, weights inversely proportional to Eq.-4-predicted loads.
+//! * [`RoutingPolicy::Tar`] — Algorithm 4: topology-aware locality
+//!   preference. (i) an instance on the token's own GPU wins outright;
+//!   (ii) otherwise WRR among same-node instances; (iii) otherwise WRR
+//!   among all instances.
+
+use crate::cluster::{GpuId, Topology};
+use crate::placement::LayerPlacement;
+use crate::stats::{dist::weighted_choice, Rng};
+
+/// Replica-selection policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RoutingPolicy {
+    Primary,
+    Wrr,
+    Tar,
+}
+
+impl RoutingPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutingPolicy::Primary => "primary",
+            RoutingPolicy::Wrr => "wrr",
+            RoutingPolicy::Tar => "tar",
+        }
+    }
+}
+
+/// Router over one layer's placement. Holds no mutable state beyond the
+/// caller's RNG, so it is freely shareable across worker threads.
+pub struct Router<'a> {
+    pub placement: &'a LayerPlacement,
+    pub topo: &'a Topology,
+    pub policy: RoutingPolicy,
+}
+
+impl<'a> Router<'a> {
+    pub fn new(placement: &'a LayerPlacement, topo: &'a Topology,
+               policy: RoutingPolicy) -> Self {
+        Router { placement, topo, policy }
+    }
+
+    /// Select the GPU that executes `expert` for a token residing on
+    /// `src_gpu`.
+    pub fn route(&self, src_gpu: GpuId, expert: usize,
+                 rng: &mut Rng) -> GpuId {
+        let instances = &self.placement.instances[expert];
+        debug_assert!(!instances.is_empty());
+        if instances.len() == 1 {
+            return instances[0];
+        }
+        match self.policy {
+            RoutingPolicy::Primary => instances[0],
+            RoutingPolicy::Wrr => self.wrr(instances, rng),
+            RoutingPolicy::Tar => self.tar(src_gpu, instances, rng),
+        }
+    }
+
+    /// Algorithm 3: WeightedRandomChoice(gpus, polling weights).
+    fn wrr(&self, candidates: &[GpuId], rng: &mut Rng) -> GpuId {
+        let weights: Vec<f64> = candidates
+            .iter()
+            .map(|&g| self.placement.polling[g])
+            .collect();
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return candidates[0];
+        }
+        candidates[weighted_choice(rng, &weights)]
+    }
+
+    /// Algorithm 4: locality-first tiers, WRR within a tier.
+    fn tar(&self, src_gpu: GpuId, instances: &[GpuId],
+           rng: &mut Rng) -> GpuId {
+        // Tier (i): same GPU.
+        if instances.contains(&src_gpu) {
+            return src_gpu;
+        }
+        // Tier (ii): same node.
+        let node = self.topo.node_of(src_gpu);
+        let local: Vec<GpuId> = instances
+            .iter()
+            .copied()
+            .filter(|&g| self.topo.node_of(g) == node)
+            .collect();
+        if !local.is_empty() {
+            return self.wrr(&local, rng);
+        }
+        // Tier (iii): anywhere.
+        self.wrr(instances, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::grouping::Grouping;
+    use crate::linalg::Matrix;
+    use crate::placement::{LayerPlacement, ReplicationMode};
+    use crate::profile::LayerProfile;
+    use crate::replication::Replication;
+    use crate::testutil::{check, prop_assert};
+
+    /// Hand-built placement on 2×2: expert 0 hot on gpu 0, replicated to
+    /// gpus 1 (same node) and 2 (remote); experts 1–3 primary-only on
+    /// gpus 1,2,3.
+    fn fixture() -> LayerPlacement {
+        let groups: Grouping =
+            vec![vec![0], vec![1], vec![2], vec![3]];
+        let profile = LayerProfile {
+            affinity: Matrix::zeros(4, 4),
+            load: vec![90.0, 30.0, 20.0, 10.0],
+            tokens: 150,
+        };
+        let mut p = LayerPlacement::build(&profile, groups,
+                                          ReplicationMode::None);
+        p.replication = Replication {
+            hot_experts: vec![0],
+            replica_gpus: vec![1, 2],
+            n_replica: 2,
+            w_max: 90.0,
+            w_r: 90.0,
+        };
+        p.instances[0] = vec![0, 1, 2];
+        // simple polling weights favouring gpu 3 then 2 then 1 then 0
+        p.polling = vec![0.1, 0.2, 0.3, 0.4];
+        p
+    }
+
+    fn topo() -> Topology {
+        Topology::two_by_two()
+    }
+
+    #[test]
+    fn primary_policy_ignores_replicas() {
+        let p = fixture();
+        let t = topo();
+        let r = Router::new(&p, &t, RoutingPolicy::Primary);
+        let mut rng = Rng::new(1);
+        for src in 0..4 {
+            assert_eq!(r.route(src, 0, &mut rng), 0);
+        }
+    }
+
+    #[test]
+    fn unreplicated_experts_always_primary() {
+        let p = fixture();
+        let t = topo();
+        for policy in [RoutingPolicy::Wrr, RoutingPolicy::Tar] {
+            let r = Router::new(&p, &t, policy);
+            let mut rng = Rng::new(2);
+            for _ in 0..50 {
+                assert_eq!(r.route(3, 2, &mut rng), 2);
+            }
+        }
+    }
+
+    #[test]
+    fn wrr_frequencies_match_polling_weights() {
+        let p = fixture();
+        let t = topo();
+        let r = Router::new(&p, &t, RoutingPolicy::Wrr);
+        let mut rng = Rng::new(3);
+        let mut counts = [0usize; 4];
+        let n = 60_000;
+        for _ in 0..n {
+            counts[r.route(3, 0, &mut rng)] += 1;
+        }
+        // instances {0,1,2} with weights {0.1,0.2,0.3} → 1/6, 2/6, 3/6
+        assert_eq!(counts[3], 0);
+        for (g, want) in [(0, 1.0 / 6.0), (1, 2.0 / 6.0), (2, 3.0 / 6.0)] {
+            let emp = counts[g] as f64 / n as f64;
+            assert!((emp - want).abs() < 0.01, "gpu {g}: {emp} vs {want}");
+        }
+    }
+
+    #[test]
+    fn tar_tier1_same_gpu_wins() {
+        let p = fixture();
+        let t = topo();
+        let r = Router::new(&p, &t, RoutingPolicy::Tar);
+        let mut rng = Rng::new(4);
+        for src in [0, 1, 2] {
+            for _ in 0..20 {
+                assert_eq!(r.route(src, 0, &mut rng), src,
+                           "instance on src gpu must be chosen");
+            }
+        }
+    }
+
+    #[test]
+    fn tar_tier2_prefers_same_node() {
+        let p = fixture();
+        let t = topo();
+        let r = Router::new(&p, &t, RoutingPolicy::Tar);
+        let mut rng = Rng::new(5);
+        // src gpu 3 (node 1): instance gpus {0,1} are node 0, {2} node 1
+        for _ in 0..100 {
+            assert_eq!(r.route(3, 0, &mut rng), 2,
+                       "same-node replica must win");
+        }
+    }
+
+    #[test]
+    fn tar_tier3_falls_back_to_global_wrr() {
+        let mut p = fixture();
+        // strip the node-1 replica: instances {0, 1}, both node 0
+        p.instances[0] = vec![0, 1];
+        let t = topo();
+        let r = Router::new(&p, &t, RoutingPolicy::Tar);
+        let mut rng = Rng::new(6);
+        let mut counts = [0usize; 4];
+        for _ in 0..30_000 {
+            counts[r.route(3, 0, &mut rng)] += 1;
+        }
+        assert!(counts[0] > 0 && counts[1] > 0);
+        // weights 0.1 vs 0.2 → 1:2
+        let ratio = counts[1] as f64 / counts[0] as f64;
+        assert!((ratio - 2.0).abs() < 0.2, "ratio {ratio}");
+    }
+
+    #[test]
+    fn property_tar_never_leaves_node_when_local_replica_exists() {
+        check(100, |rng| {
+            let p = fixture();
+            let t = topo();
+            let r = Router::new(&p, &t, RoutingPolicy::Tar);
+            let src = rng.index(4);
+            let dst = r.route(src, 0, rng);
+            let local_exists = p.instances[0]
+                .iter()
+                .any(|&g| t.node_of(g) == t.node_of(src));
+            if local_exists {
+                prop_assert(
+                    t.node_of(dst) == t.node_of(src),
+                    format!("src {src} routed off-node to {dst}"),
+                )?;
+            }
+            prop_assert(p.instances[0].contains(&dst),
+                        "must route to an instance")
+        });
+    }
+
+    #[test]
+    fn property_wrr_routes_only_to_instances() {
+        check(100, |rng| {
+            let p = fixture();
+            let t = topo();
+            let r = Router::new(&p, &t, RoutingPolicy::Wrr);
+            let src = rng.index(4);
+            let e = rng.index(4);
+            let dst = r.route(src, e, rng);
+            prop_assert(p.instances[e].contains(&dst), "non-instance gpu")
+        });
+    }
+}

@@ -1,0 +1,228 @@
+//! `artifacts/manifest.json` schema — the single source of truth shared
+//! with the python compile path (see `python/compile/aot.py`).
+
+use crate::configio::{self, Value};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Tiny-variant architecture (mirrors `python/compile/model.py`'s
+/// `ModelConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TinyConfig {
+    pub experts: usize,
+    pub top_k: usize,
+    pub layers: usize,
+    pub paper_layers: usize,
+    pub hidden: usize,
+    pub ffn: usize,
+    pub heads: usize,
+    pub vocab: usize,
+    pub tile_t: usize,
+    pub tile_m: usize,
+    pub cap_tiles: usize,
+    pub ctx: usize,
+}
+
+impl TinyConfig {
+    pub fn cap_rows(&self) -> usize {
+        self.cap_tiles * self.tile_m
+    }
+}
+
+/// One compiled artifact (HLO file + input signature).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactMeta {
+    pub file: String,
+    /// Input shapes (row-major dims) and dtypes, in call order.
+    pub inputs: Vec<(Vec<usize>, String)>,
+}
+
+/// Weight-blob layout: tensor name → (offset in f32 elements, shape).
+#[derive(Clone, Debug, PartialEq)]
+pub struct WeightsMeta {
+    pub file: String,
+    pub tensors: BTreeMap<String, (usize, Vec<usize>)>,
+}
+
+/// One model variant's artifacts.
+#[derive(Clone, Debug)]
+pub struct VariantMeta {
+    pub config: TinyConfig,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+    pub weights: WeightsMeta,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub fingerprint: String,
+    pub variants: BTreeMap<String, VariantMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                path.display()
+            )
+        })?;
+        let v = configio::parse(&text)
+            .map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+        let fingerprint = v.req_str("fingerprint")?.to_string();
+        let mut variants = BTreeMap::new();
+        let vobj = v
+            .req("variants")?
+            .as_object()
+            .ok_or_else(|| anyhow::anyhow!("'variants' not an object"))?;
+        for (name, vv) in vobj {
+            variants.insert(name.clone(), parse_variant(vv)?);
+        }
+        Ok(Manifest { dir, fingerprint, variants })
+    }
+
+    pub fn variant(&self, name: &str) -> anyhow::Result<&VariantMeta> {
+        self.variants.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "variant '{name}' not in manifest (have: {:?})",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    /// Absolute path of an artifact file.
+    pub fn path_of(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn parse_variant(v: &Value) -> anyhow::Result<VariantMeta> {
+    let c = v.req("config")?;
+    let config = TinyConfig {
+        experts: c.req_usize("experts")?,
+        top_k: c.req_usize("top_k")?,
+        layers: c.req_usize("layers")?,
+        paper_layers: c.req_usize("paper_layers")?,
+        hidden: c.req_usize("hidden")?,
+        ffn: c.req_usize("ffn")?,
+        heads: c.req_usize("heads")?,
+        vocab: c.req_usize("vocab")?,
+        tile_t: c.req_usize("tile_t")?,
+        tile_m: c.req_usize("tile_m")?,
+        cap_tiles: c.req_usize("cap_tiles")?,
+        ctx: c.req_usize("ctx")?,
+    };
+    let mut artifacts = BTreeMap::new();
+    let aobj = v
+        .req("artifacts")?
+        .as_object()
+        .ok_or_else(|| anyhow::anyhow!("'artifacts' not an object"))?;
+    for (name, av) in aobj {
+        let file = av.req_str("file")?.to_string();
+        let mut inputs = Vec::new();
+        for iv in av.req_array("inputs")? {
+            let shape = iv
+                .req_array("shape")?
+                .iter()
+                .map(|d| {
+                    d.as_usize().ok_or_else(|| {
+                        anyhow::anyhow!("bad dim in {name}")
+                    })
+                })
+                .collect::<anyhow::Result<Vec<usize>>>()?;
+            inputs.push((shape, iv.req_str("dtype")?.to_string()));
+        }
+        artifacts.insert(name.clone(), ArtifactMeta { file, inputs });
+    }
+    let w = v.req("weights")?;
+    let mut tensors = BTreeMap::new();
+    let tobj = w
+        .req("tensors")?
+        .as_object()
+        .ok_or_else(|| anyhow::anyhow!("'tensors' not an object"))?;
+    for (name, tv) in tobj {
+        let offset = tv.req_usize("offset")?;
+        let shape = tv
+            .req_array("shape")?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("bad dim in {name}"))
+            })
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        tensors.insert(name.clone(), (offset, shape));
+    }
+    Ok(VariantMeta {
+        config,
+        artifacts,
+        weights: WeightsMeta {
+            file: w.req_str("file")?.to_string(),
+            tensors,
+        },
+    })
+}
+
+/// Default artifacts directory: `$GRACE_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("GRACE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d.join("manifest.json").exists().then_some(d)
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.fingerprint.is_empty());
+        let v = m.variant("olmoe_tiny").unwrap();
+        assert_eq!(v.config.experts, 64);
+        assert_eq!(v.config.top_k, 8);
+        for want in ["gate", "grouped_ffn", "attention", "embed",
+                     "lmhead", "moe_layer_full", "expert_ffn"] {
+            let art = v.artifacts.get(want).expect(want);
+            assert!(m.path_of(&art.file).exists(), "{want} file missing");
+            assert!(!art.inputs.is_empty());
+        }
+        // gate inputs: x [tile_t, hidden], wg [hidden, experts]
+        let gate = &v.artifacts["gate"];
+        assert_eq!(gate.inputs[0].0,
+                   vec![v.config.tile_t, v.config.hidden]);
+        assert_eq!(gate.inputs[1].0,
+                   vec![v.config.hidden, v.config.experts]);
+        // weight tensors present
+        for t in ["emb", "wqkv", "wo", "wg", "w1", "w3", "w2"] {
+            assert!(v.weights.tensors.contains_key(t), "{t}");
+        }
+    }
+
+    #[test]
+    fn missing_variant_is_error() {
+        let Some(dir) = artifacts_dir() else {
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn missing_dir_is_helpful_error() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

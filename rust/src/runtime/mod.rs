@@ -1,0 +1,19 @@
+//! PJRT runtime: load the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them on the CPU PJRT client.
+//!
+//! This is the only boundary between rust and the JAX/Pallas compute
+//! stack; after `make artifacts` the binary is self-contained (python is
+//! never on the request path).
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (shapes, dims,
+//!   weight-blob layout) with the in-repo JSON parser,
+//! * [`weights`] — maps the deterministic f32-LE weight blob,
+//! * [`pjrt`] — compiles + caches executables and marshals literals.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod weights;
+
+pub use manifest::{ArtifactMeta, Manifest, TinyConfig, VariantMeta};
+pub use pjrt::PjrtEngine;
+pub use weights::WeightStore;

@@ -1,0 +1,200 @@
+//! PJRT execution: compile HLO-text artifacts on the CPU client and run
+//! them with literal marshalling. Executables are compiled once and
+//! cached; the engine calls them from the request path.
+
+use super::manifest::Manifest;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Cached PJRT client + compiled executables.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    /// Executions issued (perf accounting).
+    pub exec_count: std::sync::atomic::AtomicU64,
+}
+
+impl PjrtEngine {
+    pub fn new(manifest: Manifest) -> anyhow::Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            exec_count: std::sync::atomic::AtomicU64::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the artifact `variant`/`name`.
+    pub fn executable(&self, variant: &str, name: &str)
+                      -> anyhow::Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{variant}/{name}");
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            return Ok(exe.clone());
+        }
+        let meta = self.manifest.variant(variant)?;
+        let art = meta.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!("variant {variant} has no artifact '{name}'")
+        })?;
+        let path = self.manifest.path_of(&art.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().expect("utf-8 path"),
+        )
+        .map_err(|e| {
+            anyhow::anyhow!("parse {}: {e:?}", path.display())
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compile {key}: {e:?}"))?,
+        );
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with the given inputs; returns the flattened
+    /// tuple outputs (aot.py lowers everything with `return_tuple=True`).
+    pub fn run(&self, variant: &str, name: &str, inputs: &[xla::Literal])
+               -> anyhow::Result<Vec<xla::Literal>> {
+        let exe = self.executable(variant, name)?;
+        self.exec_count
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow::anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("to_literal {name}: {e:?}"))?;
+        lit.to_tuple()
+            .map_err(|e| anyhow::anyhow!("untuple {name}: {e:?}"))
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn lit_f32(vals: &[f32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(vals.len() == n, "lit_f32: {} vs {shape:?}",
+                    vals.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(vals)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(vals: &[i32], shape: &[usize]) -> anyhow::Result<xla::Literal> {
+    let n: usize = shape.iter().product();
+    anyhow::ensure!(vals.len() == n, "lit_i32: {} vs {shape:?}",
+                    vals.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(vals)
+        .reshape(&dims)
+        .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))
+}
+
+/// Scalar i32 literal (e.g. attention valid_len).
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32(lit: &xla::Literal) -> anyhow::Result<Vec<f32>> {
+    lit.to_vec::<f32>()
+        .map_err(|e| anyhow::anyhow!("to_vec<f32>: {e:?}"))
+}
+
+/// Extract an i32 vector from a literal.
+pub fn to_i32(lit: &xla::Literal) -> anyhow::Result<Vec<i32>> {
+    lit.to_vec::<i32>()
+        .map_err(|e| anyhow::anyhow!("to_vec<i32>: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::WeightStore;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<PjrtEngine> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(PjrtEngine::new(Manifest::load(&d).unwrap()).unwrap())
+    }
+
+    #[test]
+    fn compiles_and_runs_gate() {
+        let Some(eng) = engine() else { return };
+        let c = eng.manifest().variant("olmoe_tiny").unwrap().config.clone();
+        let ws =
+            WeightStore::load(eng.manifest(), "olmoe_tiny").unwrap();
+        let x: Vec<f32> = (0..c.tile_t * c.hidden)
+            .map(|i| ((i % 13) as f32 - 6.0) * 0.1)
+            .collect();
+        let (wg, _) = ws.layer_tensor("wg", 0).unwrap();
+        let out = eng
+            .run(
+                "olmoe_tiny",
+                "gate",
+                &[
+                    lit_f32(&x, &[c.tile_t, c.hidden]).unwrap(),
+                    lit_f32(wg, &[c.hidden, c.experts]).unwrap(),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 3, "gate returns (xn, topw, topi)");
+        let topw = to_f32(&out[1]).unwrap();
+        let topi = to_i32(&out[2]).unwrap();
+        assert_eq!(topw.len(), c.tile_t * c.top_k);
+        assert_eq!(topi.len(), c.tile_t * c.top_k);
+        // per-token weights sum to 1 and indices are valid + distinct
+        for t in 0..c.tile_t {
+            let row = &topw[t * c.top_k..(t + 1) * c.top_k];
+            let s: f32 = row.iter().sum();
+            assert!((s - 1.0).abs() < 1e-4, "token {t}: sum {s}");
+            let mut ids: Vec<i32> =
+                topi[t * c.top_k..(t + 1) * c.top_k].to_vec();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), c.top_k);
+            assert!(ids.iter().all(|&e| (e as usize) < c.experts));
+        }
+    }
+
+    #[test]
+    fn executable_cache_hits() {
+        let Some(eng) = engine() else { return };
+        let a = eng.executable("olmoe_tiny", "lmhead").unwrap();
+        let b = eng.executable("olmoe_tiny", "lmhead").unwrap();
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn unknown_artifact_is_error() {
+        let Some(eng) = engine() else { return };
+        assert!(eng.run("olmoe_tiny", "nope", &[]).is_err());
+        assert!(eng.executable("missing_variant", "gate").is_err());
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        let i = lit_i32(&[5, -1], &[2]).unwrap();
+        assert_eq!(to_i32(&i).unwrap(), vec![5, -1]);
+        assert!(lit_f32(&[1.0], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,132 @@
+//! Weight blob access: the python compile path serialises all tiny-model
+//! parameters as one f32 little-endian blob; the manifest records each
+//! tensor's offset (in elements) and shape. This module memory-loads the
+//! blob and slices per-layer / per-expert views for the engine.
+
+use super::manifest::{Manifest, VariantMeta};
+
+/// All weights of one tiny variant, resident in host memory.
+#[derive(Clone, Debug)]
+pub struct WeightStore {
+    data: Vec<f32>,
+    meta: VariantMeta,
+}
+
+impl WeightStore {
+    pub fn load(manifest: &Manifest, variant: &str)
+                -> anyhow::Result<WeightStore> {
+        let meta = manifest.variant(variant)?.clone();
+        let path = manifest.path_of(&meta.weights.file);
+        let bytes = std::fs::read(&path).map_err(|e| {
+            anyhow::anyhow!("cannot read {}: {e}", path.display())
+        })?;
+        anyhow::ensure!(bytes.len() % 4 == 0, "blob not f32-aligned");
+        let data: Vec<f32> = bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let need: usize = meta
+            .weights
+            .tensors
+            .values()
+            .map(|(off, shape)| off + shape.iter().product::<usize>())
+            .max()
+            .unwrap_or(0);
+        anyhow::ensure!(
+            data.len() >= need,
+            "blob too small: {} < {need}",
+            data.len()
+        );
+        Ok(WeightStore { data, meta })
+    }
+
+    pub fn config(&self) -> &super::manifest::TinyConfig {
+        &self.meta.config
+    }
+
+    /// Whole tensor by name: (flat values, shape).
+    pub fn tensor(&self, name: &str) -> anyhow::Result<(&[f32], &[usize])> {
+        let (off, shape) = self
+            .meta
+            .weights
+            .tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no tensor '{name}'"))?;
+        let len: usize = shape.iter().product();
+        Ok((&self.data[*off..*off + len], shape))
+    }
+
+    /// Slice one layer out of a `[layers, ...]` tensor: returns the flat
+    /// values and the per-layer shape.
+    pub fn layer_tensor(&self, name: &str, layer: usize)
+                        -> anyhow::Result<(&[f32], Vec<usize>)> {
+        let (vals, shape) = self.tensor(name)?;
+        anyhow::ensure!(shape.len() >= 2, "'{name}' has no layer dim");
+        let layers = shape[0];
+        anyhow::ensure!(layer < layers, "layer {layer} >= {layers}");
+        let per: usize = shape[1..].iter().product();
+        Ok((&vals[layer * per..(layer + 1) * per], shape[1..].to_vec()))
+    }
+
+    /// Slice one expert's weights from a `[layers, experts, ...]` tensor.
+    pub fn expert_tensor(&self, name: &str, layer: usize, expert: usize)
+                         -> anyhow::Result<(&[f32], Vec<usize>)> {
+        let (vals, shape) = self.layer_tensor(name, layer)?;
+        anyhow::ensure!(shape.len() >= 2, "'{name}' has no expert dim");
+        let experts = shape[0];
+        anyhow::ensure!(expert < experts, "expert {expert} >= {experts}");
+        let per: usize = shape[1..].iter().product();
+        Ok((&vals[expert * per..(expert + 1) * per], shape[1..].to_vec()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn store() -> Option<WeightStore> {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !d.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let m = Manifest::load(&d).unwrap();
+        Some(WeightStore::load(&m, "olmoe_tiny").unwrap())
+    }
+
+    #[test]
+    fn tensor_shapes_match_config() {
+        let Some(s) = store() else { return };
+        let c = s.config().clone();
+        let (emb, eshape) = s.tensor("emb").unwrap();
+        assert_eq!(eshape, &[c.vocab, c.hidden]);
+        assert_eq!(emb.len(), c.vocab * c.hidden);
+        let (w1, w1shape) = s.tensor("w1").unwrap();
+        assert_eq!(w1shape,
+                   &[c.layers, c.experts, c.hidden, c.ffn]);
+        assert_eq!(w1.len(), c.layers * c.experts * c.hidden * c.ffn);
+    }
+
+    #[test]
+    fn layer_and_expert_slicing_consistent() {
+        let Some(s) = store() else { return };
+        let c = s.config().clone();
+        let (l0, shape) = s.layer_tensor("w1", 0).unwrap();
+        assert_eq!(shape, vec![c.experts, c.hidden, c.ffn]);
+        let (e3, eshape) = s.expert_tensor("w1", 0, 3).unwrap();
+        assert_eq!(eshape, vec![c.hidden, c.ffn]);
+        let per = c.hidden * c.ffn;
+        assert_eq!(e3, &l0[3 * per..4 * per]);
+        // weights are not degenerate
+        assert!(e3.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn bad_names_and_indices_error() {
+        let Some(s) = store() else { return };
+        assert!(s.tensor("nope").is_err());
+        assert!(s.layer_tensor("w1", 999).is_err());
+        assert!(s.expert_tensor("w1", 0, 999).is_err());
+    }
+}

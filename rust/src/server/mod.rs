@@ -1,0 +1,214 @@
+//! Serving front: request queue → dynamic batcher → prefill/decode
+//! scheduler over the distributed MoE engine (execute mode).
+//!
+//! Shape follows the vLLM-router architecture: an admission queue with
+//! backpressure ([`crate::exec::BoundedQueue`]), a batching loop that
+//! drains up to `max_batch` requests per round, and a scheduler that runs
+//! prefill then iterative greedy decode. Every token's MoE layers flow
+//! through the same placement/routing machinery the paper describes;
+//! python is never touched.
+
+use crate::cluster::{GpuId, Topology};
+use crate::engine::real::{DistributedMoE, FfnMode, RealModel};
+use crate::exec::BoundedQueue;
+use crate::metrics::ServeMetrics;
+use crate::placement::Placement;
+use crate::routing::RoutingPolicy;
+use crate::stats::Rng;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One inference request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Completed response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    /// End-to-end latency (enqueue → completion), seconds.
+    pub latency: f64,
+}
+
+/// Server tunables.
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub queue_cap: usize,
+    pub seed: u64,
+    /// FFN executable for the serving hot path (§Perf): the dense
+    /// per-expert XLA path is ~6× faster than the Pallas kernel under
+    /// CPU interpret with identical numerics.
+    pub ffn_mode: FfnMode,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 8,
+            queue_cap: 64,
+            seed: 7,
+            ffn_mode: FfnMode::PerExpert,
+        }
+    }
+}
+
+/// The serving engine: owns the model + placement and drains a queue.
+pub struct MoEServer {
+    pub model: Arc<RealModel>,
+    pub placement: Arc<Placement>,
+    pub topo: Topology,
+    pub policy: RoutingPolicy,
+    pub cfg: ServerConfig,
+}
+
+impl MoEServer {
+    pub fn new(model: Arc<RealModel>, placement: Arc<Placement>,
+               topo: Topology, policy: RoutingPolicy,
+               cfg: ServerConfig) -> MoEServer {
+        MoEServer { model, placement, topo, policy, cfg }
+    }
+
+    /// Full greedy forward of one sequence: returns the next token id.
+    fn next_token(&self, ids: &[i32], rng: &mut Rng)
+                  -> anyhow::Result<i32> {
+        let c = &self.model.cfg;
+        anyhow::ensure!(ids.len() <= c.ctx,
+                        "sequence exceeds ctx {}", c.ctx);
+        let mut padded = ids.to_vec();
+        padded.resize(c.ctx, 0);
+        let mut x = self.model.embed(&padded)?;
+        let n_gpus = self.topo.num_gpus();
+        for l in 0..c.layers {
+            x = self.model.attention(&x, l, ids.len())?;
+            // MoE over the valid prefix, tile by tile.
+            let dist = DistributedMoE {
+                model: &self.model,
+                placement: &self.placement,
+                topo: &self.topo,
+                policy: self.policy,
+                ffn_mode: self.cfg.ffn_mode,
+            };
+            let tiles = ids.len().div_ceil(c.tile_t);
+            for tile in 0..tiles {
+                let s = tile * c.tile_t * c.hidden;
+                let e = s + c.tile_t * c.hidden;
+                let run = dist.moe_layer(
+                    &x[s..e],
+                    l,
+                    &|t| (tile * c.tile_t + t) * n_gpus / c.ctx,
+                    rng,
+                )?;
+                x[s..e].copy_from_slice(&run.y);
+            }
+        }
+        let logits = self.model.lmhead(&x)?;
+        let c_v = c.vocab;
+        let last = ids.len() - 1;
+        let row = &logits[last * c_v..(last + 1) * c_v];
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        Ok(best as i32)
+    }
+
+    /// Serve a closed set of requests through the batching loop; returns
+    /// responses (request order) and aggregate metrics.
+    pub fn serve(&self, requests: Vec<Request>)
+                 -> anyhow::Result<(Vec<Response>, ServeMetrics)> {
+        let queue: BoundedQueue<(Request, Instant)> =
+            BoundedQueue::new(self.cfg.queue_cap);
+        for r in &requests {
+            queue
+                .send((r.clone(), Instant::now()))
+                .map_err(|_| anyhow::anyhow!("queue closed"))?;
+        }
+        queue.close();
+
+        let wall0 = Instant::now();
+        let mut rng = Rng::new(self.cfg.seed);
+        let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
+        let mut generated = 0usize;
+
+        loop {
+            let batch = queue.recv_batch(self.cfg.max_batch);
+            if batch.is_empty() {
+                break;
+            }
+            // Iterative decode round-robin across the batch (continuous-
+            // batching lite: every sequence advances one token per step).
+            let mut states: Vec<(Request, Instant, Vec<i32>)> = batch
+                .into_iter()
+                .map(|(r, t0)| {
+                    let ids = r.prompt.clone();
+                    (r, t0, ids)
+                })
+                .collect();
+            let max_steps = states
+                .iter()
+                .map(|(r, _, _)| r.max_new_tokens)
+                .max()
+                .unwrap_or(0);
+            for step in 0..max_steps {
+                for (r, _, ids) in states.iter_mut() {
+                    if step >= r.max_new_tokens
+                        || ids.len() >= self.model.cfg.ctx
+                    {
+                        continue;
+                    }
+                    let next = self.next_token(ids, &mut rng)?;
+                    ids.push(next);
+                    generated += 1;
+                }
+            }
+            for (r, t0, ids) in states {
+                responses.push(Response {
+                    id: r.id,
+                    tokens: ids[r.prompt.len()..].to_vec(),
+                    latency: t0.elapsed().as_secs_f64(),
+                });
+            }
+        }
+
+        responses.sort_by_key(|r| r.id);
+        let metrics = ServeMetrics {
+            latencies: responses.iter().map(|r| r.latency).collect(),
+            generated_tokens: generated,
+            wall_time: wall0.elapsed().as_secs_f64(),
+        };
+        Ok((responses, metrics))
+    }
+}
+
+/// Even data-parallel assignment of a token index to a rank.
+pub fn even_src(t: usize, total: usize, n_gpus: usize) -> GpuId {
+    t * n_gpus / total.max(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_src_covers_all_gpus() {
+        let srcs: Vec<GpuId> =
+            (0..16).map(|t| even_src(t, 16, 4)).collect();
+        assert_eq!(srcs[0], 0);
+        assert_eq!(srcs[15], 3);
+        for g in 0..4 {
+            assert_eq!(srcs.iter().filter(|&&s| s == g).count(), 4);
+        }
+    }
+
+    // End-to-end serving over the real model is exercised in
+    // tests/integration.rs and examples/serve_end_to_end.rs (it needs the
+    // AOT artifacts and a PJRT client).
+}

@@ -1,0 +1,217 @@
+//! Sampling distributions used by the trace generators and routing.
+//!
+//! * [`Zipf`] — the skewed expert-popularity law ("hot" vs "cold" experts,
+//!   paper §1); bounded support so we precompute the normalized pmf.
+//! * [`AliasTable`] — Walker/Vose O(1) categorical sampling; this is also
+//!   the weighted-random-choice primitive behind the paper's Algorithm 3
+//!   (weighted round-robin replica selection).
+
+use super::rng::Rng;
+
+/// Zipf(n, s): `P(k) ∝ 1 / (k+1)^s` over `k ∈ [0, n)`.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    pmf: Vec<f64>,
+    alias: AliasTable,
+}
+
+impl Zipf {
+    pub fn new(n: usize, s: f64) -> Self {
+        assert!(n > 0, "Zipf over empty support");
+        let mut pmf: Vec<f64> = (0..n)
+            .map(|k| 1.0 / ((k + 1) as f64).powf(s))
+            .collect();
+        let z: f64 = pmf.iter().sum();
+        for p in &mut pmf {
+            *p /= z;
+        }
+        let alias = AliasTable::new(&pmf);
+        Zipf { pmf, alias }
+    }
+
+    /// Probability of rank `k`.
+    pub fn pmf(&self, k: usize) -> f64 {
+        self.pmf[k]
+    }
+
+    pub fn support(&self) -> usize {
+        self.pmf.len()
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        self.alias.sample(rng)
+    }
+}
+
+/// Walker/Vose alias method: O(n) build, O(1) sample.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+}
+
+impl AliasTable {
+    /// Build from unnormalised non-negative weights (at least one > 0).
+    pub fn new(weights: &[f64]) -> Self {
+        let n = weights.len();
+        assert!(n > 0, "alias table over empty weights");
+        let total: f64 = weights.iter().sum();
+        assert!(
+            total > 0.0 && weights.iter().all(|w| *w >= 0.0),
+            "weights must be non-negative with positive sum"
+        );
+        let mut scaled: Vec<f64> =
+            weights.iter().map(|w| w / total * n as f64).collect();
+        let mut small: Vec<usize> = Vec::with_capacity(n);
+        let mut large: Vec<usize> = Vec::with_capacity(n);
+        for (i, &p) in scaled.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        let mut prob = vec![1.0; n];
+        let mut alias: Vec<usize> = (0..n).collect();
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Leftovers are ~1.0 up to float error.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = 1.0;
+        }
+        AliasTable { prob, alias }
+    }
+
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.index(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+}
+
+/// Weighted choice without table build (O(n)); fine for tiny candidate
+/// sets like per-tier replica lists in TAR.
+pub fn weighted_choice(rng: &mut Rng, weights: &[f64]) -> usize {
+    let total: f64 = weights.iter().sum();
+    assert!(total > 0.0, "weighted_choice: zero total weight");
+    let mut x = rng.f64() * total;
+    for (i, &w) in weights.iter().enumerate() {
+        x -= w;
+        if x <= 0.0 {
+            return i;
+        }
+    }
+    weights.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical(table: &AliasTable, n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0usize; table.len()];
+        for _ in 0..n {
+            counts[table.sample(&mut rng)] += 1;
+        }
+        counts.iter().map(|&c| c as f64 / n as f64).collect()
+    }
+
+    #[test]
+    fn alias_matches_weights() {
+        let w = [1.0, 2.0, 3.0, 4.0];
+        let t = AliasTable::new(&w);
+        let emp = empirical(&t, 100_000, 1);
+        for (i, &wi) in w.iter().enumerate() {
+            let want = wi / 10.0;
+            assert!((emp[i] - want).abs() < 0.01, "i={i} emp={emp:?}");
+        }
+    }
+
+    #[test]
+    fn alias_handles_zero_weights() {
+        let t = AliasTable::new(&[0.0, 1.0, 0.0]);
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            assert_eq!(t.sample(&mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn alias_single_element() {
+        let t = AliasTable::new(&[3.3]);
+        let mut rng = Rng::new(3);
+        assert_eq!(t.sample(&mut rng), 0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn alias_rejects_all_zero() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+
+    #[test]
+    fn zipf_is_monotone_and_normalised() {
+        let z = Zipf::new(64, 1.2);
+        let total: f64 = (0..64).map(|k| z.pmf(k)).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+        for k in 1..64 {
+            assert!(z.pmf(k) <= z.pmf(k - 1));
+        }
+    }
+
+    #[test]
+    fn zipf_sampling_matches_pmf_head() {
+        let z = Zipf::new(16, 1.0);
+        let mut rng = Rng::new(4);
+        let n = 200_000;
+        let mut counts = vec![0usize; 16];
+        for _ in 0..n {
+            counts[z.sample(&mut rng)] += 1;
+        }
+        for k in 0..4 {
+            let emp = counts[k] as f64 / n as f64;
+            assert!((emp - z.pmf(k)).abs() < 0.01, "k={k}");
+        }
+    }
+
+    #[test]
+    fn zipf_s_zero_is_uniform() {
+        let z = Zipf::new(10, 0.0);
+        for k in 0..10 {
+            assert!((z.pmf(k) - 0.1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn weighted_choice_respects_weights() {
+        let mut rng = Rng::new(5);
+        let w = [0.0, 5.0, 5.0];
+        let mut counts = [0usize; 3];
+        for _ in 0..10_000 {
+            counts[weighted_choice(&mut rng, &w)] += 1;
+        }
+        assert_eq!(counts[0], 0);
+        assert!((counts[1] as f64 - 5_000.0).abs() < 300.0);
+    }
+}

@@ -1,0 +1,18 @@
+//! Statistics substrate: deterministic PRNG, sampling distributions, and
+//! summary statistics.
+//!
+//! The offline registry has no `rand`/`rand_distr`, so this module
+//! implements the pieces the rest of the crate needs from scratch:
+//!
+//! * [`rng::Rng`] — xoshiro256\*\* seeded through SplitMix64,
+//! * [`dist`] — Zipf (the paper's skewed expert-popularity model), alias
+//!   tables for fast categorical sampling, Box–Muller gaussians,
+//! * [`summary`] — mean / std / percentiles used by every metric table.
+
+pub mod dist;
+pub mod rng;
+pub mod summary;
+
+pub use dist::{AliasTable, Zipf};
+pub use rng::Rng;
+pub use summary::Summary;

@@ -1,0 +1,143 @@
+//! Summary statistics for metric reporting: mean/std/min/max/percentiles.
+//!
+//! Every table in the paper reports either means, standard deviations (the
+//! "AVG. GPU LOAD STD." metric), or tail latencies; this is the shared
+//! accumulator behind all of them.
+
+/// Immutable summary over a sample of f64s.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    sorted: Vec<f64>,
+    mean: f64,
+    std: f64,
+}
+
+impl Summary {
+    pub fn of(values: &[f64]) -> Self {
+        assert!(!values.is_empty(), "Summary over empty sample");
+        let mut sorted = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in summary"));
+        let n = sorted.len() as f64;
+        let mean = sorted.iter().sum::<f64>() / n;
+        let var = sorted.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / n;
+        Summary { sorted, mean, std: var.sqrt() }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population standard deviation (paper's load-std metric).
+    pub fn std(&self) -> f64 {
+        self.std
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted[0]
+    }
+
+    pub fn max(&self) -> f64 {
+        *self.sorted.last().unwrap()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.mean * self.sorted.len() as f64
+    }
+
+    pub fn len(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // construction requires non-empty
+    }
+
+    /// Linear-interpolated percentile, `q ∈ [0, 100]`.
+    pub fn percentile(&self, q: f64) -> f64 {
+        assert!((0.0..=100.0).contains(&q));
+        let n = self.sorted.len();
+        if n == 1 {
+            return self.sorted[0];
+        }
+        let pos = q / 100.0 * (n - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        let frac = pos - lo as f64;
+        self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    /// Coefficient of variation — scale-free imbalance measure.
+    pub fn cv(&self) -> f64 {
+        if self.mean == 0.0 { 0.0 } else { self.std / self.mean }
+    }
+}
+
+/// Relative change `(new - base) / base`, the form Table 1 reports
+/// ("-35.19%" == -0.3519). Returns 0 when the base is 0.
+pub fn rel_change(base: f64, new: f64) -> f64 {
+    if base == 0.0 {
+        0.0
+    } else {
+        (new - base) / base
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean(), 2.5);
+        assert!((s.std() - 1.118_033_988_749_895).abs() < 1e-12);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 4.0);
+        assert_eq!(s.sum(), 10.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let s = Summary::of(&[0.0, 10.0]);
+        assert_eq!(s.percentile(0.0), 0.0);
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn single_sample() {
+        let s = Summary::of(&[7.0]);
+        assert_eq!(s.mean(), 7.0);
+        assert_eq!(s.std(), 0.0);
+        assert_eq!(s.p99(), 7.0);
+    }
+
+    #[test]
+    fn unsorted_input_ok() {
+        let s = Summary::of(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.p50(), 2.0);
+    }
+
+    #[test]
+    fn cv_zero_mean() {
+        let s = Summary::of(&[0.0, 0.0]);
+        assert_eq!(s.cv(), 0.0);
+    }
+
+    #[test]
+    fn rel_change_forms() {
+        assert!((rel_change(100.0, 64.81) + 0.3519).abs() < 1e-12);
+        assert_eq!(rel_change(0.0, 5.0), 0.0);
+        assert!((rel_change(2.0, 4.0) - 1.0).abs() < 1e-12);
+    }
+}

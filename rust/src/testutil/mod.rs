@@ -1,0 +1,113 @@
+//! Property-testing helper ("proptest-lite"): no `proptest` crate is
+//! available offline, so this provides the 10% of it the test suite needs —
+//! seeded random case generation with automatic failing-seed reporting.
+//!
+//! ```ignore
+//! testutil::check(200, |rng| {
+//!     let n = 1 + rng.index(64);
+//!     let part = some_partition(n, rng);
+//!     prop_assert(is_partition(&part, n), "partition broken")
+//! });
+//! ```
+
+use crate::stats::Rng;
+
+/// Outcome of a single property case.
+pub type PropResult = Result<(), String>;
+
+/// Assert helper for property bodies.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Approximate float equality helper.
+pub fn prop_close(a: f64, b: f64, tol: f64, what: &str) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} vs {b} (tol {tol})"))
+    }
+}
+
+/// Run `cases` random property cases; panics with the failing case's seed
+/// (re-run just that seed with [`check_seed`] while debugging).
+pub fn check(cases: usize, prop: impl Fn(&mut Rng) -> PropResult) {
+    // Base seed is fixed for reproducible CI; per-case forks decorrelate.
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed (case {case}, seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing seed.
+pub fn check_seed(seed: u64, prop: impl Fn(&mut Rng) -> PropResult) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("property failed (seed {seed:#x}): {msg}");
+    }
+}
+
+/// Generate a random partition sizing: `k` non-negative integers summing to
+/// `total` (common generator for load/size vectors).
+pub fn random_sizes(rng: &mut Rng, k: usize, total: usize) -> Vec<usize> {
+    assert!(k > 0);
+    let mut cuts: Vec<usize> =
+        (0..k - 1).map(|_| rng.index(total + 1)).collect();
+    cuts.sort_unstable();
+    let mut sizes = Vec::with_capacity(k);
+    let mut prev = 0;
+    for c in cuts {
+        sizes.push(c - prev);
+        prev = c;
+    }
+    sizes.push(total - prev);
+    sizes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        // interior mutability via Cell to count invocations
+        let counter = std::cell::Cell::new(0usize);
+        check(50, |_rng| {
+            counter.set(counter.get() + 1);
+            Ok(())
+        });
+        count += counter.get();
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(10, |rng| prop_assert(rng.f64() < 0.5, "coin came up heads"));
+    }
+
+    #[test]
+    fn random_sizes_sum_and_len() {
+        check(100, |rng| {
+            let k = 1 + rng.index(10);
+            let total = rng.index(1000);
+            let s = random_sizes(rng, k, total);
+            prop_assert(s.len() == k, "len")?;
+            prop_assert(s.iter().sum::<usize>() == total, "sum")
+        });
+    }
+
+    #[test]
+    fn prop_close_tolerance() {
+        assert!(prop_close(1.0, 1.0001, 0.001, "x").is_ok());
+        assert!(prop_close(1.0, 1.1, 0.001, "x").is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Cross-module integration tests: the full offline→online pipeline over
+//! the simulator, exercised end to end with paper-shaped assertions.
+
+use grace_moe::baselines::{GroupingStrategy, SystemSpec};
+use grace_moe::cluster::Topology;
+use grace_moe::comm::CommModel;
+use grace_moe::config::{ModelSpec, Workload};
+use grace_moe::engine::sim::{build_placement, simulate,
+                             simulate_with_placement, SimConfig};
+use grace_moe::grouping::is_partition;
+use grace_moe::placement::ReplicationMode;
+use grace_moe::routing::RoutingPolicy;
+use grace_moe::testutil::{check, prop_assert};
+use grace_moe::trace::Profile;
+
+fn small(model: ModelSpec, topo: Topology) -> SimConfig {
+    let model = ModelSpec { moe_layers: 3, ..model };
+    let mut cfg = SimConfig::new(
+        model,
+        topo,
+        Workload { batch: 64, prefill: 16, decode: 4 },
+    );
+    cfg.profile_tokens = 512;
+    cfg.max_chunk = 1024;
+    cfg
+}
+
+#[test]
+fn full_pipeline_all_models_all_clusters() {
+    for model in ModelSpec::all() {
+        for topo in [Topology::two_by_two(), Topology::two_by_four()] {
+            let cfg = small(model.clone(), topo);
+            let m = simulate(&SystemSpec::grace(0.15), &cfg);
+            assert!(m.e2e_time > 0.0, "{}: zero e2e", model.name);
+            assert!(m.moe_layer_time > 0.0);
+            assert!(m.a2a_time > 0.0);
+            assert_eq!(m.layer_load_std.len(), 3 * 2);
+        }
+    }
+}
+
+#[test]
+fn grace_placement_respects_memory_budget() {
+    let cfg = small(ModelSpec::olmoe(), Topology::two_by_two());
+    let p = build_placement(&SystemSpec::grace(0.15), &cfg);
+    // full-scale OLMoE expert ≈ 12.6 MB bf16; must fit easily in 80 GB
+    p.check_memory(&cfg.topo, cfg.model.expert_bytes())
+        .expect("placement must fit HBM");
+    // replication is sparse (paper: "only a small subset of heavily
+    // skewed experts per layer")
+    assert!(p.replication_overhead() < 0.5,
+            "overhead {}", p.replication_overhead());
+}
+
+#[test]
+fn every_fig4_system_runs_and_orders_sanely() {
+    let cfg = small(ModelSpec::olmoe(), Topology::two_by_two());
+    let systems = SystemSpec::fig4_systems(0.15);
+    let runs: Vec<_> =
+        systems.iter().map(|s| simulate(s, &cfg)).collect();
+    // GRACE (last) must beat the vanilla baseline (first) clearly.
+    let vanilla = &runs[0];
+    let grace = runs.last().unwrap();
+    assert!(
+        grace.e2e_time < vanilla.e2e_time,
+        "grace {} !< vanilla {}",
+        grace.e2e_time,
+        vanilla.e2e_time
+    );
+    // every system processes the same token count
+    for m in &runs {
+        assert_eq!(m.tokens, cfg.workload.total_tokens());
+    }
+}
+
+#[test]
+fn table1_ladder_reproduces_paper_directions() {
+    // The qualitative Table-1 signature, averaged over the three models.
+    let mut avg: Vec<grace_moe::metrics::RunMetrics> =
+        (0..6).map(|_| Default::default()).collect();
+    for model in ModelSpec::all() {
+        let mut cfg = small(model, Topology::two_by_two());
+        cfg.serve_profile = Profile::Math;
+        cfg.placement_profile = Profile::Math;
+        let ladder = SystemSpec::table1_ladder(0.15);
+        for (acc, sys) in avg.iter_mut().zip(&ladder) {
+            acc.accumulate(&simulate(sys, &cfg));
+        }
+    }
+    let (occult, occult_hsc, hg_hsc, _fr, dr_wrr, dr_tar) =
+        (&avg[0], &avg[1], &avg[2], &avg[3], &avg[4], &avg[5]);
+    // RQ1: HSC cuts A2A time and cross traffic; shifts to intra.
+    assert!(occult_hsc.a2a_time < occult.a2a_time);
+    assert!(occult_hsc.cross_bytes < occult.cross_bytes);
+    assert!(occult_hsc.intra_bytes > occult.intra_bytes);
+    // HG cuts cross traffic further…
+    assert!(hg_hsc.cross_bytes < occult_hsc.cross_bytes);
+    // RQ2: …but worsens load balance; DR+WRR recovers it.
+    assert!(hg_hsc.mean_load_std() > occult_hsc.mean_load_std());
+    assert!(dr_wrr.mean_load_std() < hg_hsc.mean_load_std());
+    assert!(dr_wrr.idle_time < hg_hsc.idle_time);
+    // RQ3: TAR trims the traffic DR+WRR added.
+    assert!(dr_tar.cross_bytes <= dr_wrr.cross_bytes);
+    // Full ladder beats Occult end-to-end.
+    assert!(dr_tar.e2e_time < occult.e2e_time);
+}
+
+#[test]
+fn cross_dataset_transfer_stays_competitive() {
+    // Fig. 6 shape at small scale: transferred placements lose little vs
+    // in-domain and stay ahead of Occult.
+    let sys = SystemSpec::grace(0.15);
+    let mk = |serve, place| {
+        let mut cfg = small(ModelSpec::olmoe(), Topology::two_by_two());
+        cfg.serve_profile = serve;
+        cfg.placement_profile = place;
+        cfg
+    };
+    for &target in &Profile::ALL {
+        let indomain =
+            simulate(&sys, &mk(target, target)).e2e_time;
+        let occult =
+            simulate(&SystemSpec::occult(), &mk(target, target)).e2e_time;
+        for &src in &Profile::ALL {
+            if src == target {
+                continue;
+            }
+            let cfg = mk(target, src);
+            let placement = build_placement(&sys, &cfg);
+            let transferred =
+                simulate_with_placement(&sys, &cfg, &placement).e2e_time;
+            assert!(
+                transferred < indomain * 1.25,
+                "{src:?}→{target:?}: {transferred} vs in-domain \
+                 {indomain}"
+            );
+            assert!(
+                transferred < occult,
+                "{src:?}→{target:?}: transferred {transferred} !< \
+                 occult {occult}"
+            );
+        }
+    }
+}
+
+#[test]
+fn property_pipeline_is_total_over_random_configs() {
+    check(15, |rng| {
+        let models = ModelSpec::all();
+        let model = models[rng.index(3)].clone();
+        let topo = Topology::paper_testbed(1 + rng.index(3),
+                                           1 + rng.index(4));
+        if topo.num_gpus() < 2 {
+            return Ok(());
+        }
+        let mut cfg = small(model, topo);
+        cfg.seed = rng.next_u64();
+        cfg.workload = Workload {
+            batch: 8 + rng.index(64),
+            prefill: 1 + rng.index(32),
+            decode: rng.index(8),
+        };
+        let sys = match rng.index(4) {
+            0 => SystemSpec::grace(0.05 + rng.f64() * 0.5),
+            1 => SystemSpec::occult(),
+            2 => SystemSpec::c2r(),
+            _ => SystemSpec {
+                comm: CommModel::StagedHierarchical,
+                ..SystemSpec::occult()
+            },
+        };
+        let m = simulate(&sys, &cfg);
+        prop_assert(m.e2e_time.is_finite() && m.e2e_time > 0.0,
+                    "bad e2e")?;
+        prop_assert(m.cross_bytes >= 0.0 && m.intra_bytes >= 0.0,
+                    "negative traffic")?;
+        prop_assert(m.idle_time >= -1e-9, "negative idle")
+    });
+}
+
+#[test]
+fn property_groupings_stay_partitions_through_placement() {
+    check(10, |rng| {
+        let cfg = small(ModelSpec::olmoe(), Topology::two_by_four());
+        let strategies = [
+            GroupingStrategy::Sequential,
+            GroupingStrategy::Uniform,
+            GroupingStrategy::Hierarchical { r: rng.f64() },
+            GroupingStrategy::FullyNonUniform,
+        ];
+        let sys = SystemSpec {
+            grouping: strategies[rng.index(4)],
+            replication: [ReplicationMode::None, ReplicationMode::Fixed,
+                          ReplicationMode::Dynamic][rng.index(3)],
+            routing: [RoutingPolicy::Primary, RoutingPolicy::Wrr,
+                      RoutingPolicy::Tar][rng.index(3)],
+            ..SystemSpec::occult()
+        };
+        let p = build_placement(&sys, &cfg);
+        for lp in &p.layers {
+            prop_assert(is_partition(&lp.groups, p.experts),
+                        "groups not a partition")?;
+            for (e, inst) in lp.instances.iter().enumerate() {
+                prop_assert(inst[0] == lp.primary[e], "primary first")?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn decode_only_and_prefill_only_workloads() {
+    let mut cfg = small(ModelSpec::olmoe(), Topology::two_by_two());
+    cfg.workload = Workload { batch: 16, prefill: 8, decode: 0 };
+    let m = simulate(&SystemSpec::grace(0.15), &cfg);
+    assert!(m.e2e_time > 0.0);
+    cfg.workload = Workload { batch: 16, prefill: 1, decode: 12 };
+    let m2 = simulate(&SystemSpec::grace(0.15), &cfg);
+    assert!(m2.e2e_time > m.e2e_time * 0.5);
+}
