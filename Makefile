@@ -1,0 +1,47 @@
+# GRACE-MoE build entry points.
+#
+#   make build      — release build of the whole workspace
+#   make test       — tier-1 verify (build + full test suite)
+#   make artifacts  — AOT-lower the tiny JAX/Pallas models to HLO text
+#                     (writes rust/artifacts/; needed only for execute
+#                     mode — simulate mode and tier-1 tests run without it)
+#   make bench-smoke— compile every paper-figure bench without running it
+#   make lint       — rustfmt + clippy, as CI runs them
+#   make pytest     — python test suite (loudly skips without jax)
+#   make clean      — remove build products and artifacts
+
+PYTHON       ?= python3
+ARTIFACTS    ?= rust/artifacts
+
+.PHONY: all build test artifacts bench-smoke lint pytest clean
+
+all: build
+
+build:
+	cargo build --release
+
+test:
+	cargo build --release
+	cargo test -q
+
+# The AOT → PJRT handshake: python/compile/aot.py lowers every L2
+# computation to HLO text + a weight blob + manifest.json, which the rust
+# engine (rust/src/runtime/) consumes. Incremental: a fingerprint of the
+# python sources makes this a no-op when nothing changed.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
+
+bench-smoke:
+	cargo bench --no-run
+
+lint:
+	cargo fmt --all --check
+	cargo clippy --workspace --all-targets -- -D warnings
+
+pytest:
+	$(PYTHON) -m pytest python/tests -q
+
+clean:
+	cargo clean
+	rm -rf $(ARTIFACTS)
+	find python -name __pycache__ -type d -exec rm -rf {} +

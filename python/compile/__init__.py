@@ -1,0 +1,4 @@
+"""GRACE-MoE python compile path (L1 Pallas kernels + L2 JAX model +
+AOT lowering). The rust engine never imports this package at run time; it
+consumes the HLO-text artifacts written by ``python -m compile.aot``
+(driven by ``make artifacts``)."""

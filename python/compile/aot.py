@@ -133,8 +133,15 @@ def main() -> int:
         except (json.JSONDecodeError, OSError):
             pass
 
+    variants = args.variants.split(",")
+    unknown = [v for v in variants if v not in model.VARIANTS]
+    if unknown:
+        # Fail fast before any (slow) lowering happens.
+        ap.error(f"unknown variant(s) {', '.join(unknown)} "
+                 f"(have: {', '.join(model.VARIANTS)})")
+
     manifest = {"fingerprint": fp, "variants": {}}
-    for vname in args.variants.split(","):
+    for vname in variants:
         cfg = model.VARIANTS[vname]
         print(f"building {vname} "
               f"(E={cfg.experts} K={cfg.top_k} L={cfg.layers} "

@@ -1,0 +1,87 @@
+"""Cross-language contract tests for the AOT handshake — pure text-level
+checks over the python and rust sources, so they run with no JAX/Pallas
+toolchain at all (the loud-skip CI lane still exercises *something* real).
+
+The contract: ``python/compile/aot.py`` writes ``manifest.json`` +
+weight blobs; ``rust/src/runtime/manifest.rs`` and ``engine/real.rs``
+consume them. Drift between the two sides (a renamed config key, a weight
+tensor the rust engine expects but python stopped writing) must fail CI
+even on runners that cannot import jax.
+"""
+
+import os
+import re
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", ".."))
+
+
+def _read(*parts: str) -> str:
+    with open(os.path.join(REPO, *parts), encoding="utf-8") as f:
+        return f.read()
+
+
+def test_tiny_config_keys_match_rust_parser():
+    """Every config key the rust manifest parser requires is written by
+    aot.py's build_variant, and vice versa."""
+    aot = _read("python", "compile", "aot.py")
+    manifest_rs = _read("rust", "src", "runtime", "manifest.rs")
+
+    # rust: `experts: c.req_usize("experts")?` inside parse_variant's
+    # TinyConfig construction (receiver `c` distinguishes it from the
+    # weight-tensor offsets, which parse through `tv`).
+    rust_keys = set(re.findall(r'c\.req_usize\("(\w+)"\)', manifest_rs))
+    assert rust_keys, "rust parser should require config keys"
+
+    # python: the "config" dict literal in build_variant: `"experts": cfg.experts`
+    config_block = re.search(r'"config":\s*\{(.*?)\}', aot, re.S)
+    assert config_block, "aot.py must write a config block"
+    py_keys = set(re.findall(r'"(\w+)":\s*cfg\.\w+', config_block.group(1)))
+
+    assert rust_keys == py_keys, (
+        f"manifest config keys drifted: rust-only={rust_keys - py_keys}, "
+        f"python-only={py_keys - rust_keys}"
+    )
+
+
+def test_weight_tensor_order_matches_rust_engine():
+    """The tensors aot.py serialises cover everything the rust engine
+    loads per layer / per model."""
+    aot = _read("python", "compile", "aot.py")
+    real_rs = _read("rust", "src", "engine", "real.rs")
+
+    order = re.search(r'order\s*=\s*\[([^\]]*)\]', aot)
+    assert order, "aot.py must declare the weight blob order"
+    py_tensors = set(re.findall(r'"(\w+)"', order.group(1)))
+
+    # rust loads: ws.tensor("emb") plus lit("wqkv") … per layer.
+    rust_tensors = set(re.findall(r'ws\.tensor\("(\w+)"\)', real_rs))
+    rust_tensors |= set(re.findall(r'lit\("(\w+)"\)', real_rs))
+    rust_tensors |= set(
+        re.findall(r'expert_tensor\("(\w+)"', real_rs))
+
+    missing = rust_tensors - py_tensors
+    assert not missing, f"rust engine loads tensors python never writes: {missing}"
+
+
+def test_artifact_names_cover_rust_run_calls():
+    """Every artifact name the rust engine executes is registered in
+    model.artifact_specs."""
+    model_py = _read("python", "compile", "model.py")
+    real_rs = _read("rust", "src", "engine", "real.rs")
+
+    py_artifacts = set(re.findall(r'^\s+\("(\w+)",', model_py, re.M))
+    assert py_artifacts, "artifact_specs should register artifacts"
+
+    rust_calls = set(re.findall(r'self\.run\(\s*"(\w+)"', real_rs))
+    rust_calls |= set(re.findall(r'\.run\(\s*\n?\s*"(\w+)"', real_rs))
+
+    missing = rust_calls - py_artifacts
+    assert not missing, f"rust engine runs artifacts python never lowers: {missing}"
+
+
+def test_makefile_drives_aot():
+    """`make artifacts` must lower via python -m compile.aot into the
+    directory the rust tests expect (rust/artifacts)."""
+    makefile = _read("Makefile")
+    assert "compile.aot" in makefile
+    assert "rust/artifacts" in makefile

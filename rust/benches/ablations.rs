@@ -51,7 +51,8 @@ fn main() {
         seed: 42,
     }
     .generate(2048);
-    let lp = &ModelProfile::from_trace(&trace).layers[0];
+    let profile = ModelProfile::from_trace(&trace);
+    let lp = &profile.layers[0];
     let r_star = select_r(lp, 4, &[0.0, 0.05, 0.15, 0.3, 0.5, 1.0],
                           &mut Rng::new(1));
     let m = simulate(&SystemSpec::grace(r_star), &base);

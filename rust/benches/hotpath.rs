@@ -90,9 +90,11 @@ fn main() {
     });
     println!("{}", r.report_line());
 
-    // ---- PJRT execution (needs artifacts) --------------------------------
+    // ---- PJRT execution (needs artifacts + a real PJRT runtime) ---------
     let dir = std::path::Path::new("artifacts");
-    if dir.join("manifest.json").exists() {
+    if dir.join("manifest.json").exists()
+        && grace_moe::runtime::pjrt::runtime_available()
+    {
         use grace_moe::engine::real::RealModel;
         let rm = RealModel::load(dir, "olmoe_tiny").expect("load model");
         let c = rm.cfg.clone();
@@ -116,6 +118,7 @@ fn main() {
         });
         println!("{}", r.report_line());
     } else {
-        println!("(skipping PJRT benches: run `make artifacts`)");
+        println!("(skipping PJRT benches: need `make artifacts` and a \
+                  real PJRT runtime — see rust/shims/xla)");
     }
 }

@@ -18,9 +18,11 @@
 //!
 //! Run: `cargo run --release --example serve_end_to_end`
 
+use grace_moe::baselines::GroupingStrategy;
 use grace_moe::cluster::Topology;
-use grace_moe::engine::real::{place_real, profile_real, DistributedMoE,
-                              FfnMode, RealModel};
+use grace_moe::coordinator::Coordinator;
+use grace_moe::engine::real::{profile_real, DistributedMoE, FfnMode,
+                              RealModel};
 use grace_moe::placement::ReplicationMode;
 use grace_moe::routing::RoutingPolicy;
 use grace_moe::server::{MoEServer, Request, ServerConfig};
@@ -52,8 +54,16 @@ fn main() -> anyhow::Result<()> {
     println!("\n== 2–3. offline phase: real-gate profiling + placement ==");
     let t0 = Instant::now();
     let trace = profile_real(&model, 2, seed)?;
-    let placement = place_real(&model, &topo, &trace,
-                               ReplicationMode::Dynamic, 0.15, seed);
+    // The L3 coordinator owns the pipeline: offline placement here, and
+    // the per-layer routers for every check/serve below.
+    let coord = Coordinator::new(
+        GroupingStrategy::Hierarchical { r: 0.15 },
+        ReplicationMode::Dynamic,
+        RoutingPolicy::Tar,
+        topo.clone(),
+        seed,
+    );
+    let placement = coord.place(&trace);
     println!(
         "profiled {} tokens × {} layers in {:.1}s",
         trace.num_tokens(),
@@ -79,11 +89,11 @@ fn main() -> anyhow::Result<()> {
         .collect();
     for policy in [RoutingPolicy::Primary, RoutingPolicy::Wrr,
                    RoutingPolicy::Tar] {
+        let policy_coord = Coordinator::serving(topo.clone(), policy);
         let dist = DistributedMoE {
             model: &model,
             placement: &placement,
-            topo: &topo,
-            policy,
+            coord: &policy_coord,
             ffn_mode: FfnMode::GroupedPallas,
         };
         let want = model.moe_layer_oracle(&x, 0)?;
@@ -103,11 +113,10 @@ fn main() -> anyhow::Result<()> {
     println!("  lossless ✓ (same numerics under every routing policy)");
 
     println!("\n== 4+6. serve batched requests (TAR routing) ==");
-    let server = MoEServer::new(
+    let server = MoEServer::with_coordinator(
         model.clone(),
         placement.clone(),
-        topo.clone(),
-        RoutingPolicy::Tar,
+        coord.clone(),
         ServerConfig {
             max_batch: 8,
             queue_cap: 64,
@@ -143,11 +152,10 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Determinism spot-check: greedy decode twice must agree.
-    let server2 = MoEServer::new(
+    let server2 = MoEServer::with_coordinator(
         model.clone(),
         placement,
-        topo,
-        RoutingPolicy::Tar,
+        coord,
         ServerConfig {
             max_batch: 8,
             queue_cap: 64,

@@ -1,0 +1,192 @@
+//! Std-only shim of the `anyhow` error API.
+//!
+//! The offline registry has no crates, so this vendors the sliver of
+//! `anyhow` the workspace actually uses: the type-erased [`Error`], the
+//! [`Result`] alias, and the [`anyhow!`] / [`bail!`] / [`ensure!`] macros.
+//! Semantics follow upstream where they matter:
+//!
+//! * `Error` deliberately does **not** implement `std::error::Error` —
+//!   that is what makes the blanket `From<E: std::error::Error>` impl
+//!   (and therefore `?` on any std error) coherent,
+//! * `anyhow!` accepts a bare format literal, a single `Display` value,
+//!   or a format string with arguments,
+//! * `ensure!`/`bail!` early-return an `Err` from the enclosing function.
+//!
+//! No backtraces, no downcasting, no context chains — nothing in the
+//! workspace needs them; add them here the day something does.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Type-erased error: a boxed `std::error::Error` with `Display`/`Debug`
+/// forwarding. Construct via [`Error::msg`], [`Error::new`], `?`, or the
+/// [`anyhow!`] macro.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted, exactly like
+/// upstream (`anyhow::Result<T>` and `anyhow::Result<T, E>` both work).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Ad-hoc message error backing [`Error::msg`] and the macros.
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+impl Error {
+    /// Error from anything printable (the `anyhow!("…")` path).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { inner: Box::new(MessageError(message.to_string())) }
+    }
+
+    /// Error wrapping a concrete `std::error::Error`.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error { inner: Box::new(error) }
+    }
+
+    /// Borrow the underlying error (chain inspection / tests).
+    pub fn as_std(&self) -> &(dyn StdError + Send + Sync + 'static) {
+        &*self.inner
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // Upstream prints the message then the cause chain; we print the
+        // message and any sources on following lines.
+        fmt::Display::fmt(&self.inner, f)?;
+        let mut source = self.inner.source();
+        while let Some(cause) = source {
+            write!(f, "\ncaused by: {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+// The load-bearing impl: `?` converts any std error into `Error`. This is
+// only coherent because `Error` itself is not a `std::error::Error`.
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Construct an [`Error`] from a format literal, a `Display` value, or a
+/// format string plus arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return `Err(anyhow!(…))` from the enclosing function.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Early-return `Err(anyhow!(…))` unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!(
+                ::std::concat!("condition failed: `",
+                               ::std::stringify!($cond), "`")
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/file")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn anyhow_macro_forms() {
+        let plain = anyhow!("plain");
+        assert_eq!(plain.to_string(), "plain");
+        let x = 7;
+        let captured = anyhow!("x = {x}");
+        assert_eq!(captured.to_string(), "x = 7");
+        let args = anyhow!("{} + {}", 1, 2);
+        assert_eq!(args.to_string(), "1 + 2");
+        let display_value = anyhow!(String::from("owned message"));
+        assert_eq!(display_value.to_string(), "owned message");
+    }
+
+    #[test]
+    fn bail_and_ensure_early_return() {
+        fn f(n: usize) -> Result<usize> {
+            ensure!(n < 10, "too big: {n}");
+            if n == 3 {
+                bail!("unlucky {n}");
+            }
+            Ok(n)
+        }
+        assert_eq!(f(2).unwrap(), 2);
+        assert_eq!(f(3).unwrap_err().to_string(), "unlucky 3");
+        assert_eq!(f(11).unwrap_err().to_string(), "too big: 11");
+    }
+
+    #[test]
+    fn ensure_without_message_names_the_condition() {
+        fn f() -> Result<()> {
+            ensure!(1 + 1 == 3);
+            Ok(())
+        }
+        assert!(f().unwrap_err().to_string().contains("1 + 1 == 3"));
+    }
+
+    #[test]
+    fn collect_into_result() {
+        let ok: Result<Vec<usize>> =
+            (0..3).map(Ok).collect::<Result<Vec<usize>>>();
+        assert_eq!(ok.unwrap(), vec![0, 1, 2]);
+    }
+}

@@ -1,0 +1,301 @@
+//! Std-only stand-in for the `xla` crate (PJRT bindings).
+//!
+//! The runtime boundary of the engine (`grace_moe::runtime::pjrt`) is
+//! written against the xla-rs API surface. The native `xla_extension`
+//! runtime cannot be vendored offline, so this crate splits that surface
+//! in two:
+//!
+//! * **[`Literal`] marshalling is real** — shape/dtype-checked host
+//!   tensors with `vec1`/`scalar`/`reshape`/`to_vec`/`to_tuple`, enough
+//!   for every pure-host code path and its tests,
+//! * **the PJRT client is a loud stub** — [`PjRtClient::cpu`] returns an
+//!   error that names this file, so execute-mode fails fast with an
+//!   actionable message instead of a link error. Execute-mode tests gate
+//!   on `artifacts/manifest.json` and skip before ever reaching it.
+//!
+//! Swapping in the real bindings later means deleting this crate from the
+//! workspace and pointing the `xla` dependency at xla-rs; no call-site
+//! changes.
+
+use std::fmt;
+
+/// Stub error type; rendered with `{:?}` at the call sites, like the
+/// status wrapper of the real bindings.
+#[derive(Clone, Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+const STUB_MSG: &str =
+    "PJRT runtime unavailable: this workspace builds against the std-only \
+     `xla` stub (rust/shims/xla). Simulate mode (`grace-moe simulate` / \
+     `compare` / `components` / `placement`) never touches PJRT; execute \
+     mode (`serve`, losslessness tests) needs the native xla_extension \
+     bindings wired into the workspace";
+
+fn stub_err<T>(what: &str) -> Result<T, Error> {
+    Err(Error(format!("{what}: {STUB_MSG}")))
+}
+
+// ---------------------------------------------------------------------------
+// Literal: real host-side tensor marshalling
+// ---------------------------------------------------------------------------
+
+/// Element types a [`Literal`] can hold (the engine only marshals f32
+/// activations/weights and i32 ids).
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn wrap(vals: Vec<Self>) -> Data;
+    #[doc(hidden)]
+    fn unwrap(data: &Data) -> Option<&[Self]>;
+    /// Dtype name used in error messages.
+    const DTYPE: &'static str;
+}
+
+/// Storage of one literal (public only so `NativeType` can be implemented
+/// here; treat as opaque).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl NativeType for f32 {
+    fn wrap(vals: Vec<f32>) -> Data {
+        Data::F32(vals)
+    }
+    fn unwrap(data: &Data) -> Option<&[f32]> {
+        match data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    const DTYPE: &'static str = "f32";
+}
+
+impl NativeType for i32 {
+    fn wrap(vals: Vec<i32>) -> Data {
+        Data::I32(vals)
+    }
+    fn unwrap(data: &Data) -> Option<&[i32]> {
+        match data {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    const DTYPE: &'static str = "i32";
+}
+
+/// Host tensor: flat data plus row-major dims.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    data: Data,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(vals: &[T]) -> Literal {
+        Literal {
+            dims: vec![vals.len() as i64],
+            data: T::wrap(vals.to_vec()),
+        }
+    }
+
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(val: T) -> Literal {
+        Literal { dims: Vec::new(), data: T::wrap(vec![val]) }
+    }
+
+    /// Tuple literal (what executables return under `return_tuple=True`).
+    pub fn tuple(elements: Vec<Literal>) -> Literal {
+        Literal { dims: Vec::new(), data: Data::Tuple(elements) }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Elements held (tuples: number of components).
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(v) => v.len(),
+        }
+    }
+
+    /// Same data, new dims; errors when the element counts disagree.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        if matches!(self.data, Data::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        if dims.iter().any(|&d| d < 0) {
+            return Err(Error(format!("negative dim in {dims:?}")));
+        }
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count {} != {n}",
+                self.dims,
+                self.element_count()
+            )));
+        }
+        Ok(Literal { dims: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Flat host copy; errors on dtype mismatch or tuples.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        T::unwrap(&self.data).map(<[T]>::to_vec).ok_or_else(|| {
+            Error(format!(
+                "literal is not a dense {} tensor (have {})",
+                T::DTYPE,
+                match &self.data {
+                    Data::F32(_) => "f32",
+                    Data::I32(_) => "i32",
+                    Data::Tuple(_) => "tuple",
+                }
+            ))
+        })
+    }
+
+    /// Decompose a tuple literal into its components; a non-tuple literal
+    /// decomposes into itself (single-output executables).
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        match self.data {
+            Data::Tuple(elements) => Ok(elements),
+            _ => Ok(vec![self]),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT surface: loud stubs
+// ---------------------------------------------------------------------------
+
+/// Parsed HLO-text module (text retained verbatim; the stub validates only
+/// that the file exists and looks like HLO).
+pub struct HloModuleProto {
+    text: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto, Error> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("read {path}: {e}")))?;
+        if !text.contains("HloModule") {
+            return Err(Error(format!("{path}: not HLO text")));
+        }
+        Ok(HloModuleProto { text })
+    }
+
+    pub fn as_text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// Computation wrapper around a parsed module.
+pub struct XlaComputation {
+    text: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { text: proto.text.clone() }
+    }
+
+    pub fn as_text(&self) -> &str {
+        &self.text
+    }
+}
+
+/// Stub PJRT client: construction fails with the actionable message above.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        stub_err("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation)
+                   -> Result<PjRtLoadedExecutable, Error> {
+        stub_err("PjRtClient::compile")
+    }
+}
+
+/// Stub compiled executable (unreachable — `compile` never succeeds).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L])
+                      -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        stub_err("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Stub device buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        stub_err("PjRtBuffer::to_literal_sync")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec1_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.dims(), &[6]);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.dims(), &[2, 3]);
+        assert_eq!(m.to_vec::<f32>().unwrap(),
+                   vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_is_error() {
+        let l = Literal::vec1(&[1i32, 2]);
+        assert!(l.to_vec::<f32>().is_err());
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2]);
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(5i32);
+        assert_eq!(s.dims().len(), 0);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![5]);
+        let t = Literal::tuple(vec![s.clone(), Literal::vec1(&[1.0f32])]);
+        let parts = t.to_tuple().unwrap();
+        assert_eq!(parts.len(), 2);
+        // non-tuples decompose into themselves
+        assert_eq!(s.clone().to_tuple().unwrap(), vec![s]);
+    }
+
+    #[test]
+    fn client_is_a_loud_stub() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("shims/xla"), "{err}");
+    }
+}

@@ -12,13 +12,28 @@ pub struct Args {
     pub positionals: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("option --{0} requires a value")]
+    /// `--key` appeared as the final token with no value following.
     MissingValue(String),
-    #[error("option --{key}: {msg}")]
+    /// `--key value` failed to parse as the requested type.
     BadValue { key: String, msg: String },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::MissingValue(name) => {
+                write!(f, "option --{name} requires a value")
+            }
+            CliError::BadValue { key, msg } => {
+                write!(f, "option --{key}: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse raw argv (excluding the program name). `known_flags` lists

@@ -5,13 +5,24 @@ use super::value::Value;
 use std::collections::BTreeMap;
 
 /// Parse error with byte offset and a short context excerpt.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {offset}: {msg} (near '{near}')")]
+#[derive(Debug)]
 pub struct ParseError {
     pub offset: usize,
     pub msg: String,
     pub near: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "json parse error at byte {}: {} (near '{}')",
+            self.offset, self.msg, self.near
+        )
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 struct Parser<'a> {
     b: &'a [u8],

@@ -15,13 +15,24 @@ pub enum Value {
 }
 
 /// Typed-access errors with a path-ish message for debuggability.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ValueError {
-    #[error("missing key '{0}'")]
     Missing(String),
-    #[error("'{key}': expected {want}, got {got}")]
     Type { key: String, want: &'static str, got: &'static str },
 }
+
+impl fmt::Display for ValueError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ValueError::Missing(key) => write!(f, "missing key '{key}'"),
+            ValueError::Type { key, want, got } => {
+                write!(f, "'{key}': expected {want}, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ValueError {}
 
 impl Value {
     pub fn kind(&self) -> &'static str {

@@ -16,10 +16,9 @@ use crate::cluster::Topology;
 use crate::comm::model::{self, CommModel, CommReport};
 use crate::comm::traffic::{self, Dispatch};
 use crate::config::{GpuModel, ModelSpec, Workload};
+use crate::coordinator::Coordinator;
 use crate::metrics::RunMetrics;
 use crate::placement::Placement;
-use crate::profile::ModelProfile;
-use crate::routing::Router;
 use crate::stats::{Rng, Summary};
 use crate::trace::{GateTrace, Profile, TraceGen};
 
@@ -63,22 +62,21 @@ impl SimConfig {
     }
 }
 
+/// The L3 coordinator implementing `sys`'s placement/routing strategy for
+/// one simulated run.
+pub fn coordinator(sys: &SystemSpec, cfg: &SimConfig) -> Coordinator {
+    Coordinator::for_system(sys, &cfg.topo, cfg.seed)
+}
+
 /// Offline phase: profiling trace → placement (grouping + replication +
-/// predicted-load polling weights) under `sys`'s strategy.
+/// predicted-load polling weights) under `sys`'s strategy. Thin wrapper
+/// over [`Coordinator::offline_synthetic`].
 pub fn build_placement(sys: &SystemSpec, cfg: &SimConfig) -> Placement {
-    let profiling = TraceGen {
-        experts: cfg.model.experts,
-        top_k: cfg.model.top_k,
-        layers: cfg.model.moe_layers,
-        profile: cfg.placement_profile,
-        seed: cfg.seed,
-    }
-    .generate(cfg.profile_tokens);
-    let profile = ModelProfile::from_trace(&profiling);
-    let mut rng = Rng::new(cfg.seed ^ 0x9A0C);
-    Placement::build(&profile, sys.replication, |lp| {
-        sys.grouping.build(lp, &cfg.topo, &mut rng)
-    })
+    coordinator(sys, cfg).offline_synthetic(
+        &cfg.model,
+        cfg.placement_profile,
+        cfg.profile_tokens,
+    )
 }
 
 /// Offline + online phases.
@@ -94,6 +92,7 @@ pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
                                placement: &Placement) -> RunMetrics {
     assert_eq!(placement.experts, cfg.model.experts);
     assert_eq!(placement.num_gpus, cfg.topo.num_gpus());
+    let coord = coordinator(sys, cfg);
     let mut rng = Rng::new(cfg.seed ^ 0x5E21);
     let mut metrics = RunMetrics::default();
 
@@ -103,7 +102,7 @@ pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
     if chunk > 0 {
         let scale = prefill_tokens as f64 / chunk as f64;
         let trace = serve_trace(cfg, chunk, 1);
-        sim_phase(sys, cfg, placement, &trace, scale, &mut rng,
+        sim_phase(sys, cfg, &coord, placement, &trace, scale, &mut rng,
                   &mut metrics);
     }
 
@@ -114,7 +113,7 @@ pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
         let scale = cfg.workload.decode as f64 * decode_tokens as f64
             / dchunk as f64;
         let trace = serve_trace(cfg, dchunk, 2);
-        sim_phase(sys, cfg, placement, &trace, scale, &mut rng,
+        sim_phase(sys, cfg, &coord, placement, &trace, scale, &mut rng,
                   &mut metrics);
     }
 
@@ -136,10 +135,12 @@ fn serve_trace(cfg: &SimConfig, tokens: usize, phase_tag: u64) -> GateTrace {
 }
 
 /// Simulate one phase (all MoE layers over one token chunk), accumulating
-/// scaled metrics.
-fn sim_phase(sys: &SystemSpec, cfg: &SimConfig, placement: &Placement,
-             trace: &GateTrace, scale: f64, rng: &mut Rng,
-             metrics: &mut RunMetrics) {
+/// scaled metrics. Routing goes through the coordinator's per-layer
+/// router, so the online phase uses exactly the policy the offline phase
+/// placed for.
+fn sim_phase(sys: &SystemSpec, cfg: &SimConfig, coord: &Coordinator,
+             placement: &Placement, trace: &GateTrace, scale: f64,
+             rng: &mut Rng, metrics: &mut RunMetrics) {
     let topo = &cfg.topo;
     let n_gpus = topo.num_gpus();
     let spec = &cfg.model;
@@ -150,7 +151,7 @@ fn sim_phase(sys: &SystemSpec, cfg: &SimConfig, placement: &Placement,
 
     for (layer_idx, layer) in trace.layers.iter().enumerate() {
         let lp = &placement.layers[layer_idx];
-        let router = Router::new(lp, topo, sys.routing);
+        let router = coord.router(lp);
 
         dispatches.clear();
         copies.iter_mut().for_each(|c| *c = 0.0);

@@ -30,6 +30,7 @@
 //! | cluster model | [`cluster`], [`comm`] |
 //! | profiling | [`trace`], [`profile`] |
 //! | GRACE algorithms | [`grouping`], [`replication`], [`routing`], [`placement`] |
+//! | coordination | [`coordinator`] — the L3 offline→online pipeline |
 //! | engine | [`engine`], [`runtime`], [`server`] |
 //! | evaluation | [`baselines`], [`metrics`], [`report`] |
 
@@ -50,6 +51,8 @@ pub mod grouping;
 pub mod placement;
 pub mod replication;
 pub mod routing;
+
+pub mod coordinator;
 
 pub mod config;
 pub mod engine;

@@ -10,11 +10,12 @@
 //!   (requires `make artifacts`).
 //! * `placement` — show the offline phase's grouping/replication decisions.
 
-use grace_moe::baselines::SystemSpec;
+use grace_moe::baselines::{GroupingStrategy, SystemSpec};
 use grace_moe::cli::Args;
 use grace_moe::cluster::Topology;
 use grace_moe::config::{ModelSpec, Workload};
-use grace_moe::engine::real::{place_real, profile_real, RealModel};
+use grace_moe::coordinator::Coordinator;
+use grace_moe::engine::real::{profile_real, RealModel};
 use grace_moe::engine::{simulate, SimConfig};
 use grace_moe::placement::ReplicationMode;
 use grace_moe::report;
@@ -189,19 +190,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let model = Arc::new(RealModel::load(dir, variant)?);
     eprintln!("profiling real gate…");
     let trace = profile_real(&model, 2, seed)?;
-    let placement = Arc::new(place_real(
-        &model,
-        &topo,
-        &trace,
+    // One L3 coordinator owns the whole pipeline: its offline phase turns
+    // the real-gate trace into a placement, its online phase routes.
+    let coord = Coordinator::new(
+        GroupingStrategy::Hierarchical { r: args.f64_or("r", 0.15)? },
         ReplicationMode::Dynamic,
-        args.f64_or("r", 0.15)?,
+        policy,
+        topo,
         seed,
-    ));
-    let server = MoEServer::new(
+    );
+    let placement = Arc::new(coord.place(&trace));
+    let server = MoEServer::with_coordinator(
         model,
         placement,
-        topo,
-        policy,
+        coord,
         ServerConfig {
             max_batch: args.usize_or("max-batch", 8)?,
             queue_cap: 64,

@@ -9,6 +9,7 @@
 //! python is never touched.
 
 use crate::cluster::{GpuId, Topology};
+use crate::coordinator::Coordinator;
 use crate::engine::real::{DistributedMoE, FfnMode, RealModel};
 use crate::exec::BoundedQueue;
 use crate::metrics::ServeMetrics;
@@ -59,19 +60,31 @@ impl Default for ServerConfig {
 }
 
 /// The serving engine: owns the model + placement and drains a queue.
+/// All placement/routing decisions flow through the L3 [`Coordinator`].
 pub struct MoEServer {
     pub model: Arc<RealModel>,
     pub placement: Arc<Placement>,
-    pub topo: Topology,
-    pub policy: RoutingPolicy,
+    pub coord: Coordinator,
     pub cfg: ServerConfig,
 }
 
 impl MoEServer {
+    /// Serve a prebuilt placement under `policy` on `topo` (constructs a
+    /// routing-side coordinator; see [`MoEServer::with_coordinator`] when
+    /// the caller already owns the coordinator that built the placement).
     pub fn new(model: Arc<RealModel>, placement: Arc<Placement>,
                topo: Topology, policy: RoutingPolicy,
                cfg: ServerConfig) -> MoEServer {
-        MoEServer { model, placement, topo, policy, cfg }
+        Self::with_coordinator(model, placement,
+                               Coordinator::serving(topo, policy), cfg)
+    }
+
+    /// Serve with an explicit L3 coordinator — normally the one whose
+    /// offline phase produced `placement`.
+    pub fn with_coordinator(model: Arc<RealModel>,
+                            placement: Arc<Placement>, coord: Coordinator,
+                            cfg: ServerConfig) -> MoEServer {
+        MoEServer { model, placement, coord, cfg }
     }
 
     /// Full greedy forward of one sequence: returns the next token id.
@@ -83,15 +96,14 @@ impl MoEServer {
         let mut padded = ids.to_vec();
         padded.resize(c.ctx, 0);
         let mut x = self.model.embed(&padded)?;
-        let n_gpus = self.topo.num_gpus();
+        let n_gpus = self.coord.topo().num_gpus();
         for l in 0..c.layers {
             x = self.model.attention(&x, l, ids.len())?;
             // MoE over the valid prefix, tile by tile.
             let dist = DistributedMoE {
                 model: &self.model,
                 placement: &self.placement,
-                topo: &self.topo,
-                policy: self.policy,
+                coord: &self.coord,
                 ffn_mode: self.cfg.ffn_mode,
             };
             let tiles = ids.len().div_ceil(c.tile_t);

@@ -5,13 +5,16 @@ use grace_moe::baselines::{GroupingStrategy, SystemSpec};
 use grace_moe::cluster::Topology;
 use grace_moe::comm::CommModel;
 use grace_moe::config::{ModelSpec, Workload};
+use grace_moe::coordinator::Coordinator;
 use grace_moe::engine::sim::{build_placement, simulate,
                              simulate_with_placement, SimConfig};
 use grace_moe::grouping::is_partition;
-use grace_moe::placement::ReplicationMode;
+use grace_moe::placement::{Placement, ReplicationMode};
+use grace_moe::profile::ModelProfile;
 use grace_moe::routing::RoutingPolicy;
+use grace_moe::stats::Rng;
 use grace_moe::testutil::{check, prop_assert};
-use grace_moe::trace::Profile;
+use grace_moe::trace::{Profile, TraceGen};
 
 fn small(model: ModelSpec, topo: Topology) -> SimConfig {
     let model = ModelSpec { moe_layers: 3, ..model };
@@ -206,6 +209,65 @@ fn property_groupings_stay_partitions_through_placement() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn coordinator_pipeline_matches_hand_wired_path() {
+    // The engines now assemble the pipeline exclusively through the L3
+    // Coordinator; this pins the refactor down: the coordinator-built
+    // placement and run metrics must be *identical* to what the
+    // previously hand-wired offline phase (trace generation → profiling →
+    // Placement::build with the per-system grouping closure) produced.
+    for sys in [SystemSpec::grace(0.15), SystemSpec::occult()] {
+        let cfg = small(ModelSpec::olmoe(), Topology::two_by_two());
+
+        // Hand-wired path (verbatim pre-coordinator wiring, including the
+        // grouping-RNG seed derivation).
+        let profiling = TraceGen {
+            experts: cfg.model.experts,
+            top_k: cfg.model.top_k,
+            layers: cfg.model.moe_layers,
+            profile: cfg.placement_profile,
+            seed: cfg.seed,
+        }
+        .generate(cfg.profile_tokens);
+        let profile = ModelProfile::from_trace(&profiling);
+        let mut rng = Rng::new(cfg.seed ^ 0x9A0C);
+        let hand = Placement::build(&profile, sys.replication, |lp| {
+            sys.grouping.build(lp, &cfg.topo, &mut rng)
+        });
+
+        // Coordinator path (what the sim engine does today).
+        let coord = Coordinator::for_system(&sys, &cfg.topo, cfg.seed);
+        let coordinated = coord.offline_synthetic(
+            &cfg.model,
+            cfg.placement_profile,
+            cfg.profile_tokens,
+        );
+
+        assert_eq!(hand.layers.len(), coordinated.layers.len());
+        for (h, c) in hand.layers.iter().zip(&coordinated.layers) {
+            assert_eq!(h.groups, c.groups, "{}: groups differ", sys.name);
+            assert_eq!(h.primary, c.primary);
+            assert_eq!(h.instances, c.instances);
+            assert_eq!(h.replication, c.replication);
+            assert_eq!(h.polling, c.polling);
+        }
+
+        // And the online phase over both placements must be
+        // metric-identical, bit for bit.
+        let a = simulate_with_placement(&sys, &cfg, &hand);
+        let b = simulate_with_placement(&sys, &cfg, &coordinated);
+        assert_eq!(a.e2e_time, b.e2e_time, "{}", sys.name);
+        assert_eq!(a.moe_layer_time, b.moe_layer_time);
+        assert_eq!(a.a2a_time, b.a2a_time);
+        assert_eq!(a.cross_bytes, b.cross_bytes);
+        assert_eq!(a.intra_bytes, b.intra_bytes);
+        assert_eq!(a.idle_time, b.idle_time);
+        assert_eq!(a.layer_load_std, b.layer_load_std);
+        assert_eq!(a.launches, b.launches);
+        assert_eq!(a.tokens, b.tokens);
+    }
 }
 
 #[test]
