@@ -81,11 +81,12 @@ fn main() {
     println!("=== ablation: replication × routing matrix (e2e ms) ===");
     use grace_moe::placement::ReplicationMode as RM;
     use grace_moe::routing::RoutingPolicy as RP;
-    let mut t = Table::new(&["REPLICATION", "primary", "wrr", "tar"]);
+    let mut t = Table::new(&["REPLICATION", "primary", "wrr", "tar",
+                             "load-aware"]);
     for (rn, rm) in [("none", RM::None), ("fixed", RM::Fixed),
                      ("dynamic", RM::Dynamic)] {
         let mut cells = vec![rn.to_string()];
-        for rp in [RP::Primary, RP::Wrr, RP::Tar] {
+        for rp in [RP::Primary, RP::Wrr, RP::Tar, RP::LoadAware] {
             let sys = SystemSpec {
                 replication: rm,
                 routing: rp,

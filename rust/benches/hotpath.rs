@@ -1,6 +1,7 @@
 //! Hot-path microbenchmarks (the §Perf L3 profile targets).
 //!
-//! Covers the request-path components: routing decisions (WRR/TAR),
+//! Covers the request-path components: routing decisions (see
+//! `routing_dispatch` for the per-policy scalar-vs-batched comparison),
 //! traffic-matrix construction, collective cost models, the full
 //! per-layer simulation step, offline spectral grouping, and (when
 //! artifacts are present) PJRT artifact execution.
@@ -15,7 +16,7 @@ use grace_moe::comm::traffic::{per_copy, two_stage, Dispatch};
 use grace_moe::config::{ModelSpec, Workload};
 use grace_moe::engine::simulate;
 use grace_moe::engine::sim::{build_placement, SimConfig};
-use grace_moe::routing::{Router, RoutingPolicy};
+use grace_moe::routing::{RouteCtx, RoutingPolicy};
 use grace_moe::stats::Rng;
 
 fn main() {
@@ -27,26 +28,24 @@ fn main() {
     let placement = build_placement(&sys, &cfg);
 
     // ---- routing --------------------------------------------------------
+    // One representative row; the full per-policy scalar-vs-batched
+    // comparison lives in `cargo bench --bench routing_dispatch`.
     let lp = &placement.layers[0];
     let mut rng = Rng::new(1);
-    for policy in [RoutingPolicy::Primary, RoutingPolicy::Wrr,
-                   RoutingPolicy::Tar] {
-        let router = Router::new(lp, &topo, policy);
-        let r = bench(
-            &format!("route 4096x8 ({})", policy.name()),
-            3,
-            30,
-            || {
-                let mut acc = 0usize;
-                for t in 0..4096usize {
-                    for k in 0..8usize {
-                        acc += router.route(t % 4, (t * 7 + k * 13) % 64,
-                                            &mut rng);
-                    }
+    {
+        let mut pol = RoutingPolicy::Tar.build();
+        let ctx = RouteCtx { placement: lp, topo: &topo, layer: 0 };
+        let r = bench("select 4096x8 (tar)", 3, 30, || {
+            let mut acc = 0usize;
+            for t in 0..4096usize {
+                for k in 0..8usize {
+                    acc += pol.select(&ctx, t % 4, (t * 7 + k * 13) % 64,
+                                      &mut rng);
                 }
-                acc
-            },
-        );
+            }
+            pol.end_round(&ctx);
+            acc
+        });
         println!("{}", r.report_line());
     }
 

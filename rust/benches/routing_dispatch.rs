@@ -1,0 +1,84 @@
+//! Routing hot-path microbenchmark: scalar per-assignment selection vs
+//! batched plan dispatch, per policy.
+//!
+//! The scalar rows measure the old engine shape (one `select` call per
+//! expert assignment, plan assembly by hand in the caller); the batched
+//! rows measure one `Dispatcher::dispatch` round producing the full
+//! `DispatchPlan` (transfer lists + per-token view + byte accounting).
+//! Wired into the CI bench-smoke job like every other target.
+//!
+//! Run: `cargo bench --bench routing_dispatch`
+
+use grace_moe::baselines::SystemSpec;
+use grace_moe::bench::bench;
+use grace_moe::cluster::Topology;
+use grace_moe::config::{ModelSpec, Workload};
+use grace_moe::coordinator::Coordinator;
+use grace_moe::engine::sim::{build_placement, SimConfig};
+use grace_moe::routing::{Assignment, RouteCtx, RoutingPolicy};
+use grace_moe::stats::Rng;
+
+const TOKENS: usize = 4096;
+const TOP_K: usize = 8;
+
+fn main() {
+    let topo = Topology::two_by_two();
+    let model = ModelSpec::olmoe();
+    let cfg = SimConfig::new(model.clone(), topo.clone(),
+                             Workload::heavy_i());
+    let sys = SystemSpec::grace(0.15);
+    let placement = build_placement(&sys, &cfg);
+    let lp = &placement.layers[0];
+
+    let batch: Vec<Assignment> = (0..TOKENS)
+        .flat_map(|t| {
+            (0..TOP_K).map(move |k| Assignment {
+                token: t,
+                expert: (t * 7 + k * 13) % 64,
+                src: t % 4,
+            })
+        })
+        .collect();
+
+    for policy in [RoutingPolicy::Primary, RoutingPolicy::Wrr,
+                   RoutingPolicy::Tar, RoutingPolicy::LoadAware] {
+        // Scalar: one select per assignment, no plan assembly.
+        let mut pol = policy.build();
+        let ctx = RouteCtx { placement: lp, topo: &topo, layer: 0 };
+        let mut rng = Rng::new(1);
+        let r = bench(
+            &format!("scalar select {TOKENS}x{TOP_K} ({})",
+                     policy.name()),
+            3,
+            30,
+            || {
+                let mut acc = 0usize;
+                for a in &batch {
+                    acc += pol.select(&ctx, a.src, a.expert, &mut rng);
+                }
+                pol.end_round(&ctx);
+                acc
+            },
+        );
+        println!("{}", r.report_line());
+
+        // Batched: one dispatch round, full DispatchPlan emitted.
+        let coord = Coordinator::new(
+            sys.grouping,
+            sys.replication,
+            policy,
+            topo.clone(),
+            cfg.seed,
+        );
+        let mut dispatcher = coord.dispatcher(model.token_bytes());
+        let mut rng = Rng::new(1);
+        let r = bench(
+            &format!("batched dispatch {TOKENS}x{TOP_K} ({})",
+                     policy.name()),
+            3,
+            30,
+            || dispatcher.dispatch(lp, 0, &batch, &mut rng),
+        );
+        println!("{}", r.report_line());
+    }
+}

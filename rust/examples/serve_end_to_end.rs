@@ -20,7 +20,7 @@
 
 use grace_moe::baselines::GroupingStrategy;
 use grace_moe::cluster::Topology;
-use grace_moe::coordinator::Coordinator;
+use grace_moe::coordinator::{Coordinator, OnlineCoordinator};
 use grace_moe::engine::real::{profile_real, DistributedMoE, FfnMode,
                               RealModel};
 use grace_moe::placement::ReplicationMode;
@@ -88,14 +88,11 @@ fn main() -> anyhow::Result<()> {
         .map(|_| rng.gaussian() as f32 * 0.5)
         .collect();
     for policy in [RoutingPolicy::Primary, RoutingPolicy::Wrr,
-                   RoutingPolicy::Tar] {
-        let policy_coord = Coordinator::serving(topo.clone(), policy);
-        let dist = DistributedMoE {
-            model: &model,
-            placement: &placement,
-            coord: &policy_coord,
-            ffn_mode: FfnMode::GroupedPallas,
-        };
+                   RoutingPolicy::Tar, RoutingPolicy::LoadAware] {
+        let policy_coord = OnlineCoordinator::new(topo.clone(), policy);
+        let mut dist = DistributedMoE::new(&model, &placement,
+                                           &policy_coord,
+                                           FfnMode::GroupedPallas);
         let want = model.moe_layer_oracle(&x, 0)?;
         let run = dist.moe_layer(&x, 0, &(|t| t % topo.num_gpus()),
                                  &mut Rng::new(5))?;
@@ -107,7 +104,7 @@ fn main() -> anyhow::Result<()> {
             .fold(0.0f32, f32::max);
         println!("  {:<8} max |distributed − oracle| = {max_err:.2e}  \
                   copies/gpu = {:?}",
-                 policy.name(), run.copies_per_gpu);
+                 policy.name(), run.plan.copies_per_gpu());
         anyhow::ensure!(max_err < 5e-4, "losslessness violated");
     }
     println!("  lossless ✓ (same numerics under every routing policy)");

@@ -185,6 +185,18 @@ impl SystemSpec {
         }
     }
 
+    /// GRACE-MoE with the online load-predictive router: TAR's locality
+    /// tiers, but the tier-(ii)/(iii) weights come from Eq. 4 recomputed
+    /// every dispatch round over measured loads instead of the frozen
+    /// placement-time prediction (beyond-Table-1 variant).
+    pub fn grace_load_aware(r: f64) -> Self {
+        SystemSpec {
+            name: "grace+la",
+            routing: RoutingPolicy::LoadAware,
+            ..Self::grace(r)
+        }
+    }
+
     /// Figure 4 baseline set (in the paper's order) + GRACE.
     pub fn fig4_systems(r: f64) -> Vec<SystemSpec> {
         vec![
@@ -322,7 +334,17 @@ mod tests {
     fn losslessness_flags() {
         assert!(SystemSpec::occult().lossless());
         assert!(SystemSpec::grace(0.15).lossless());
+        assert!(SystemSpec::grace_load_aware(0.15).lossless());
         assert!(!SystemSpec::c2r().lossless(), "C2R prunes routes");
+    }
+
+    #[test]
+    fn grace_load_aware_differs_only_in_routing() {
+        let g = SystemSpec::grace(0.15);
+        let la = SystemSpec::grace_load_aware(0.15);
+        assert_eq!(la.routing, RoutingPolicy::LoadAware);
+        assert_eq!(SystemSpec { name: g.name, routing: g.routing, ..la },
+                   g);
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //!   for the intra-node stage (hierarchical A2A and HSC).
 
 use crate::cluster::{GpuId, Topology};
+use crate::routing::DispatchPlan;
 
 /// Routing outcome for one token at one MoE layer: where it lives and the
 /// GPU hosting each of its selected expert instances.
@@ -201,6 +202,30 @@ pub fn two_stage(dispatches: &[Dispatch], topo: &Topology,
     TwoStageTraffic { cross, intra }
 }
 
+// --- batched-plan entry points ---------------------------------------------
+//
+// The engines route whole batches through `routing::Dispatcher` and hand
+// the resulting `DispatchPlan` to the collectives; these constructors
+// consume the plan's token-major view directly (the dedup semantics above
+// are per token), with the payload size taken from the plan's own byte
+// accounting.
+
+/// [`per_copy`] over a routed batch.
+pub fn per_copy_plan(plan: &DispatchPlan) -> TrafficMatrix {
+    per_copy(plan.per_token(), plan.num_gpus(), plan.token_bytes())
+}
+
+/// [`per_gpu_dedup`] over a routed batch.
+pub fn per_gpu_dedup_plan(plan: &DispatchPlan) -> TrafficMatrix {
+    per_gpu_dedup(plan.per_token(), plan.num_gpus(), plan.token_bytes())
+}
+
+/// [`two_stage`] over a routed batch.
+pub fn two_stage_plan(plan: &DispatchPlan, topo: &Topology)
+                      -> TwoStageTraffic {
+    two_stage(plan.per_token(), topo, plan.token_bytes())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -284,6 +309,51 @@ mod tests {
         assert_eq!(m.egress(0), 12.0);
         assert_eq!(m.ingress(2), 7.0);
         assert_eq!(m.egress(3), 0.0, "diagonal excluded");
+    }
+
+    #[test]
+    fn plan_constructors_match_per_token_scalar_walk() {
+        use crate::linalg::Matrix;
+        use crate::placement::{LayerPlacement, ReplicationMode};
+        use crate::profile::LayerProfile;
+        use crate::routing::{Assignment, Dispatcher, RoutingPolicy};
+        use crate::stats::Rng;
+
+        // 4 experts, one per GPU, primary routing: the plan's per-token
+        // view is fully determined, so the plan-based matrices must equal
+        // the ones built from a hand-rolled Vec<Dispatch>.
+        let t = topo();
+        let profile = LayerProfile {
+            affinity: Matrix::zeros(4, 4),
+            load: vec![4.0, 3.0, 2.0, 1.0],
+            tokens: 10,
+        };
+        let lp = LayerPlacement::build(
+            &profile,
+            vec![vec![0], vec![1], vec![2], vec![3]],
+            ReplicationMode::None,
+        );
+        let batch = vec![
+            Assignment { token: 0, expert: 2, src: 0 },
+            Assignment { token: 0, expert: 3, src: 0 },
+            Assignment { token: 1, expert: 0, src: 1 },
+            Assignment { token: 1, expert: 1, src: 1 },
+        ];
+        let mut d = Dispatcher::new(t.clone(),
+                                    RoutingPolicy::Primary.build(), 10.0);
+        let plan = d.dispatch(&lp, 0, &batch, &mut Rng::new(1));
+
+        let hand = vec![
+            Dispatch { src: 0, dsts: vec![2, 3] },
+            Dispatch { src: 1, dsts: vec![0, 1] },
+        ];
+        assert_eq!(per_copy_plan(&plan), per_copy(&hand, 4, 10.0));
+        assert_eq!(per_gpu_dedup_plan(&plan),
+                   per_gpu_dedup(&hand, 4, 10.0));
+        let a = two_stage_plan(&plan, &t);
+        let b = two_stage(&hand, &t, 10.0);
+        assert_eq!(a.cross, b.cross);
+        assert_eq!(a.intra, b.intra);
     }
 
     #[test]

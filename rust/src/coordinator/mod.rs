@@ -11,34 +11,40 @@
 //!                     polling weights ◀── ρ-driven replication (§4.2)
 //!                        (Eq. 4)                           │
 //!                           │                              ▼
-//!                           └────────▶ per-layer Placement ──▶ Router (§4.3)
+//!                           └──▶ per-layer Placement ──▶ Dispatcher (§4.3)
 //! ```
 //!
-//! Before this module existed, `main.rs`, the simulate engine, the real
-//! engine, and the server each hand-wired that chain (trace generation,
-//! RNG seeding, `Placement::build`, `Router::new`) with their own copies
-//! of the glue. The [`Coordinator`] centralizes it:
+//! Two surfaces, two types:
 //!
-//! * **offline** — [`Coordinator::place`] turns any gate trace (synthetic
-//!   via [`Coordinator::profile_synthetic`], or real via
-//!   [`crate::engine::real::profile_real`]) into a [`Placement`],
-//! * **online** — [`Coordinator::router`] builds the per-layer [`Router`]
-//!   that executes the configured [`RoutingPolicy`] over that placement,
-//! * **policy** — which grouping strategy, replication mode, and routing
-//!   policy apply is fixed once at construction ([`Coordinator::new`],
-//!   [`Coordinator::for_system`], [`Coordinator::grace`]), so an engine
-//!   cannot accidentally mix, say, GRACE grouping with baseline routing.
+//! * [`Coordinator`] — the full pipeline. **offline**,
+//!   [`Coordinator::place`] turns any gate trace (synthetic via
+//!   [`Coordinator::profile_synthetic`], or real via
+//!   [`crate::engine::real::profile_real`]) into a [`Placement`];
+//!   **online**, [`Coordinator::dispatcher`] builds the batched
+//!   [`Dispatcher`] that executes the configured [`RoutingPolicy`] over
+//!   that placement. Which grouping strategy, replication mode, and
+//!   routing policy apply is fixed once at construction
+//!   ([`Coordinator::new`], [`Coordinator::for_system`],
+//!   [`Coordinator::grace`]), so an engine cannot accidentally mix, say,
+//!   GRACE grouping with baseline routing.
+//! * [`OnlineCoordinator`] — the routing-only surface for serving against
+//!   a *prebuilt* placement. It has no offline methods at all: a serving
+//!   component constructed from a topology and a policy can no longer
+//!   call `place()` with a default seed and silently produce a placement
+//!   unrelated to the one it serves (the old `Coordinator::serving`
+//!   footgun). Every full [`Coordinator`] converts into its online half
+//!   via [`Coordinator::online`] / `From`.
 //!
-//! Determinism: every decision derives from the construction seed. The
-//! grouping RNG is decorrelated from trace generation with a fixed tag so
-//! that profiling and clustering never share a stream.
+//! Determinism: every offline decision derives from the construction
+//! seed. The grouping RNG is decorrelated from trace generation with a
+//! fixed tag so that profiling and clustering never share a stream.
 
 use crate::baselines::{GroupingStrategy, SystemSpec};
 use crate::cluster::Topology;
 use crate::config::ModelSpec;
-use crate::placement::{LayerPlacement, Placement, ReplicationMode};
+use crate::placement::{Placement, ReplicationMode};
 use crate::profile::ModelProfile;
-use crate::routing::{Router, RoutingPolicy};
+use crate::routing::{Dispatcher, RoutePolicy, RoutingPolicy};
 use crate::stats::Rng;
 use crate::trace::{GateTrace, Profile, TraceGen};
 
@@ -46,8 +52,60 @@ use crate::trace::{GateTrace, Profile, TraceGen};
 /// profiling-trace stream (both are derived from the same run seed).
 const GROUPING_SEED_TAG: u64 = 0x9A0C;
 
+/// The online half of the pipeline: topology + routing policy, nothing
+/// else. This is the only coordination surface serving components hold,
+/// so the offline methods are unreachable from them by construction.
+#[derive(Clone, Debug)]
+pub struct OnlineCoordinator {
+    topo: Topology,
+    routing: RoutingPolicy,
+}
+
+impl OnlineCoordinator {
+    /// Online coordinator for serving a prebuilt placement under
+    /// `routing` on `topo`.
+    pub fn new(topo: Topology, routing: RoutingPolicy) -> OnlineCoordinator {
+        OnlineCoordinator { topo, routing }
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn routing(&self) -> RoutingPolicy {
+        self.routing
+    }
+
+    /// Instantiate the policy object executing the configured routing
+    /// policy (stateful policies start fresh).
+    pub fn policy(&self) -> Box<dyn RoutePolicy> {
+        self.routing.build()
+    }
+
+    /// Batched dispatcher over this coordinator's topology and policy.
+    /// `token_bytes` is the per-copy payload the plan's byte accounting
+    /// uses (one hidden activation vector). Build one dispatcher per
+    /// serving run: stateful policies ([`RoutingPolicy::LoadAware`])
+    /// carry their online load estimates across its dispatch rounds.
+    pub fn dispatcher(&self, token_bytes: f64) -> Dispatcher {
+        Dispatcher::new(self.topo.clone(), self.policy(), token_bytes)
+    }
+}
+
+impl From<&Coordinator> for OnlineCoordinator {
+    fn from(c: &Coordinator) -> OnlineCoordinator {
+        c.online()
+    }
+}
+
+impl From<Coordinator> for OnlineCoordinator {
+    fn from(c: Coordinator) -> OnlineCoordinator {
+        OnlineCoordinator { topo: c.topo, routing: c.routing }
+    }
+}
+
 /// The L3 orchestration layer: offline placement construction + online
-/// router construction under one immutable policy configuration.
+/// dispatcher construction under one immutable policy configuration.
 #[derive(Clone, Debug)]
 pub struct Coordinator {
     grouping: GroupingStrategy,
@@ -84,15 +142,6 @@ impl Coordinator {
             topo.clone(),
             seed,
         )
-    }
-
-    /// Routing-side coordinator for serving against a prebuilt placement.
-    /// Offline knobs inherit the paper's GRACE defaults from
-    /// [`Coordinator::grace`] with seed 0 — do not call the offline
-    /// methods on a serving coordinator; build placements with the
-    /// coordinator that owns the run's actual seed and strategy instead.
-    pub fn serving(topo: Topology, policy: RoutingPolicy) -> Coordinator {
-        Coordinator { routing: policy, ..Coordinator::grace(&topo, 0.15, 0) }
     }
 
     pub fn topo(&self) -> &Topology {
@@ -155,10 +204,22 @@ impl Coordinator {
 
     // --- online phase ----------------------------------------------------
 
-    /// Per-layer router executing this coordinator's routing policy over a
-    /// layer placement (normally one built by [`Coordinator::place`]).
-    pub fn router<'a>(&'a self, layer: &'a LayerPlacement) -> Router<'a> {
-        Router::new(layer, &self.topo, self.routing)
+    /// The routing-only half of this coordinator (what serving components
+    /// hold — see [`OnlineCoordinator`]).
+    pub fn online(&self) -> OnlineCoordinator {
+        OnlineCoordinator::new(self.topo.clone(), self.routing)
+    }
+
+    /// Instantiate this coordinator's routing policy object.
+    pub fn policy(&self) -> Box<dyn RoutePolicy> {
+        self.routing.build()
+    }
+
+    /// Batched dispatcher executing this coordinator's routing policy
+    /// (normally over a placement built by [`Coordinator::place`]); see
+    /// [`OnlineCoordinator::dispatcher`].
+    pub fn dispatcher(&self, token_bytes: f64) -> Dispatcher {
+        self.online().dispatcher(token_bytes)
     }
 }
 
@@ -166,6 +227,7 @@ impl Coordinator {
 mod tests {
     use super::*;
     use crate::grouping::is_partition;
+    use crate::routing::{Assignment, RouteCtx};
     use crate::trace::Profile;
 
     fn coord(seed: u64) -> Coordinator {
@@ -224,7 +286,18 @@ mod tests {
     }
 
     #[test]
-    fn router_honours_the_configured_policy() {
+    fn online_half_copies_topology_and_policy() {
+        let full = coord(9);
+        let online = full.online();
+        assert_eq!(online.routing(), full.routing());
+        assert_eq!(online.topo(), full.topo());
+        let via_from: OnlineCoordinator = (&full).into();
+        assert_eq!(via_from.routing(), full.routing());
+        assert_eq!(online.policy().name(), full.routing().name());
+    }
+
+    #[test]
+    fn policy_honours_the_configured_routing() {
         // A TAR coordinator must keep replicated experts on the token's
         // own GPU; a Primary coordinator must ignore replicas entirely.
         let model = small_model();
@@ -242,9 +315,11 @@ mod tests {
             .unwrap();
 
         let tar = coord(3);
+        let ctx = RouteCtx { placement: lp, topo: tar.topo(), layer: 0 };
         let mut rng = Rng::new(1);
+        let mut policy = tar.policy();
         for &src in instances {
-            assert_eq!(tar.router(lp).route(src, expert, &mut rng), src);
+            assert_eq!(policy.select(&ctx, src, expert, &mut rng), src);
         }
 
         let primary = Coordinator::new(
@@ -254,11 +329,32 @@ mod tests {
             Topology::two_by_two(),
             3,
         );
+        let mut policy = primary.policy();
         for src in 0..4 {
             assert_eq!(
-                primary.router(lp).route(src, expert, &mut rng),
+                policy.select(&ctx, src, expert, &mut rng),
                 lp.primary[expert]
             );
+        }
+    }
+
+    #[test]
+    fn dispatcher_executes_the_configured_policy() {
+        let model = small_model();
+        let c = coord(5);
+        let place = c.offline_synthetic(&model, Profile::Math, 512);
+        let lp = &place.layers[0];
+        let mut d = c.dispatcher(model.token_bytes());
+        assert_eq!(d.policy_name(), "tar");
+        assert_eq!(d.token_bytes(), model.token_bytes());
+        let batch: Vec<Assignment> = (0..64)
+            .map(|t| Assignment { token: t, expert: t % 64, src: t % 4 })
+            .collect();
+        let mut rng = Rng::new(2);
+        let plan = d.dispatch(lp, 0, &batch, &mut rng);
+        assert_eq!(plan.num_assignments(), 64);
+        for r in plan.assignments() {
+            assert!(lp.instances[r.expert].contains(&r.dst));
         }
     }
 

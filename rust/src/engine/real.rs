@@ -18,10 +18,10 @@
 
 use crate::baselines::GroupingStrategy;
 use crate::cluster::{GpuId, Topology};
-use crate::comm::traffic::Dispatch;
-use crate::coordinator::Coordinator;
+use crate::coordinator::{Coordinator, OnlineCoordinator};
 use crate::placement::Placement;
-use crate::routing::RoutingPolicy;
+use crate::routing::{Assignment, DispatchPlan, Dispatcher,
+                     RoutingPolicy};
 use crate::runtime::manifest::{Manifest, TinyConfig};
 use crate::runtime::pjrt::{lit_f32, lit_i32, lit_scalar_i32, to_f32,
                            to_i32, PjrtEngine};
@@ -287,71 +287,89 @@ pub fn profile_real(model: &RealModel, n_tiles: usize, seed: u64)
     Ok(GateTrace { layers })
 }
 
-/// Distributed executor for one placement, routed through the L3
-/// coordinator (which owns the topology and the routing policy).
+/// Distributed executor for one placement, routed through the online
+/// half of the L3 coordinator (which owns the topology and the routing
+/// policy). Construct via [`DistributedMoE::new`]: the executor owns the
+/// run's [`Dispatcher`], so a stateful policy's online load estimates
+/// persist across layers and tiles of one serving run.
 pub struct DistributedMoE<'a> {
     pub model: &'a RealModel,
     pub placement: &'a Placement,
-    pub coord: &'a Coordinator,
+    pub coord: &'a OnlineCoordinator,
     /// FFN executable choice (see [`FfnMode`]); `GroupedPallas` is the
     /// default and the variant all losslessness tests pin down.
     pub ffn_mode: FfnMode,
+    dispatcher: Dispatcher,
 }
 
 /// Result of one distributed MoE layer execution.
 pub struct LayerRun {
     /// Output activations `[tile_t, hidden]` (residual included).
     pub y: Vec<f32>,
-    /// The dispatch decisions taken (for comm accounting).
-    pub dispatches: Vec<Dispatch>,
-    /// Token copies executed per rank.
-    pub copies_per_gpu: Vec<usize>,
+    /// The batched routing decision taken: per-`(src,dst)` transfer lists
+    /// with byte accounting, plus per-rank copy counts
+    /// ([`DispatchPlan::copies_per_gpu`]) — comm and compute accounting
+    /// read straight off it.
+    pub plan: DispatchPlan,
 }
 
 impl<'a> DistributedMoE<'a> {
+    pub fn new(model: &'a RealModel, placement: &'a Placement,
+               coord: &'a OnlineCoordinator, ffn_mode: FfnMode)
+               -> DistributedMoE<'a> {
+        // Per-copy payload: one f32 hidden activation vector.
+        let token_bytes =
+            (model.cfg.hidden * std::mem::size_of::<f32>()) as f64;
+        DistributedMoE {
+            model,
+            placement,
+            coord,
+            ffn_mode,
+            dispatcher: coord.dispatcher(token_bytes),
+        }
+    }
+
     /// Execute one MoE layer over a token tile distributed across ranks.
     ///
     /// `src_gpu_of` assigns each of the tile's tokens to its resident
-    /// rank (data parallelism); routing then decides which rank executes
-    /// each expert assignment.
-    pub fn moe_layer(&self, x_tile: &[f32], layer: usize,
+    /// rank (data parallelism); one batched dispatch round then decides
+    /// which rank executes each expert assignment.
+    pub fn moe_layer(&mut self, x_tile: &[f32], layer: usize,
                      src_gpu_of: &dyn Fn(usize) -> GpuId,
                      rng: &mut Rng) -> anyhow::Result<LayerRun> {
         let c = &self.model.cfg;
         let n_gpus = self.coord.topo().num_gpus();
         let lp = &self.placement.layers[layer];
-        let router = self.coord.router(lp);
 
         let (xn, topw, topi) = self.model.gate(x_tile, layer)?;
 
-        // Per-rank buckets of (expert, token, gate weight).
-        let mut buckets: Vec<Vec<(usize, usize, f32)>> =
-            vec![Vec::new(); n_gpus];
-        let mut dispatches = Vec::with_capacity(c.tile_t);
+        // The tile's assignment batch (token-major: batch index t*K+k).
+        let mut batch = Vec::with_capacity(c.tile_t * c.top_k);
         for t in 0..c.tile_t {
             let src = src_gpu_of(t);
-            let mut dsts = Vec::with_capacity(c.top_k);
             for k in 0..c.top_k {
                 let e = topi[t * c.top_k + k] as usize;
-                let w = topw[t * c.top_k + k];
-                let dst = router.route(src, e, rng);
-                buckets[dst].push((e, t, w));
-                dsts.push(dst);
+                batch.push(Assignment { token: t, expert: e, src });
             }
-            dispatches.push(Dispatch { src, dsts });
         }
+        let plan = self.dispatcher.dispatch(lp, layer, &batch, rng);
 
-        // Execute each rank's grouped FFN and combine.
+        // Execute each rank's grouped FFN (over the plan's transfer lists
+        // destined to it) and combine.
         let mut y = x_tile.to_vec(); // residual
-        let mut copies_per_gpu = vec![0usize; n_gpus];
-        for (gpu, bucket) in buckets.iter().enumerate() {
+        for gpu in 0..n_gpus {
+            // (expert, token, gate weight) copies this rank executes; the
+            // batch index recovers the assignment's gate weight.
+            let bucket: Vec<(usize, usize, f32)> = plan
+                .for_rank(gpu)
+                .map(|r| (r.expert, r.token, topw[r.index]))
+                .collect();
             if bucket.is_empty() {
                 continue;
             }
-            copies_per_gpu[gpu] = bucket.len();
             // Expert-aligned layout: sort by expert, pad per expert to
             // tile_m (the contract of the L1 tiled Pallas kernel).
-            let mut sorted = bucket.clone();
+            let mut sorted = bucket;
             sorted.sort_by_key(|&(e, t, _)| (e, t));
 
             if self.ffn_mode == FfnMode::PerExpert {
@@ -424,7 +442,7 @@ impl<'a> DistributedMoE<'a> {
             }
         }
 
-        Ok(LayerRun { y, dispatches, copies_per_gpu })
+        Ok(LayerRun { y, plan })
     }
 }
 
@@ -482,16 +500,13 @@ mod tests {
             .collect();
         let want = m.moe_layer_oracle(&x, 0).unwrap();
         for policy in [RoutingPolicy::Primary, RoutingPolicy::Wrr,
-                       RoutingPolicy::Tar] {
+                       RoutingPolicy::Tar, RoutingPolicy::LoadAware] {
             let placement = place_real(&m, &topo, &trace,
                                        ReplicationMode::Dynamic, 0.15, 11);
-            let coord = Coordinator::serving(topo.clone(), policy);
-            let dist = DistributedMoE {
-                model: &m,
-                placement: &placement,
-                coord: &coord,
-                ffn_mode: FfnMode::GroupedPallas,
-            };
+            let coord = OnlineCoordinator::new(topo.clone(), policy);
+            let mut dist = DistributedMoE::new(
+                &m, &placement, &coord, FfnMode::GroupedPallas,
+            );
             let run = dist
                 .moe_layer(&x, 0, &(|t| t % 4), &mut Rng::new(5))
                 .unwrap();
@@ -505,8 +520,9 @@ mod tests {
                 max_err < 5e-4,
                 "{policy:?}: max |distributed - oracle| = {max_err}"
             );
-            assert_eq!(run.dispatches.len(), c.tile_t);
-            let total: usize = run.copies_per_gpu.iter().sum();
+            assert_eq!(run.plan.num_tokens(), c.tile_t);
+            assert_eq!(run.plan.num_assignments(), c.tile_t * c.top_k);
+            let total: usize = run.plan.copies_per_gpu().iter().sum();
             assert_eq!(total, c.tile_t * c.top_k);
         }
     }
@@ -526,14 +542,11 @@ mod tests {
             .map(|_| rng.gaussian() as f32 * 0.4)
             .collect();
         let mut outs = Vec::new();
-        let coord = Coordinator::serving(topo.clone(), RoutingPolicy::Tar);
+        let coord =
+            OnlineCoordinator::new(topo.clone(), RoutingPolicy::Tar);
         for mode in [FfnMode::GroupedPallas, FfnMode::PerExpert] {
-            let dist = DistributedMoE {
-                model: &m,
-                placement: &placement,
-                coord: &coord,
-                ffn_mode: mode,
-            };
+            let mut dist =
+                DistributedMoE::new(&m, &placement, &coord, mode);
             // identical routing randomness per mode
             let run =
                 dist.moe_layer(&x, 0, &(|t| t % 4), &mut Rng::new(6))

@@ -2,8 +2,16 @@
 //!
 //! One run = offline phase (profiling trace → grouping → replication →
 //! Eq.-4 polling weights) followed by the online phase (serving trace →
-//! routing → two A2A rounds per MoE layer → expert compute), producing the
-//! paper's five system metrics plus MoE-layer time and end-to-end latency.
+//! batched dispatch → two A2A rounds per MoE layer → expert compute),
+//! producing the paper's five system metrics plus MoE-layer time and
+//! end-to-end latency.
+//!
+//! Routing is batched: each layer's token chunk becomes one
+//! [`Dispatcher::dispatch`] round whose [`DispatchPlan`] feeds the
+//! communication models (as per-`(src,dst)` batched transfers) and the
+//! per-GPU compute-load accounting. One dispatcher is built per run, so
+//! stateful policies ([`crate::routing::LoadAware`]) carry their online
+//! load estimates across layers and phases.
 //!
 //! Scale handling: prefill processes `batch × prefill` tokens and decode
 //! `batch` tokens × `decode` steps. The simulator executes a
@@ -14,11 +22,13 @@
 use crate::baselines::SystemSpec;
 use crate::cluster::Topology;
 use crate::comm::model::{self, CommModel, CommReport};
-use crate::comm::traffic::{self, Dispatch};
+use crate::comm::traffic;
 use crate::config::{GpuModel, ModelSpec, Workload};
 use crate::coordinator::Coordinator;
 use crate::metrics::RunMetrics;
 use crate::placement::Placement;
+use crate::routing::{Assignment, DispatchPlan, Dispatcher};
+use crate::server::even_src;
 use crate::stats::{Rng, Summary};
 use crate::trace::{GateTrace, Profile, TraceGen};
 
@@ -93,6 +103,7 @@ pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
     assert_eq!(placement.experts, cfg.model.experts);
     assert_eq!(placement.num_gpus, cfg.topo.num_gpus());
     let coord = coordinator(sys, cfg);
+    let mut dispatcher = coord.dispatcher(cfg.model.token_bytes());
     let mut rng = Rng::new(cfg.seed ^ 0x5E21);
     let mut metrics = RunMetrics::default();
 
@@ -102,8 +113,8 @@ pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
     if chunk > 0 {
         let scale = prefill_tokens as f64 / chunk as f64;
         let trace = serve_trace(cfg, chunk, 1);
-        sim_phase(sys, cfg, &coord, placement, &trace, scale, &mut rng,
-                  &mut metrics);
+        sim_phase(sys, cfg, &mut dispatcher, placement, &trace, scale,
+                  &mut rng, &mut metrics);
     }
 
     // Decode: `decode` steps of `batch` tokens each.
@@ -113,8 +124,8 @@ pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
         let scale = cfg.workload.decode as f64 * decode_tokens as f64
             / dchunk as f64;
         let trace = serve_trace(cfg, dchunk, 2);
-        sim_phase(sys, cfg, &coord, placement, &trace, scale, &mut rng,
-                  &mut metrics);
+        sim_phase(sys, cfg, &mut dispatcher, placement, &trace, scale,
+                  &mut rng, &mut metrics);
     }
 
     metrics.tokens = cfg.workload.total_tokens();
@@ -135,31 +146,29 @@ fn serve_trace(cfg: &SimConfig, tokens: usize, phase_tag: u64) -> GateTrace {
 }
 
 /// Simulate one phase (all MoE layers over one token chunk), accumulating
-/// scaled metrics. Routing goes through the coordinator's per-layer
-/// router, so the online phase uses exactly the policy the offline phase
-/// placed for.
-fn sim_phase(sys: &SystemSpec, cfg: &SimConfig, coord: &Coordinator,
-             placement: &Placement, trace: &GateTrace, scale: f64,
-             rng: &mut Rng, metrics: &mut RunMetrics) {
+/// scaled metrics. Each layer's chunk is one batched dispatch round
+/// through the run's dispatcher, so the online phase uses exactly the
+/// policy the offline phase placed for.
+fn sim_phase(sys: &SystemSpec, cfg: &SimConfig,
+             dispatcher: &mut Dispatcher, placement: &Placement,
+             trace: &GateTrace, scale: f64, rng: &mut Rng,
+             metrics: &mut RunMetrics) {
     let topo = &cfg.topo;
     let n_gpus = topo.num_gpus();
     let spec = &cfg.model;
     let chunk = trace.num_tokens();
 
-    let mut dispatches: Vec<Dispatch> = Vec::with_capacity(chunk);
-    let mut copies = vec![0.0f64; n_gpus];
+    let mut batch: Vec<Assignment> =
+        Vec::with_capacity(chunk * spec.top_k);
 
     for (layer_idx, layer) in trace.layers.iter().enumerate() {
         let lp = &placement.layers[layer_idx];
-        let router = coord.router(lp);
 
-        dispatches.clear();
-        copies.iter_mut().for_each(|c| *c = 0.0);
-
+        // --- Assemble the layer's assignment batch (token-major). ---
+        batch.clear();
         for (t, experts) in layer.tokens.iter().enumerate() {
             // Data parallelism: the batch is split evenly across GPUs.
-            let src = t * n_gpus / chunk;
-            let mut dsts = Vec::with_capacity(experts.len());
+            let src = even_src(t, chunk, n_gpus);
             for &e in experts {
                 let e = e as usize;
                 // C2R-style lossy pruning: a remote assignment is dropped
@@ -172,12 +181,17 @@ fn sim_phase(sys: &SystemSpec, cfg: &SimConfig, coord: &Coordinator,
                         continue;
                     }
                 }
-                let dst = router.route(src, e, rng);
-                copies[dst] += 1.0;
-                dsts.push(dst);
+                batch.push(Assignment { token: t, expert: e, src });
             }
-            dispatches.push(Dispatch { src, dsts });
         }
+
+        // --- Route the whole batch in one dispatch round. ---
+        let plan = dispatcher.dispatch(lp, layer_idx, &batch, rng);
+        let copies: Vec<f64> = plan
+            .copies_per_gpu()
+            .iter()
+            .map(|&c| c as f64)
+            .collect();
 
         // --- Communication: two A2A rounds (dispatch + combine). ---
         let overlap = if sys.comm == CommModel::Hsc {
@@ -185,9 +199,8 @@ fn sim_phase(sys: &SystemSpec, cfg: &SimConfig, coord: &Coordinator,
         } else {
             0.0
         };
-        let mut comm = comm_round(sys, topo, &dispatches, spec, overlap,
-                                  rng);
-        let combine = comm_round(sys, topo, &dispatches, spec, 0.0, rng);
+        let mut comm = comm_round(sys, topo, &plan, overlap, rng);
+        let combine = comm_round(sys, topo, &plan, 0.0, rng);
         comm.accumulate(&combine);
 
         // --- Expert compute + synchronization idle. ---
@@ -220,25 +233,26 @@ fn sim_phase(sys: &SystemSpec, cfg: &SimConfig, coord: &Coordinator,
     }
 }
 
-/// One A2A round under the system's collective.
-fn comm_round(sys: &SystemSpec, topo: &Topology, dispatches: &[Dispatch],
-              spec: &ModelSpec, overlap: f64, rng: &mut Rng) -> CommReport {
-    let tb = spec.token_bytes();
+/// One A2A round under the system's collective, consuming the routed
+/// batch's [`DispatchPlan`] (payload size from the plan's own byte
+/// accounting).
+fn comm_round(sys: &SystemSpec, topo: &Topology, plan: &DispatchPlan,
+              overlap: f64, rng: &mut Rng) -> CommReport {
     match sys.comm {
         CommModel::Flat => {
             let m = if sys.dedup_flat {
-                traffic::per_gpu_dedup(dispatches, topo.num_gpus(), tb)
+                traffic::per_gpu_dedup_plan(plan)
             } else {
-                traffic::per_copy(dispatches, topo.num_gpus(), tb)
+                traffic::per_copy_plan(plan)
             };
             model::flat_all_to_all(&m, topo, rng)
         }
         CommModel::StagedHierarchical => {
-            let ts = traffic::two_stage(dispatches, topo, tb);
+            let ts = traffic::two_stage_plan(plan, topo);
             model::staged_hierarchical(&ts, topo, rng)
         }
         CommModel::Hsc => {
-            let ts = traffic::two_stage(dispatches, topo, tb);
+            let ts = traffic::two_stage_plan(plan, topo);
             model::hsc(&ts, topo, overlap, rng)
         }
     }
@@ -282,6 +296,17 @@ mod tests {
         let cfg = small_cfg(Topology::two_by_two());
         let a = simulate(&SystemSpec::grace(0.15), &cfg);
         let b = simulate(&SystemSpec::grace(0.15), &cfg);
+        assert_eq!(a.e2e_time, b.e2e_time);
+        assert_eq!(a.cross_bytes, b.cross_bytes);
+    }
+
+    #[test]
+    fn load_aware_system_runs_and_is_deterministic() {
+        let cfg = small_cfg(Topology::two_by_two());
+        let sys = SystemSpec::grace_load_aware(0.15);
+        let a = simulate(&sys, &cfg);
+        let b = simulate(&sys, &cfg);
+        assert!(a.e2e_time > 0.0 && a.e2e_time.is_finite());
         assert_eq!(a.e2e_time, b.e2e_time);
         assert_eq!(a.cross_bytes, b.cross_bytes);
     }

@@ -12,8 +12,10 @@
 //!   co-activation affinity matrix ([`grouping`]),
 //! * **dynamic expert replication** driven by the load-skew factor
 //!   `ρ = W_max / W̄` ([`replication`]),
-//! * **online locality-aware routing**: weighted round-robin with load
-//!   prediction + topology-aware locality preference ([`routing`]),
+//! * **online locality-aware routing**: an object-safe [`routing::RoutePolicy`]
+//!   trait (primary / WRR / TAR / online load-aware) executed in batched
+//!   dispatch rounds that emit per-`(src, dst)` transfer plans
+//!   ([`routing`]),
 //! * a **hierarchical sparse communication** substrate replacing flat
 //!   global All-to-All ([`comm`]).
 //!
@@ -29,8 +31,8 @@
 //! | substrates | [`stats`], [`linalg`], [`configio`], [`cli`], [`testutil`], [`bench`], [`exec`] |
 //! | cluster model | [`cluster`], [`comm`] |
 //! | profiling | [`trace`], [`profile`] |
-//! | GRACE algorithms | [`grouping`], [`replication`], [`routing`], [`placement`] |
-//! | coordination | [`coordinator`] — the L3 offline→online pipeline |
+//! | GRACE algorithms | [`grouping`], [`replication`], [`placement`], [`routing`] — `RoutePolicy` trait + `Dispatcher`/`DispatchPlan` batched dispatch |
+//! | coordination | [`coordinator`] — the L3 offline→online pipeline (`Coordinator` offline, `OnlineCoordinator` serving) |
 //! | engine | [`engine`], [`runtime`], [`server`] |
 //! | evaluation | [`baselines`], [`metrics`], [`report`] |
 

@@ -45,7 +45,7 @@ COMMON OPTIONS:
 SERVE OPTIONS (tiny AOT model; run `make artifacts` first):
   --variant <olmoe_tiny|dsv2_tiny|qwen3_tiny>
   --requests <n>  --prompt <len>  --new-tokens <n>
-  --policy <primary|wrr|tar>
+  --policy <primary|wrr|tar|load-aware>
   --artifacts <dir>                 artifacts dir (default ./artifacts)
 ";
 
@@ -105,6 +105,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let r = args.f64_or("r", 0.15)?;
     let sys = match args.str_or("system", "grace") {
         "grace" => SystemSpec::grace(r),
+        "grace-la" => SystemSpec::grace_load_aware(r),
         "occult" => SystemSpec::occult(),
         "vanilla" => SystemSpec::vanilla(),
         "tutel" => SystemSpec::tutel(),
@@ -175,6 +176,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "primary" => RoutingPolicy::Primary,
         "wrr" => RoutingPolicy::Wrr,
         "tar" => RoutingPolicy::Tar,
+        "load-aware" | "la" => RoutingPolicy::LoadAware,
         other => anyhow::bail!("unknown policy '{other}'"),
     };
     let topo = Topology::paper_testbed(

@@ -1,0 +1,428 @@
+//! Batched dispatch: route a whole batch of expert assignments in one
+//! call and group the result into per-`(src, dst)` transfer lists.
+//!
+//! The scalar per-token loops the engines used to hand-roll around the
+//! router are replaced by one [`Dispatcher::dispatch`] call per layer
+//! round: the dispatcher applies its [`RoutePolicy`] to every
+//! [`Assignment`] of the batch (in batch order, so the policy's RNG
+//! stream is identical to the old scalar walk) and emits a
+//! [`DispatchPlan`] holding three synchronized views of the decision:
+//!
+//! * **assignments** — the routed `(token, expert, src → dst)` records in
+//!   batch order (what the execute engine's combine step walks),
+//! * **transfer lists** — assignments grouped per `(src, dst)` GPU pair
+//!   with byte accounting (what an A2A backend would enqueue as one
+//!   buffer per pair),
+//! * **per-token dispatches** — the legacy token-major [`Dispatch`] view
+//!   the communication traffic models consume (their dedup semantics are
+//!   per token).
+//!
+//! Routing one batch also defines one *round* for stateful policies: the
+//! dispatcher calls [`RoutePolicy::end_round`] after the batch, which is
+//! where [`crate::routing::LoadAware`] refreshes its online Eq.-4
+//! weights.
+
+use super::{RouteCtx, RoutePolicy};
+use crate::cluster::{GpuId, Topology};
+use crate::comm::traffic::Dispatch;
+use crate::placement::LayerPlacement;
+use crate::stats::Rng;
+use std::sync::OnceLock;
+
+/// One unrouted expert assignment: token `token` residing on GPU `src`
+/// selected expert `expert`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Assignment {
+    pub token: usize,
+    pub expert: usize,
+    pub src: GpuId,
+}
+
+/// One routed assignment within a [`DispatchPlan`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Routed {
+    /// Position of this assignment in the dispatched batch (stable handle
+    /// for caller-side side data, e.g. gate weights).
+    pub index: usize,
+    pub token: usize,
+    pub expert: usize,
+    pub src: GpuId,
+    pub dst: GpuId,
+}
+
+/// The routed batch: every `(token, expert)` assignment appears in
+/// exactly one per-`(src, dst)` transfer list (token conservation — the
+/// `plan_*` property tests pin this).
+#[derive(Clone, Debug)]
+pub struct DispatchPlan {
+    n_gpus: usize,
+    token_bytes: f64,
+    /// Routed assignments in batch order.
+    assignments: Vec<Routed>,
+    /// Per `(src, dst)` pair (row-major `src * n_gpus + dst`): indices
+    /// into `assignments`, in batch order.
+    transfers: Vec<Vec<u32>>,
+    /// Token-major legacy view for the traffic models, derived lazily
+    /// from `assignments` — the execute-engine hot path never reads it,
+    /// so it should not pay one small `Vec` per token per round.
+    per_token: OnceLock<Vec<Dispatch>>,
+    /// Routed copies per destination GPU (compute load).
+    copies: Vec<usize>,
+}
+
+impl DispatchPlan {
+    pub fn num_gpus(&self) -> usize {
+        self.n_gpus
+    }
+
+    /// Bytes one token copy moves (the model's hidden activation).
+    pub fn token_bytes(&self) -> f64 {
+        self.token_bytes
+    }
+
+    /// Routed assignments in batch order.
+    pub fn assignments(&self) -> &[Routed] {
+        &self.assignments
+    }
+
+    pub fn num_assignments(&self) -> usize {
+        self.assignments.len()
+    }
+
+    /// Distinct tokens routed (tokens whose every assignment was pruned
+    /// before dispatch do not appear).
+    pub fn num_tokens(&self) -> usize {
+        self.per_token().len()
+    }
+
+    /// The token-major per-token view ([`Dispatch`] per token, in first-
+    /// appearance order) — what the traffic models consume (their dedup
+    /// semantics are per token). Built on first use from the batch-order
+    /// assignments and cached.
+    pub fn per_token(&self) -> &[Dispatch] {
+        self.per_token.get_or_init(|| {
+            let mut view: Vec<Dispatch> = Vec::new();
+            let mut current: Option<(usize, GpuId)> = None;
+            for r in &self.assignments {
+                if current != Some((r.token, r.src)) {
+                    view.push(Dispatch { src: r.src, dsts: Vec::new() });
+                    current = Some((r.token, r.src));
+                }
+                view.last_mut().unwrap().dsts.push(r.dst);
+            }
+            // The grouping above assumes the batch was token-major (one
+            // contiguous run per token); a scattered batch would split a
+            // token into several Dispatch entries and silently break the
+            // traffic models' per-token dedup.
+            #[cfg(debug_assertions)]
+            {
+                let distinct: std::collections::HashSet<(usize, GpuId)> =
+                    self.assignments
+                        .iter()
+                        .map(|r| (r.token, r.src))
+                        .collect();
+                debug_assert_eq!(
+                    view.len(),
+                    distinct.len(),
+                    "dispatched batch was not token-major"
+                );
+            }
+            view
+        })
+    }
+
+    /// Routed copies per destination GPU.
+    pub fn copies_per_gpu(&self) -> &[usize] {
+        &self.copies
+    }
+
+    /// The `(src, dst)` transfer list: routed assignments moving from
+    /// `src` to `dst`, in batch order.
+    pub fn transfer(&self, src: GpuId, dst: GpuId)
+                    -> impl Iterator<Item = &Routed> + '_ {
+        self.transfers[src * self.n_gpus + dst]
+            .iter()
+            .map(|&i| &self.assignments[i as usize])
+    }
+
+    /// Copies in the `(src, dst)` transfer list.
+    pub fn transfer_len(&self, src: GpuId, dst: GpuId) -> usize {
+        self.transfers[src * self.n_gpus + dst].len()
+    }
+
+    /// Per-copy bytes of the `(src, dst)` transfer list.
+    pub fn transfer_bytes(&self, src: GpuId, dst: GpuId) -> f64 {
+        self.transfer_len(src, dst) as f64 * self.token_bytes
+    }
+
+    /// All assignments destined for `dst`, grouped by source GPU (the
+    /// order one rank's receive buffers would arrive in).
+    pub fn for_rank(&self, dst: GpuId)
+                    -> impl Iterator<Item = &Routed> + '_ {
+        (0..self.n_gpus).flat_map(move |src| self.transfer(src, dst))
+    }
+
+    /// Total per-copy bytes, counting the free same-GPU diagonal.
+    pub fn total_bytes(&self) -> f64 {
+        self.assignments.len() as f64 * self.token_bytes
+    }
+
+    /// Per-copy bytes that actually cross a link (off-diagonal).
+    pub fn moved_bytes(&self) -> f64 {
+        self.assignments
+            .iter()
+            .filter(|r| r.src != r.dst)
+            .count() as f64
+            * self.token_bytes
+    }
+}
+
+/// Batched router: applies one [`RoutePolicy`] to whole batches of
+/// assignments against a per-layer placement. Build one per run through
+/// [`crate::coordinator::OnlineCoordinator::dispatcher`] so stateful
+/// policies keep their online estimates across rounds.
+pub struct Dispatcher {
+    topo: Topology,
+    policy: Box<dyn RoutePolicy>,
+    token_bytes: f64,
+}
+
+impl Dispatcher {
+    pub fn new(topo: Topology, policy: Box<dyn RoutePolicy>,
+               token_bytes: f64) -> Dispatcher {
+        Dispatcher { topo, policy, token_bytes }
+    }
+
+    pub fn topo(&self) -> &Topology {
+        &self.topo
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn token_bytes(&self) -> f64 {
+        self.token_bytes
+    }
+
+    /// Route one batch (= one policy round) against `placement`, the
+    /// layer-`layer` placement of the model (stateful policies keep
+    /// per-layer estimates — see [`RouteCtx::layer`]).
+    ///
+    /// Assignments are routed in batch order; callers pass batches in
+    /// token-major order so the per-token view groups each token's
+    /// contiguous run of assignments into one [`Dispatch`].
+    pub fn dispatch(&mut self, placement: &LayerPlacement, layer: usize,
+                    batch: &[Assignment], rng: &mut Rng) -> DispatchPlan {
+        let n = self.topo.num_gpus();
+        debug_assert_eq!(placement.num_gpus(), n);
+        let ctx = RouteCtx { placement, topo: &self.topo, layer };
+
+        let mut assignments = Vec::with_capacity(batch.len());
+        let mut transfers = vec![Vec::new(); n * n];
+        let mut copies = vec![0usize; n];
+
+        for (index, a) in batch.iter().enumerate() {
+            let dst = self.policy.select(&ctx, a.src, a.expert, rng);
+            debug_assert!(placement.instances[a.expert].contains(&dst),
+                          "policy routed off the instance set");
+            assignments.push(Routed {
+                index,
+                token: a.token,
+                expert: a.expert,
+                src: a.src,
+                dst,
+            });
+            transfers[a.src * n + dst].push(index as u32);
+            copies[dst] += 1;
+        }
+        self.policy.end_round(&ctx);
+
+        DispatchPlan {
+            n_gpus: n,
+            token_bytes: self.token_bytes,
+            assignments,
+            transfers,
+            per_token: OnceLock::new(),
+            copies,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::GroupingStrategy;
+    use crate::config::ModelSpec;
+    use crate::coordinator::Coordinator;
+    use crate::placement::{Placement, ReplicationMode};
+    use crate::routing::RoutingPolicy;
+    use crate::testutil::{check, prop_assert};
+    use crate::trace::{GateTrace, Profile};
+
+    fn pipeline(policy: RoutingPolicy, seed: u64)
+                -> (Coordinator, Placement, GateTrace) {
+        let topo = Topology::two_by_two();
+        let coord = Coordinator::new(
+            GroupingStrategy::Hierarchical { r: 0.15 },
+            ReplicationMode::Dynamic,
+            policy,
+            topo,
+            seed,
+        );
+        let model = ModelSpec { moe_layers: 1, ..ModelSpec::olmoe() };
+        let trace = coord.profile_synthetic(&model, Profile::Math, 512);
+        let placement = coord.place(&trace);
+        (coord, placement, trace)
+    }
+
+    fn batch_of(trace: &GateTrace, n_gpus: usize) -> Vec<Assignment> {
+        let layer = &trace.layers[0];
+        let chunk = layer.tokens.len();
+        let mut batch = Vec::new();
+        for (t, experts) in layer.tokens.iter().enumerate() {
+            let src = t * n_gpus / chunk;
+            for &e in experts {
+                batch.push(Assignment { token: t, expert: e as usize, src });
+            }
+        }
+        batch
+    }
+
+    #[test]
+    fn plan_conserves_tokens_across_transfer_lists() {
+        // Property: every (token, expert) assignment of the batch appears
+        // in exactly one (src, dst) transfer list, and every destination
+        // hosts an instance of the expert.
+        check(25, |rng| {
+            let policy = [RoutingPolicy::Primary, RoutingPolicy::Wrr,
+                          RoutingPolicy::Tar, RoutingPolicy::LoadAware]
+                [rng.index(4)];
+            let (coord, placement, trace) =
+                pipeline(policy, rng.next_u64());
+            let lp = &placement.layers[0];
+            let batch = batch_of(&trace, coord.topo().num_gpus());
+            let mut d = coord.dispatcher(4096.0);
+            let plan = d.dispatch(lp, 0, &batch, rng);
+
+            prop_assert(plan.num_assignments() == batch.len(),
+                        "assignment count")?;
+            // Exactly-once: collect assignment indices over all lists.
+            let n = plan.num_gpus();
+            let mut seen = vec![false; batch.len()];
+            for src in 0..n {
+                for dst in 0..n {
+                    for r in plan.transfer(src, dst) {
+                        prop_assert(r.src == src && r.dst == dst,
+                                    "transfer list misfiled")?;
+                        prop_assert(!seen[r.index], "duplicate index")?;
+                        seen[r.index] = true;
+                        let a = batch[r.index];
+                        prop_assert(
+                            r.token == a.token && r.expert == a.expert,
+                            "transfer list corrupted the assignment",
+                        )?;
+                        prop_assert(
+                            lp.instances[r.expert].contains(&r.dst),
+                            "destination is not an instance",
+                        )?;
+                    }
+                }
+            }
+            prop_assert(seen.iter().all(|&s| s), "assignment dropped")
+        });
+    }
+
+    #[test]
+    fn plan_views_are_consistent() {
+        check(25, |rng| {
+            let (coord, placement, trace) =
+                pipeline(RoutingPolicy::Tar, rng.next_u64());
+            let lp = &placement.layers[0];
+            let batch = batch_of(&trace, coord.topo().num_gpus());
+            let mut d = coord.dispatcher(100.0);
+            let plan = d.dispatch(lp, 0, &batch, rng);
+
+            // copies_per_gpu ≡ per-dst assignment counts ≡ per-token dsts.
+            let n = plan.num_gpus();
+            let mut by_dst = vec![0usize; n];
+            for r in plan.assignments() {
+                by_dst[r.dst] += 1;
+            }
+            prop_assert(by_dst == plan.copies_per_gpu(), "copies view")?;
+            let from_tokens: usize =
+                plan.per_token().iter().map(|d| d.dsts.len()).sum();
+            prop_assert(from_tokens == plan.num_assignments(),
+                        "per-token view")?;
+            let from_ranks: usize =
+                (0..n).map(|g| plan.for_rank(g).count()).sum();
+            prop_assert(from_ranks == plan.num_assignments(),
+                        "for_rank view")?;
+            // byte accounting
+            let pair_bytes: f64 = (0..n)
+                .flat_map(|s| (0..n).map(move |d| (s, d)))
+                .map(|(s, d)| plan.transfer_bytes(s, d))
+                .sum();
+            prop_assert(
+                (pair_bytes - plan.total_bytes()).abs() < 1e-6,
+                "byte accounting",
+            )?;
+            prop_assert(plan.moved_bytes() <= plan.total_bytes(),
+                        "moved exceeds total")
+        });
+    }
+
+    #[test]
+    fn per_token_view_matches_scalar_walk() {
+        // The per-token view must reproduce the old scalar engine loop's
+        // Vec<Dispatch> exactly (token-major, dsts in expert order).
+        let (coord, placement, trace) = pipeline(RoutingPolicy::Wrr, 7);
+        let lp = &placement.layers[0];
+        let n_gpus = coord.topo().num_gpus();
+        let batch = batch_of(&trace, n_gpus);
+
+        let mut d = coord.dispatcher(1.0);
+        let mut rng = crate::stats::Rng::new(99);
+        let plan = d.dispatch(lp, 0, &batch, &mut rng);
+
+        // Scalar reference: same policy object semantics, same RNG seed.
+        let mut pol = RoutingPolicy::Wrr.build();
+        let ctx = RouteCtx { placement: lp, topo: coord.topo(), layer: 0 };
+        let mut rng2 = crate::stats::Rng::new(99);
+        let layer = &trace.layers[0];
+        let chunk = layer.tokens.len();
+        let mut want: Vec<Dispatch> = Vec::new();
+        for (t, experts) in layer.tokens.iter().enumerate() {
+            let src = t * n_gpus / chunk;
+            let dsts = experts
+                .iter()
+                .map(|&e| pol.select(&ctx, src, e as usize, &mut rng2))
+                .collect();
+            want.push(Dispatch { src, dsts });
+        }
+        assert_eq!(plan.num_tokens(), want.len());
+        for (got, want) in plan.per_token().iter().zip(&want) {
+            assert_eq!(got.src, want.src);
+            assert_eq!(got.dsts, want.dsts);
+        }
+    }
+
+    #[test]
+    fn dispatch_is_deterministic_per_seed() {
+        // WRR: every replicated choice draws from the rng.
+        let (coord, placement, trace) = pipeline(RoutingPolicy::Wrr, 3);
+        let lp = &placement.layers[0];
+        let batch = batch_of(&trace, coord.topo().num_gpus());
+        let run = |seed: u64| {
+            let mut d = coord.dispatcher(8.0);
+            let mut rng = crate::stats::Rng::new(seed);
+            d.dispatch(lp, 0, &batch, &mut rng)
+                .assignments()
+                .iter()
+                .map(|r| r.dst)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(5), run(5));
+        assert_ne!(run(5), run(6), "routing must actually use the rng");
+    }
+}

@@ -1,25 +1,54 @@
-//! Online routing policies — which replica executes a token's expert
-//! (paper §4.3, Algorithms 3–4).
+//! Online routing — which replica executes a token's expert (paper §4.3,
+//! Algorithms 3–4) — as an object-safe policy trait plus a batched
+//! dispatcher.
 //!
-//! * [`RoutingPolicy::Primary`] — no choice: the expert's primary GPU
-//!   (every non-replicated system).
-//! * [`RoutingPolicy::Wrr`] — Algorithm 3: weighted round-robin over all
-//!   instances, weights inversely proportional to Eq.-4-predicted loads.
-//! * [`RoutingPolicy::Tar`] — Algorithm 4: topology-aware locality
-//!   preference. (i) an instance on the token's own GPU wins outright;
-//!   (ii) otherwise WRR among same-node instances; (iii) otherwise WRR
-//!   among all instances.
+//! The online phase has two halves:
+//!
+//! * **policy** ([`RoutePolicy`]) — the per-assignment replica choice.
+//!   Implementations:
+//!   * [`Primary`] — no choice: the expert's primary GPU (every
+//!     non-replicated system),
+//!   * [`Wrr`] — Algorithm 3: weighted random choice over all instances,
+//!     weights the frozen Eq.-4 polling weights of the placement,
+//!   * [`Tar`] — Algorithm 4: topology-aware locality preference. (i) an
+//!     instance on the token's own GPU wins outright; (ii) otherwise WRR
+//!     among same-node instances; (iii) otherwise WRR among all instances,
+//!   * [`LoadAware`] — TAR's locality tiers, but the tier-(ii)/(iii)
+//!     choice is *online*: within a round, weighted least-in-flight over
+//!     the tier's candidates; across rounds, per-layer EWMAs of measured
+//!     loads feed an Eq.-4 recomputation instead of the placement-time
+//!     prediction frozen into `polling`.
+//! * **dispatch** ([`Dispatcher`] → [`DispatchPlan`], in [`dispatch`]) —
+//!   a whole batch of `(token, expert, src_gpu)` assignments is routed in
+//!   one call and grouped into per-`(src, dst)` transfer lists with byte
+//!   accounting, which the engines hand to the communication models as
+//!   batched transfers.
+//!
+//! [`RoutingPolicy`] is the plain-data configuration enum (what a
+//! [`crate::baselines::SystemSpec`] or CLI flag names);
+//! [`RoutingPolicy::build`] instantiates the trait object executing it.
+//! Policies are constructed per run by [`crate::coordinator`], so stateful
+//! policies ([`LoadAware`]) carry their estimates across rounds and layers
+//! of one serving run without leaking between runs.
+
+pub mod dispatch;
+
+pub use dispatch::{Assignment, DispatchPlan, Dispatcher, Routed};
 
 use crate::cluster::{GpuId, Topology};
 use crate::placement::LayerPlacement;
+use crate::replication::{polling_weights, predict_loads, Replication};
 use crate::stats::{dist::weighted_choice, Rng};
 
-/// Replica-selection policy.
+/// Replica-selection policy configuration (plain data; see
+/// [`RoutingPolicy::build`] for the executable form).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RoutingPolicy {
     Primary,
     Wrr,
     Tar,
+    /// TAR with online load prediction (Eq. 4 recomputed per round).
+    LoadAware,
 }
 
 impl RoutingPolicy {
@@ -28,72 +57,357 @@ impl RoutingPolicy {
             RoutingPolicy::Primary => "primary",
             RoutingPolicy::Wrr => "wrr",
             RoutingPolicy::Tar => "tar",
+            RoutingPolicy::LoadAware => "load-aware",
+        }
+    }
+
+    /// Instantiate the policy object executing this configuration.
+    pub fn build(&self) -> Box<dyn RoutePolicy> {
+        match self {
+            RoutingPolicy::Primary => Box::new(Primary),
+            RoutingPolicy::Wrr => Box::new(Wrr),
+            RoutingPolicy::Tar => Box::new(Tar),
+            RoutingPolicy::LoadAware => Box::new(LoadAware::new()),
         }
     }
 }
 
-/// Router over one layer's placement. Holds no mutable state beyond the
-/// caller's RNG, so it is freely shareable across worker threads.
-pub struct Router<'a> {
+/// Immutable per-layer context a policy selects against: the layer's
+/// placement (instances + frozen polling weights), the cluster topology
+/// (locality tiers), and the MoE layer index (stateful policies keep
+/// separate estimates per layer — placements and replication decisions
+/// differ layer to layer).
+pub struct RouteCtx<'a> {
     pub placement: &'a LayerPlacement,
     pub topo: &'a Topology,
-    pub policy: RoutingPolicy,
+    pub layer: usize,
 }
 
-impl<'a> Router<'a> {
-    pub fn new(placement: &'a LayerPlacement, topo: &'a Topology,
-               policy: RoutingPolicy) -> Self {
-        Router { placement, topo, policy }
-    }
+/// Object-safe replica-selection policy.
+///
+/// `select` is called once per expert assignment, in batch order, by the
+/// [`Dispatcher`]; `end_round` once per dispatched batch. Stateless
+/// policies ignore `end_round`; [`LoadAware`] uses the pair to measure
+/// per-round loads and refresh its online polling weights.
+pub trait RoutePolicy {
+    fn name(&self) -> &'static str;
 
     /// Select the GPU that executes `expert` for a token residing on
     /// `src_gpu`.
-    pub fn route(&self, src_gpu: GpuId, expert: usize,
-                 rng: &mut Rng) -> GpuId {
-        let instances = &self.placement.instances[expert];
+    fn select(&mut self, ctx: &RouteCtx<'_>, src_gpu: GpuId, expert: usize,
+              rng: &mut Rng) -> GpuId;
+
+    /// One dispatch round (batch) is complete; update online state.
+    fn end_round(&mut self, _ctx: &RouteCtx<'_>) {}
+}
+
+/// Algorithm 3's weighted random choice over `candidates`, reading each
+/// candidate GPU's weight from `weight_of` (indexed by GPU id). A
+/// degenerate all-zero weight vector falls back to a *uniform* choice —
+/// deterministically returning the first candidate would silently bias
+/// toward the primary replica.
+fn wrr_over(candidates: &[GpuId], weight_of: &[f64], rng: &mut Rng)
+            -> GpuId {
+    let weights: Vec<f64> =
+        candidates.iter().map(|&g| weight_of[g]).collect();
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return candidates[rng.index(candidates.len())];
+    }
+    candidates[weighted_choice(rng, &weights)]
+}
+
+/// Outcome of the Algorithm-4 locality tier walk.
+enum TierChoice<'a> {
+    /// The tier rules force this GPU (single instance, or tier (i):
+    /// an instance on the token's own GPU).
+    Decided(GpuId),
+    /// The tier's candidate set — tier (ii) same-node instances when any
+    /// exist, tier (iii) all instances otherwise; the caller's weighting
+    /// rule picks among them.
+    Among(std::borrow::Cow<'a, [GpuId]>),
+}
+
+/// Algorithm 4's locality-first tier walk, shared by every tiered policy
+/// ([`Tar`] resolves `Among` with frozen-weight WRR, [`LoadAware`] with
+/// weighted least-in-flight) so the tier rules live in exactly one place.
+fn locality_tiers<'a>(ctx: &RouteCtx<'_>, src_gpu: GpuId,
+                      instances: &'a [GpuId]) -> TierChoice<'a> {
+    if instances.len() == 1 {
+        return TierChoice::Decided(instances[0]);
+    }
+    // Tier (i): same GPU.
+    if instances.contains(&src_gpu) {
+        return TierChoice::Decided(src_gpu);
+    }
+    // Tier (ii): same node.
+    let node = ctx.topo.node_of(src_gpu);
+    let local: Vec<GpuId> = instances
+        .iter()
+        .copied()
+        .filter(|&g| ctx.topo.node_of(g) == node)
+        .collect();
+    if local.is_empty() {
+        // Tier (iii): anywhere.
+        TierChoice::Among(std::borrow::Cow::Borrowed(instances))
+    } else {
+        TierChoice::Among(std::borrow::Cow::Owned(local))
+    }
+}
+
+/// No choice: the expert's primary GPU.
+pub struct Primary;
+
+impl RoutePolicy for Primary {
+    fn name(&self) -> &'static str {
+        "primary"
+    }
+
+    fn select(&mut self, ctx: &RouteCtx<'_>, _src_gpu: GpuId,
+              expert: usize, _rng: &mut Rng) -> GpuId {
+        ctx.placement.instances[expert][0]
+    }
+}
+
+/// Algorithm 3: weighted random choice over all instances under the
+/// placement's frozen Eq.-4 polling weights.
+pub struct Wrr;
+
+impl RoutePolicy for Wrr {
+    fn name(&self) -> &'static str {
+        "wrr"
+    }
+
+    fn select(&mut self, ctx: &RouteCtx<'_>, _src_gpu: GpuId,
+              expert: usize, rng: &mut Rng) -> GpuId {
+        let instances = &ctx.placement.instances[expert];
         debug_assert!(!instances.is_empty());
         if instances.len() == 1 {
             return instances[0];
         }
-        match self.policy {
-            RoutingPolicy::Primary => instances[0],
-            RoutingPolicy::Wrr => self.wrr(instances, rng),
-            RoutingPolicy::Tar => self.tar(src_gpu, instances, rng),
-        }
+        wrr_over(instances, &ctx.placement.polling, rng)
+    }
+}
+
+/// Algorithm 4: locality tiers with the frozen polling weights.
+pub struct Tar;
+
+impl RoutePolicy for Tar {
+    fn name(&self) -> &'static str {
+        "tar"
     }
 
-    /// Algorithm 3: WeightedRandomChoice(gpus, polling weights).
-    fn wrr(&self, candidates: &[GpuId], rng: &mut Rng) -> GpuId {
-        let weights: Vec<f64> = candidates
-            .iter()
-            .map(|&g| self.placement.polling[g])
-            .collect();
-        let total: f64 = weights.iter().sum();
-        if total <= 0.0 {
-            return candidates[0];
+    fn select(&mut self, ctx: &RouteCtx<'_>, src_gpu: GpuId,
+              expert: usize, rng: &mut Rng) -> GpuId {
+        let instances = &ctx.placement.instances[expert];
+        debug_assert!(!instances.is_empty());
+        match locality_tiers(ctx, src_gpu, instances) {
+            TierChoice::Decided(g) => g,
+            TierChoice::Among(c) => {
+                wrr_over(&c, &ctx.placement.polling, rng)
+            }
         }
-        candidates[weighted_choice(rng, &weights)]
+    }
+}
+
+/// Weighted least-in-flight choice (weighted least-connections): the
+/// candidate with the fewest in-flight tokens per unit of polling
+/// weight. Deterministic; under steady flow the per-candidate counts
+/// track the weight distribution (deficit round-robin), and a GPU that
+/// other experts have already flooded this round is avoided immediately
+/// instead of after the round closes.
+fn weighted_least_inflight(candidates: &[GpuId], weight_of: &[f64],
+                           inflight: &[f64]) -> GpuId {
+    let mut best = candidates[0];
+    let mut best_key = f64::INFINITY;
+    for &g in candidates {
+        let key = (inflight[g] + 1.0) / (weight_of[g] + 1e-12);
+        if key < best_key {
+            best_key = key;
+            best = g;
+        }
+    }
+    best
+}
+
+/// Per-layer online state of [`LoadAware`].
+#[derive(Clone, Debug, Default)]
+struct LayerLoadState {
+    /// EWMA of measured pre-replication per-GPU loads.
+    ewma_pre: Vec<f64>,
+    /// EWMA of measured per-expert loads (online `W_r`).
+    ewma_expert: Vec<f64>,
+    /// Current-round pre-replication per-GPU counts.
+    pre_round: Vec<f64>,
+    /// Current-round per-expert counts.
+    expert_round: Vec<f64>,
+    /// Online Eq.-4 polling weights; the placement's frozen weights are
+    /// used until the first round completes.
+    polling: Option<Vec<f64>>,
+    rounds: u64,
+}
+
+/// Load-predictive routing: TAR's locality tiers driven by an *online*
+/// per-GPU load estimate instead of the placement-time prediction.
+///
+/// Two feedback loops, one inside the round and one across rounds:
+///
+/// * **in-flight (intra-round)** — tier-(ii)/(iii) choice is weighted
+///   least-in-flight: among the tier's candidates, pick the GPU with the
+///   fewest tokens routed to it so far this round per unit of polling
+///   weight, so a burst landing on one replica host diverts follow-up
+///   traffic immediately;
+/// * **EWMA + Eq. 4 (cross-round)** — every `select` measures where the
+///   assignment's primary would place it and its per-expert count; at
+///   `end_round` the measurements fold into per-layer EWMAs and Eq. 4 is
+///   recomputed over the *measured* loads (the placement's replication
+///   decision stays fixed, only the load numbers are live), yielding the
+///   polling weights for the next round.
+///
+/// State is kept per MoE layer ([`RouteCtx::layer`]) — placements,
+/// replication decisions, and load profiles differ layer to layer, so
+/// one blended estimate would misattribute Eq. 4's `W_max`/`W_r`.
+///
+/// Under a stationary load that matches the profiling trace, the online
+/// weights converge to the placement's static Eq.-4 polling weights (the
+/// `load_aware_*` tests pin this); under drifted load they track the
+/// drift, which static WRR/TAR cannot.
+pub struct LoadAware {
+    /// EWMA smoothing factor for per-round measured loads.
+    alpha: f64,
+    /// Tokens routed to each GPU in the current round (reset at
+    /// `end_round`; rounds never interleave layers, so this is shared).
+    inflight: Vec<f64>,
+    /// Per-layer measurement state, indexed by [`RouteCtx::layer`].
+    layers: Vec<LayerLoadState>,
+}
+
+impl Default for LoadAware {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LoadAware {
+    /// Default EWMA smoothing: the last ~3 rounds dominate the estimate.
+    pub const DEFAULT_ALPHA: f64 = 0.3;
+
+    pub fn new() -> LoadAware {
+        Self::with_alpha(Self::DEFAULT_ALPHA)
     }
 
-    /// Algorithm 4: locality-first tiers, WRR within a tier.
-    fn tar(&self, src_gpu: GpuId, instances: &[GpuId],
-           rng: &mut Rng) -> GpuId {
-        // Tier (i): same GPU.
-        if instances.contains(&src_gpu) {
-            return src_gpu;
+    pub fn with_alpha(alpha: f64) -> LoadAware {
+        assert!((0.0..=1.0).contains(&alpha), "alpha in [0, 1]");
+        LoadAware { alpha, inflight: Vec::new(), layers: Vec::new() }
+    }
+
+    /// The online polling weights in force for `layer` (`None` until one
+    /// of its rounds has completed — the placement's frozen weights apply
+    /// meanwhile).
+    pub fn online_polling(&self, layer: usize) -> Option<&[f64]> {
+        self.layers.get(layer)?.polling.as_deref()
+    }
+
+    /// Completed measurement rounds for `layer`.
+    pub fn rounds(&self, layer: usize) -> u64 {
+        self.layers.get(layer).map_or(0, |s| s.rounds)
+    }
+
+    fn ensure_sized(&mut self, layer: usize, n_gpus: usize,
+                    experts: usize) {
+        if self.inflight.len() < n_gpus {
+            self.inflight.resize(n_gpus, 0.0);
         }
-        // Tier (ii): same node.
-        let node = self.topo.node_of(src_gpu);
-        let local: Vec<GpuId> = instances
-            .iter()
-            .copied()
-            .filter(|&g| self.topo.node_of(g) == node)
-            .collect();
-        if !local.is_empty() {
-            return self.wrr(&local, rng);
+        if self.layers.len() <= layer {
+            self.layers.resize_with(layer + 1, LayerLoadState::default);
         }
-        // Tier (iii): anywhere.
-        self.wrr(instances, rng)
+        let st = &mut self.layers[layer];
+        if st.ewma_pre.len() < n_gpus {
+            st.ewma_pre.resize(n_gpus, 0.0);
+            st.pre_round.resize(n_gpus, 0.0);
+        }
+        if st.ewma_expert.len() < experts {
+            st.ewma_expert.resize(experts, 0.0);
+            st.expert_round.resize(experts, 0.0);
+        }
+    }
+}
+
+impl RoutePolicy for LoadAware {
+    fn name(&self) -> &'static str {
+        "load-aware"
+    }
+
+    fn select(&mut self, ctx: &RouteCtx<'_>, src_gpu: GpuId, expert: usize,
+              _rng: &mut Rng) -> GpuId {
+        let lp = ctx.placement;
+        self.ensure_sized(ctx.layer, lp.num_gpus(), lp.instances.len());
+        let st = &mut self.layers[ctx.layer];
+        // Measure the assignment where its primary would place it (the
+        // pre-replication load Eq. 4 starts from) and per expert.
+        st.pre_round[lp.primary[expert]] += 1.0;
+        st.expert_round[expert] += 1.0;
+
+        let instances = &lp.instances[expert];
+        debug_assert!(!instances.is_empty());
+        let dst = match locality_tiers(ctx, src_gpu, instances) {
+            TierChoice::Decided(g) => g,
+            TierChoice::Among(c) => {
+                let weights =
+                    st.polling.as_deref().unwrap_or(&lp.polling);
+                weighted_least_inflight(&c, weights, &self.inflight)
+            }
+        };
+        self.inflight[dst] += 1.0;
+        dst
+    }
+
+    fn end_round(&mut self, ctx: &RouteCtx<'_>) {
+        let lp = ctx.placement;
+        self.ensure_sized(ctx.layer, lp.num_gpus(), lp.instances.len());
+        self.inflight.iter_mut().for_each(|x| *x = 0.0);
+        let st = &mut self.layers[ctx.layer];
+        if st.pre_round.iter().sum::<f64>() <= 0.0 {
+            return; // empty round — keep the current estimate
+        }
+        st.rounds += 1;
+        // First round seeds the EWMA directly (no stale zero history).
+        let a = if st.rounds == 1 { 1.0 } else { self.alpha };
+        for (e, m) in st.ewma_pre.iter_mut().zip(&st.pre_round) {
+            *e = (1.0 - a) * *e + a * m;
+        }
+        for (e, m) in st.ewma_expert.iter_mut().zip(&st.expert_round) {
+            *e = (1.0 - a) * *e + a * m;
+        }
+        st.pre_round.iter_mut().for_each(|x| *x = 0.0);
+        st.expert_round.iter_mut().for_each(|x| *x = 0.0);
+
+        // Eq. 4 over the measured loads: the placement's replication
+        // decision with live W_max / W_r / per-GPU loads.
+        let rep = &lp.replication;
+        let predicted = if rep.is_none() {
+            st.ewma_pre.clone()
+        } else {
+            // Hot experts all live in the heaviest group, so its GPU is
+            // their shared primary.
+            let heavy = lp.primary[rep.hot_experts[0]];
+            let online = Replication {
+                hot_experts: rep.hot_experts.clone(),
+                replica_gpus: rep.replica_gpus.clone(),
+                n_replica: rep.n_replica,
+                w_max: st.ewma_pre[heavy],
+                w_r: rep
+                    .hot_experts
+                    .iter()
+                    .map(|&e| st.ewma_expert[e])
+                    .sum(),
+            };
+            predict_loads(&st.ewma_pre, heavy, &online)
+                .into_iter()
+                .map(|w| w.max(0.0))
+                .collect()
+        };
+        st.polling = Some(polling_weights(&predicted));
     }
 }
 
@@ -137,14 +451,21 @@ mod tests {
         Topology::two_by_two()
     }
 
+    fn route(policy: &mut dyn RoutePolicy, p: &LayerPlacement,
+             t: &Topology, src: GpuId, expert: usize, rng: &mut Rng)
+             -> GpuId {
+        policy.select(&RouteCtx { placement: p, topo: t, layer: 0 }, src,
+                      expert, rng)
+    }
+
     #[test]
     fn primary_policy_ignores_replicas() {
         let p = fixture();
         let t = topo();
-        let r = Router::new(&p, &t, RoutingPolicy::Primary);
+        let mut pol = RoutingPolicy::Primary.build();
         let mut rng = Rng::new(1);
         for src in 0..4 {
-            assert_eq!(r.route(src, 0, &mut rng), 0);
+            assert_eq!(route(pol.as_mut(), &p, &t, src, 0, &mut rng), 0);
         }
     }
 
@@ -152,11 +473,12 @@ mod tests {
     fn unreplicated_experts_always_primary() {
         let p = fixture();
         let t = topo();
-        for policy in [RoutingPolicy::Wrr, RoutingPolicy::Tar] {
-            let r = Router::new(&p, &t, policy);
+        for policy in [RoutingPolicy::Wrr, RoutingPolicy::Tar,
+                       RoutingPolicy::LoadAware] {
+            let mut pol = policy.build();
             let mut rng = Rng::new(2);
             for _ in 0..50 {
-                assert_eq!(r.route(3, 2, &mut rng), 2);
+                assert_eq!(route(pol.as_mut(), &p, &t, 3, 2, &mut rng), 2);
             }
         }
     }
@@ -165,12 +487,12 @@ mod tests {
     fn wrr_frequencies_match_polling_weights() {
         let p = fixture();
         let t = topo();
-        let r = Router::new(&p, &t, RoutingPolicy::Wrr);
+        let mut pol = Wrr;
         let mut rng = Rng::new(3);
         let mut counts = [0usize; 4];
         let n = 60_000;
         for _ in 0..n {
-            counts[r.route(3, 0, &mut rng)] += 1;
+            counts[route(&mut pol, &p, &t, 3, 0, &mut rng)] += 1;
         }
         // instances {0,1,2} with weights {0.1,0.2,0.3} → 1/6, 2/6, 3/6
         assert_eq!(counts[3], 0);
@@ -181,14 +503,36 @@ mod tests {
     }
 
     #[test]
+    fn wrr_zero_weight_falls_back_to_uniform() {
+        // Regression: `total <= 0` used to return candidates[0]
+        // deterministically, silently biasing toward the primary replica.
+        let mut p = fixture();
+        p.polling = vec![0.0; 4];
+        let t = topo();
+        let mut pol = Wrr;
+        let mut rng = Rng::new(7);
+        let mut counts = [0usize; 4];
+        let n = 30_000;
+        for _ in 0..n {
+            counts[route(&mut pol, &p, &t, 3, 0, &mut rng)] += 1;
+        }
+        assert_eq!(counts[3], 0, "non-instance gpu");
+        for g in [0, 1, 2] {
+            let emp = counts[g] as f64 / n as f64;
+            assert!((emp - 1.0 / 3.0).abs() < 0.02,
+                    "gpu {g}: {emp} not uniform");
+        }
+    }
+
+    #[test]
     fn tar_tier1_same_gpu_wins() {
         let p = fixture();
         let t = topo();
-        let r = Router::new(&p, &t, RoutingPolicy::Tar);
+        let mut pol = Tar;
         let mut rng = Rng::new(4);
         for src in [0, 1, 2] {
             for _ in 0..20 {
-                assert_eq!(r.route(src, 0, &mut rng), src,
+                assert_eq!(route(&mut pol, &p, &t, src, 0, &mut rng), src,
                            "instance on src gpu must be chosen");
             }
         }
@@ -198,11 +542,11 @@ mod tests {
     fn tar_tier2_prefers_same_node() {
         let p = fixture();
         let t = topo();
-        let r = Router::new(&p, &t, RoutingPolicy::Tar);
+        let mut pol = Tar;
         let mut rng = Rng::new(5);
         // src gpu 3 (node 1): instance gpus {0,1} are node 0, {2} node 1
         for _ in 0..100 {
-            assert_eq!(r.route(3, 0, &mut rng), 2,
+            assert_eq!(route(&mut pol, &p, &t, 3, 0, &mut rng), 2,
                        "same-node replica must win");
         }
     }
@@ -213,11 +557,11 @@ mod tests {
         // strip the node-1 replica: instances {0, 1}, both node 0
         p.instances[0] = vec![0, 1];
         let t = topo();
-        let r = Router::new(&p, &t, RoutingPolicy::Tar);
+        let mut pol = Tar;
         let mut rng = Rng::new(6);
         let mut counts = [0usize; 4];
         for _ in 0..30_000 {
-            counts[r.route(3, 0, &mut rng)] += 1;
+            counts[route(&mut pol, &p, &t, 3, 0, &mut rng)] += 1;
         }
         assert!(counts[0] > 0 && counts[1] > 0);
         // weights 0.1 vs 0.2 → 1:2
@@ -230,9 +574,9 @@ mod tests {
         check(100, |rng| {
             let p = fixture();
             let t = topo();
-            let r = Router::new(&p, &t, RoutingPolicy::Tar);
+            let mut pol = Tar;
             let src = rng.index(4);
-            let dst = r.route(src, 0, rng);
+            let dst = route(&mut pol, &p, &t, src, 0, rng);
             let local_exists = p.instances[0]
                 .iter()
                 .any(|&g| t.node_of(g) == t.node_of(src));
@@ -248,15 +592,210 @@ mod tests {
     }
 
     #[test]
-    fn property_wrr_routes_only_to_instances() {
+    fn property_policies_route_only_to_instances() {
         check(100, |rng| {
             let p = fixture();
             let t = topo();
-            let r = Router::new(&p, &t, RoutingPolicy::Wrr);
-            let src = rng.index(4);
-            let e = rng.index(4);
-            let dst = r.route(src, e, rng);
-            prop_assert(p.instances[e].contains(&dst), "non-instance gpu")
+            for policy in [RoutingPolicy::Primary, RoutingPolicy::Wrr,
+                           RoutingPolicy::Tar, RoutingPolicy::LoadAware] {
+                let mut pol = policy.build();
+                let src = rng.index(4);
+                let e = rng.index(4);
+                let dst = route(pol.as_mut(), &p, &t, src, e, rng);
+                prop_assert(p.instances[e].contains(&dst),
+                            format!("{}: non-instance gpu", policy.name()))?;
+            }
+            Ok(())
         });
+    }
+
+    // --- LoadAware ------------------------------------------------------
+
+    /// Replaying the *profiling sample itself* as the serving load is the
+    /// perfectly stationary case: the measured loads equal the profile
+    /// loads exactly, so the online Eq.-4 recomputation must land on the
+    /// placement's static polling weights (up to summation order) — for
+    /// every layer independently (the per-layer state must not blend one
+    /// layer's loads into another's Eq. 4).
+    #[test]
+    fn load_aware_converges_to_static_polling_under_stationary_load() {
+        use crate::baselines::GroupingStrategy;
+        use crate::coordinator::Coordinator;
+        use crate::config::ModelSpec;
+        use crate::placement::ReplicationMode;
+        use crate::trace::Profile;
+
+        let topo = topo();
+        let coord = Coordinator::new(
+            GroupingStrategy::Hierarchical { r: 0.15 },
+            ReplicationMode::Dynamic,
+            RoutingPolicy::LoadAware,
+            topo.clone(),
+            11,
+        );
+        let model = ModelSpec { moe_layers: 2, ..ModelSpec::olmoe() };
+        let trace = coord.profile_synthetic(&model, Profile::Math, 2048);
+        let placement = coord.place(&trace);
+
+        let mut la = LoadAware::new();
+        let mut rng = Rng::new(3);
+        for _round in 0..8 {
+            // One round per layer per step, interleaved like the engines.
+            for (l, layer) in trace.layers.iter().enumerate() {
+                let ctx = RouteCtx {
+                    placement: &placement.layers[l],
+                    topo: &topo,
+                    layer: l,
+                };
+                for (t, experts) in layer.tokens.iter().enumerate() {
+                    let src = t * topo.num_gpus() / layer.tokens.len();
+                    for &e in experts {
+                        la.select(&ctx, src, e as usize, &mut rng);
+                    }
+                }
+                la.end_round(&ctx);
+            }
+        }
+        for (l, lp) in placement.layers.iter().enumerate() {
+            let online = la.online_polling(l).expect("rounds completed");
+            for (g, (&o, &s)) in online.iter().zip(&lp.polling).enumerate()
+            {
+                assert!(
+                    (o - s).abs() < 1e-9,
+                    "layer {l} gpu {g}: online polling {o} != static {s}"
+                );
+            }
+        }
+    }
+
+    /// Resampled (not replayed) stationary traffic: the measurement is
+    /// noisy but unbiased, so the online weights still approach the
+    /// static prediction.
+    #[test]
+    fn load_aware_tracks_static_polling_under_resampled_load() {
+        use crate::baselines::GroupingStrategy;
+        use crate::coordinator::Coordinator;
+        use crate::config::ModelSpec;
+        use crate::placement::ReplicationMode;
+        use crate::trace::{Profile, TraceGen};
+
+        let topo = topo();
+        let coord = Coordinator::new(
+            GroupingStrategy::Hierarchical { r: 0.15 },
+            ReplicationMode::Dynamic,
+            RoutingPolicy::LoadAware,
+            topo.clone(),
+            11,
+        );
+        let model = ModelSpec { moe_layers: 1, ..ModelSpec::olmoe() };
+        let placement = coord.place(
+            &coord.profile_synthetic(&model, Profile::Math, 4096),
+        );
+        let lp = &placement.layers[0];
+
+        let mut la = LoadAware::new();
+        let ctx = RouteCtx { placement: lp, topo: &topo, layer: 0 };
+        let mut rng = Rng::new(5);
+        for round in 0..10u64 {
+            let serve = TraceGen {
+                experts: model.experts,
+                top_k: model.top_k,
+                layers: 1,
+                profile: Profile::Math,
+                seed: 9000 + round,
+            }
+            .generate(4096);
+            let layer = &serve.layers[0];
+            for (t, experts) in layer.tokens.iter().enumerate() {
+                let src = t * topo.num_gpus() / layer.tokens.len();
+                for &e in experts {
+                    la.select(&ctx, src, e as usize, &mut rng);
+                }
+            }
+            la.end_round(&ctx);
+        }
+        let online = la.online_polling(0).unwrap();
+        for (g, (&o, &s)) in online.iter().zip(&lp.polling).enumerate() {
+            assert!(
+                (o - s).abs() < 0.05,
+                "gpu {g}: online polling {o} vs static {s}"
+            );
+        }
+    }
+
+    /// Skewed synthetic trace on a single node (so tier-(ii) spans every
+    /// instance): the placement's frozen weights are stale — a background
+    /// stream overloads one replica host — and the online recomputation
+    /// must shift replica traffic away from it, reducing the max per-GPU
+    /// load share vs static WRR.
+    #[test]
+    fn load_aware_reduces_max_load_share_vs_static_wrr() {
+        let groups: Grouping = vec![vec![0], vec![2], vec![1], vec![3]];
+        let profile = LayerProfile {
+            affinity: Matrix::zeros(4, 4),
+            load: vec![25.0, 25.0, 25.0, 25.0],
+            tokens: 100,
+        };
+        let mut p = LayerPlacement::build(&profile, groups,
+                                          ReplicationMode::None);
+        // Expert 0 replicated to gpus 1 and 2; the *stale* prediction
+        // says all four GPUs are equally loaded.
+        p.replication = Replication {
+            hot_experts: vec![0],
+            replica_gpus: vec![1, 2],
+            n_replica: 2,
+            w_max: 25.0,
+            w_r: 25.0,
+        };
+        p.instances[0] = vec![0, 1, 2];
+        p.polling = vec![0.25; 4];
+        let t = Topology::paper_testbed(1, 4);
+
+        // Serving round: B expert-1 tokens (primary-forced onto gpu 2 —
+        // the background hotspot the frozen weights don't know about) and
+        // B expert-0 tokens from gpu 3 (tier-ii choice over {0,1,2}).
+        let round: Vec<(usize, usize)> = (0..1000)
+            .flat_map(|_| [(1usize, 2usize), (0, 3)])
+            .collect();
+
+        fn max_share(policy: &mut dyn RoutePolicy, p: &LayerPlacement,
+                     t: &Topology, round: &[(usize, usize)]) -> f64 {
+            let ctx = RouteCtx { placement: p, topo: t, layer: 0 };
+            let mut rng = Rng::new(17);
+            let mut copies = [0.0f64; 4];
+            for _ in 0..10 {
+                for &(e, src) in round {
+                    copies[policy.select(&ctx, src, e, &mut rng)] += 1.0;
+                }
+                policy.end_round(&ctx);
+            }
+            let total: f64 = copies.iter().sum();
+            copies.iter().cloned().fold(0.0, f64::max) / total
+        }
+
+        let wrr = max_share(&mut Wrr, &p, &t, &round);
+        let la = max_share(&mut LoadAware::new(), &p, &t, &round);
+        // Static WRR keeps sending 1/3 of the replica traffic to the
+        // overloaded gpu 2 (max share → 2/3); LoadAware diverts it.
+        assert!(
+            la < wrr - 0.05,
+            "load-aware max share {la} !< wrr {wrr} - 0.05"
+        );
+    }
+
+    #[test]
+    fn load_aware_empty_round_keeps_estimate() {
+        let p = fixture();
+        let t = topo();
+        let ctx = RouteCtx { placement: &p, topo: &t, layer: 0 };
+        let mut la = LoadAware::new();
+        let mut rng = Rng::new(1);
+        la.select(&ctx, 3, 0, &mut rng);
+        la.end_round(&ctx);
+        assert_eq!(la.rounds(0), 1);
+        let before = la.online_polling(0).unwrap().to_vec();
+        la.end_round(&ctx); // no traffic since last round
+        assert_eq!(la.rounds(0), 1);
+        assert_eq!(la.online_polling(0).unwrap(), &before[..]);
     }
 }

@@ -9,7 +9,7 @@
 //! python is never touched.
 
 use crate::cluster::{GpuId, Topology};
-use crate::coordinator::Coordinator;
+use crate::coordinator::OnlineCoordinator;
 use crate::engine::real::{DistributedMoE, FfnMode, RealModel};
 use crate::exec::BoundedQueue;
 use crate::metrics::ServeMetrics;
@@ -60,36 +60,54 @@ impl Default for ServerConfig {
 }
 
 /// The serving engine: owns the model + placement and drains a queue.
-/// All placement/routing decisions flow through the L3 [`Coordinator`].
+/// All routing decisions flow through the online half of the L3
+/// coordinator ([`OnlineCoordinator`]) — the serving surface has no
+/// offline methods, so a server can never rebuild a placement that
+/// disagrees with the one it was handed.
 pub struct MoEServer {
     pub model: Arc<RealModel>,
     pub placement: Arc<Placement>,
-    pub coord: Coordinator,
+    pub coord: OnlineCoordinator,
     pub cfg: ServerConfig,
 }
 
 impl MoEServer {
-    /// Serve a prebuilt placement under `policy` on `topo` (constructs a
-    /// routing-side coordinator; see [`MoEServer::with_coordinator`] when
-    /// the caller already owns the coordinator that built the placement).
+    /// Serve a prebuilt placement under `policy` on `topo` (see
+    /// [`MoEServer::with_coordinator`] when the caller already owns the
+    /// coordinator that built the placement).
     pub fn new(model: Arc<RealModel>, placement: Arc<Placement>,
                topo: Topology, policy: RoutingPolicy,
                cfg: ServerConfig) -> MoEServer {
         Self::with_coordinator(model, placement,
-                               Coordinator::serving(topo, policy), cfg)
+                               OnlineCoordinator::new(topo, policy), cfg)
     }
 
-    /// Serve with an explicit L3 coordinator — normally the one whose
-    /// offline phase produced `placement`.
+    /// Serve with an explicit coordinator — normally (the online half of)
+    /// the one whose offline phase produced `placement`.
     pub fn with_coordinator(model: Arc<RealModel>,
-                            placement: Arc<Placement>, coord: Coordinator,
+                            placement: Arc<Placement>,
+                            coord: impl Into<OnlineCoordinator>,
                             cfg: ServerConfig) -> MoEServer {
-        MoEServer { model, placement, coord, cfg }
+        MoEServer { model, placement, coord: coord.into(), cfg }
+    }
+
+    /// The distributed executor for this server's serving loop. One
+    /// executor (and thus one dispatcher) spans a whole [`MoEServer::serve`]
+    /// drain, so a stateful policy's online load estimates accumulate
+    /// across every token of every request instead of resetting per
+    /// forward.
+    fn executor(&self) -> DistributedMoE<'_> {
+        DistributedMoE::new(
+            &self.model,
+            &self.placement,
+            &self.coord,
+            self.cfg.ffn_mode,
+        )
     }
 
     /// Full greedy forward of one sequence: returns the next token id.
-    fn next_token(&self, ids: &[i32], rng: &mut Rng)
-                  -> anyhow::Result<i32> {
+    fn next_token(&self, dist: &mut DistributedMoE<'_>, ids: &[i32],
+                  rng: &mut Rng) -> anyhow::Result<i32> {
         let c = &self.model.cfg;
         anyhow::ensure!(ids.len() <= c.ctx,
                         "sequence exceeds ctx {}", c.ctx);
@@ -100,12 +118,6 @@ impl MoEServer {
         for l in 0..c.layers {
             x = self.model.attention(&x, l, ids.len())?;
             // MoE over the valid prefix, tile by tile.
-            let dist = DistributedMoE {
-                model: &self.model,
-                placement: &self.placement,
-                coord: &self.coord,
-                ffn_mode: self.cfg.ffn_mode,
-            };
             let tiles = ids.len().div_ceil(c.tile_t);
             for tile in 0..tiles {
                 let s = tile * c.tile_t * c.hidden;
@@ -113,7 +125,7 @@ impl MoEServer {
                 let run = dist.moe_layer(
                     &x[s..e],
                     l,
-                    &|t| (tile * c.tile_t + t) * n_gpus / c.ctx,
+                    &|t| even_src(tile * c.tile_t + t, ids.len(), n_gpus),
                     rng,
                 )?;
                 x[s..e].copy_from_slice(&run.y);
@@ -147,6 +159,7 @@ impl MoEServer {
 
         let wall0 = Instant::now();
         let mut rng = Rng::new(self.cfg.seed);
+        let mut dist = self.executor();
         let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
         let mut generated = 0usize;
 
@@ -176,7 +189,7 @@ impl MoEServer {
                     {
                         continue;
                     }
-                    let next = self.next_token(ids, &mut rng)?;
+                    let next = self.next_token(&mut dist, ids, &mut rng)?;
                     ids.push(next);
                     generated += 1;
                 }
@@ -200,9 +213,18 @@ impl MoEServer {
     }
 }
 
-/// Even data-parallel assignment of a token index to a rank.
+/// Even data-parallel assignment of a token index to a rank — the one
+/// token→rank rule every engine shares (the sim engine's chunk split and
+/// the serving forward's tile walk both route through it).
+///
+/// `total` is the *live* population being split (e.g. the current
+/// sequence length, not the padded context). Indices at or past `total`
+/// (padding rows of a partially-filled tile) clamp to the last rank
+/// instead of producing an out-of-range GPU id; `total == 0` maps
+/// everything to rank 0.
 pub fn even_src(t: usize, total: usize, n_gpus: usize) -> GpuId {
-    t * n_gpus / total.max(1)
+    let total = total.max(1);
+    t.min(total - 1) * n_gpus / total
 }
 
 #[cfg(test)]
@@ -217,6 +239,44 @@ mod tests {
         assert_eq!(srcs[15], 3);
         for g in 0..4 {
             assert_eq!(srcs.iter().filter(|&&s| s == g).count(), 4);
+        }
+    }
+
+    #[test]
+    fn even_src_is_monotone_and_balanced_for_uneven_totals() {
+        for total in 1..40usize {
+            for n_gpus in 1..6usize {
+                let srcs: Vec<GpuId> =
+                    (0..total).map(|t| even_src(t, total, n_gpus)).collect();
+                assert!(srcs.windows(2).all(|w| w[0] <= w[1]),
+                        "monotone (total {total}, gpus {n_gpus})");
+                assert!(srcs.iter().all(|&s| s < n_gpus), "in range");
+                let mut counts = vec![0usize; n_gpus];
+                for &s in &srcs {
+                    counts[s] += 1;
+                }
+                let max = counts.iter().max().unwrap();
+                let min = counts.iter().min().unwrap();
+                assert!(max - min <= 1,
+                        "balanced (total {total}, gpus {n_gpus}): \
+                         {counts:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn even_src_boundaries_clamp_instead_of_overflowing() {
+        // Padding rows past the live length land on the last rank…
+        assert_eq!(even_src(10, 10, 4), 3);
+        assert_eq!(even_src(63, 10, 4), 3);
+        // …instead of the out-of-range ids the old inline formula
+        // (dividing by the padded ctx) silently avoided only because ctx
+        // bounded the index. The degenerate empty split maps to rank 0.
+        assert_eq!(even_src(0, 0, 4), 0);
+        assert_eq!(even_src(5, 0, 4), 0);
+        // Last live index is always the last rank when total ≥ n_gpus.
+        for total in 4..32usize {
+            assert_eq!(even_src(total - 1, total, 4), 3);
         }
     }
 

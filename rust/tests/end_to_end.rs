@@ -3,7 +3,7 @@
 //! loudly, if artifacts are missing).
 
 use grace_moe::cluster::Topology;
-use grace_moe::coordinator::Coordinator;
+use grace_moe::coordinator::OnlineCoordinator;
 use grace_moe::engine::real::{place_real, profile_real, DistributedMoE,
                               FfnMode, RealModel};
 use grace_moe::placement::ReplicationMode;
@@ -95,7 +95,7 @@ fn routing_policy_does_not_change_decoded_tokens() {
     ));
     let mut outputs = Vec::new();
     for policy in [RoutingPolicy::Primary, RoutingPolicy::Wrr,
-                   RoutingPolicy::Tar] {
+                   RoutingPolicy::Tar, RoutingPolicy::LoadAware] {
         let server = MoEServer::new(
             model.clone(),
             placement.clone(),
@@ -120,6 +120,8 @@ fn routing_policy_does_not_change_decoded_tokens() {
                "WRR changed decoded tokens vs Primary");
     assert_eq!(outputs[0], outputs[2],
                "TAR changed decoded tokens vs Primary");
+    assert_eq!(outputs[0], outputs[3],
+               "LoadAware changed decoded tokens vs Primary");
 }
 
 #[test]
@@ -138,13 +140,9 @@ fn dsv2_variant_also_serves() {
         0.15,
         11,
     ));
-    let coord = Coordinator::serving(topo.clone(), RoutingPolicy::Tar);
-    let dist = DistributedMoE {
-        model: &model,
-        placement: &placement,
-        coord: &coord,
-        ffn_mode: FfnMode::GroupedPallas,
-    };
+    let coord = OnlineCoordinator::new(topo.clone(), RoutingPolicy::Tar);
+    let mut dist = DistributedMoE::new(&model, &placement, &coord,
+                                       FfnMode::GroupedPallas);
     let c = model.cfg.clone();
     let mut rng = Rng::new(13);
     let x: Vec<f32> = (0..c.tile_t * c.hidden)

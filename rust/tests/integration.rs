@@ -2,19 +2,23 @@
 //! the simulator, exercised end to end with paper-shaped assertions.
 
 use grace_moe::baselines::{GroupingStrategy, SystemSpec};
-use grace_moe::cluster::Topology;
-use grace_moe::comm::CommModel;
+use grace_moe::cluster::{GpuId, Topology};
+use grace_moe::comm::model::{self, CommModel, CommReport};
+use grace_moe::comm::traffic::{self, Dispatch};
 use grace_moe::config::{ModelSpec, Workload};
 use grace_moe::coordinator::Coordinator;
 use grace_moe::engine::sim::{build_placement, simulate,
-                             simulate_with_placement, SimConfig};
+                             simulate_with_placement, SimConfig,
+                             ROUTE_DECISION_COST};
 use grace_moe::grouping::is_partition;
-use grace_moe::placement::{Placement, ReplicationMode};
+use grace_moe::metrics::RunMetrics;
+use grace_moe::placement::{LayerPlacement, Placement, ReplicationMode};
 use grace_moe::profile::ModelProfile;
 use grace_moe::routing::RoutingPolicy;
-use grace_moe::stats::Rng;
+use grace_moe::stats::dist::weighted_choice;
+use grace_moe::stats::{Rng, Summary};
 use grace_moe::testutil::{check, prop_assert};
-use grace_moe::trace::{Profile, TraceGen};
+use grace_moe::trace::{GateTrace, Profile, TraceGen};
 
 fn small(model: ModelSpec, topo: Topology) -> SimConfig {
     let model = ModelSpec { moe_layers: 3, ..model };
@@ -196,7 +200,8 @@ fn property_groupings_stay_partitions_through_placement() {
             replication: [ReplicationMode::None, ReplicationMode::Fixed,
                           ReplicationMode::Dynamic][rng.index(3)],
             routing: [RoutingPolicy::Primary, RoutingPolicy::Wrr,
-                      RoutingPolicy::Tar][rng.index(3)],
+                      RoutingPolicy::Tar, RoutingPolicy::LoadAware]
+                [rng.index(4)],
             ..SystemSpec::occult()
         };
         let p = build_placement(&sys, &cfg);
@@ -267,6 +272,256 @@ fn coordinator_pipeline_matches_hand_wired_path() {
         assert_eq!(a.layer_load_std, b.layer_load_std);
         assert_eq!(a.launches, b.launches);
         assert_eq!(a.tokens, b.tokens);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar-reference parity: a verbatim replica of the pre-refactor online
+// phase (per-token `Router::route` walk, per-token Vec<Dispatch> fed to
+// the traffic builders) that the batched DispatchPlan path must match
+// bit for bit for the frozen-weight policies (Primary / Wrr / Tar).
+// C2R-style pruning is excluded on purpose: the batched engine draws its
+// prune coins while assembling the batch, which reorders the RNG stream
+// relative to the old interleaved walk.
+// ---------------------------------------------------------------------------
+
+/// Pre-refactor `Router::wrr`, including its (biased) `candidates[0]`
+/// zero-weight fallback — the reference must reproduce the old stream
+/// exactly, and the fallback is unreachable under Eq.-4 weights anyway.
+fn scalar_wrr(lp: &LayerPlacement, candidates: &[GpuId], rng: &mut Rng)
+              -> GpuId {
+    let weights: Vec<f64> =
+        candidates.iter().map(|&g| lp.polling[g]).collect();
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        return candidates[0];
+    }
+    candidates[weighted_choice(rng, &weights)]
+}
+
+/// Pre-refactor `Router::route`.
+fn scalar_route(lp: &LayerPlacement, topo: &Topology,
+                policy: RoutingPolicy, src: GpuId, expert: usize,
+                rng: &mut Rng) -> GpuId {
+    let instances = &lp.instances[expert];
+    if instances.len() == 1 {
+        return instances[0];
+    }
+    match policy {
+        RoutingPolicy::Primary => instances[0],
+        RoutingPolicy::Wrr => scalar_wrr(lp, instances, rng),
+        RoutingPolicy::Tar => {
+            if instances.contains(&src) {
+                return src;
+            }
+            let node = topo.node_of(src);
+            let local: Vec<GpuId> = instances
+                .iter()
+                .copied()
+                .filter(|&g| topo.node_of(g) == node)
+                .collect();
+            if !local.is_empty() {
+                return scalar_wrr(lp, &local, rng);
+            }
+            scalar_wrr(lp, instances, rng)
+        }
+        RoutingPolicy::LoadAware => {
+            unreachable!("scalar reference covers frozen-weight policies")
+        }
+    }
+}
+
+/// Pre-refactor `comm_round` (token-major Vec<Dispatch> input).
+fn scalar_comm_round(sys: &SystemSpec, topo: &Topology,
+                     dispatches: &[Dispatch], spec: &ModelSpec,
+                     overlap: f64, rng: &mut Rng) -> CommReport {
+    let tb = spec.token_bytes();
+    match sys.comm {
+        CommModel::Flat => {
+            let m = if sys.dedup_flat {
+                traffic::per_gpu_dedup(dispatches, topo.num_gpus(), tb)
+            } else {
+                traffic::per_copy(dispatches, topo.num_gpus(), tb)
+            };
+            model::flat_all_to_all(&m, topo, rng)
+        }
+        CommModel::StagedHierarchical => {
+            let ts = traffic::two_stage(dispatches, topo, tb);
+            model::staged_hierarchical(&ts, topo, rng)
+        }
+        CommModel::Hsc => {
+            let ts = traffic::two_stage(dispatches, topo, tb);
+            model::hsc(&ts, topo, overlap, rng)
+        }
+    }
+}
+
+/// Pre-refactor `sim_phase`: the scalar per-token routing loop.
+fn scalar_phase(sys: &SystemSpec, cfg: &SimConfig, placement: &Placement,
+                trace: &GateTrace, scale: f64, rng: &mut Rng,
+                metrics: &mut RunMetrics) {
+    let topo = &cfg.topo;
+    let n_gpus = topo.num_gpus();
+    let spec = &cfg.model;
+    let chunk = trace.num_tokens();
+
+    let mut dispatches: Vec<Dispatch> = Vec::with_capacity(chunk);
+    let mut copies = vec![0.0f64; n_gpus];
+
+    for (layer_idx, layer) in trace.layers.iter().enumerate() {
+        let lp = &placement.layers[layer_idx];
+        dispatches.clear();
+        copies.iter_mut().for_each(|c| *c = 0.0);
+
+        for (t, experts) in layer.tokens.iter().enumerate() {
+            let src = t * n_gpus / chunk;
+            let mut dsts = Vec::with_capacity(experts.len());
+            for &e in experts {
+                let e = e as usize;
+                if sys.prune_remote > 0.0 {
+                    let primary = lp.primary[e];
+                    if !topo.same_node(src, primary)
+                        && rng.chance(sys.prune_remote)
+                    {
+                        continue;
+                    }
+                }
+                let dst =
+                    scalar_route(lp, topo, sys.routing, src, e, rng);
+                copies[dst] += 1.0;
+                dsts.push(dst);
+            }
+            dispatches.push(Dispatch { src, dsts });
+        }
+
+        let overlap = if sys.comm == CommModel::Hsc {
+            chunk as f64 * ROUTE_DECISION_COST / n_gpus as f64
+        } else {
+            0.0
+        };
+        let mut comm =
+            scalar_comm_round(sys, topo, &dispatches, spec, overlap, rng);
+        let combine =
+            scalar_comm_round(sys, topo, &dispatches, spec, 0.0, rng);
+        comm.accumulate(&combine);
+
+        let mut t_max = 0.0f64;
+        let mut t_sum = 0.0f64;
+        for &c in &copies {
+            let t = cfg.gpu.moe_time(spec, c) / sys.compute_eff
+                + cfg.gpu.layer_overhead;
+            t_max = t_max.max(t);
+            t_sum += t;
+        }
+        let idle = n_gpus as f64 * t_max - t_sum;
+
+        metrics.a2a_time += comm.time * sys.comm_eff * scale;
+        metrics.cross_bytes += comm.cross_bytes * scale;
+        metrics.intra_bytes += comm.intra_bytes * scale;
+        metrics.launches += comm.launches;
+        metrics.idle_time += idle * scale;
+        metrics
+            .layer_load_std
+            .push(Summary::of(&copies).std() * scale);
+        let layer_time = comm.time * sys.comm_eff + t_max;
+        metrics.moe_layer_time += layer_time * scale;
+        let dense =
+            cfg.gpu.dense_time(spec, chunk as f64 / n_gpus as f64)
+                + cfg.gpu.layer_overhead;
+        metrics.e2e_time += (layer_time + dense) * scale;
+    }
+}
+
+/// Pre-refactor `simulate_with_placement` (identical chunking and serve-
+/// trace seed derivation).
+fn scalar_simulate(sys: &SystemSpec, cfg: &SimConfig,
+                   placement: &Placement) -> RunMetrics {
+    let serve = |tokens: usize, tag: u64| {
+        TraceGen {
+            experts: cfg.model.experts,
+            top_k: cfg.model.top_k,
+            layers: cfg.model.moe_layers,
+            profile: cfg.serve_profile,
+            seed: cfg.seed.wrapping_mul(0x1009).wrapping_add(tag),
+        }
+        .generate(tokens)
+    };
+    let mut rng = Rng::new(cfg.seed ^ 0x5E21);
+    let mut metrics = RunMetrics::default();
+    let prefill_tokens = cfg.workload.batch * cfg.workload.prefill;
+    let chunk = prefill_tokens.min(cfg.max_chunk);
+    if chunk > 0 {
+        let scale = prefill_tokens as f64 / chunk as f64;
+        scalar_phase(sys, cfg, placement, &serve(chunk, 1), scale,
+                     &mut rng, &mut metrics);
+    }
+    let dchunk = cfg.workload.batch.min(cfg.max_chunk);
+    if dchunk > 0 && cfg.workload.decode > 0 {
+        let scale = cfg.workload.decode as f64
+            * cfg.workload.batch as f64
+            / dchunk as f64;
+        scalar_phase(sys, cfg, placement, &serve(dchunk, 2), scale,
+                     &mut rng, &mut metrics);
+    }
+    metrics.tokens = cfg.workload.total_tokens();
+    metrics
+}
+
+#[test]
+fn batched_dispatch_matches_scalar_routing_bit_for_bit() {
+    // Primary / Wrr / Tar across all three collectives: the batched
+    // DispatchPlan path must reproduce the pre-refactor scalar path's
+    // metrics exactly (same RNG stream, same summation order).
+    let ladder = SystemSpec::table1_ladder(0.15);
+    let systems = vec![
+        SystemSpec::vanilla(),               // Primary, flat, no dedup
+        SystemSpec::occult(),                // Primary, flat, dedup
+        SystemSpec {
+            name: "occult+staged",
+            comm: CommModel::StagedHierarchical,
+            ..SystemSpec::occult()
+        },                                   // Primary, staged
+        ladder[4].clone(),                   // +dr+wrr: Wrr on HSC
+        SystemSpec::grace(0.15),             // Tar on HSC
+    ];
+    for sys in systems {
+        let cfg = small(ModelSpec::olmoe(), Topology::two_by_two());
+        let placement = build_placement(&sys, &cfg);
+        let scalar = scalar_simulate(&sys, &cfg, &placement);
+        let batched = simulate_with_placement(&sys, &cfg, &placement);
+        assert_eq!(scalar.e2e_time, batched.e2e_time, "{}", sys.name);
+        assert_eq!(scalar.moe_layer_time, batched.moe_layer_time,
+                   "{}", sys.name);
+        assert_eq!(scalar.a2a_time, batched.a2a_time, "{}", sys.name);
+        assert_eq!(scalar.cross_bytes, batched.cross_bytes,
+                   "{}", sys.name);
+        assert_eq!(scalar.intra_bytes, batched.intra_bytes,
+                   "{}", sys.name);
+        assert_eq!(scalar.idle_time, batched.idle_time, "{}", sys.name);
+        assert_eq!(scalar.layer_load_std, batched.layer_load_std,
+                   "{}", sys.name);
+        assert_eq!(scalar.launches, batched.launches, "{}", sys.name);
+        assert_eq!(scalar.tokens, batched.tokens, "{}", sys.name);
+    }
+}
+
+#[test]
+fn load_aware_pipeline_runs_end_to_end() {
+    // The online load-predictive router through the whole sim pipeline:
+    // sane, deterministic metrics on every model (the statistical
+    // max-load-share claim is pinned at the policy level in
+    // routing::tests::load_aware_reduces_max_load_share_vs_static_wrr).
+    for model in ModelSpec::all() {
+        let mut cfg = small(model, Topology::two_by_two());
+        cfg.serve_profile = Profile::Math;
+        cfg.placement_profile = Profile::Text; // drifted vs serving
+        let sys = SystemSpec::grace_load_aware(0.15);
+        let a = simulate(&sys, &cfg);
+        let b = simulate(&sys, &cfg);
+        assert!(a.e2e_time > 0.0 && a.e2e_time.is_finite());
+        assert!(a.idle_time >= -1e-9);
+        assert_eq!(a.e2e_time, b.e2e_time, "deterministic");
+        assert_eq!(a.layer_load_std, b.layer_load_std);
     }
 }
 
