@@ -7,13 +7,16 @@
 #                     mode — simulate mode and tier-1 tests run without it)
 #   make bench-smoke— compile every paper-figure bench without running it
 #   make lint       — rustfmt + clippy, as CI runs them
+#   make docs       — rustdoc with warnings-as-errors (missing_docs,
+#                     broken intra-doc links) + check that every public
+#                     module is covered by docs/ARCHITECTURE.md
 #   make pytest     — python test suite (loudly skips without jax)
 #   make clean      — remove build products and artifacts
 
 PYTHON       ?= python3
 ARTIFACTS    ?= rust/artifacts
 
-.PHONY: all build test artifacts bench-smoke lint pytest clean
+.PHONY: all build test artifacts bench-smoke lint docs pytest clean
 
 all: build
 
@@ -37,6 +40,18 @@ bench-smoke:
 lint:
 	cargo fmt --all --check
 	cargo clippy --workspace --all-targets -- -D warnings
+
+# Documentation gate: rustdoc must be warning-clean (lib.rs carries
+# #![warn(missing_docs)] and denies broken intra-doc links), and the
+# paper-to-code guide must mention every public module so it cannot rot.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --workspace --no-deps
+	@missing=0; \
+	for m in $$(sed -n 's/^pub mod \([a-z_]*\);.*/\1/p' rust/src/lib.rs); do \
+	  grep -q "\`$$m\`" docs/ARCHITECTURE.md || { \
+	    echo "docs/ARCHITECTURE.md: missing module $$m"; missing=1; }; \
+	done; \
+	test $$missing -eq 0 && echo "ARCHITECTURE.md covers every pub mod"
 
 pytest:
 	$(PYTHON) -m pytest python/tests -q

@@ -114,6 +114,7 @@ fn main() {
                 n_replica: n_rep,
                 w_max: loads[heavy],
                 w_r,
+                computed: true,
             };
             let post = predict_loads(&loads, heavy, &rep);
             let s = Summary::of(&post);

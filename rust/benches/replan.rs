@@ -1,0 +1,96 @@
+//! Drifting-workload bench: static GRACE vs the epoch re-planned
+//! `grace-dyn` on a serving trace whose hot-expert set rotates mid-run.
+//!
+//! The offline phase profiles the *pre-drift* distribution, so the
+//! static system keeps balancing yesterday's hot experts for the whole
+//! second act; the re-planned system detects the skew drift from
+//! measured loads, migrates replicas (migration bytes are priced into
+//! its latency), and re-flattens the load. Reported per system:
+//! end-to-end latency, A2A time, max per-GPU load share over the
+//! post-drift rounds, migration traffic, and applied re-plans — plus
+//! wall-clock of the replay itself.
+//!
+//! Run: `cargo bench --bench replan`
+
+use grace_moe::baselines::SystemSpec;
+use grace_moe::bench::{bench, Table};
+use grace_moe::cluster::Topology;
+use grace_moe::config::{ModelSpec, Workload};
+use grace_moe::engine::sim::{build_placement, drifting_rounds,
+                             simulate_rounds, SimConfig};
+use grace_moe::replan::ReplanConfig;
+use grace_moe::trace::Profile;
+
+const ROUNDS: usize = 18;
+const DRIFT_AT: usize = 6;
+const TOKENS: usize = 2048;
+
+fn main() {
+    let model = ModelSpec { moe_layers: 4, ..ModelSpec::olmoe() };
+    let mut cfg = SimConfig::new(
+        model,
+        Topology::two_by_two(),
+        Workload::heavy_i(),
+    );
+    cfg.serve_profile = Profile::Math; // strongest skew
+    cfg.placement_profile = Profile::Math;
+    cfg.profile_tokens = 1024;
+    let rc = ReplanConfig {
+        epoch_rounds: 2,
+        min_drift: 0.05,
+        payback: 1.0,
+        ..ReplanConfig::default()
+    };
+
+    let sys = SystemSpec::grace(0.15);
+    let dyn_sys = SystemSpec::grace_dyn(0.15);
+    let placement = build_placement(&sys, &cfg);
+    let shift = cfg.model.experts / 2;
+    let rounds = drifting_rounds(&cfg, ROUNDS, DRIFT_AT, shift, TOKENS);
+    println!(
+        "{ROUNDS} rounds x {TOKENS} tokens, hot set rotates by {shift} \
+         at round {DRIFT_AT}; epoch {} rounds, threshold {}",
+        rc.epoch_rounds, rc.min_drift
+    );
+
+    let mut table = Table::new(&[
+        "SYSTEM",
+        "E2E (ms)",
+        "A2A (ms)",
+        "MAX SHARE (post-drift)",
+        "MIGRATION (MB)",
+        "REPLANS",
+    ]);
+    for (name, replan) in
+        [("grace (static)", None), ("grace-dyn", Some(rc))]
+    {
+        let (m, rep) =
+            simulate_rounds(&sys_for(name, &sys, &dyn_sys), &cfg,
+                            &placement, &rounds, replan);
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}", m.e2e_time * 1e3),
+            format!("{:.2}", m.a2a_time * 1e3),
+            format!("{:.3}", rep.max_load_share(DRIFT_AT)),
+            format!("{:.1}", m.migration_bytes / 1e6),
+            format!("{}", m.replans),
+        ]);
+
+        let r = bench(&format!("replay {ROUNDS} rounds ({name})"), 1, 5,
+                      || {
+            simulate_rounds(&sys_for(name, &sys, &dyn_sys), &cfg,
+                            &placement, &rounds, replan)
+        });
+        println!("{}", r.report_line());
+    }
+    println!("{}", table.render());
+}
+
+fn sys_for(name: &str, stat: &SystemSpec, dynamic: &SystemSpec)
+           -> SystemSpec {
+    if name.contains("dyn") {
+        dynamic.clone()
+    } else {
+        stat.clone()
+    }
+}

@@ -90,7 +90,7 @@ fn main() -> anyhow::Result<()> {
     for policy in [RoutingPolicy::Primary, RoutingPolicy::Wrr,
                    RoutingPolicy::Tar, RoutingPolicy::LoadAware] {
         let policy_coord = OnlineCoordinator::new(topo.clone(), policy);
-        let mut dist = DistributedMoE::new(&model, &placement,
+        let mut dist = DistributedMoE::new(&model, placement.clone(),
                                            &policy_coord,
                                            FfnMode::GroupedPallas);
         let want = model.moe_layer_oracle(&x, 0)?;
@@ -110,7 +110,7 @@ fn main() -> anyhow::Result<()> {
     println!("  lossless ✓ (same numerics under every routing policy)");
 
     println!("\n== 4+6. serve batched requests (TAR routing) ==");
-    let server = MoEServer::with_coordinator(
+    let mut server = MoEServer::with_coordinator(
         model.clone(),
         placement.clone(),
         coord.clone(),
@@ -119,6 +119,7 @@ fn main() -> anyhow::Result<()> {
             queue_cap: 64,
             seed,
             ffn_mode: FfnMode::PerExpert,
+            replan: None,
         },
     );
     let mut rng = Rng::new(seed);
@@ -149,7 +150,7 @@ fn main() -> anyhow::Result<()> {
     );
 
     // Determinism spot-check: greedy decode twice must agree.
-    let server2 = MoEServer::with_coordinator(
+    let mut server2 = MoEServer::with_coordinator(
         model.clone(),
         placement,
         coord,
@@ -158,6 +159,7 @@ fn main() -> anyhow::Result<()> {
             queue_cap: 64,
             seed,
             ffn_mode: FfnMode::PerExpert,
+            replan: None,
         },
     );
     let mut rng = Rng::new(seed);

@@ -78,10 +78,15 @@ impl GroupingStrategy {
 /// Full system description consumed by the engine.
 #[derive(Clone, Debug, PartialEq)]
 pub struct SystemSpec {
+    /// System name (report labels, CLI values).
     pub name: &'static str,
+    /// Expert → GPU grouping strategy (§4.1).
     pub grouping: GroupingStrategy,
+    /// Replica-selection mode (§4.2).
     pub replication: ReplicationMode,
+    /// Online replica-routing policy (§4.3).
     pub routing: RoutingPolicy,
+    /// All-to-All collective implementation (§5).
     pub comm: CommModel,
     /// Multiplier on the GPU's achieved MoE-GEMM efficiency (backend
     /// kernel quality: MegaBlocks' block-sparse reformulation ≈ 1.3×
@@ -98,13 +103,20 @@ pub struct SystemSpec {
     /// collaboration-aware systems (C2R / Occult) merge them — their
     /// entire contribution is built around this aggregation.
     pub dedup_flat: bool,
+    /// Whether the system re-plans replication online from measured
+    /// loads (the epoch loop of [`crate::replan`]); the engine consults
+    /// [`crate::engine::sim::SimConfig::replan`] for the cadence. Only
+    /// [`SystemSpec::grace_dyn`] sets it.
+    pub online_replan: bool,
 }
 
 impl SystemSpec {
+    /// `true` when routing never drops assignments (C2R prunes).
     pub fn lossless(&self) -> bool {
         self.prune_remote == 0.0
     }
 
+    /// Reference vanilla expert parallelism.
     pub fn vanilla() -> Self {
         SystemSpec {
             name: "vanilla",
@@ -116,9 +128,11 @@ impl SystemSpec {
             comm_eff: 1.0,
             prune_remote: 0.0,
             dedup_flat: false,
+            online_replan: false,
         }
     }
 
+    /// Tutel: vanilla EP with tuned A2A kernels.
     pub fn tutel() -> Self {
         SystemSpec {
             name: "tutel",
@@ -128,6 +142,7 @@ impl SystemSpec {
         }
     }
 
+    /// MegaBlocks: vanilla EP with block-sparse expert GEMMs.
     pub fn megablocks() -> Self {
         SystemSpec {
             name: "megablocks",
@@ -136,6 +151,7 @@ impl SystemSpec {
         }
     }
 
+    /// vLLM: serving-optimized vanilla EP.
     pub fn vllm() -> Self {
         SystemSpec {
             name: "vllm",
@@ -182,6 +198,7 @@ impl SystemSpec {
             comm_eff: 1.0,
             prune_remote: 0.0,
             dedup_flat: true,
+            online_replan: false,
         }
     }
 
@@ -193,6 +210,20 @@ impl SystemSpec {
         SystemSpec {
             name: "grace+la",
             routing: RoutingPolicy::LoadAware,
+            ..Self::grace(r)
+        }
+    }
+
+    /// GRACE-MoE with epoch-based online re-planning: the full GRACE
+    /// pipeline plus the measured-load → replication feedback loop of
+    /// [`crate::replan`] — replica sets and polling weights are
+    /// recomputed at epoch boundaries and hot-swapped when the migration
+    /// pays for itself. The drifting-workload system (beyond-paper
+    /// variant; stationary workloads reduce it to exactly `grace`).
+    pub fn grace_dyn(r: f64) -> Self {
+        SystemSpec {
+            name: "grace-dyn",
+            online_replan: true,
             ..Self::grace(r)
         }
     }
@@ -345,6 +376,18 @@ mod tests {
         assert_eq!(la.routing, RoutingPolicy::LoadAware);
         assert_eq!(SystemSpec { name: g.name, routing: g.routing, ..la },
                    g);
+    }
+
+    #[test]
+    fn grace_dyn_differs_only_in_replan_flag() {
+        let g = SystemSpec::grace(0.15);
+        let d = SystemSpec::grace_dyn(0.15);
+        assert!(d.online_replan && !g.online_replan);
+        assert!(d.lossless());
+        assert_eq!(
+            SystemSpec { name: g.name, online_replan: false, ..d },
+            g
+        );
     }
 
     #[test]

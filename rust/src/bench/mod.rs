@@ -8,25 +8,31 @@ use std::time::Instant;
 /// Timing result of one benchmark case.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Case name.
     pub name: String,
+    /// Timed iterations.
     pub iters: usize,
     /// Per-iteration wall time in seconds.
     pub secs: Summary,
 }
 
 impl BenchResult {
+    /// Mean per-iteration time, milliseconds.
     pub fn mean_ms(&self) -> f64 {
         self.secs.mean() * 1e3
     }
 
+    /// Median per-iteration time, milliseconds.
     pub fn p50_ms(&self) -> f64 {
         self.secs.p50() * 1e3
     }
 
+    /// p99 per-iteration time, milliseconds.
     pub fn p99_ms(&self) -> f64 {
         self.secs.p99() * 1e3
     }
 
+    /// One formatted result line for bench output.
     pub fn report_line(&self) -> String {
         format!(
             "{:<44} {:>10.4} ms/iter  (p50 {:>9.4}, p99 {:>9.4}, n={})",
@@ -77,6 +83,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new(header: &[&str]) -> Self {
         Table {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -84,11 +91,13 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header width).
     pub fn row(&mut self, cells: Vec<String>) {
         assert_eq!(cells.len(), self.header.len(), "ragged table row");
         self.rows.push(cells);
     }
 
+    /// Render the aligned fixed-width table.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths: Vec<usize> =

@@ -6,12 +6,17 @@ use std::collections::BTreeMap;
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// First bare token (the subcommand).
     pub subcommand: Option<String>,
+    /// `--key value` / `--key=value` options.
     pub options: BTreeMap<String, String>,
+    /// Boolean `--flag`s seen (must be listed in `known_flags`).
     pub flags: Vec<String>,
+    /// Remaining bare tokens after the subcommand.
     pub positionals: Vec<String>,
 }
 
+/// Argument-parsing errors.
 #[derive(Debug)]
 pub enum CliError {
     /// `--key` appeared as the final token with no value following.
@@ -72,18 +77,22 @@ impl Args {
         Ok(args)
     }
 
+    /// Whether boolean flag `--name` was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// String option with a default.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.options.get(key).map(String::as_str).unwrap_or(default)
     }
 
+    /// Raw option value, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(String::as_str)
     }
 
+    /// `usize` option with a default; malformed values are errors.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
         match self.options.get(key) {
             None => Ok(default),
@@ -94,6 +103,7 @@ impl Args {
         }
     }
 
+    /// `f64` option with a default; malformed values are errors.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
         match self.options.get(key) {
             None => Ok(default),
@@ -104,6 +114,7 @@ impl Args {
         }
     }
 
+    /// `u64` option with a default; malformed values are errors.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
         match self.options.get(key) {
             None => Ok(default),

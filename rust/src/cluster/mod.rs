@@ -15,15 +15,18 @@ pub type NodeId = usize;
 /// Physical cluster description + link parameters.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Topology {
+    /// Nodes in the cluster.
     pub nodes: usize,
+    /// GPUs per node (rail-aligned; global GPU ids are dense).
     pub gpus_per_node: usize,
     /// Intra-node (NVLink) bandwidth, bytes/second per GPU pair direction.
     pub intra_bw: f64,
     /// Cross-node NIC bandwidth, bytes/second per node (shared by all its
     /// GPUs — the paper's scarce resource).
     pub inter_bw: f64,
-    /// Per-message latency floors, seconds.
+    /// Per-message intra-node latency floor, seconds.
     pub intra_lat: f64,
+    /// Per-message cross-node latency floor, seconds.
     pub inter_lat: f64,
     /// Per-collective-stage kernel launch + sync overhead, seconds.
     pub launch_overhead: f64,
@@ -55,19 +58,23 @@ impl Topology {
         Self::paper_testbed(2, 2)
     }
 
+    /// The paper's larger testbed: 2 nodes × 4 GPUs.
     pub fn two_by_four() -> Self {
         Self::paper_testbed(2, 4)
     }
 
+    /// Total GPUs in the cluster.
     pub fn num_gpus(&self) -> usize {
         self.nodes * self.gpus_per_node
     }
 
+    /// Node hosting `gpu`.
     #[inline]
     pub fn node_of(&self, gpu: GpuId) -> NodeId {
         gpu / self.gpus_per_node
     }
 
+    /// Whether two GPUs share a node (NVLink reach).
     #[inline]
     pub fn same_node(&self, a: GpuId, b: GpuId) -> bool {
         self.node_of(a) == self.node_of(b)

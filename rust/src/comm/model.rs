@@ -47,6 +47,7 @@ pub struct CommReport {
 }
 
 impl CommReport {
+    /// Sum another invocation's costs into this report.
     pub fn accumulate(&mut self, other: &CommReport) {
         self.time += other.time;
         self.cross_bytes += other.cross_bytes;

@@ -17,7 +17,9 @@ use crate::routing::DispatchPlan;
 /// GPU hosting each of its selected expert instances.
 #[derive(Clone, Debug)]
 pub struct Dispatch {
+    /// GPU the token resides on.
     pub src: GpuId,
+    /// Destination GPU of each of the token's expert assignments.
     pub dsts: Vec<GpuId>,
 }
 
@@ -32,6 +34,7 @@ pub struct TrafficMatrix {
 }
 
 impl TrafficMatrix {
+    /// Empty matrix over `num_gpus` GPUs.
     pub fn zeros(num_gpus: usize) -> Self {
         TrafficMatrix {
             n: num_gpus,
@@ -40,26 +43,31 @@ impl TrafficMatrix {
         }
     }
 
+    /// GPUs the matrix spans.
     pub fn num_gpus(&self) -> usize {
         self.n
     }
 
+    /// Record one message of `bytes` from `src` to `dst`.
     #[inline]
     pub fn add(&mut self, src: GpuId, dst: GpuId, bytes: f64) {
         self.bytes[src * self.n + dst] += bytes;
         self.msgs[src * self.n + dst] += 1;
     }
 
+    /// Accumulated bytes of the `(src, dst)` slot.
     #[inline]
     pub fn get(&self, src: GpuId, dst: GpuId) -> f64 {
         self.bytes[src * self.n + dst]
     }
 
+    /// Messages recorded into the `(src, dst)` slot.
     #[inline]
     pub fn msg_count(&self, src: GpuId, dst: GpuId) -> u64 {
         self.msgs[src * self.n + dst]
     }
 
+    /// Total bytes over all slots (diagonal included).
     pub fn total_bytes(&self) -> f64 {
         self.bytes.iter().sum()
     }
@@ -109,7 +117,9 @@ impl TrafficMatrix {
 /// over the global GPU id space; entries are always intra-node).
 #[derive(Clone, Debug)]
 pub struct TwoStageTraffic {
+    /// Stage-1 node-deduplicated cross-node transfers.
     pub cross: TrafficMatrix,
+    /// Stage-2 per-node redistribution transfers.
     pub intra: TrafficMatrix,
 }
 

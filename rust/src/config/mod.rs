@@ -15,12 +15,17 @@ use crate::configio::Value;
 /// Paper-scale MoE model architecture (Table 3 + public model cards).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ModelSpec {
+    /// Model name (CLI values and report labels).
     pub name: &'static str,
     /// Matching tiny-variant name in artifacts/manifest.json.
     pub tiny_variant: &'static str,
+    /// Experts per MoE layer.
     pub experts: usize,
+    /// Experts each token activates.
     pub top_k: usize,
+    /// MoE layers in the model.
     pub moe_layers: usize,
+    /// Hidden (model) dimension.
     pub hidden: usize,
     /// Per-expert FFN intermediate dim.
     pub ffn: usize,
@@ -71,10 +76,12 @@ impl ModelSpec {
         }
     }
 
+    /// The three evaluated architectures (paper Table 3).
     pub fn all() -> Vec<ModelSpec> {
         vec![Self::olmoe(), Self::dsv2_lite(), Self::qwen3()]
     }
 
+    /// Look a model up by [`ModelSpec::name`].
     pub fn by_name(name: &str) -> Option<ModelSpec> {
         Self::all().into_iter().find(|m| m.name == name)
     }
@@ -115,6 +122,7 @@ pub struct GpuModel {
 }
 
 impl GpuModel {
+    /// A100-SXM4 bf16 cost model (the paper's testbed GPU).
     pub fn a100() -> Self {
         GpuModel {
             peak_flops: 312e12,
@@ -130,6 +138,7 @@ impl GpuModel {
             / (self.peak_flops * self.moe_efficiency)
     }
 
+    /// Seconds for the dense (attention) part over `tokens` tokens.
     pub fn dense_time(&self, spec: &ModelSpec, tokens: f64) -> f64 {
         tokens * spec.dense_flops_per_token()
             / (self.peak_flops * self.dense_efficiency)
@@ -140,8 +149,11 @@ impl GpuModel {
 /// tokens each, `decode` generated tokens each.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Workload {
+    /// Concurrent sequences.
     pub batch: usize,
+    /// Prompt tokens per sequence.
     pub prefill: usize,
+    /// Generated tokens per sequence.
     pub decode: usize,
 }
 
@@ -161,10 +173,12 @@ impl Workload {
         Workload { batch: 64, prefill: 128, decode: 16 }
     }
 
+    /// Appendix A.5 light workload (ii).
     pub fn light_ii() -> Self {
         Workload { batch: 128, prefill: 64, decode: 32 }
     }
 
+    /// Compact label for tables (`bs…-pf…-dec…`).
     pub fn label(&self) -> String {
         format!("bs{}-pf{}-dec{}", self.batch, self.prefill, self.decode)
     }
@@ -174,6 +188,7 @@ impl Workload {
         self.batch * (self.prefill + self.decode)
     }
 
+    /// Parse from a JSON-style config object.
     pub fn from_value(v: &Value) -> Result<Workload, String> {
         Ok(Workload {
             batch: v.req_usize("batch").map_err(|e| e.to_string())?,
@@ -182,6 +197,7 @@ impl Workload {
         })
     }
 
+    /// Serialise to a JSON-style config object.
     pub fn to_value(&self) -> Value {
         Value::object(vec![
             ("batch", Value::from(self.batch)),

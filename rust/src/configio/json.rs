@@ -7,8 +7,11 @@ use std::collections::BTreeMap;
 /// Parse error with byte offset and a short context excerpt.
 #[derive(Debug)]
 pub struct ParseError {
+    /// Byte offset of the failure.
     pub offset: usize,
+    /// What the parser expected.
     pub msg: String,
+    /// A short excerpt of the input at the failure point.
     pub near: String,
 }
 

@@ -6,19 +6,34 @@ use std::fmt;
 /// A JSON-style value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Value {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always f64).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Array(Vec<Value>),
+    /// JSON object (sorted keys).
     Object(BTreeMap<String, Value>),
 }
 
 /// Typed-access errors with a path-ish message for debuggability.
 #[derive(Debug)]
 pub enum ValueError {
+    /// Required key absent.
     Missing(String),
-    Type { key: String, want: &'static str, got: &'static str },
+    /// Key present with the wrong type.
+    Type {
+        /// The key looked up.
+        key: String,
+        /// Expected type name.
+        want: &'static str,
+        /// Actual type name found.
+        got: &'static str,
+    },
 }
 
 impl fmt::Display for ValueError {
@@ -35,6 +50,7 @@ impl fmt::Display for ValueError {
 impl std::error::Error for ValueError {}
 
 impl Value {
+    /// Type name of this value (diagnostics).
     pub fn kind(&self) -> &'static str {
         match self {
             Value::Null => "null",
@@ -46,6 +62,7 @@ impl Value {
         }
     }
 
+    /// The object map, if this is an object.
     pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Object(m) => Some(m),
@@ -53,6 +70,7 @@ impl Value {
         }
     }
 
+    /// The element slice, if this is an array.
     pub fn as_array(&self) -> Option<&[Value]> {
         match self {
             Value::Array(a) => Some(a),
@@ -60,6 +78,7 @@ impl Value {
         }
     }
 
+    /// The number, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Value::Num(x) => Some(*x),
@@ -67,6 +86,7 @@ impl Value {
         }
     }
 
+    /// The number as a usize, if it is a non-negative integer.
     pub fn as_usize(&self) -> Option<usize> {
         match self {
             Value::Num(x) if *x >= 0.0 && x.fract() == 0.0 => {
@@ -76,6 +96,7 @@ impl Value {
         }
     }
 
+    /// The string, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -83,6 +104,7 @@ impl Value {
         }
     }
 
+    /// The boolean, if this is a boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Value::Bool(b) => Some(*b),
@@ -95,11 +117,12 @@ impl Value {
         self.as_object().and_then(|m| m.get(key))
     }
 
-    /// Required typed getters (errors carry the key for diagnostics).
+    /// Required member (errors carry the key for diagnostics).
     pub fn req(&self, key: &str) -> Result<&Value, ValueError> {
         self.get(key).ok_or_else(|| ValueError::Missing(key.into()))
     }
 
+    /// Required non-negative-integer member.
     pub fn req_usize(&self, key: &str) -> Result<usize, ValueError> {
         let v = self.req(key)?;
         v.as_usize().ok_or_else(|| ValueError::Type {
@@ -109,6 +132,7 @@ impl Value {
         })
     }
 
+    /// Required number member.
     pub fn req_f64(&self, key: &str) -> Result<f64, ValueError> {
         let v = self.req(key)?;
         v.as_f64().ok_or_else(|| ValueError::Type {
@@ -118,6 +142,7 @@ impl Value {
         })
     }
 
+    /// Required string member.
     pub fn req_str(&self, key: &str) -> Result<&str, ValueError> {
         let v = self.req(key)?;
         v.as_str().ok_or_else(|| ValueError::Type {
@@ -127,6 +152,7 @@ impl Value {
         })
     }
 
+    /// Required array member.
     pub fn req_array(&self, key: &str) -> Result<&[Value], ValueError> {
         let v = self.req(key)?;
         v.as_array().ok_or_else(|| ValueError::Type {
@@ -136,38 +162,44 @@ impl Value {
         })
     }
 
-    /// Optional getter with default.
+    /// Optional non-negative-integer member with default.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).and_then(|v| v.as_usize()).unwrap_or(default)
     }
 
+    /// Optional number member with default.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
     }
 
+    /// Optional string member with default.
     pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
     }
 
+    /// Optional boolean member with default.
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
     }
 
-    /// Builder helpers.
+    /// Build an object from `(key, value)` pairs.
     pub fn object(pairs: Vec<(&str, Value)>) -> Value {
         Value::Object(
             pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
         )
     }
 
+    /// Build an array from an iterator of values.
     pub fn array<I: IntoIterator<Item = Value>>(items: I) -> Value {
         Value::Array(items.into_iter().collect())
     }
 
+    /// Build a number value.
     pub fn num<T: Into<f64>>(x: T) -> Value {
         Value::Num(x.into())
     }
 
+    /// Build a string value.
     pub fn str(s: impl Into<String>) -> Value {
         Value::Str(s.into())
     }

@@ -33,7 +33,14 @@
 //!   call `place()` with a default seed and silently produce a placement
 //!   unrelated to the one it serves (the old `Coordinator::serving`
 //!   footgun). Every full [`Coordinator`] converts into its online half
-//!   via [`Coordinator::online`] / `From`.
+//!   via [`Coordinator::online`] / `From`. With a
+//!   [`crate::replan::Replanner`] attached
+//!   ([`OnlineCoordinator::with_replanner`]) the online half also closes
+//!   the measured-load → replication feedback loop:
+//!   [`OnlineCoordinator::observe`] per dispatch round,
+//!   [`OnlineCoordinator::epoch_tick`] between rounds, and the returned
+//!   [`crate::replan::ReplanDelta`] hot-swaps the placement the engines
+//!   serve.
 //!
 //! Determinism: every offline decision derives from the construction
 //! seed. The grouping RNG is decorrelated from trace generation with a
@@ -44,7 +51,9 @@ use crate::cluster::Topology;
 use crate::config::ModelSpec;
 use crate::placement::{Placement, ReplicationMode};
 use crate::profile::ModelProfile;
-use crate::routing::{Dispatcher, RoutePolicy, RoutingPolicy};
+use crate::replan::{ReplanDelta, Replanner};
+use crate::routing::{DispatchPlan, Dispatcher, RoutePolicy,
+                     RoutingPolicy};
 use crate::stats::Rng;
 use crate::trace::{GateTrace, Profile, TraceGen};
 
@@ -52,28 +61,77 @@ use crate::trace::{GateTrace, Profile, TraceGen};
 /// profiling-trace stream (both are derived from the same run seed).
 const GROUPING_SEED_TAG: u64 = 0x9A0C;
 
-/// The online half of the pipeline: topology + routing policy, nothing
-/// else. This is the only coordination surface serving components hold,
-/// so the offline methods are unreachable from them by construction.
+/// The online half of the pipeline: topology + routing policy + (when
+/// enabled) the epoch re-planner — and nothing offline. This is the only
+/// coordination surface serving components hold, so the offline methods
+/// are unreachable from them by construction.
 #[derive(Clone, Debug)]
 pub struct OnlineCoordinator {
     topo: Topology,
     routing: RoutingPolicy,
+    replan: Option<Replanner>,
 }
 
 impl OnlineCoordinator {
     /// Online coordinator for serving a prebuilt placement under
-    /// `routing` on `topo`.
+    /// `routing` on `topo` (re-planning off; see
+    /// [`OnlineCoordinator::with_replanner`]).
     pub fn new(topo: Topology, routing: RoutingPolicy) -> OnlineCoordinator {
-        OnlineCoordinator { topo, routing }
+        OnlineCoordinator { topo, routing, replan: None }
     }
 
+    /// Attach an epoch re-planner: observed dispatch rounds feed its
+    /// load estimator and [`OnlineCoordinator::epoch_tick`] becomes
+    /// live.
+    pub fn with_replanner(mut self, replanner: Replanner)
+                          -> OnlineCoordinator {
+        self.replan = Some(replanner);
+        self
+    }
+
+    /// The cluster topology serving routes against.
     pub fn topo(&self) -> &Topology {
         &self.topo
     }
 
+    /// The configured routing policy.
     pub fn routing(&self) -> RoutingPolicy {
         self.routing
+    }
+
+    /// The attached re-planner, if online re-planning is enabled.
+    pub fn replanner(&self) -> Option<&Replanner> {
+        self.replan.as_ref()
+    }
+
+    /// Mutable access to the attached re-planner (feed it observed
+    /// [`DispatchPlan`]s via [`Replanner::observe`]).
+    pub fn replanner_mut(&mut self) -> Option<&mut Replanner> {
+        self.replan.as_mut()
+    }
+
+    /// Feed one finished dispatch round to the re-planner (no-op when
+    /// re-planning is off). `lp` must be the layer placement the plan
+    /// was routed with.
+    pub fn observe(&mut self, layer: usize,
+                   lp: &crate::placement::LayerPlacement,
+                   plan: &DispatchPlan) {
+        if let Some(r) = self.replan.as_mut() {
+            r.observe(layer, lp, plan);
+        }
+    }
+
+    /// Evaluate an epoch boundary against the active placement: returns
+    /// the (possibly empty) [`ReplanDelta`] the caller should apply via
+    /// [`crate::replan::apply_delta`]. Always empty when re-planning is
+    /// off or between epoch boundaries. Call it only between dispatch
+    /// rounds — never mid-round — so a plan is always executed against
+    /// the placement it was routed with.
+    pub fn epoch_tick(&mut self, active: &Placement) -> ReplanDelta {
+        self.replan
+            .as_mut()
+            .map(|r| r.epoch_tick(active))
+            .unwrap_or_default()
     }
 
     /// Instantiate the policy object executing the configured routing
@@ -100,7 +158,7 @@ impl From<&Coordinator> for OnlineCoordinator {
 
 impl From<Coordinator> for OnlineCoordinator {
     fn from(c: Coordinator) -> OnlineCoordinator {
-        OnlineCoordinator { topo: c.topo, routing: c.routing }
+        OnlineCoordinator { topo: c.topo, routing: c.routing, replan: None }
     }
 }
 
@@ -144,22 +202,27 @@ impl Coordinator {
         )
     }
 
+    /// The cluster topology the pipeline places and routes against.
     pub fn topo(&self) -> &Topology {
         &self.topo
     }
 
+    /// The configured grouping strategy (§4.1).
     pub fn grouping(&self) -> GroupingStrategy {
         self.grouping
     }
 
+    /// The configured replication mode (§4.2).
     pub fn replication(&self) -> ReplicationMode {
         self.replication
     }
 
+    /// The configured routing policy (§4.3).
     pub fn routing(&self) -> RoutingPolicy {
         self.routing
     }
 
+    /// The construction seed every offline decision derives from.
     pub fn seed(&self) -> u64 {
         self.seed
     }

@@ -15,4 +15,5 @@
 pub mod real;
 pub mod sim;
 
-pub use sim::{simulate, simulate_with_placement, SimConfig};
+pub use sim::{simulate, simulate_rounds, simulate_with_placement,
+              ReplanReport, SimConfig};

@@ -20,6 +20,7 @@ use crate::baselines::GroupingStrategy;
 use crate::cluster::{GpuId, Topology};
 use crate::coordinator::{Coordinator, OnlineCoordinator};
 use crate::placement::Placement;
+use crate::replan::ReplanDelta;
 use crate::routing::{Assignment, DispatchPlan, Dispatcher,
                      RoutingPolicy};
 use crate::runtime::manifest::{Manifest, TinyConfig};
@@ -42,8 +43,11 @@ struct LayerLits {
 
 /// A tiny model variant loaded for execution.
 pub struct RealModel {
+    /// The PJRT engine executing this model's artifacts.
     pub eng: Arc<PjrtEngine>,
+    /// Variant name in the artifact manifest (e.g. `olmoe_tiny`).
     pub variant: String,
+    /// The variant's architecture.
     pub cfg: TinyConfig,
     emb: xla::Literal,
     layers: Vec<LayerLits>,
@@ -69,6 +73,8 @@ pub enum FfnMode {
 }
 
 impl RealModel {
+    /// Load a tiny variant's weights + artifacts and spin up its PJRT
+    /// engine (`artifacts_dir` is what `make artifacts` wrote).
     pub fn load(artifacts_dir: impl AsRef<std::path::Path>, variant: &str)
                 -> anyhow::Result<RealModel> {
         let manifest = Manifest::load(artifacts_dir)?;
@@ -200,24 +206,7 @@ impl RealModel {
     pub fn expert_ffn(&self, layer: usize, expert: usize, x_tile: &[f32])
                       -> anyhow::Result<Vec<f32>> {
         let c = &self.cfg;
-        let key = (layer, expert);
-        let lits = {
-            let mut cache = self.expert_cache.lock().unwrap();
-            if let Some(l) = cache.get(&key) {
-                l.clone()
-            } else {
-                let (w1, s1) = self.ws.expert_tensor("w1", layer, expert)?;
-                let (w3, s3) = self.ws.expert_tensor("w3", layer, expert)?;
-                let (w2, s2) = self.ws.expert_tensor("w2", layer, expert)?;
-                let l = Arc::new((
-                    lit_f32(w1, &s1)?,
-                    lit_f32(w3, &s3)?,
-                    lit_f32(w2, &s2)?,
-                ));
-                cache.insert(key, l.clone());
-                l
-            }
-        };
+        let lits = self.expert_weight_lits(layer, expert)?;
         let out = self.run(
             "expert_ffn",
             &[
@@ -228,6 +217,40 @@ impl RealModel {
             ],
         )?;
         to_f32(&out[0])
+    }
+
+    /// One expert's (w1, w3, w2) weight literals, built on first use and
+    /// cached — the cache stands in for "expert weights resident on this
+    /// rank" in the logical-rank execution model.
+    fn expert_weight_lits(&self, layer: usize, expert: usize)
+                          -> anyhow::Result<
+        Arc<(xla::Literal, xla::Literal, xla::Literal)>,
+    > {
+        let key = (layer, expert);
+        let mut cache = self.expert_cache.lock().unwrap();
+        if let Some(l) = cache.get(&key) {
+            return Ok(l.clone());
+        }
+        let (w1, s1) = self.ws.expert_tensor("w1", layer, expert)?;
+        let (w3, s3) = self.ws.expert_tensor("w3", layer, expert)?;
+        let (w2, s2) = self.ws.expert_tensor("w2", layer, expert)?;
+        let l = Arc::new((
+            lit_f32(w1, &s1)?,
+            lit_f32(w3, &s3)?,
+            lit_f32(w2, &s2)?,
+        ));
+        cache.insert(key, l.clone());
+        Ok(l)
+    }
+
+    /// Stage one expert's weights ahead of use: what an online replica
+    /// migration copies before the new host can serve the expert. The
+    /// executor calls this for every replica a
+    /// [`crate::replan::ReplanDelta`] adds, so the weight-copy cost is
+    /// paid at swap time, not silently on the first routed token.
+    pub fn stage_expert(&self, layer: usize, expert: usize)
+                        -> anyhow::Result<()> {
+        self.expert_weight_lits(layer, expert).map(|_| ())
     }
 
     /// Tied-embedding logits over one (ctx-padded) sequence.
@@ -292,13 +315,20 @@ pub fn profile_real(model: &RealModel, n_tiles: usize, seed: u64)
 /// policy). Construct via [`DistributedMoE::new`]: the executor owns the
 /// run's [`Dispatcher`], so a stateful policy's online load estimates
 /// persist across layers and tiles of one serving run.
+///
+/// The placement is held behind an [`Arc`] so the server can hot-swap it
+/// at an epoch boundary ([`DistributedMoE::apply_replan`]) without
+/// rebuilding the executor — the dispatcher (and any online policy
+/// state) survives the swap, exactly like a real deployment that keeps
+/// serving while replica weights are staged.
 pub struct DistributedMoE<'a> {
+    /// The loaded tiny model executing every compute step.
     pub model: &'a RealModel,
-    pub placement: &'a Placement,
-    pub coord: &'a OnlineCoordinator,
     /// FFN executable choice (see [`FfnMode`]); `GroupedPallas` is the
     /// default and the variant all losslessness tests pin down.
     pub ffn_mode: FfnMode,
+    placement: Arc<Placement>,
+    topo: Topology,
     dispatcher: Dispatcher,
 }
 
@@ -314,8 +344,11 @@ pub struct LayerRun {
 }
 
 impl<'a> DistributedMoE<'a> {
-    pub fn new(model: &'a RealModel, placement: &'a Placement,
-               coord: &'a OnlineCoordinator, ffn_mode: FfnMode)
+    /// Executor over `placement` routing through `coord`'s policy on its
+    /// topology (the coordinator is only read at construction — the
+    /// caller keeps it, and with it the re-planner, mutable).
+    pub fn new(model: &'a RealModel, placement: Arc<Placement>,
+               coord: &OnlineCoordinator, ffn_mode: FfnMode)
                -> DistributedMoE<'a> {
         // Per-copy payload: one f32 hidden activation vector.
         let token_bytes =
@@ -323,10 +356,31 @@ impl<'a> DistributedMoE<'a> {
         DistributedMoE {
             model,
             placement,
-            coord,
+            topo: coord.topo().clone(),
             ffn_mode,
             dispatcher: coord.dispatcher(token_bytes),
         }
+    }
+
+    /// The placement currently being served.
+    pub fn placement(&self) -> &Placement {
+        &self.placement
+    }
+
+    /// Hot-swap the active placement at an epoch boundary: stage the
+    /// expert weights every added replica needs (through the executor's
+    /// weight cache — the real cost a migration pays), then switch the
+    /// placement. The dispatcher and its policy state survive; call only
+    /// between dispatch rounds, never mid-round.
+    pub fn apply_replan(&mut self, new_placement: Arc<Placement>,
+                        delta: &ReplanDelta) -> anyhow::Result<()> {
+        for ld in &delta.layers {
+            for &(expert, _gpu) in &ld.added {
+                self.model.stage_expert(ld.layer, expert)?;
+            }
+        }
+        self.placement = new_placement;
+        Ok(())
     }
 
     /// Execute one MoE layer over a token tile distributed across ranks.
@@ -338,7 +392,7 @@ impl<'a> DistributedMoE<'a> {
                      src_gpu_of: &dyn Fn(usize) -> GpuId,
                      rng: &mut Rng) -> anyhow::Result<LayerRun> {
         let c = &self.model.cfg;
-        let n_gpus = self.coord.topo().num_gpus();
+        let n_gpus = self.topo.num_gpus();
         let lp = &self.placement.layers[layer];
 
         let (xn, topw, topi) = self.model.gate(x_tile, layer)?;
@@ -501,11 +555,12 @@ mod tests {
         let want = m.moe_layer_oracle(&x, 0).unwrap();
         for policy in [RoutingPolicy::Primary, RoutingPolicy::Wrr,
                        RoutingPolicy::Tar, RoutingPolicy::LoadAware] {
-            let placement = place_real(&m, &topo, &trace,
-                                       ReplicationMode::Dynamic, 0.15, 11);
+            let placement = Arc::new(place_real(
+                &m, &topo, &trace, ReplicationMode::Dynamic, 0.15, 11,
+            ));
             let coord = OnlineCoordinator::new(topo.clone(), policy);
             let mut dist = DistributedMoE::new(
-                &m, &placement, &coord, FfnMode::GroupedPallas,
+                &m, placement.clone(), &coord, FfnMode::GroupedPallas,
             );
             let run = dist
                 .moe_layer(&x, 0, &(|t| t % 4), &mut Rng::new(5))
@@ -535,8 +590,9 @@ mod tests {
         let c = m.cfg.clone();
         let topo = Topology::two_by_two();
         let trace = profile_real(&m, 1, 21).unwrap();
-        let placement = place_real(&m, &topo, &trace,
-                                   ReplicationMode::Dynamic, 0.15, 21);
+        let placement = Arc::new(place_real(
+            &m, &topo, &trace, ReplicationMode::Dynamic, 0.15, 21,
+        ));
         let mut rng = Rng::new(4);
         let x: Vec<f32> = (0..c.tile_t * c.hidden)
             .map(|_| rng.gaussian() as f32 * 0.4)
@@ -546,7 +602,7 @@ mod tests {
             OnlineCoordinator::new(topo.clone(), RoutingPolicy::Tar);
         for mode in [FfnMode::GroupedPallas, FfnMode::PerExpert] {
             let mut dist =
-                DistributedMoE::new(&m, &placement, &coord, mode);
+                DistributedMoE::new(&m, placement.clone(), &coord, mode);
             // identical routing randomness per mode
             let run =
                 dist.moe_layer(&x, 0, &(|t| t % 4), &mut Rng::new(6))

@@ -18,6 +18,17 @@
 //! representative chunk of at most `max_chunk` tokens per phase and scales
 //! the extensive metrics linearly — routing decisions and load statistics
 //! are computed on the real per-token trace of that chunk.
+//!
+//! Online re-planning: a [`crate::replan::Replanner`] can ride along
+//! with any run ([`SimConfig::replan`] + a system with
+//! [`SystemSpec::online_replan`], i.e. `grace-dyn`). Every dispatched
+//! layer round is observed, epoch boundaries recompute replication from
+//! the measured loads, and accepted deltas hot-swap the active placement
+//! *between* rounds — with the expert-weight migration priced through
+//! [`crate::comm::model`] so it shows up in the simulated latency
+//! ([`RunMetrics::migration_bytes`]). [`simulate_rounds`] is the
+//! round-by-round driver the drifting-workload scenarios (the `replan`
+//! bench and CLI subcommand) replay.
 
 use crate::baselines::SystemSpec;
 use crate::cluster::Topology;
@@ -27,10 +38,11 @@ use crate::config::{GpuModel, ModelSpec, Workload};
 use crate::coordinator::Coordinator;
 use crate::metrics::RunMetrics;
 use crate::placement::Placement;
+use crate::replan::{self, CostParams, ReplanConfig, Replanner};
 use crate::routing::{Assignment, DispatchPlan, Dispatcher};
 use crate::server::even_src;
 use crate::stats::{Rng, Summary};
-use crate::trace::{GateTrace, Profile, TraceGen};
+use crate::trace::{GateTrace, LayerTrace, Profile, TraceGen};
 
 /// Per-token routing-decision cost (seconds) — the intra-node computation
 /// HSC overlaps with its cross-node stage (§5 "fine-grained pipelining").
@@ -39,23 +51,33 @@ pub const ROUTE_DECISION_COST: f64 = 30e-9;
 /// Full configuration of one simulated run.
 #[derive(Clone, Debug)]
 pub struct SimConfig {
+    /// Paper-scale model architecture under simulation.
     pub model: ModelSpec,
+    /// Cluster topology and link parameters.
     pub topo: Topology,
+    /// GPU compute-cost model.
     pub gpu: GpuModel,
+    /// Inference workload (batch / prefill / decode).
     pub workload: Workload,
     /// Dataset profile the *serving* traffic is drawn from.
     pub serve_profile: Profile,
     /// Dataset profile the *offline profiling* used (≠ serve_profile in
     /// the Fig. 6 cross-dataset transfer experiments).
     pub placement_profile: Profile,
+    /// Run seed (trace generation, routing RNG, jitter).
     pub seed: u64,
     /// Offline profiling trace length (tokens).
     pub profile_tokens: usize,
     /// Maximum tokens simulated per phase (larger workloads are scaled).
     pub max_chunk: usize,
+    /// Epoch re-planning cadence/gates; only consulted by systems with
+    /// [`SystemSpec::online_replan`] set (the `grace-dyn` spec).
+    pub replan: Option<ReplanConfig>,
 }
 
 impl SimConfig {
+    /// Defaults: A100 cost model, Text profiles, seed 42, re-planning
+    /// off.
     pub fn new(model: ModelSpec, topo: Topology, workload: Workload)
                -> SimConfig {
         SimConfig {
@@ -68,6 +90,7 @@ impl SimConfig {
             seed: 42,
             profile_tokens: 2048,
             max_chunk: 4096,
+            replan: None,
         }
     }
 }
@@ -98,6 +121,10 @@ pub fn simulate(sys: &SystemSpec, cfg: &SimConfig) -> RunMetrics {
 /// Online phase against a prebuilt placement (placements are expensive —
 /// spectral clustering per layer — and shared across workloads in the
 /// benches; Fig. 6 also transplants placements across dataset profiles).
+///
+/// When the system re-plans online ([`SystemSpec::online_replan`] with
+/// [`SimConfig::replan`] set), each phase is one measurement round and
+/// epoch boundaries may hot-swap the active placement between phases.
 pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
                                placement: &Placement) -> RunMetrics {
     assert_eq!(placement.experts, cfg.model.experts);
@@ -106,6 +133,7 @@ pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
     let mut dispatcher = coord.dispatcher(cfg.model.token_bytes());
     let mut rng = Rng::new(cfg.seed ^ 0x5E21);
     let mut metrics = RunMetrics::default();
+    let mut epoch = epoch_state(sys, cfg, placement);
 
     // Prefill: batch × prefill tokens through every layer.
     let prefill_tokens = cfg.workload.batch * cfg.workload.prefill;
@@ -114,7 +142,10 @@ pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
         let scale = prefill_tokens as f64 / chunk as f64;
         let trace = serve_trace(cfg, chunk, 1);
         sim_phase(sys, cfg, &mut dispatcher, placement, &trace, scale,
-                  &mut rng, &mut metrics);
+                  &mut rng, &mut metrics, &mut epoch);
+        if let Some(s) = &mut epoch {
+            s.tick(cfg, &mut metrics);
+        }
     }
 
     // Decode: `decode` steps of `batch` tokens each.
@@ -125,11 +156,189 @@ pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
             / dchunk as f64;
         let trace = serve_trace(cfg, dchunk, 2);
         sim_phase(sys, cfg, &mut dispatcher, placement, &trace, scale,
-                  &mut rng, &mut metrics);
+                  &mut rng, &mut metrics, &mut epoch);
+        if let Some(s) = &mut epoch {
+            s.tick(cfg, &mut metrics);
+        }
     }
 
     metrics.tokens = cfg.workload.total_tokens();
     metrics
+}
+
+/// Outcome summary of a round-by-round (re-planned) run.
+#[derive(Clone, Debug, Default)]
+pub struct ReplanReport {
+    /// Rounds replayed.
+    pub rounds: usize,
+    /// Epoch deltas actually applied.
+    pub applied: usize,
+    /// Expert-weight bytes migrated across all applied deltas.
+    pub migration_bytes: f64,
+    /// Per-round routed copies per GPU (summed over layers) — the
+    /// load-share evidence the drifting-workload comparisons read.
+    pub copies_rounds: Vec<Vec<f64>>,
+}
+
+impl ReplanReport {
+    /// Max per-GPU share of routed copies over rounds `from..` (1/n_gpus
+    /// is perfectly balanced). Returns 0 when the range is empty.
+    pub fn max_load_share(&self, from: usize) -> f64 {
+        let mut per_gpu: Vec<f64> = Vec::new();
+        for round in self.copies_rounds.iter().skip(from) {
+            if per_gpu.len() < round.len() {
+                per_gpu.resize(round.len(), 0.0);
+            }
+            for (acc, &c) in per_gpu.iter_mut().zip(round) {
+                *acc += c;
+            }
+        }
+        let total: f64 = per_gpu.iter().sum();
+        if total <= 0.0 {
+            return 0.0;
+        }
+        per_gpu.iter().cloned().fold(0.0, f64::max) / total
+    }
+}
+
+/// Round-by-round online driver: replay `rounds` serving traces (each
+/// one dispatch round per layer) against `placement`, optionally with
+/// epoch re-planning between rounds. This is the drifting-workload
+/// harness: the same call with `replan: None` is the static baseline,
+/// bit-identical whenever the re-planner would have applied nothing.
+pub fn simulate_rounds(sys: &SystemSpec, cfg: &SimConfig,
+                       placement: &Placement, rounds: &[GateTrace],
+                       replan_cfg: Option<ReplanConfig>)
+                       -> (RunMetrics, ReplanReport) {
+    assert_eq!(placement.experts, cfg.model.experts);
+    assert_eq!(placement.num_gpus, cfg.topo.num_gpus());
+    let coord = coordinator(sys, cfg);
+    let mut dispatcher = coord.dispatcher(cfg.model.token_bytes());
+    let mut rng = Rng::new(cfg.seed ^ 0x5E21);
+    let mut metrics = RunMetrics::default();
+    let mut report = ReplanReport::default();
+    let mut epoch = replan_cfg
+        .map(|rc| EpochState::new(placement.clone(), rc, sys, cfg));
+
+    for trace in rounds {
+        report.rounds += 1;
+        let copies = sim_phase(sys, cfg, &mut dispatcher, placement,
+                               trace, 1.0, &mut rng, &mut metrics,
+                               &mut epoch);
+        report.copies_rounds.push(copies);
+        if let Some(s) = &mut epoch {
+            if s.tick(cfg, &mut metrics) {
+                report.applied += 1;
+            }
+        }
+    }
+    if let Some(s) = &epoch {
+        report.migration_bytes = s.migration_bytes;
+    }
+    metrics.tokens = rounds.iter().map(GateTrace::num_tokens).sum();
+    (metrics, report)
+}
+
+/// A drifting serving workload: `rounds` independently-sampled traces of
+/// `tokens` each; from round `drift_at` on, expert identities are
+/// rotated by `shift` ([`GateTrace::shift_experts`]) so the hot-expert
+/// set the offline phase placed for moves elsewhere mid-run.
+pub fn drifting_rounds(cfg: &SimConfig, rounds: usize, drift_at: usize,
+                       shift: usize, tokens: usize) -> Vec<GateTrace> {
+    (0..rounds)
+        .map(|i| {
+            let t = TraceGen {
+                experts: cfg.model.experts,
+                top_k: cfg.model.top_k,
+                layers: cfg.model.moe_layers,
+                profile: cfg.serve_profile,
+                seed: cfg
+                    .seed
+                    .wrapping_mul(0x1009)
+                    .wrapping_add(0xD81F + i as u64),
+            }
+            .generate(tokens);
+            if i >= drift_at {
+                t.shift_experts(shift)
+            } else {
+                t
+            }
+        })
+        .collect()
+}
+
+/// Mutable re-planning state riding along one simulated run: the active
+/// placement (diverges from the offline one once a delta lands), the
+/// re-planner, and the migration accounting.
+struct EpochState {
+    active: Placement,
+    replanner: Replanner,
+    /// Straggler jitter for migration transfers — a stream separate
+    /// from the dispatch RNG, drawn only when a delta is applied, so a
+    /// run whose every epoch is empty stays bit-identical to the static
+    /// path.
+    mig_rng: Rng,
+    migration_bytes: f64,
+}
+
+impl EpochState {
+    fn new(active: Placement, rc: ReplanConfig, sys: &SystemSpec,
+           cfg: &SimConfig) -> EpochState {
+        let cost =
+            CostParams::paper(&cfg.model, &cfg.gpu, sys.compute_eff);
+        EpochState {
+            active,
+            replanner: Replanner::new(cfg.topo.clone(), rc, cost),
+            mig_rng: Rng::new(cfg.seed ^ 0x4D16),
+            migration_bytes: 0.0,
+        }
+    }
+
+    /// Observe one dispatched layer round (post-dispatch, passive).
+    fn observe(&mut self, layer: usize, plan: &DispatchPlan) {
+        self.replanner
+            .observe(layer, &self.active.layers[layer], plan);
+    }
+
+    /// Epoch boundary: evaluate, apply an accepted delta to the active
+    /// placement, and price the expert-weight migration through the
+    /// flat collective model (weights move point-to-point exactly like
+    /// any other payload). Returns whether a delta was applied.
+    fn tick(&mut self, cfg: &SimConfig, metrics: &mut RunMetrics)
+            -> bool {
+        let delta = self.replanner.epoch_tick(&self.active);
+        if delta.is_empty() {
+            return false;
+        }
+        let traffic = replan::migration_traffic(
+            &delta,
+            &self.active,
+            self.replanner.cost().expert_bytes,
+        );
+        let rep =
+            model::flat_all_to_all(&traffic, &cfg.topo, &mut self.mig_rng);
+        metrics.e2e_time += rep.time;
+        metrics.cross_bytes += rep.cross_bytes;
+        metrics.intra_bytes += rep.intra_bytes;
+        metrics.launches += rep.launches;
+        metrics.migration_bytes += delta.migration_bytes;
+        metrics.replans += 1;
+        self.migration_bytes += delta.migration_bytes;
+        self.active = replan::apply_delta(&self.active, &delta);
+        true
+    }
+}
+
+/// Build the optional epoch state for a run (re-planning rides along
+/// only when both the system opts in and the config provides a cadence).
+fn epoch_state(sys: &SystemSpec, cfg: &SimConfig, placement: &Placement)
+               -> Option<EpochState> {
+    match (sys.online_replan, cfg.replan) {
+        (true, Some(rc)) => {
+            Some(EpochState::new(placement.clone(), rc, sys, cfg))
+        }
+        _ => None,
+    }
 }
 
 /// Serving trace: same distribution as the profile of `serve_profile` but
@@ -146,91 +355,123 @@ fn serve_trace(cfg: &SimConfig, tokens: usize, phase_tag: u64) -> GateTrace {
 }
 
 /// Simulate one phase (all MoE layers over one token chunk), accumulating
-/// scaled metrics. Each layer's chunk is one batched dispatch round
-/// through the run's dispatcher, so the online phase uses exactly the
-/// policy the offline phase placed for.
+/// scaled metrics; returns the phase's routed copies per GPU (summed over
+/// layers). Each layer's chunk is one batched dispatch round through the
+/// run's dispatcher, so the online phase uses exactly the policy the
+/// offline phase placed for. With an [`EpochState`] riding along, each
+/// layer round routes against the *active* (possibly re-planned)
+/// placement and is observed by the re-planner after dispatch.
+#[allow(clippy::too_many_arguments)]
 fn sim_phase(sys: &SystemSpec, cfg: &SimConfig,
              dispatcher: &mut Dispatcher, placement: &Placement,
              trace: &GateTrace, scale: f64, rng: &mut Rng,
-             metrics: &mut RunMetrics) {
+             metrics: &mut RunMetrics, epoch: &mut Option<EpochState>)
+             -> Vec<f64> {
+    let chunk = trace.num_tokens();
+    let mut phase_copies = vec![0.0f64; cfg.topo.num_gpus()];
+
+    for (layer_idx, layer) in trace.layers.iter().enumerate() {
+        let plan = {
+            let lp = match epoch {
+                Some(s) => &s.active.layers[layer_idx],
+                None => &placement.layers[layer_idx],
+            };
+            layer_round(sys, cfg, dispatcher, lp, layer_idx, layer,
+                        chunk, scale, rng, metrics)
+        };
+        for (acc, &c) in phase_copies.iter_mut()
+            .zip(plan.copies_per_gpu())
+        {
+            *acc += c as f64;
+        }
+        if let Some(s) = epoch {
+            s.observe(layer_idx, &plan);
+        }
+    }
+    phase_copies
+}
+
+/// One layer's dispatch round: assemble the token-major assignment batch
+/// (with C2R-style pruning when configured), route it, price the two A2A
+/// rounds, and accumulate the scaled metrics. Returns the plan so the
+/// caller can observe it.
+#[allow(clippy::too_many_arguments)]
+fn layer_round(sys: &SystemSpec, cfg: &SimConfig,
+               dispatcher: &mut Dispatcher,
+               lp: &crate::placement::LayerPlacement, layer_idx: usize,
+               layer: &LayerTrace, chunk: usize, scale: f64,
+               rng: &mut Rng, metrics: &mut RunMetrics) -> DispatchPlan {
     let topo = &cfg.topo;
     let n_gpus = topo.num_gpus();
     let spec = &cfg.model;
-    let chunk = trace.num_tokens();
 
+    // --- Assemble the layer's assignment batch (token-major). ---
     let mut batch: Vec<Assignment> =
         Vec::with_capacity(chunk * spec.top_k);
-
-    for (layer_idx, layer) in trace.layers.iter().enumerate() {
-        let lp = &placement.layers[layer_idx];
-
-        // --- Assemble the layer's assignment batch (token-major). ---
-        batch.clear();
-        for (t, experts) in layer.tokens.iter().enumerate() {
-            // Data parallelism: the batch is split evenly across GPUs.
-            let src = even_src(t, chunk, n_gpus);
-            for &e in experts {
-                let e = e as usize;
-                // C2R-style lossy pruning: a remote assignment is dropped
-                // (confined to the collaboration group) with prob p.
-                if sys.prune_remote > 0.0 {
-                    let primary = lp.primary[e];
-                    if !topo.same_node(src, primary)
-                        && rng.chance(sys.prune_remote)
-                    {
-                        continue;
-                    }
+    for (t, experts) in layer.tokens.iter().enumerate() {
+        // Data parallelism: the batch is split evenly across GPUs.
+        let src = even_src(t, chunk, n_gpus);
+        for &e in experts {
+            let e = e as usize;
+            // C2R-style lossy pruning: a remote assignment is dropped
+            // (confined to the collaboration group) with prob p.
+            if sys.prune_remote > 0.0 {
+                let primary = lp.primary[e];
+                if !topo.same_node(src, primary)
+                    && rng.chance(sys.prune_remote)
+                {
+                    continue;
                 }
-                batch.push(Assignment { token: t, expert: e, src });
             }
+            batch.push(Assignment { token: t, expert: e, src });
         }
-
-        // --- Route the whole batch in one dispatch round. ---
-        let plan = dispatcher.dispatch(lp, layer_idx, &batch, rng);
-        let copies: Vec<f64> = plan
-            .copies_per_gpu()
-            .iter()
-            .map(|&c| c as f64)
-            .collect();
-
-        // --- Communication: two A2A rounds (dispatch + combine). ---
-        let overlap = if sys.comm == CommModel::Hsc {
-            chunk as f64 * ROUTE_DECISION_COST / n_gpus as f64
-        } else {
-            0.0
-        };
-        let mut comm = comm_round(sys, topo, &plan, overlap, rng);
-        let combine = comm_round(sys, topo, &plan, 0.0, rng);
-        comm.accumulate(&combine);
-
-        // --- Expert compute + synchronization idle. ---
-        let mut t_max = 0.0f64;
-        let mut t_sum = 0.0f64;
-        for &c in &copies {
-            let t = cfg.gpu.moe_time(spec, c) / sys.compute_eff
-                + cfg.gpu.layer_overhead;
-            t_max = t_max.max(t);
-            t_sum += t;
-        }
-        let idle = n_gpus as f64 * t_max - t_sum;
-
-        // --- Accumulate (extensive metrics scale with phase size). ---
-        metrics.a2a_time += comm.time * sys.comm_eff * scale;
-        metrics.cross_bytes += comm.cross_bytes * scale;
-        metrics.intra_bytes += comm.intra_bytes * scale;
-        metrics.launches += comm.launches;
-        metrics.idle_time += idle * scale;
-        metrics
-            .layer_load_std
-            .push(Summary::of(&copies).std() * scale);
-        let layer_time = comm.time * sys.comm_eff + t_max;
-        metrics.moe_layer_time += layer_time * scale;
-        // Dense (attention) part — identical across systems.
-        let dense =
-            cfg.gpu.dense_time(spec, chunk as f64 / n_gpus as f64)
-                + cfg.gpu.layer_overhead;
-        metrics.e2e_time += (layer_time + dense) * scale;
     }
+
+    // --- Route the whole batch in one dispatch round. ---
+    let plan = dispatcher.dispatch(lp, layer_idx, &batch, rng);
+    let copies: Vec<f64> = plan
+        .copies_per_gpu()
+        .iter()
+        .map(|&c| c as f64)
+        .collect();
+
+    // --- Communication: two A2A rounds (dispatch + combine). ---
+    let overlap = if sys.comm == CommModel::Hsc {
+        chunk as f64 * ROUTE_DECISION_COST / n_gpus as f64
+    } else {
+        0.0
+    };
+    let mut comm = comm_round(sys, topo, &plan, overlap, rng);
+    let combine = comm_round(sys, topo, &plan, 0.0, rng);
+    comm.accumulate(&combine);
+
+    // --- Expert compute + synchronization idle. ---
+    let mut t_max = 0.0f64;
+    let mut t_sum = 0.0f64;
+    for &c in &copies {
+        let t = cfg.gpu.moe_time(spec, c) / sys.compute_eff
+            + cfg.gpu.layer_overhead;
+        t_max = t_max.max(t);
+        t_sum += t;
+    }
+    let idle = n_gpus as f64 * t_max - t_sum;
+
+    // --- Accumulate (extensive metrics scale with phase size). ---
+    metrics.a2a_time += comm.time * sys.comm_eff * scale;
+    metrics.cross_bytes += comm.cross_bytes * scale;
+    metrics.intra_bytes += comm.intra_bytes * scale;
+    metrics.launches += comm.launches;
+    metrics.idle_time += idle * scale;
+    metrics
+        .layer_load_std
+        .push(Summary::of(&copies).std() * scale);
+    let layer_time = comm.time * sys.comm_eff + t_max;
+    metrics.moe_layer_time += layer_time * scale;
+    // Dense (attention) part — identical across systems.
+    let dense = cfg.gpu.dense_time(spec, chunk as f64 / n_gpus as f64)
+        + cfg.gpu.layer_overhead;
+    metrics.e2e_time += (layer_time + dense) * scale;
+    plan
 }
 
 /// One A2A round under the system's collective, consuming the routed
@@ -309,6 +550,54 @@ mod tests {
         assert!(a.e2e_time > 0.0 && a.e2e_time.is_finite());
         assert_eq!(a.e2e_time, b.e2e_time);
         assert_eq!(a.cross_bytes, b.cross_bytes);
+    }
+
+    #[test]
+    fn grace_dyn_without_cadence_is_bit_identical_to_grace() {
+        // The grace-dyn spec only *enables* re-planning; with no
+        // ReplanConfig in the SimConfig the pipeline must be exactly
+        // static GRACE.
+        let cfg = small_cfg(Topology::two_by_two());
+        let g = simulate(&SystemSpec::grace(0.15), &cfg);
+        let d = simulate(&SystemSpec::grace_dyn(0.15), &cfg);
+        assert_eq!(g.e2e_time, d.e2e_time);
+        assert_eq!(g.cross_bytes, d.cross_bytes);
+        assert_eq!(g.layer_load_std, d.layer_load_std);
+        assert_eq!(d.migration_bytes, 0.0);
+        assert_eq!(d.replans, 0);
+    }
+
+    #[test]
+    fn grace_dyn_with_cadence_is_deterministic() {
+        let mut cfg = small_cfg(Topology::two_by_two());
+        cfg.replan = Some(ReplanConfig {
+            epoch_rounds: 1,
+            ..ReplanConfig::default()
+        });
+        let sys = SystemSpec::grace_dyn(0.15);
+        let a = simulate(&sys, &cfg);
+        let b = simulate(&sys, &cfg);
+        assert!(a.e2e_time > 0.0 && a.e2e_time.is_finite());
+        assert_eq!(a.e2e_time, b.e2e_time);
+        assert_eq!(a.migration_bytes, b.migration_bytes);
+        assert_eq!(a.replans, b.replans);
+    }
+
+    #[test]
+    fn simulate_rounds_static_arm_reports_load_evidence() {
+        let cfg = small_cfg(Topology::two_by_two());
+        let sys = SystemSpec::grace(0.15);
+        let placement = build_placement(&sys, &cfg);
+        let rounds = drifting_rounds(&cfg, 4, 2, 7, 128);
+        let (m, report) =
+            simulate_rounds(&sys, &cfg, &placement, &rounds, None);
+        assert_eq!(report.rounds, 4);
+        assert_eq!(report.applied, 0);
+        assert_eq!(report.copies_rounds.len(), 4);
+        assert_eq!(m.tokens, 4 * 128);
+        let share = report.max_load_share(0);
+        assert!(share >= 0.25 && share <= 1.0, "share {share}");
+        assert_eq!(report.max_load_share(99), 0.0, "empty range");
     }
 
     #[test]

@@ -27,6 +27,7 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// Spawn a pool of `threads` workers.
     pub fn new(threads: usize) -> ThreadPool {
         assert!(threads > 0);
         let shared = Arc::new(PoolShared {
@@ -154,6 +155,7 @@ impl<T> Clone for BoundedQueue<T> {
 }
 
 impl<T> BoundedQueue<T> {
+    /// Queue holding at most `cap` items (senders block beyond it).
     pub fn new(cap: usize) -> Self {
         assert!(cap > 0);
         BoundedQueue {
@@ -214,6 +216,7 @@ impl<T> BoundedQueue<T> {
         out
     }
 
+    /// Close the queue: senders fail, receivers drain then get `None`.
     pub fn close(&self) {
         let mut st = self.inner.state.lock().unwrap();
         st.1 = true;
@@ -221,10 +224,12 @@ impl<T> BoundedQueue<T> {
         self.inner.not_full.notify_all();
     }
 
+    /// Items currently queued.
     pub fn len(&self) -> usize {
         self.inner.state.lock().unwrap().0.len()
     }
 
+    /// Whether the queue is currently empty.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }

@@ -11,7 +11,8 @@
 //! * **offline non-uniform hierarchical expert grouping** on an expert
 //!   co-activation affinity matrix ([`grouping`]),
 //! * **dynamic expert replication** driven by the load-skew factor
-//!   `ρ = W_max / W̄` ([`replication`]),
+//!   `ρ = W_max / W̄` ([`replication`]), kept live under workload drift
+//!   by the epoch-based online re-planner ([`replan`]),
 //! * **online locality-aware routing**: an object-safe [`routing::RoutePolicy`]
 //!   trait (primary / WRR / TAR / online load-aware) executed in batched
 //!   dispatch rounds that emit per-`(src, dst)` transfer plans
@@ -32,9 +33,18 @@
 //! | cluster model | [`cluster`], [`comm`] |
 //! | profiling | [`trace`], [`profile`] |
 //! | GRACE algorithms | [`grouping`], [`replication`], [`placement`], [`routing`] — `RoutePolicy` trait + `Dispatcher`/`DispatchPlan` batched dispatch |
-//! | coordination | [`coordinator`] — the L3 offline→online pipeline (`Coordinator` offline, `OnlineCoordinator` serving) |
+//! | online feedback | [`replan`] — epoch-based re-planning: measured loads → Eq. 3/4 recomputed → gated placement hot-swap |
+//! | coordination | [`coordinator`] — the L3 offline→online pipeline (`Coordinator` offline, `OnlineCoordinator` serving + epoch ticks) |
 //! | engine | [`engine`], [`runtime`], [`server`] |
 //! | evaluation | [`baselines`], [`metrics`], [`report`] |
+//!
+//! The paper-to-code map — every section, equation, and figure of the
+//! paper against the module, type, and test implementing it — lives in
+//! `docs/ARCHITECTURE.md`; `docs/BENCHMARKS.md` maps the bench targets
+//! to the figures/tables they reproduce.
+
+#![warn(missing_docs)]
+#![deny(rustdoc::broken_intra_doc_links)]
 
 pub mod bench;
 pub mod cli;
@@ -51,6 +61,7 @@ pub mod trace;
 
 pub mod grouping;
 pub mod placement;
+pub mod replan;
 pub mod replication;
 pub mod routing;
 

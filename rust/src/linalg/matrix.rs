@@ -12,10 +12,12 @@ pub struct Matrix {
 }
 
 impl Matrix {
+    /// All-zero matrix.
     pub fn zeros(rows: usize, cols: usize) -> Self {
         Matrix { rows, cols, data: vec![0.0; rows * cols] }
     }
 
+    /// n×n identity.
     pub fn identity(n: usize) -> Self {
         let mut m = Matrix::zeros(n, n);
         for i in 0..n {
@@ -24,6 +26,7 @@ impl Matrix {
         m
     }
 
+    /// Build from row vectors (all must share a length).
     pub fn from_rows(rows: &[Vec<f64>]) -> Self {
         assert!(!rows.is_empty());
         let cols = rows[0].len();
@@ -35,6 +38,7 @@ impl Matrix {
         }
     }
 
+    /// Build element-wise from `f(i, j)`.
     pub fn from_fn(rows: usize, cols: usize,
                    f: impl Fn(usize, usize) -> f64) -> Self {
         let mut m = Matrix::zeros(rows, cols);
@@ -46,30 +50,37 @@ impl Matrix {
         m
     }
 
+    /// Row count.
     pub fn rows(&self) -> usize {
         self.rows
     }
 
+    /// Column count.
     pub fn cols(&self) -> usize {
         self.cols
     }
 
+    /// Row `i` as a slice.
     pub fn row(&self, i: usize) -> &[f64] {
         &self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Row `i` as a mutable slice.
     pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
         &mut self.data[i * self.cols..(i + 1) * self.cols]
     }
 
+    /// Column `j`, copied out.
     pub fn col(&self, j: usize) -> Vec<f64> {
         (0..self.rows).map(|i| self[(i, j)]).collect()
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> Matrix {
         Matrix::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
     }
 
+    /// Dense product `self · other` (sparsity-skipping inner loop).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let mut out = Matrix::zeros(self.rows, other.cols);
@@ -89,6 +100,7 @@ impl Matrix {
         out
     }
 
+    /// Whether the matrix is symmetric within `tol`.
     pub fn is_symmetric(&self, tol: f64) -> bool {
         if self.rows != self.cols {
             return false;

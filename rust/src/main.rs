@@ -9,6 +9,9 @@
 //! * `serve`     — execute-mode serving demo on the tiny AOT model
 //!   (requires `make artifacts`).
 //! * `placement` — show the offline phase's grouping/replication decisions.
+//! * `replan`    — drifting-workload comparison: static GRACE vs the
+//!   epoch re-planned `grace-dyn` on a trace whose hot-expert set rotates
+//!   mid-run.
 
 use grace_moe::baselines::{GroupingStrategy, SystemSpec};
 use grace_moe::cli::Args;
@@ -16,8 +19,11 @@ use grace_moe::cluster::Topology;
 use grace_moe::config::{ModelSpec, Workload};
 use grace_moe::coordinator::Coordinator;
 use grace_moe::engine::real::{profile_real, RealModel};
+use grace_moe::engine::sim::{build_placement, drifting_rounds,
+                             simulate_rounds};
 use grace_moe::engine::{simulate, SimConfig};
 use grace_moe::placement::ReplicationMode;
+use grace_moe::replan::ReplanConfig;
 use grace_moe::report;
 use grace_moe::routing::RoutingPolicy;
 use grace_moe::server::{MoEServer, Request, ServerConfig};
@@ -29,7 +35,7 @@ const USAGE: &str = "\
 grace-moe — GRACE-MoE distributed MoE inference (paper reproduction)
 
 USAGE:
-  grace-moe <simulate|compare|components|serve|placement> [options]
+  grace-moe <simulate|compare|components|serve|placement|replan> [options]
 
 COMMON OPTIONS:
   --model <olmoe|dsv2_lite|qwen3>   model (default olmoe)
@@ -41,6 +47,11 @@ COMMON OPTIONS:
   --r <ratio>                       non-uniformity ratio (default 0.15)
   --seed <u64>                      run seed (default 42)
   --json                            machine-readable output
+
+RE-PLANNING OPTIONS (simulate --system grace-dyn, serve, replan):
+  --replan-epoch <rounds>           epoch length in dispatch rounds
+  --replan-threshold <frac>         min predicted max-load improvement
+  (replan only) --rounds <n>  --round-tokens <n>  --drift-at <round>
 
 SERVE OPTIONS (tiny AOT model; run `make artifacts` first):
   --variant <olmoe_tiny|dsv2_tiny|qwen3_tiny>
@@ -72,8 +83,20 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "components" => cmd_components(&args),
         "serve" => cmd_serve(&args),
         "placement" => cmd_placement(&args),
+        "replan" => cmd_replan(&args),
         other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
     }
+}
+
+/// Parse the shared re-planning knobs (defaults per subcommand).
+fn replan_config(args: &Args, default_epoch: u64)
+                 -> anyhow::Result<ReplanConfig> {
+    Ok(ReplanConfig {
+        epoch_rounds: args.u64_or("replan-epoch", default_epoch)?,
+        min_drift: args.f64_or("replan-threshold",
+                               ReplanConfig::default().min_drift)?,
+        ..ReplanConfig::default()
+    })
 }
 
 fn sim_config(args: &Args) -> anyhow::Result<SimConfig> {
@@ -101,11 +124,12 @@ fn sim_config(args: &Args) -> anyhow::Result<SimConfig> {
 }
 
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let cfg = sim_config(args)?;
+    let mut cfg = sim_config(args)?;
     let r = args.f64_or("r", 0.15)?;
     let sys = match args.str_or("system", "grace") {
         "grace" => SystemSpec::grace(r),
         "grace-la" => SystemSpec::grace_load_aware(r),
+        "grace-dyn" => SystemSpec::grace_dyn(r),
         "occult" => SystemSpec::occult(),
         "vanilla" => SystemSpec::vanilla(),
         "tutel" => SystemSpec::tutel(),
@@ -114,6 +138,10 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "c2r" => SystemSpec::c2r(),
         other => anyhow::bail!("unknown system '{other}'"),
     };
+    if sys.online_replan {
+        // Two phases per run ⇒ default to an epoch per dispatch round.
+        cfg.replan = Some(replan_config(args, 1)?);
+    }
     let m = simulate(&sys, &cfg);
     if args.flag("json") {
         println!(
@@ -202,7 +230,13 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         seed,
     );
     let placement = Arc::new(coord.place(&trace));
-    let server = MoEServer::with_coordinator(
+    // Epoch re-planning rides along only when a cadence was asked for.
+    let replan = if args.get("replan-epoch").is_some() {
+        Some(replan_config(args, 64)?)
+    } else {
+        None
+    };
+    let mut server = MoEServer::with_coordinator(
         model,
         placement,
         coord,
@@ -215,6 +249,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             } else {
                 grace_moe::engine::real::FfnMode::PerExpert
             },
+            replan,
         },
     );
     let mut rng = Rng::new(seed);
@@ -283,5 +318,59 @@ fn cmd_placement(args: &Args) -> anyhow::Result<()> {
         "replication overhead: {:.2}% extra instances",
         p.replication_overhead() * 100.0
     );
+    Ok(())
+}
+
+fn cmd_replan(args: &Args) -> anyhow::Result<()> {
+    let cfg = sim_config(args)?;
+    let r = args.f64_or("r", 0.15)?;
+    let rounds_n = args.usize_or("rounds", 12)?;
+    let drift_at = args.usize_or("drift-at", rounds_n / 3)?;
+    let tokens = args
+        .usize_or("round-tokens", 2048)?
+        .min(cfg.max_chunk)
+        .max(1);
+    // simulate_rounds takes the replan cadence explicitly (SimConfig::replan
+    // only drives the two-phase simulate path).
+    let rc = replan_config(args, 2)?;
+
+    let static_sys = SystemSpec::grace(r);
+    let dyn_sys = SystemSpec::grace_dyn(r);
+    let placement = build_placement(&static_sys, &cfg);
+    let shift = cfg.model.experts / 2;
+    let rounds = drifting_rounds(&cfg, rounds_n, drift_at, shift, tokens);
+    eprintln!(
+        "replaying {rounds_n} rounds × {tokens} tokens, hot-expert set \
+         rotates by {shift} at round {drift_at} \
+         (epoch {} rounds, threshold {})",
+        rc.epoch_rounds, rc.min_drift
+    );
+
+    let (ms, rs) =
+        simulate_rounds(&static_sys, &cfg, &placement, &rounds, None);
+    let (md, rd) = simulate_rounds(&dyn_sys, &cfg, &placement, &rounds,
+                                   Some(rc));
+
+    let mut t = grace_moe::bench::Table::new(&[
+        "SYSTEM",
+        "E2E (ms)",
+        "A2A (ms)",
+        "MAX SHARE (post-drift)",
+        "MIGRATION (MB)",
+        "REPLANS",
+    ]);
+    for (name, m, rep) in
+        [("grace (static)", &ms, &rs), ("grace-dyn", &md, &rd)]
+    {
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", m.e2e_time * 1e3),
+            format!("{:.2}", m.a2a_time * 1e3),
+            format!("{:.3}", rep.max_load_share(drift_at)),
+            format!("{:.1}", m.migration_bytes / 1e6),
+            format!("{}", m.replans),
+        ]);
+    }
+    println!("{}", t.render());
     Ok(())
 }

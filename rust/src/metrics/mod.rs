@@ -26,9 +26,16 @@ pub struct RunMetrics {
     pub launches: usize,
     /// Tokens processed (MoE tokens across all layers).
     pub tokens: usize,
+    /// Expert-weight bytes copied by online re-planning migrations
+    /// (zero for every static system).
+    pub migration_bytes: f64,
+    /// Re-planning deltas applied (epochs that actually migrated).
+    pub replans: usize,
 }
 
 impl RunMetrics {
+    /// Mean over layers of the per-layer GPU-load standard deviation
+    /// (the paper's "AVG. GPU LOAD STD." metric).
     pub fn mean_load_std(&self) -> f64 {
         if self.layer_load_std.is_empty() {
             0.0
@@ -49,6 +56,8 @@ impl RunMetrics {
         self.e2e_time += other.e2e_time;
         self.launches += other.launches;
         self.tokens += other.tokens;
+        self.migration_bytes += other.migration_bytes;
+        self.replans += other.replans;
     }
 
     /// The five Table-1 metrics as (name, value) pairs.
@@ -75,6 +84,7 @@ pub struct ServeMetrics {
 }
 
 impl ServeMetrics {
+    /// Latency distribution summary (`None` with no completed requests).
     pub fn latency_summary(&self) -> Option<Summary> {
         if self.latencies.is_empty() {
             None
@@ -83,6 +93,7 @@ impl ServeMetrics {
         }
     }
 
+    /// Generated tokens per wall-clock second.
     pub fn throughput_tps(&self) -> f64 {
         if self.wall_time <= 0.0 {
             0.0

@@ -41,12 +41,37 @@ pub struct LayerPlacement {
 /// Whole-model placement plan.
 #[derive(Clone, Debug)]
 pub struct Placement {
+    /// Per-MoE-layer placements, indexed by layer.
     pub layers: Vec<LayerPlacement>,
+    /// Experts per layer.
     pub experts: usize,
+    /// GPUs the placement spans.
     pub num_gpus: usize,
 }
 
+/// Expand a primary map + replication decision into the per-expert
+/// instance lists (primary first, secondaries appended in replica-GPU
+/// order). The one place this rule lives: [`LayerPlacement::build`] and
+/// the online re-planner's [`crate::replan::apply_delta`] both call it,
+/// so a replanned layer can never disagree with an offline-built one.
+pub fn instances_for(primary: &[GpuId], replication: &Replication)
+                     -> Vec<Vec<GpuId>> {
+    let mut instances: Vec<Vec<GpuId>> =
+        primary.iter().map(|&p| vec![p]).collect();
+    for &e in &replication.hot_experts {
+        for &g in &replication.replica_gpus {
+            if !instances[e].contains(&g) {
+                instances[e].push(g);
+            }
+        }
+    }
+    instances
+}
+
 impl LayerPlacement {
+    /// Assemble one layer's placement: invert `groups` into the primary
+    /// map, run the configured replication pass, and derive the Eq.-4
+    /// predicted loads and polling weights.
     pub fn build(profile: &LayerProfile, groups: Grouping,
                  mode: ReplicationMode) -> LayerPlacement {
         let experts = profile.experts();
@@ -69,15 +94,7 @@ impl LayerPlacement {
             }
         };
 
-        let mut instances: Vec<Vec<GpuId>> =
-            primary.iter().map(|&p| vec![p]).collect();
-        for &e in &replication.hot_experts {
-            for &g in &replication.replica_gpus {
-                if !instances[e].contains(&g) {
-                    instances[e].push(g);
-                }
-            }
-        }
+        let instances = instances_for(&primary, &replication);
 
         let pre_loads: Vec<f64> =
             groups.iter().map(|g| profile.group_load(g)).collect();
@@ -97,6 +114,7 @@ impl LayerPlacement {
         }
     }
 
+    /// GPUs this layer's placement spans.
     pub fn num_gpus(&self) -> usize {
         self.groups.len()
     }
@@ -248,6 +266,16 @@ mod tests {
         let o = dr.replication_overhead();
         assert!(o > 0.0 && o < 1.0,
                 "DR should replicate a small subset, got {o}");
+    }
+
+    #[test]
+    fn replication_provenance_survives_placement_build() {
+        // Mode::None ⇒ not configured; Mode::Dynamic ⇒ a pass ran, even
+        // when it replicated nothing (the old is_none() conflation).
+        let none = hg_placement(ReplicationMode::None);
+        assert!(none.layers.iter().all(|l| !l.replication.was_computed()));
+        let dr = hg_placement(ReplicationMode::Dynamic);
+        assert!(dr.layers.iter().all(|l| l.replication.was_computed()));
     }
 
     #[test]

@@ -25,10 +25,12 @@ pub struct LayerProfile {
 /// Whole-model profile (one [`LayerProfile`] per MoE layer).
 #[derive(Clone, Debug)]
 pub struct ModelProfile {
+    /// One profile per MoE layer.
     pub layers: Vec<LayerProfile>,
 }
 
 impl LayerProfile {
+    /// Count affinity pairs and per-expert loads from one layer's trace.
     pub fn from_trace(layer: &LayerTrace) -> LayerProfile {
         let e = layer.experts;
         let mut affinity = Matrix::zeros(e, e);
@@ -45,6 +47,7 @@ impl LayerProfile {
         LayerProfile { affinity, load, tokens: layer.tokens.len() }
     }
 
+    /// Experts profiled.
     pub fn experts(&self) -> usize {
         self.load.len()
     }
@@ -103,6 +106,7 @@ impl LayerProfile {
 }
 
 impl ModelProfile {
+    /// Profile every layer of a gate trace.
     pub fn from_trace(trace: &GateTrace) -> ModelProfile {
         ModelProfile {
             layers: trace
@@ -113,6 +117,7 @@ impl ModelProfile {
         }
     }
 
+    /// Layers profiled.
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }

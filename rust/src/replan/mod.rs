@@ -1,0 +1,641 @@
+//! Epoch-based online re-planning: the feedback arrow from measured load
+//! back into dynamic replication.
+//!
+//! The paper's Grouping & Replication phase (§4.2) is *dynamic* with
+//! respect to the profiling trace, but the offline pipeline runs once:
+//! after [`crate::coordinator::Coordinator::place`] the hot-expert set
+//! and replica GPUs are frozen. When the serving workload drifts away
+//! from the profiled distribution (a different dataset mix, a rotated
+//! hot-expert set), the frozen replication keeps balancing yesterday's
+//! load. This module closes the loop:
+//!
+//! ```text
+//!   DispatchPlan ──▶ LoadEstimator (EWMA per layer) ──▶ epoch_tick
+//!        ▲                                                  │
+//!        │            Eq. 3/4 recomputed on live loads      │
+//!   Dispatcher ◀── apply_delta (new replicas + polling) ◀───┘
+//! ```
+//!
+//! * [`Replanner::observe`] aggregates finished
+//!   [`DispatchPlan`]s into the same EWMA machinery the
+//!   [`crate::routing::LoadAware`] policy uses
+//!   ([`crate::routing::LoadEstimator`]).
+//! * [`Replanner::epoch_tick`] fires every
+//!   [`ReplanConfig::epoch_rounds`] measurement rounds: per layer it
+//!   recomputes Eq.-3 replication
+//!   ([`crate::replication::dynamic_replication`]) over the *measured*
+//!   loads, compares the decision structurally against the active
+//!   [`Replication`], and gates the swap twice — a drift gate (the
+//!   predicted max-GPU-load improvement must exceed
+//!   [`ReplanConfig::min_drift`], so sampling noise never churns
+//!   replicas) and a migration cost gate (the predicted compute-seconds
+//!   saved next epoch must repay the expert-weight copy bytes, scaled by
+//!   [`ReplanConfig::payback`]).
+//! * [`apply_delta`] rebuilds the affected
+//!   [`crate::placement::LayerPlacement`]s (instances, Eq.-4 predicted
+//!   loads, polling weights); [`migration_traffic`] exposes the weight
+//!   copies as a [`TrafficMatrix`] so the engines can price them through
+//!   [`crate::comm::model`] — migration shows up in simulated latency,
+//!   not as a free teleport.
+//!
+//! On a perfectly stationary workload the recomputed decision equals the
+//! active one every epoch and the delta is empty — the re-planned path is
+//! bit-identical to static GRACE (pinned by `tests/replan.rs`).
+//! The re-planner assumes ρ-driven dynamic replication
+//! ([`crate::placement::ReplicationMode::Dynamic`], the `grace-dyn`
+//! system); grouping is never changed online — regrouping would migrate
+//! primary weights wholesale, which the cost model prices out.
+
+use crate::cluster::{GpuId, Topology};
+use crate::comm::traffic::TrafficMatrix;
+use crate::config::{GpuModel, ModelSpec};
+use crate::linalg::Matrix;
+use crate::placement::{instances_for, LayerPlacement, Placement};
+use crate::profile::LayerProfile;
+use crate::replication::{self, polling_weights, predict_loads,
+                         Replication};
+use crate::routing::{DispatchPlan, LoadEstimator};
+use crate::runtime::manifest::TinyConfig;
+
+/// Epoch cadence and gating thresholds of the online re-planner.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplanConfig {
+    /// Measurement rounds per epoch (one round = one dispatched batch
+    /// per layer); `epoch_tick` is a no-op between boundaries.
+    pub epoch_rounds: u64,
+    /// Drift gate: minimum relative improvement of the predicted max
+    /// per-GPU load (`(t_active − t_cand) / t_active`) required before a
+    /// recomputed replication is even considered. Filters sampling noise.
+    pub min_drift: f64,
+    /// Migration cost gate: the predicted compute-seconds saved over the
+    /// next epoch must be at least `payback ×` the weight-copy cost.
+    /// `0.0` disables the cost gate (drift gate still applies).
+    pub payback: f64,
+    /// EWMA smoothing factor of the measured-load estimator.
+    pub alpha: f64,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> ReplanConfig {
+        ReplanConfig {
+            epoch_rounds: 4,
+            min_drift: 0.1,
+            payback: 1.0,
+            alpha: crate::routing::LoadAware::DEFAULT_ALPHA,
+        }
+    }
+}
+
+/// Physical constants of the migration cost model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostParams {
+    /// Bytes of one expert's weights (what one added replica copies).
+    pub expert_bytes: f64,
+    /// Seconds of expert compute per routed assignment on one GPU (what
+    /// one unit of max-load improvement is worth).
+    pub moe_s_per_assignment: f64,
+}
+
+impl CostParams {
+    /// Cost model for the paper-scale simulator: expert bytes from the
+    /// [`ModelSpec`], per-assignment seconds from the [`GpuModel`] under
+    /// the system's compute-efficiency factor.
+    pub fn paper(model: &ModelSpec, gpu: &GpuModel, compute_eff: f64)
+                 -> CostParams {
+        CostParams {
+            expert_bytes: model.expert_bytes(),
+            moe_s_per_assignment: gpu.moe_time(model, 1.0) / compute_eff,
+        }
+    }
+
+    /// Cost model for the execute-mode tiny variants: f32 expert weights
+    /// from the [`TinyConfig`], a nominal per-assignment time for the
+    /// CPU-interpret PJRT path (one `expert_ffn` call amortised over a
+    /// tile — a modeling knob, not a measurement).
+    pub fn tiny(cfg: &TinyConfig) -> CostParams {
+        CostParams {
+            expert_bytes: (3 * cfg.hidden * cfg.ffn * 4) as f64,
+            moe_s_per_assignment: 100e-6,
+        }
+    }
+}
+
+/// One layer's accepted re-replication for an epoch.
+#[derive(Clone, Debug)]
+pub struct LayerDelta {
+    /// MoE layer index.
+    pub layer: usize,
+    /// The replication decision recomputed from measured loads (replaces
+    /// the layer's active [`Replication`] wholesale).
+    pub replication: Replication,
+    /// Secondary `(expert, gpu)` instances to create — each one copies
+    /// the expert's weights from its primary GPU.
+    pub added: Vec<(usize, GpuId)>,
+    /// Secondary `(expert, gpu)` instances to drop (free).
+    pub removed: Vec<(usize, GpuId)>,
+    /// Eq.-4 predicted per-GPU loads under the new replication and the
+    /// measured traffic.
+    pub predicted: Vec<f64>,
+    /// Polling weights derived from `predicted`.
+    pub polling: Vec<f64>,
+    /// Load-skew factor ρ measured over the live loads (diagnostics).
+    pub rho_live: f64,
+    /// Weight bytes this layer's migration copies.
+    pub migration_bytes: f64,
+    /// Predicted compute-seconds saved over the next epoch.
+    pub benefit_s: f64,
+    /// Estimated seconds the weight copies cost.
+    pub cost_s: f64,
+}
+
+/// Whole-model re-planning decision for one epoch. Empty when the epoch
+/// boundary has not been reached, when no layer drifted past the gates,
+/// or when no migration paid for itself.
+#[derive(Clone, Debug, Default)]
+pub struct ReplanDelta {
+    /// Accepted per-layer changes.
+    pub layers: Vec<LayerDelta>,
+    /// Total weight bytes migration copies across layers.
+    pub migration_bytes: f64,
+    /// Total predicted benefit across layers, seconds.
+    pub benefit_s: f64,
+    /// Total estimated migration cost across layers, seconds.
+    pub cost_s: f64,
+}
+
+impl ReplanDelta {
+    /// `true` when this epoch changes nothing.
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+}
+
+/// Same structural replication decision (hot set, replica hosts, count)?
+/// `w_max`/`w_r` are measurement-scale-dependent and deliberately
+/// ignored: a replayed stationary trace reproduces the decision exactly
+/// but at EWMA scale rather than whole-trace scale.
+fn same_decision(a: &Replication, b: &Replication) -> bool {
+    fn sorted(xs: &[usize]) -> Vec<usize> {
+        let mut v = xs.to_vec();
+        v.sort_unstable();
+        v
+    }
+    a.n_replica == b.n_replica
+        && sorted(&a.hot_experts) == sorted(&b.hot_experts)
+        && sorted(&a.replica_gpus) == sorted(&b.replica_gpus)
+}
+
+/// Apply an epoch's accepted delta to a placement, returning the new
+/// active placement: per changed layer the replication, instance map,
+/// predicted loads, and polling weights are replaced; groups, primaries,
+/// and profiling-time pre-loads are untouched (grouping never changes
+/// online).
+pub fn apply_delta(p: &Placement, delta: &ReplanDelta) -> Placement {
+    let mut out = p.clone();
+    for ld in &delta.layers {
+        let lp = &mut out.layers[ld.layer];
+        lp.instances = instances_for(&lp.primary, &ld.replication);
+        lp.replication = ld.replication.clone();
+        lp.predicted = ld.predicted.clone();
+        lp.polling = ld.polling.clone();
+    }
+    out
+}
+
+/// The weight copies a delta implies, as a byte matrix over GPU pairs:
+/// each added `(expert, gpu)` replica moves `expert_bytes` from the
+/// expert's primary GPU (read from the pre-delta `active` placement) to
+/// the new host. Feed the result to [`crate::comm::model`] to price the
+/// migration like any other transfer.
+pub fn migration_traffic(delta: &ReplanDelta, active: &Placement,
+                         expert_bytes: f64) -> TrafficMatrix {
+    let mut m = TrafficMatrix::zeros(active.num_gpus);
+    for ld in &delta.layers {
+        let primary = &active.layers[ld.layer].primary;
+        for &(e, g) in &ld.added {
+            m.add(primary[e], g, expert_bytes);
+        }
+    }
+    m
+}
+
+/// The epoch-based online re-planner: owns the measured-load estimator
+/// and the gating logic. One per serving run, held either directly by an
+/// engine driver ([`crate::engine::sim::simulate_rounds`]) or by the
+/// [`crate::coordinator::OnlineCoordinator`] serving surface.
+#[derive(Clone, Debug)]
+pub struct Replanner {
+    cfg: ReplanConfig,
+    cost: CostParams,
+    topo: Topology,
+    est: LoadEstimator,
+    /// Measured assignment volume per layer since the last tick (what an
+    /// epoch of traffic is worth to the benefit estimate).
+    epoch_assign: Vec<f64>,
+    last_tick_rounds: u64,
+    epochs: u64,
+    rejected: u64,
+}
+
+impl Replanner {
+    /// Re-planner over `topo` with the given cadence/gates and migration
+    /// cost model.
+    pub fn new(topo: Topology, cfg: ReplanConfig, cost: CostParams)
+               -> Replanner {
+        Replanner {
+            est: LoadEstimator::new(cfg.alpha),
+            epoch_assign: Vec::new(),
+            last_tick_rounds: 0,
+            epochs: 0,
+            rejected: 0,
+            cfg,
+            cost,
+            topo,
+        }
+    }
+
+    /// The configured cadence and gates.
+    pub fn config(&self) -> ReplanConfig {
+        self.cfg
+    }
+
+    /// The configured migration cost model.
+    pub fn cost(&self) -> CostParams {
+        self.cost
+    }
+
+    /// Epochs evaluated so far (ticks that reached the boundary).
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// Candidate layer swaps rejected by the drift or cost gate.
+    pub fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// The live load estimator (shared-machinery read access).
+    pub fn estimator(&self) -> &LoadEstimator {
+        &self.est
+    }
+
+    /// Feed one finished dispatch round: every assignment of `plan` is
+    /// measured against `lp` (the layer placement it was routed with)
+    /// and the round is folded into the layer's EWMA. Purely passive —
+    /// never touches the engine's RNG or the plan itself.
+    pub fn observe(&mut self, layer: usize, lp: &LayerPlacement,
+                   plan: &DispatchPlan) {
+        if self.epoch_assign.len() <= layer {
+            self.epoch_assign.resize(layer + 1, 0.0);
+        }
+        self.epoch_assign[layer] += plan.num_assignments() as f64;
+        self.est.record_plan(layer, lp, plan);
+    }
+
+    /// Evaluate the epoch against the active placement. Returns an empty
+    /// delta between epoch boundaries; at a boundary, recomputes Eq. 3/4
+    /// per layer over the measured loads and keeps only the layer swaps
+    /// that pass both gates.
+    pub fn epoch_tick(&mut self, active: &Placement) -> ReplanDelta {
+        let rounds = self.est.max_rounds();
+        if rounds < self.last_tick_rounds + self.cfg.epoch_rounds {
+            return ReplanDelta::default();
+        }
+        self.last_tick_rounds = rounds;
+        self.epochs += 1;
+        let volumes = std::mem::take(&mut self.epoch_assign);
+
+        let mut delta = ReplanDelta::default();
+        for (l, lp) in active.layers.iter().enumerate() {
+            // Clone the EWMA snapshot out of the estimator so the layer
+            // evaluation (which counts gate rejections on `self`) can
+            // borrow mutably.
+            let Some(expert_loads) =
+                self.est.expert_loads(l).map(<[f64]>::to_vec)
+            else {
+                continue;
+            };
+            let volume = volumes.get(l).copied().unwrap_or(0.0);
+            if let Some(ld) = self.evaluate_layer(l, lp, &expert_loads,
+                                                  volume) {
+                delta.migration_bytes += ld.migration_bytes;
+                delta.benefit_s += ld.benefit_s;
+                delta.cost_s += ld.cost_s;
+                delta.layers.push(ld);
+            }
+        }
+        delta
+    }
+
+    /// One layer's drift evaluation (see [`Replanner::epoch_tick`]).
+    fn evaluate_layer(&mut self, layer: usize, lp: &LayerPlacement,
+                      expert_loads: &[f64], volume: f64)
+                      -> Option<LayerDelta> {
+        let experts = expert_loads.len();
+        let live = LayerProfile {
+            affinity: Matrix::zeros(experts, experts),
+            load: expert_loads.to_vec(),
+            tokens: 0,
+        };
+        let pre: Vec<f64> =
+            lp.groups.iter().map(|g| live.group_load(g)).collect();
+        let total: f64 = pre.iter().sum();
+        if total <= 0.0 {
+            return None;
+        }
+
+        // Eq. 3 recomputed on live loads (grouping held fixed).
+        let cand = replication::dynamic_replication(&live, &lp.groups);
+        if same_decision(&cand, &lp.replication) {
+            return None; // no structural drift — the common case
+        }
+
+        // Predicted max per-GPU load: active replication re-priced with
+        // live `W_max`/`W_r` vs the candidate (both via Eq. 4).
+        let pred_active = predict_live(&pre, lp, &lp.replication,
+                                       expert_loads);
+        let heavy_live = live.heaviest_group(&lp.groups);
+        let pred_cand = predict_loads(&pre, heavy_live, &cand);
+        let t_active = pred_active.iter().cloned().fold(0.0, f64::max);
+        let t_cand = pred_cand.iter().cloned().fold(0.0, f64::max);
+        if t_active <= 0.0 {
+            return None;
+        }
+        let improvement = (t_active - t_cand) / t_active;
+        if improvement < self.cfg.min_drift {
+            self.rejected += 1;
+            return None;
+        }
+
+        // Migration set: secondary instances the candidate adds/drops.
+        let new_instances = instances_for(&lp.primary, &cand);
+        let mut added = Vec::new();
+        let mut removed = Vec::new();
+        for e in 0..experts {
+            for &g in &new_instances[e][1..] {
+                if !lp.instances[e].contains(&g) {
+                    added.push((e, g));
+                }
+            }
+            for &g in &lp.instances[e][1..] {
+                if !new_instances[e].contains(&g) {
+                    removed.push((e, g));
+                }
+            }
+        }
+
+        // Cost gate: copy bytes over the actual links vs the predicted
+        // compute-seconds the flatter load buys over one epoch of the
+        // measured traffic volume.
+        let migration_bytes =
+            added.len() as f64 * self.cost.expert_bytes;
+        let mut cost_s = if added.is_empty() {
+            0.0
+        } else {
+            self.topo.launch_overhead
+        };
+        for &(e, g) in &added {
+            cost_s += self.cost.expert_bytes
+                / self.topo.bw(lp.primary[e], g);
+        }
+        let benefit_s = (t_active - t_cand) / total * volume
+            * self.cost.moe_s_per_assignment;
+        if benefit_s < self.cfg.payback * cost_s {
+            self.rejected += 1;
+            return None;
+        }
+
+        let mean = total / pre.len() as f64;
+        Some(LayerDelta {
+            layer,
+            rho_live: pre[heavy_live] / mean,
+            polling: polling_weights(&pred_cand),
+            predicted: pred_cand,
+            replication: cand,
+            added,
+            removed,
+            migration_bytes,
+            benefit_s,
+            cost_s,
+        })
+    }
+}
+
+/// Eq. 4 over live loads for the *active* replication: the decision's
+/// hot set and replica hosts re-priced with measured `W_max`/`W_r`
+/// (mirrors [`crate::routing::LoadAware`]'s online recomputation).
+fn predict_live(pre: &[f64], lp: &LayerPlacement, rep: &Replication,
+                expert_loads: &[f64]) -> Vec<f64> {
+    if rep.is_none() {
+        return pre.to_vec();
+    }
+    // Hot experts all live in the heaviest group of the decision, so
+    // their shared primary is the heavy GPU.
+    let heavy = lp.primary[rep.hot_experts[0]];
+    let online = Replication {
+        hot_experts: rep.hot_experts.clone(),
+        replica_gpus: rep.replica_gpus.clone(),
+        n_replica: rep.n_replica,
+        w_max: pre[heavy],
+        w_r: rep.hot_experts.iter().map(|&e| expert_loads[e]).sum(),
+        computed: true,
+    };
+    predict_loads(pre, heavy, &online)
+        .into_iter()
+        .map(|w| w.max(0.0))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::placement::ReplicationMode;
+    use crate::routing::{Assignment, Dispatcher, RoutingPolicy};
+    use crate::stats::Rng;
+
+    /// 4 experts, one per GPU on a single 4-GPU node.
+    fn placement_from_loads(loads: Vec<f64>) -> Placement {
+        let profile = LayerProfile {
+            affinity: Matrix::zeros(loads.len(), loads.len()),
+            load: loads,
+            tokens: 100,
+        };
+        let lp = LayerPlacement::build(
+            &profile,
+            vec![vec![0], vec![1], vec![2], vec![3]],
+            ReplicationMode::Dynamic,
+        );
+        Placement { layers: vec![lp], experts: 4, num_gpus: 4 }
+    }
+
+    fn topo() -> Topology {
+        Topology::paper_testbed(1, 4)
+    }
+
+    /// Route `counts[e]` assignments of expert `e` through a primary
+    /// dispatcher and observe the plan.
+    fn observe_round(rp: &mut Replanner, p: &Placement,
+                     counts: &[usize]) {
+        let mut batch = Vec::new();
+        let mut t = 0usize;
+        for (e, &c) in counts.iter().enumerate() {
+            for _ in 0..c {
+                batch.push(Assignment { token: t, expert: e, src: t % 4 });
+                t += 1;
+            }
+        }
+        let mut d = Dispatcher::new(topo(),
+                                    RoutingPolicy::Primary.build(), 1.0);
+        let plan = d.dispatch(&p.layers[0], 0, &batch, &mut Rng::new(1));
+        rp.observe(0, &p.layers[0], &plan);
+    }
+
+    fn cfg_every_round(payback: f64) -> ReplanConfig {
+        ReplanConfig {
+            epoch_rounds: 1,
+            min_drift: 0.05,
+            payback,
+            ..ReplanConfig::default()
+        }
+    }
+
+    fn cheap_cost() -> CostParams {
+        CostParams { expert_bytes: 8.0, moe_s_per_assignment: 1e-3 }
+    }
+
+    #[test]
+    fn stationary_loads_produce_empty_delta() {
+        // Live loads replay the profiling loads exactly → the recomputed
+        // decision is structurally identical → empty delta, regardless
+        // of the gates.
+        let p = placement_from_loads(vec![280.0, 60.0, 40.0, 20.0]);
+        assert!(!p.layers[0].replication.is_none(), "fixture replicates");
+        let mut rp =
+            Replanner::new(topo(), cfg_every_round(0.0), cheap_cost());
+        for _ in 0..3 {
+            observe_round(&mut rp, &p, &[280, 60, 40, 20]);
+            let d = rp.epoch_tick(&p);
+            assert!(d.is_empty(), "stationary epoch produced {d:?}");
+        }
+        assert_eq!(rp.epochs(), 3);
+        assert_eq!(rp.rejected(), 0, "skipped before the gates");
+    }
+
+    #[test]
+    fn rotated_hot_expert_is_detected_and_applied() {
+        let p = placement_from_loads(vec![280.0, 60.0, 40.0, 20.0]);
+        assert_eq!(p.layers[0].replication.hot_experts, vec![0]);
+        let mut rp =
+            Replanner::new(topo(), cfg_every_round(0.0), cheap_cost());
+        // Load rotated onto expert 3; a few rounds so the EWMA crosses.
+        let mut delta = ReplanDelta::default();
+        for _ in 0..6 {
+            observe_round(&mut rp, &p, &[20, 40, 60, 280]);
+            let d = rp.epoch_tick(&p);
+            if !d.is_empty() {
+                delta = d;
+                break;
+            }
+        }
+        assert!(!delta.is_empty(), "drift never detected");
+        let ld = &delta.layers[0];
+        assert_eq!(ld.replication.hot_experts, vec![3]);
+        assert!(ld.added.iter().all(|&(e, _)| e == 3));
+        assert!(!ld.added.is_empty());
+        assert!(ld.removed.iter().all(|&(e, _)| e == 0),
+                "old replicas of the cold expert must be dropped");
+        assert!(ld.rho_live > 1.0);
+        assert!(delta.migration_bytes > 0.0);
+
+        // Applying it rebuilds a consistent layer placement.
+        let next = apply_delta(&p, &delta);
+        let lp = &next.layers[0];
+        assert_eq!(lp.groups, p.layers[0].groups, "grouping untouched");
+        assert_eq!(lp.primary, p.layers[0].primary);
+        assert!(lp.instances[3].len() > 1, "new hot expert replicated");
+        assert_eq!(lp.instances[0], vec![0], "old replicas dropped");
+        for (e, inst) in lp.instances.iter().enumerate() {
+            assert_eq!(inst[0], lp.primary[e], "primary first");
+            let mut d = inst.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert_eq!(d.len(), inst.len(), "distinct instance gpus");
+        }
+        let s: f64 = lp.polling.iter().sum();
+        assert!((s - 1.0).abs() < 1e-9, "polling normalized");
+
+        // And once applied, the same live loads no longer drift.
+        let mut rp2 =
+            Replanner::new(topo(), cfg_every_round(0.0), cheap_cost());
+        for _ in 0..3 {
+            observe_round(&mut rp2, &next, &[20, 40, 60, 280]);
+            assert!(rp2.epoch_tick(&next).is_empty(),
+                    "replanned placement must be a fixed point");
+        }
+    }
+
+    #[test]
+    fn cost_gate_withholds_unprofitable_migrations() {
+        let p = placement_from_loads(vec![280.0, 60.0, 40.0, 20.0]);
+        // Expensive weights, negligible compute value per assignment:
+        // the same drift that the zero-payback test applies must now be
+        // rejected by the cost gate.
+        let dear = CostParams {
+            expert_bytes: 1e12,
+            moe_s_per_assignment: 1e-12,
+        };
+        let mut rp = Replanner::new(topo(), cfg_every_round(1.0), dear);
+        for _ in 0..6 {
+            observe_round(&mut rp, &p, &[20, 40, 60, 280]);
+            assert!(rp.epoch_tick(&p).is_empty(),
+                    "unprofitable migration must be withheld");
+        }
+        assert!(rp.rejected() > 0, "gate must have actually fired");
+    }
+
+    #[test]
+    fn tick_between_epoch_boundaries_is_empty() {
+        let p = placement_from_loads(vec![280.0, 60.0, 40.0, 20.0]);
+        let cfg = ReplanConfig {
+            epoch_rounds: 3,
+            min_drift: 0.05,
+            payback: 0.0,
+            ..ReplanConfig::default()
+        };
+        let mut rp = Replanner::new(topo(), cfg, cheap_cost());
+        for round in 1..=7u64 {
+            observe_round(&mut rp, &p, &[20, 40, 60, 280]);
+            let d = rp.epoch_tick(&p);
+            if round % 3 != 0 {
+                assert!(d.is_empty(), "mid-epoch tick at round {round}");
+            }
+        }
+        assert_eq!(rp.epochs(), 2, "epochs at rounds 3 and 6");
+    }
+
+    #[test]
+    fn migration_traffic_reads_primary_sources() {
+        let p = placement_from_loads(vec![280.0, 60.0, 40.0, 20.0]);
+        let delta = ReplanDelta {
+            layers: vec![LayerDelta {
+                layer: 0,
+                replication: Replication::none(),
+                added: vec![(3, 0), (3, 1)],
+                removed: vec![],
+                predicted: vec![],
+                polling: vec![],
+                rho_live: 1.0,
+                migration_bytes: 2e6,
+                benefit_s: 1.0,
+                cost_s: 0.1,
+            }],
+            migration_bytes: 2e6,
+            benefit_s: 1.0,
+            cost_s: 0.1,
+        };
+        let m = migration_traffic(&delta, &p, 1e6);
+        assert_eq!(m.get(3, 0), 1e6, "copied from expert 3's primary");
+        assert_eq!(m.get(3, 1), 1e6);
+        assert_eq!(m.total_bytes(), 2e6);
+    }
+}

@@ -29,16 +29,40 @@ pub struct Replication {
     pub w_max: f64,
     /// Total pre-replication load of the replicated experts (`W_r`).
     pub w_r: f64,
+    /// Whether a replication pass actually ran. `false` only for
+    /// [`Replication::none`] (replication not configured); a computed
+    /// decision that found nothing worth replicating sets it `true`
+    /// ([`Replication::empty`]) — the two used to be conflated through
+    /// [`Replication::is_none`] alone.
+    pub computed: bool,
 }
 
 impl Replication {
-    /// No replication (HG-only configurations).
+    /// No replication *configured* (HG-only configurations); see
+    /// [`Replication::empty`] for the computed-but-empty outcome.
     pub fn none() -> Replication {
         Replication::default()
     }
 
+    /// A replication pass that ran and selected no hot experts (e.g. a
+    /// zero-load layer at the threshold boundary). Distinguishable from
+    /// [`Replication::none`] via [`Replication::was_computed`].
+    pub fn empty() -> Replication {
+        Replication { computed: true, ..Replication::default() }
+    }
+
+    /// Nothing is replicated — regardless of whether that is because no
+    /// pass ran ([`Replication::none`]) or because a pass found no hot
+    /// experts ([`Replication::empty`]); use
+    /// [`Replication::was_computed`] to tell them apart.
     pub fn is_none(&self) -> bool {
         self.hot_experts.is_empty()
+    }
+
+    /// `true` when a replication pass produced this value (even if it
+    /// selected nothing); `false` for the not-configured sentinel.
+    pub fn was_computed(&self) -> bool {
+        self.computed
     }
 }
 
@@ -82,7 +106,7 @@ pub fn dynamic_replication(profile: &LayerProfile, groups: &Grouping)
         groups.iter().map(|g| profile.group_load(g)).collect();
     let mean = loads.iter().sum::<f64>() / n_gpu as f64;
     if mean == 0.0 {
-        return Replication::none();
+        return Replication::empty();
     }
     let heavy = profile.heaviest_group(groups);
     let w_max = loads[heavy];
@@ -107,6 +131,7 @@ pub fn dynamic_replication(profile: &LayerProfile, groups: &Grouping)
         replica_gpus,
         w_max,
         w_r,
+        computed: true,
     }
 }
 
@@ -120,7 +145,7 @@ pub fn fixed_replication(profile: &LayerProfile, groups: &Grouping)
         groups.iter().map(|g| profile.group_load(g)).collect();
     let mean = loads.iter().sum::<f64>() / n_gpu as f64;
     if mean == 0.0 {
-        return Replication::none();
+        return Replication::empty();
     }
     let heavy = profile.heaviest_group(groups);
     let w_max = loads[heavy];
@@ -152,6 +177,7 @@ pub fn fixed_replication(profile: &LayerProfile, groups: &Grouping)
         n_replica: 1,
         w_max,
         w_r,
+        computed: true,
     }
 }
 
@@ -294,6 +320,30 @@ mod tests {
     }
 
     #[test]
+    fn computed_empty_is_distinguishable_from_not_configured() {
+        // Regression for the is_none conflation: a replication pass that
+        // ran and survived zero hot experts (threshold boundary — here
+        // the degenerate all-zero-load layer) must be tellable apart
+        // from "replication was never configured".
+        let p = profile_with_loads(vec![0.0; 8]);
+        let groups = vec![vec![0, 1], vec![2, 3], vec![4, 5], vec![6, 7]];
+        let dr = dynamic_replication(&p, &groups);
+        let fr = fixed_replication(&p, &groups);
+        assert!(dr.is_none() && dr.was_computed(),
+                "DR ran but found nothing");
+        assert!(fr.is_none() && fr.was_computed());
+        let off = Replication::none();
+        assert!(off.is_none() && !off.was_computed(),
+                "none() means not configured");
+        assert_ne!(off, Replication::empty());
+        // A non-degenerate pass is computed and non-empty.
+        let hot = profile_with_loads(vec![50.0, 1.0, 1.0, 1.0,
+                                          1.0, 1.0, 1.0, 1.0]);
+        let rep = dynamic_replication(&hot, &groups);
+        assert!(rep.was_computed() && !rep.is_none());
+    }
+
+    #[test]
     fn eq4_prediction() {
         let pre = vec![84.0, 10.0, 2.0, 0.0];
         let rep = Replication {
@@ -302,6 +352,7 @@ mod tests {
             n_replica: 3,
             w_max: 84.0,
             w_r: 80.0,
+            computed: true,
         };
         let post = predict_loads(&pre, 0, &rep);
         let w_p = 84.0 / 4.0;

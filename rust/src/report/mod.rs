@@ -75,6 +75,8 @@ pub fn metrics_json(name: &str, m: &RunMetrics) -> Value {
         ("avg_load_std", Value::num(m.mean_load_std())),
         ("launches", Value::from(m.launches)),
         ("tokens", Value::from(m.tokens)),
+        ("migration_mb", Value::num(m.migration_bytes / 1e6)),
+        ("replans", Value::from(m.replans)),
     ])
 }
 
@@ -98,6 +100,8 @@ mod tests {
             layer_load_std: vec![1.0],
             launches: 2,
             tokens: 100,
+            migration_bytes: 0.0,
+            replans: 0,
         }
     }
 

@@ -33,8 +33,11 @@ use std::sync::OnceLock;
 /// selected expert `expert`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Assignment {
+    /// Token index within the batch.
     pub token: usize,
+    /// Expert the token's gate selected.
     pub expert: usize,
+    /// GPU the token resides on (data parallelism).
     pub src: GpuId,
 }
 
@@ -44,9 +47,13 @@ pub struct Routed {
     /// Position of this assignment in the dispatched batch (stable handle
     /// for caller-side side data, e.g. gate weights).
     pub index: usize,
+    /// Token index within the batch.
     pub token: usize,
+    /// Expert the token's gate selected.
     pub expert: usize,
+    /// GPU the token resides on.
     pub src: GpuId,
+    /// GPU the policy routed the assignment to (an instance host).
     pub dst: GpuId,
 }
 
@@ -71,6 +78,7 @@ pub struct DispatchPlan {
 }
 
 impl DispatchPlan {
+    /// GPUs the plan's transfer lists span.
     pub fn num_gpus(&self) -> usize {
         self.n_gpus
     }
@@ -85,6 +93,7 @@ impl DispatchPlan {
         &self.assignments
     }
 
+    /// Routed assignments in the plan.
     pub fn num_assignments(&self) -> usize {
         self.assignments.len()
     }
@@ -188,19 +197,24 @@ pub struct Dispatcher {
 }
 
 impl Dispatcher {
+    /// Dispatcher executing `policy` over `topo`, accounting
+    /// `token_bytes` per routed copy.
     pub fn new(topo: Topology, policy: Box<dyn RoutePolicy>,
                token_bytes: f64) -> Dispatcher {
         Dispatcher { topo, policy, token_bytes }
     }
 
+    /// The topology routing decisions are made against.
     pub fn topo(&self) -> &Topology {
         &self.topo
     }
 
+    /// Name of the policy this dispatcher executes.
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
     }
 
+    /// Bytes one token copy moves (plan byte accounting).
     pub fn token_bytes(&self) -> f64 {
         self.token_bytes
     }

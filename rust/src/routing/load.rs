@@ -1,0 +1,217 @@
+//! Online load measurement: per-layer EWMAs of dispatched expert loads.
+//!
+//! One [`LoadEstimator`] is the shared measurement substrate behind both
+//! online feedback loops of the crate:
+//!
+//! * [`crate::routing::LoadAware`] folds one estimator round per dispatch
+//!   round and recomputes its Eq.-4 polling weights from it (PR-2's
+//!   within-placement feedback), and
+//! * [`crate::replan::Replanner`] aggregates finished
+//!   [`crate::routing::DispatchPlan`]s into the same estimator and, at
+//!   epoch boundaries, recomputes the *replication decision itself* from
+//!   the measured loads (the cross-placement feedback loop).
+//!
+//! Measurements are taken pre-replication: every assignment is counted
+//! where its expert's *primary* GPU lives (the load Eq. 4 starts from)
+//! and per expert (the online `W_r`), exactly as the paper's offline
+//! profiling counts them — so live estimates and profiling-time loads are
+//! directly comparable.
+
+use crate::placement::LayerPlacement;
+use crate::routing::DispatchPlan;
+
+/// Per-layer EWMA state of one estimator.
+#[derive(Clone, Debug, Default)]
+struct LayerLoads {
+    /// EWMA of measured pre-replication per-GPU loads.
+    ewma_pre: Vec<f64>,
+    /// EWMA of measured per-expert loads (online `W_r` ingredients).
+    ewma_expert: Vec<f64>,
+    /// Current-round pre-replication per-GPU counts.
+    pre_round: Vec<f64>,
+    /// Current-round per-expert counts.
+    expert_round: Vec<f64>,
+    /// Completed (non-empty) measurement rounds.
+    rounds: u64,
+}
+
+/// EWMA tracker of measured per-layer loads, keyed by MoE layer index.
+///
+/// Layers never share state: placements, replication decisions, and load
+/// profiles differ layer to layer, so one blended estimate would
+/// misattribute Eq. 4's `W_max`/`W_r`. The first non-empty round seeds
+/// the EWMA directly (`α = 1`) so a long-idle layer never averages
+/// against stale zero history.
+#[derive(Clone, Debug)]
+pub struct LoadEstimator {
+    alpha: f64,
+    layers: Vec<LayerLoads>,
+}
+
+impl LoadEstimator {
+    /// Estimator with EWMA smoothing factor `alpha ∈ [0, 1]` (the weight
+    /// of the newest round; [`crate::routing::LoadAware::DEFAULT_ALPHA`]
+    /// is the shared default).
+    pub fn new(alpha: f64) -> LoadEstimator {
+        assert!((0.0..=1.0).contains(&alpha), "alpha in [0, 1]");
+        LoadEstimator { alpha, layers: Vec::new() }
+    }
+
+    fn ensure(&mut self, layer: usize, n_gpus: usize, experts: usize) {
+        if self.layers.len() <= layer {
+            self.layers.resize_with(layer + 1, LayerLoads::default);
+        }
+        let st = &mut self.layers[layer];
+        if st.ewma_pre.len() < n_gpus {
+            st.ewma_pre.resize(n_gpus, 0.0);
+            st.pre_round.resize(n_gpus, 0.0);
+        }
+        if st.ewma_expert.len() < experts {
+            st.ewma_expert.resize(experts, 0.0);
+            st.expert_round.resize(experts, 0.0);
+        }
+    }
+
+    /// Record one expert assignment of the current round: counted on the
+    /// expert's primary GPU (pre-replication) and per expert.
+    pub fn record(&mut self, layer: usize, lp: &LayerPlacement,
+                  expert: usize) {
+        self.ensure(layer, lp.num_gpus(), lp.instances.len());
+        let st = &mut self.layers[layer];
+        st.pre_round[lp.primary[expert]] += 1.0;
+        st.expert_round[expert] += 1.0;
+    }
+
+    /// Record every assignment of a routed batch and close the round —
+    /// one finished [`DispatchPlan`] is one measurement round.
+    pub fn record_plan(&mut self, layer: usize, lp: &LayerPlacement,
+                       plan: &DispatchPlan) {
+        for r in plan.assignments() {
+            self.record(layer, lp, r.expert);
+        }
+        self.end_round(layer, lp.num_gpus(), lp.instances.len());
+    }
+
+    /// Close the layer's current measurement round, folding it into the
+    /// EWMAs. Returns `false` (estimate kept unchanged) for empty rounds.
+    pub fn end_round(&mut self, layer: usize, n_gpus: usize,
+                     experts: usize) -> bool {
+        self.ensure(layer, n_gpus, experts);
+        let st = &mut self.layers[layer];
+        if st.pre_round.iter().sum::<f64>() <= 0.0 {
+            return false; // empty round — keep the current estimate
+        }
+        st.rounds += 1;
+        // First round seeds the EWMA directly (no stale zero history).
+        let a = if st.rounds == 1 { 1.0 } else { self.alpha };
+        for (e, m) in st.ewma_pre.iter_mut().zip(&st.pre_round) {
+            *e = (1.0 - a) * *e + a * m;
+        }
+        for (e, m) in st.ewma_expert.iter_mut().zip(&st.expert_round) {
+            *e = (1.0 - a) * *e + a * m;
+        }
+        st.pre_round.iter_mut().for_each(|x| *x = 0.0);
+        st.expert_round.iter_mut().for_each(|x| *x = 0.0);
+        true
+    }
+
+    /// Completed measurement rounds for `layer`.
+    pub fn rounds(&self, layer: usize) -> u64 {
+        self.layers.get(layer).map_or(0, |s| s.rounds)
+    }
+
+    /// Maximum completed rounds across layers (the epoch clock).
+    pub fn max_rounds(&self) -> u64 {
+        self.layers.iter().map(|s| s.rounds).max().unwrap_or(0)
+    }
+
+    /// EWMA pre-replication per-GPU loads (`None` until a round closed).
+    pub fn pre_loads(&self, layer: usize) -> Option<&[f64]> {
+        let st = self.layers.get(layer)?;
+        (st.rounds > 0).then_some(&st.ewma_pre[..])
+    }
+
+    /// EWMA per-expert loads (`None` until a round closed).
+    pub fn expert_loads(&self, layer: usize) -> Option<&[f64]> {
+        let st = self.layers.get(layer)?;
+        (st.rounds > 0).then_some(&st.ewma_expert[..])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::placement::ReplicationMode;
+    use crate::profile::LayerProfile;
+
+    fn fixture() -> LayerPlacement {
+        let profile = LayerProfile {
+            affinity: Matrix::zeros(4, 4),
+            load: vec![4.0, 3.0, 2.0, 1.0],
+            tokens: 10,
+        };
+        LayerPlacement::build(
+            &profile,
+            vec![vec![0], vec![1], vec![2], vec![3]],
+            ReplicationMode::None,
+        )
+    }
+
+    #[test]
+    fn first_round_seeds_exactly() {
+        let lp = fixture();
+        let mut est = LoadEstimator::new(0.3);
+        for _ in 0..5 {
+            est.record(0, &lp, 0);
+        }
+        est.record(0, &lp, 2);
+        assert!(est.pre_loads(0).is_none(), "no closed round yet");
+        assert!(est.end_round(0, 4, 4));
+        assert_eq!(est.pre_loads(0).unwrap(), &[5.0, 0.0, 1.0, 0.0]);
+        assert_eq!(est.expert_loads(0).unwrap(),
+                   &[5.0, 0.0, 1.0, 0.0]);
+        assert_eq!(est.rounds(0), 1);
+    }
+
+    #[test]
+    fn ewma_folds_later_rounds() {
+        let lp = fixture();
+        let mut est = LoadEstimator::new(0.5);
+        est.record(0, &lp, 0);
+        est.end_round(0, 4, 4);
+        est.record(0, &lp, 1);
+        est.end_round(0, 4, 4);
+        // 0.5·[1,0,0,0] + 0.5·[0,1,0,0]
+        assert_eq!(est.pre_loads(0).unwrap(), &[0.5, 0.5, 0.0, 0.0]);
+        assert_eq!(est.rounds(0), 2);
+    }
+
+    #[test]
+    fn empty_rounds_keep_estimate() {
+        let lp = fixture();
+        let mut est = LoadEstimator::new(0.3);
+        est.record(0, &lp, 3);
+        assert!(est.end_round(0, 4, 4));
+        let before = est.pre_loads(0).unwrap().to_vec();
+        assert!(!est.end_round(0, 4, 4), "empty round must not fold");
+        assert_eq!(est.pre_loads(0).unwrap(), &before[..]);
+        assert_eq!(est.rounds(0), 1);
+    }
+
+    #[test]
+    fn layers_are_independent() {
+        let lp = fixture();
+        let mut est = LoadEstimator::new(0.3);
+        est.record(0, &lp, 0);
+        est.end_round(0, 4, 4);
+        est.record(2, &lp, 3);
+        est.end_round(2, 4, 4);
+        assert_eq!(est.rounds(0), 1);
+        assert_eq!(est.rounds(1), 0);
+        assert_eq!(est.rounds(2), 1);
+        assert_eq!(est.max_rounds(), 1);
+        assert!(est.pre_loads(1).is_none());
+        assert_eq!(est.pre_loads(2).unwrap(), &[0.0, 0.0, 0.0, 1.0]);
+    }
+}

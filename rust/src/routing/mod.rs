@@ -32,8 +32,10 @@
 //! of one serving run without leaking between runs.
 
 pub mod dispatch;
+pub mod load;
 
 pub use dispatch::{Assignment, DispatchPlan, Dispatcher, Routed};
+pub use load::LoadEstimator;
 
 use crate::cluster::{GpuId, Topology};
 use crate::placement::LayerPlacement;
@@ -44,14 +46,18 @@ use crate::stats::{dist::weighted_choice, Rng};
 /// [`RoutingPolicy::build`] for the executable form).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RoutingPolicy {
+    /// Always the expert's primary GPU (non-replicated systems).
     Primary,
+    /// Algorithm 3: weighted random choice over all instances.
     Wrr,
+    /// Algorithm 4: topology-aware locality tiers over WRR.
     Tar,
     /// TAR with online load prediction (Eq. 4 recomputed per round).
     LoadAware,
 }
 
 impl RoutingPolicy {
+    /// Stable policy name (CLI values and report labels).
     pub fn name(&self) -> &'static str {
         match self {
             RoutingPolicy::Primary => "primary",
@@ -78,8 +84,11 @@ impl RoutingPolicy {
 /// separate estimates per layer — placements and replication decisions
 /// differ layer to layer).
 pub struct RouteCtx<'a> {
+    /// The layer's placement (instances + frozen polling weights).
     pub placement: &'a LayerPlacement,
+    /// Cluster topology for locality-tier decisions.
     pub topo: &'a Topology,
+    /// MoE layer index (keys stateful policies' per-layer estimates).
     pub layer: usize,
 }
 
@@ -230,23 +239,6 @@ fn weighted_least_inflight(candidates: &[GpuId], weight_of: &[f64],
     best
 }
 
-/// Per-layer online state of [`LoadAware`].
-#[derive(Clone, Debug, Default)]
-struct LayerLoadState {
-    /// EWMA of measured pre-replication per-GPU loads.
-    ewma_pre: Vec<f64>,
-    /// EWMA of measured per-expert loads (online `W_r`).
-    ewma_expert: Vec<f64>,
-    /// Current-round pre-replication per-GPU counts.
-    pre_round: Vec<f64>,
-    /// Current-round per-expert counts.
-    expert_round: Vec<f64>,
-    /// Online Eq.-4 polling weights; the placement's frozen weights are
-    /// used until the first round completes.
-    polling: Option<Vec<f64>>,
-    rounds: u64,
-}
-
 /// Load-predictive routing: TAR's locality tiers driven by an *online*
 /// per-GPU load estimate instead of the placement-time prediction.
 ///
@@ -266,20 +258,24 @@ struct LayerLoadState {
 ///
 /// State is kept per MoE layer ([`RouteCtx::layer`]) — placements,
 /// replication decisions, and load profiles differ layer to layer, so
-/// one blended estimate would misattribute Eq. 4's `W_max`/`W_r`.
+/// one blended estimate would misattribute Eq. 4's `W_max`/`W_r`. The
+/// measurement itself lives in the shared [`LoadEstimator`] — the same
+/// machinery the epoch re-planner ([`crate::replan`]) aggregates
+/// finished plans into.
 ///
 /// Under a stationary load that matches the profiling trace, the online
 /// weights converge to the placement's static Eq.-4 polling weights (the
 /// `load_aware_*` tests pin this); under drifted load they track the
 /// drift, which static WRR/TAR cannot.
 pub struct LoadAware {
-    /// EWMA smoothing factor for per-round measured loads.
-    alpha: f64,
+    /// Shared per-layer EWMA measurement of dispatched loads.
+    est: LoadEstimator,
     /// Tokens routed to each GPU in the current round (reset at
     /// `end_round`; rounds never interleave layers, so this is shared).
     inflight: Vec<f64>,
-    /// Per-layer measurement state, indexed by [`RouteCtx::layer`].
-    layers: Vec<LayerLoadState>,
+    /// Online Eq.-4 polling weights per layer; the placement's frozen
+    /// weights are used until the layer's first round completes.
+    polling: Vec<Option<Vec<f64>>>,
 }
 
 impl Default for LoadAware {
@@ -292,43 +288,38 @@ impl LoadAware {
     /// Default EWMA smoothing: the last ~3 rounds dominate the estimate.
     pub const DEFAULT_ALPHA: f64 = 0.3;
 
+    /// LoadAware with [`LoadAware::DEFAULT_ALPHA`] smoothing.
     pub fn new() -> LoadAware {
         Self::with_alpha(Self::DEFAULT_ALPHA)
     }
 
+    /// LoadAware with an explicit EWMA smoothing factor `alpha ∈ [0, 1]`.
     pub fn with_alpha(alpha: f64) -> LoadAware {
-        assert!((0.0..=1.0).contains(&alpha), "alpha in [0, 1]");
-        LoadAware { alpha, inflight: Vec::new(), layers: Vec::new() }
+        LoadAware {
+            est: LoadEstimator::new(alpha),
+            inflight: Vec::new(),
+            polling: Vec::new(),
+        }
     }
 
     /// The online polling weights in force for `layer` (`None` until one
     /// of its rounds has completed — the placement's frozen weights apply
     /// meanwhile).
     pub fn online_polling(&self, layer: usize) -> Option<&[f64]> {
-        self.layers.get(layer)?.polling.as_deref()
+        self.polling.get(layer)?.as_deref()
     }
 
     /// Completed measurement rounds for `layer`.
     pub fn rounds(&self, layer: usize) -> u64 {
-        self.layers.get(layer).map_or(0, |s| s.rounds)
+        self.est.rounds(layer)
     }
 
-    fn ensure_sized(&mut self, layer: usize, n_gpus: usize,
-                    experts: usize) {
+    fn ensure_sized(&mut self, layer: usize, n_gpus: usize) {
         if self.inflight.len() < n_gpus {
             self.inflight.resize(n_gpus, 0.0);
         }
-        if self.layers.len() <= layer {
-            self.layers.resize_with(layer + 1, LayerLoadState::default);
-        }
-        let st = &mut self.layers[layer];
-        if st.ewma_pre.len() < n_gpus {
-            st.ewma_pre.resize(n_gpus, 0.0);
-            st.pre_round.resize(n_gpus, 0.0);
-        }
-        if st.ewma_expert.len() < experts {
-            st.ewma_expert.resize(experts, 0.0);
-            st.expert_round.resize(experts, 0.0);
+        if self.polling.len() <= layer {
+            self.polling.resize(layer + 1, None);
         }
     }
 }
@@ -341,20 +332,19 @@ impl RoutePolicy for LoadAware {
     fn select(&mut self, ctx: &RouteCtx<'_>, src_gpu: GpuId, expert: usize,
               _rng: &mut Rng) -> GpuId {
         let lp = ctx.placement;
-        self.ensure_sized(ctx.layer, lp.num_gpus(), lp.instances.len());
-        let st = &mut self.layers[ctx.layer];
+        self.ensure_sized(ctx.layer, lp.num_gpus());
         // Measure the assignment where its primary would place it (the
         // pre-replication load Eq. 4 starts from) and per expert.
-        st.pre_round[lp.primary[expert]] += 1.0;
-        st.expert_round[expert] += 1.0;
+        self.est.record(ctx.layer, lp, expert);
 
         let instances = &lp.instances[expert];
         debug_assert!(!instances.is_empty());
         let dst = match locality_tiers(ctx, src_gpu, instances) {
             TierChoice::Decided(g) => g,
             TierChoice::Among(c) => {
-                let weights =
-                    st.polling.as_deref().unwrap_or(&lp.polling);
+                let weights = self.polling[ctx.layer]
+                    .as_deref()
+                    .unwrap_or(&lp.polling);
                 weighted_least_inflight(&c, weights, &self.inflight)
             }
         };
@@ -364,50 +354,43 @@ impl RoutePolicy for LoadAware {
 
     fn end_round(&mut self, ctx: &RouteCtx<'_>) {
         let lp = ctx.placement;
-        self.ensure_sized(ctx.layer, lp.num_gpus(), lp.instances.len());
+        self.ensure_sized(ctx.layer, lp.num_gpus());
         self.inflight.iter_mut().for_each(|x| *x = 0.0);
-        let st = &mut self.layers[ctx.layer];
-        if st.pre_round.iter().sum::<f64>() <= 0.0 {
+        if !self.est.end_round(ctx.layer, lp.num_gpus(),
+                               lp.instances.len()) {
             return; // empty round — keep the current estimate
         }
-        st.rounds += 1;
-        // First round seeds the EWMA directly (no stale zero history).
-        let a = if st.rounds == 1 { 1.0 } else { self.alpha };
-        for (e, m) in st.ewma_pre.iter_mut().zip(&st.pre_round) {
-            *e = (1.0 - a) * *e + a * m;
-        }
-        for (e, m) in st.ewma_expert.iter_mut().zip(&st.expert_round) {
-            *e = (1.0 - a) * *e + a * m;
-        }
-        st.pre_round.iter_mut().for_each(|x| *x = 0.0);
-        st.expert_round.iter_mut().for_each(|x| *x = 0.0);
+        let ewma_pre = self.est.pre_loads(ctx.layer).expect("round closed");
 
         // Eq. 4 over the measured loads: the placement's replication
         // decision with live W_max / W_r / per-GPU loads.
         let rep = &lp.replication;
         let predicted = if rep.is_none() {
-            st.ewma_pre.clone()
+            ewma_pre.to_vec()
         } else {
             // Hot experts all live in the heaviest group, so its GPU is
             // their shared primary.
+            let ewma_expert =
+                self.est.expert_loads(ctx.layer).expect("round closed");
             let heavy = lp.primary[rep.hot_experts[0]];
             let online = Replication {
                 hot_experts: rep.hot_experts.clone(),
                 replica_gpus: rep.replica_gpus.clone(),
                 n_replica: rep.n_replica,
-                w_max: st.ewma_pre[heavy],
+                w_max: ewma_pre[heavy],
                 w_r: rep
                     .hot_experts
                     .iter()
-                    .map(|&e| st.ewma_expert[e])
+                    .map(|&e| ewma_expert[e])
                     .sum(),
+                computed: true,
             };
-            predict_loads(&st.ewma_pre, heavy, &online)
+            predict_loads(ewma_pre, heavy, &online)
                 .into_iter()
                 .map(|w| w.max(0.0))
                 .collect()
         };
-        st.polling = Some(polling_weights(&predicted));
+        self.polling[ctx.layer] = Some(polling_weights(&predicted));
     }
 }
 
@@ -440,6 +423,7 @@ mod tests {
             n_replica: 2,
             w_max: 90.0,
             w_r: 90.0,
+            computed: true,
         };
         p.instances[0] = vec![0, 1, 2];
         // simple polling weights favouring gpu 3 then 2 then 1 then 0
@@ -746,6 +730,7 @@ mod tests {
             n_replica: 2,
             w_max: 25.0,
             w_r: 25.0,
+            computed: true,
         };
         p.instances[0] = vec![0, 1, 2];
         p.polling = vec![0.25; 4];

@@ -9,21 +9,34 @@ use std::path::{Path, PathBuf};
 /// `ModelConfig`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct TinyConfig {
+    /// Experts per MoE layer.
     pub experts: usize,
+    /// Experts each token activates.
     pub top_k: usize,
+    /// Layers in the tiny variant.
     pub layers: usize,
+    /// Layers of the paper-scale architecture it mirrors.
     pub paper_layers: usize,
+    /// Hidden (model) dimension.
     pub hidden: usize,
+    /// Per-expert FFN intermediate dimension.
     pub ffn: usize,
+    /// Attention heads.
     pub heads: usize,
+    /// Vocabulary size.
     pub vocab: usize,
+    /// Tokens per gate/FFN tile.
     pub tile_t: usize,
+    /// Rows per Pallas grouped-FFN tile.
     pub tile_m: usize,
+    /// Tiles in the grouped-FFN dispatch capacity.
     pub cap_tiles: usize,
+    /// Context length (sequences are ctx-padded).
     pub ctx: usize,
 }
 
 impl TinyConfig {
+    /// Row capacity of one grouped-FFN call (`cap_tiles × tile_m`).
     pub fn cap_rows(&self) -> usize {
         self.cap_tiles * self.tile_m
     }
@@ -32,6 +45,7 @@ impl TinyConfig {
 /// One compiled artifact (HLO file + input signature).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactMeta {
+    /// HLO-text file name (relative to the artifacts dir).
     pub file: String,
     /// Input shapes (row-major dims) and dtypes, in call order.
     pub inputs: Vec<(Vec<usize>, String)>,
@@ -40,23 +54,31 @@ pub struct ArtifactMeta {
 /// Weight-blob layout: tensor name → (offset in f32 elements, shape).
 #[derive(Clone, Debug, PartialEq)]
 pub struct WeightsMeta {
+    /// Weight-blob file name (relative to the artifacts dir).
     pub file: String,
+    /// Tensor name → (offset in f32 elements, shape).
     pub tensors: BTreeMap<String, (usize, Vec<usize>)>,
 }
 
 /// One model variant's artifacts.
 #[derive(Clone, Debug)]
 pub struct VariantMeta {
+    /// The variant's architecture.
     pub config: TinyConfig,
+    /// Compiled artifacts by name (`gate`, `grouped_ffn`, …).
     pub artifacts: BTreeMap<String, ArtifactMeta>,
+    /// Weight-blob layout.
     pub weights: WeightsMeta,
 }
 
 /// The parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
+    /// Directory the manifest (and artifacts) live in.
     pub dir: PathBuf,
+    /// Fingerprint of the python sources that built the artifacts.
     pub fingerprint: String,
+    /// Model variants by name.
     pub variants: BTreeMap<String, VariantMeta>,
 }
 
@@ -85,6 +107,7 @@ impl Manifest {
         Ok(Manifest { dir, fingerprint, variants })
     }
 
+    /// Look a variant up by name (error lists what exists).
     pub fn variant(&self, name: &str) -> anyhow::Result<&VariantMeta> {
         self.variants.get(name).ok_or_else(|| {
             anyhow::anyhow!(

@@ -27,6 +27,7 @@ pub struct PjrtEngine {
 }
 
 impl PjrtEngine {
+    /// Spin up the CPU PJRT client for `manifest`'s artifacts.
     pub fn new(manifest: Manifest) -> anyhow::Result<PjrtEngine> {
         let client = xla::PjRtClient::cpu()
             .map_err(|e| anyhow::anyhow!("PjRtClient::cpu: {e:?}"))?;
@@ -38,10 +39,12 @@ impl PjrtEngine {
         })
     }
 
+    /// The manifest this engine executes from.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
+    /// PJRT platform name (diagnostics).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

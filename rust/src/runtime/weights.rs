@@ -13,6 +13,7 @@ pub struct WeightStore {
 }
 
 impl WeightStore {
+    /// Load one variant's weight blob into host memory.
     pub fn load(manifest: &Manifest, variant: &str)
                 -> anyhow::Result<WeightStore> {
         let meta = manifest.variant(variant)?.clone();
@@ -40,6 +41,7 @@ impl WeightStore {
         Ok(WeightStore { data, meta })
     }
 
+    /// The variant's architecture.
     pub fn config(&self) -> &super::manifest::TinyConfig {
         &self.meta.config
     }

@@ -7,6 +7,14 @@
 //! prefill then iterative greedy decode. Every token's MoE layers flow
 //! through the same placement/routing machinery the paper describes;
 //! python is never touched.
+//!
+//! With [`ServerConfig::replan`] set, the server closes the re-planning
+//! loop online: every dispatched plan feeds the coordinator's
+//! [`crate::replan::Replanner`], and *between* batch drains — never
+//! mid-dispatch-round — an epoch tick may hot-swap the placement. The
+//! executor stages the new replicas' weights before the swap
+//! ([`DistributedMoE::apply_replan`]), so migration cost is paid where a
+//! real deployment pays it.
 
 use crate::cluster::{GpuId, Topology};
 use crate::coordinator::OnlineCoordinator;
@@ -14,7 +22,8 @@ use crate::engine::real::{DistributedMoE, FfnMode, RealModel};
 use crate::exec::BoundedQueue;
 use crate::metrics::ServeMetrics;
 use crate::placement::Placement;
-use crate::routing::RoutingPolicy;
+use crate::replan::{self, CostParams, ReplanConfig, Replanner};
+use crate::routing::{DispatchPlan, RoutingPolicy};
 use crate::stats::Rng;
 use std::sync::Arc;
 use std::time::Instant;
@@ -22,15 +31,20 @@ use std::time::Instant;
 /// One inference request.
 #[derive(Clone, Debug)]
 pub struct Request {
+    /// Caller-chosen request id (responses are sorted by it).
     pub id: u64,
+    /// Prompt token ids.
     pub prompt: Vec<i32>,
+    /// Tokens to generate (greedy decode).
     pub max_new_tokens: usize,
 }
 
 /// Completed response.
 #[derive(Clone, Debug)]
 pub struct Response {
+    /// The request's id.
     pub id: u64,
+    /// Generated token ids (prompt excluded).
     pub tokens: Vec<i32>,
     /// End-to-end latency (enqueue → completion), seconds.
     pub latency: f64,
@@ -39,13 +53,19 @@ pub struct Response {
 /// Server tunables.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
+    /// Requests drained per batching round.
     pub max_batch: usize,
+    /// Admission queue capacity (backpressure bound).
     pub queue_cap: usize,
+    /// Seed of the serving-side RNG (routing randomness).
     pub seed: u64,
     /// FFN executable for the serving hot path (§Perf): the dense
     /// per-expert XLA path is ~6× faster than the Pallas kernel under
     /// CPU interpret with identical numerics.
     pub ffn_mode: FfnMode,
+    /// Epoch re-planning cadence/gates; `None` (the default) serves the
+    /// offline placement statically.
+    pub replan: Option<ReplanConfig>,
 }
 
 impl Default for ServerConfig {
@@ -55,6 +75,7 @@ impl Default for ServerConfig {
             queue_cap: 64,
             seed: 7,
             ffn_mode: FfnMode::PerExpert,
+            replan: None,
         }
     }
 }
@@ -65,9 +86,14 @@ impl Default for ServerConfig {
 /// offline methods, so a server can never rebuild a placement that
 /// disagrees with the one it was handed.
 pub struct MoEServer {
+    /// The loaded tiny model (shared with the executor).
     pub model: Arc<RealModel>,
+    /// The placement being served; re-planning swaps it between batch
+    /// drains, so readers see the currently-active plan.
     pub placement: Arc<Placement>,
+    /// The online coordination surface (policy, topology, re-planner).
     pub coord: OnlineCoordinator,
+    /// Server tunables.
     pub cfg: ServerConfig,
 }
 
@@ -83,40 +109,44 @@ impl MoEServer {
     }
 
     /// Serve with an explicit coordinator — normally (the online half of)
-    /// the one whose offline phase produced `placement`.
+    /// the one whose offline phase produced `placement`. When the config
+    /// enables re-planning and the coordinator does not already carry a
+    /// re-planner, one is attached with the tiny-model cost parameters.
     pub fn with_coordinator(model: Arc<RealModel>,
                             placement: Arc<Placement>,
                             coord: impl Into<OnlineCoordinator>,
                             cfg: ServerConfig) -> MoEServer {
-        MoEServer { model, placement, coord: coord.into(), cfg }
-    }
-
-    /// The distributed executor for this server's serving loop. One
-    /// executor (and thus one dispatcher) spans a whole [`MoEServer::serve`]
-    /// drain, so a stateful policy's online load estimates accumulate
-    /// across every token of every request instead of resetting per
-    /// forward.
-    fn executor(&self) -> DistributedMoE<'_> {
-        DistributedMoE::new(
-            &self.model,
-            &self.placement,
-            &self.coord,
-            self.cfg.ffn_mode,
-        )
+        let mut coord = coord.into();
+        if let Some(rc) = cfg.replan {
+            if coord.replanner().is_none() {
+                let replanner = Replanner::new(
+                    coord.topo().clone(),
+                    rc,
+                    CostParams::tiny(&model.cfg),
+                );
+                coord = coord.with_replanner(replanner);
+            }
+        }
+        MoEServer { model, placement, coord, cfg }
     }
 
     /// Full greedy forward of one sequence: returns the next token id.
-    fn next_token(&self, dist: &mut DistributedMoE<'_>, ids: &[i32],
-                  rng: &mut Rng) -> anyhow::Result<i32> {
-        let c = &self.model.cfg;
+    /// Every dispatched layer plan is reported through `observe`
+    /// (layer index + plan) so the serving loop can feed the re-planner
+    /// without the executor knowing about it.
+    fn next_token(model: &RealModel, n_gpus: usize,
+                  dist: &mut DistributedMoE<'_>, ids: &[i32],
+                  rng: &mut Rng,
+                  observe: &mut dyn FnMut(usize, &DispatchPlan))
+                  -> anyhow::Result<i32> {
+        let c = &model.cfg;
         anyhow::ensure!(ids.len() <= c.ctx,
                         "sequence exceeds ctx {}", c.ctx);
         let mut padded = ids.to_vec();
         padded.resize(c.ctx, 0);
-        let mut x = self.model.embed(&padded)?;
-        let n_gpus = self.coord.topo().num_gpus();
+        let mut x = model.embed(&padded)?;
         for l in 0..c.layers {
-            x = self.model.attention(&x, l, ids.len())?;
+            x = model.attention(&x, l, ids.len())?;
             // MoE over the valid prefix, tile by tile.
             let tiles = ids.len().div_ceil(c.tile_t);
             for tile in 0..tiles {
@@ -129,9 +159,10 @@ impl MoEServer {
                     rng,
                 )?;
                 x[s..e].copy_from_slice(&run.y);
+                observe(l, &run.plan);
             }
         }
-        let logits = self.model.lmhead(&x)?;
+        let logits = model.lmhead(&x)?;
         let c_v = c.vocab;
         let last = ids.len() - 1;
         let row = &logits[last * c_v..(last + 1) * c_v];
@@ -146,7 +177,14 @@ impl MoEServer {
 
     /// Serve a closed set of requests through the batching loop; returns
     /// responses (request order) and aggregate metrics.
-    pub fn serve(&self, requests: Vec<Request>)
+    ///
+    /// One executor (and thus one dispatcher) spans the whole drain, so
+    /// a stateful policy's online load estimates accumulate across every
+    /// token of every request instead of resetting per forward. Epoch
+    /// re-planning (when enabled) is evaluated between batch drains:
+    /// deltas stage their replica weights through the executor and then
+    /// hot-swap `self.placement` — never mid-dispatch-round.
+    pub fn serve(&mut self, requests: Vec<Request>)
                  -> anyhow::Result<(Vec<Response>, ServeMetrics)> {
         let queue: BoundedQueue<(Request, Instant)> =
             BoundedQueue::new(self.cfg.queue_cap);
@@ -159,7 +197,14 @@ impl MoEServer {
 
         let wall0 = Instant::now();
         let mut rng = Rng::new(self.cfg.seed);
-        let mut dist = self.executor();
+        let model = self.model.clone();
+        let n_gpus = self.coord.topo().num_gpus();
+        let mut dist = DistributedMoE::new(
+            &model,
+            self.placement.clone(),
+            &self.coord,
+            self.cfg.ffn_mode,
+        );
         let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
         let mut generated = 0usize;
 
@@ -189,7 +234,20 @@ impl MoEServer {
                     {
                         continue;
                     }
-                    let next = self.next_token(&mut dist, ids, &mut rng)?;
+                    let next = Self::next_token(
+                        &model,
+                        n_gpus,
+                        &mut dist,
+                        ids,
+                        &mut rng,
+                        &mut |layer, plan| {
+                            self.coord.observe(
+                                layer,
+                                &self.placement.layers[layer],
+                                plan,
+                            );
+                        },
+                    )?;
                     ids.push(next);
                     generated += 1;
                 }
@@ -200,6 +258,15 @@ impl MoEServer {
                     tokens: ids[r.prompt.len()..].to_vec(),
                     latency: t0.elapsed().as_secs_f64(),
                 });
+            }
+
+            // Epoch boundary between batch drains: re-plan if due.
+            let delta = self.coord.epoch_tick(&self.placement);
+            if !delta.is_empty() {
+                let next =
+                    Arc::new(replan::apply_delta(&self.placement, &delta));
+                dist.apply_replan(next.clone(), &delta)?;
+                self.placement = next;
             }
         }
 

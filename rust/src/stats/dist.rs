@@ -16,6 +16,7 @@ pub struct Zipf {
 }
 
 impl Zipf {
+    /// Zipf over `n` ranks with exponent `s` (`s = 0` is uniform).
     pub fn new(n: usize, s: f64) -> Self {
         assert!(n > 0, "Zipf over empty support");
         let mut pmf: Vec<f64> = (0..n)
@@ -34,10 +35,12 @@ impl Zipf {
         self.pmf[k]
     }
 
+    /// Size of the support.
     pub fn support(&self) -> usize {
         self.pmf.len()
     }
 
+    /// Draw one rank in `[0, n)`.
     pub fn sample(&self, rng: &mut Rng) -> usize {
         self.alias.sample(rng)
     }
@@ -90,6 +93,7 @@ impl AliasTable {
         AliasTable { prob, alias }
     }
 
+    /// Draw one index with probability proportional to its weight.
     #[inline]
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let i = rng.index(self.prob.len());
@@ -100,10 +104,12 @@ impl AliasTable {
         }
     }
 
+    /// Number of categories.
     pub fn len(&self) -> usize {
         self.prob.len()
     }
 
+    /// Always `false` (construction requires non-empty weights).
     pub fn is_empty(&self) -> bool {
         self.prob.is_empty()
     }

@@ -49,6 +49,7 @@ impl Rng {
         Rng { s, spare: None }
     }
 
+    /// Next raw 64-bit output of the generator.
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let s = &mut self.s;

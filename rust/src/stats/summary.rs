@@ -13,6 +13,7 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summarise a non-empty sample.
     pub fn of(values: &[f64]) -> Self {
         assert!(!values.is_empty(), "Summary over empty sample");
         let mut sorted = values.to_vec();
@@ -24,6 +25,7 @@ impl Summary {
         Summary { sorted, mean, std: var.sqrt() }
     }
 
+    /// Sample mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
@@ -33,22 +35,27 @@ impl Summary {
         self.std
     }
 
+    /// Smallest sample value.
     pub fn min(&self) -> f64 {
         self.sorted[0]
     }
 
+    /// Largest sample value.
     pub fn max(&self) -> f64 {
         *self.sorted.last().unwrap()
     }
 
+    /// Sum of the sample.
     pub fn sum(&self) -> f64 {
         self.mean * self.sorted.len() as f64
     }
 
+    /// Sample size.
     pub fn len(&self) -> usize {
         self.sorted.len()
     }
 
+    /// Always `false` (construction requires a non-empty sample).
     pub fn is_empty(&self) -> bool {
         false // construction requires non-empty
     }
@@ -67,10 +74,12 @@ impl Summary {
         self.sorted[lo] * (1.0 - frac) + self.sorted[hi] * frac
     }
 
+    /// Median.
     pub fn p50(&self) -> f64 {
         self.percentile(50.0)
     }
 
+    /// 99th percentile (tail latency).
     pub fn p99(&self) -> f64 {
         self.percentile(99.0)
     }

@@ -33,9 +33,11 @@ pub enum Profile {
 }
 
 impl Profile {
+    /// The three single-dataset profiles (Mixed samples from these).
     pub const ALL: [Profile; 3] = [Profile::Text, Profile::Math,
                                    Profile::Code];
 
+    /// Stable profile name (CLI values and report labels).
     pub fn name(&self) -> &'static str {
         match self {
             Profile::Text => "text",
@@ -45,6 +47,7 @@ impl Profile {
         }
     }
 
+    /// Parse a profile by its [`Profile::name`].
     pub fn from_name(s: &str) -> Option<Profile> {
         match s {
             "text" => Some(Profile::Text),
@@ -72,33 +75,74 @@ impl Profile {
 /// experts token `t` activated.
 #[derive(Clone, Debug, PartialEq)]
 pub struct LayerTrace {
+    /// Experts the layer's gate selects over.
     pub experts: usize,
+    /// Experts each token activates.
     pub top_k: usize,
+    /// Per-token selections: `tokens[t]` = the k distinct expert ids.
     pub tokens: Vec<Vec<u16>>,
 }
 
 /// Whole-model trace (one [`LayerTrace`] per MoE layer).
 #[derive(Clone, Debug)]
 pub struct GateTrace {
+    /// One trace per MoE layer.
     pub layers: Vec<LayerTrace>,
 }
 
 impl GateTrace {
+    /// MoE layers traced.
     pub fn num_layers(&self) -> usize {
         self.layers.len()
     }
 
+    /// Tokens traced (per layer).
     pub fn num_tokens(&self) -> usize {
         self.layers.first().map_or(0, |l| l.tokens.len())
+    }
+
+    /// Rotate every expert id by `shift` (mod the expert count), in
+    /// every layer — the drifting-workload fixture: the trace keeps its
+    /// skew and co-activation *structure* but the hot-expert identities
+    /// move, exactly the shift a placement frozen on the original trace
+    /// cannot serve well (see [`crate::replan`]).
+    pub fn shift_experts(&self, shift: usize) -> GateTrace {
+        GateTrace {
+            layers: self
+                .layers
+                .iter()
+                .map(|l| LayerTrace {
+                    experts: l.experts,
+                    top_k: l.top_k,
+                    tokens: l
+                        .tokens
+                        .iter()
+                        .map(|tok| {
+                            tok.iter()
+                                .map(|&e| {
+                                    ((e as usize + shift)
+                                        % l.experts)
+                                        as u16
+                                })
+                                .collect()
+                        })
+                        .collect(),
+                })
+                .collect(),
+        }
     }
 }
 
 /// Generator parameters (derived from a profile, overridable in tests).
 #[derive(Clone, Debug)]
 pub struct TraceGen {
+    /// Experts per layer.
     pub experts: usize,
+    /// Experts each token activates.
     pub top_k: usize,
+    /// MoE layers to trace.
     pub layers: usize,
+    /// Dataset profile driving skew and co-activation.
     pub profile: Profile,
     /// Base seed; combined with (profile, layer) for decorrelated streams.
     pub seed: u64,
@@ -413,6 +457,24 @@ mod tests {
             d.sort_unstable();
             assert_eq!(d, (0..8).collect::<Vec<u16>>());
         }
+    }
+
+    #[test]
+    fn shift_experts_rotates_identities_only() {
+        let t = gen(Profile::Math, 4);
+        let s = t.shift_experts(10);
+        assert_eq!(s.num_layers(), t.num_layers());
+        assert_eq!(s.num_tokens(), t.num_tokens());
+        for (ls, lt) in s.layers.iter().zip(&t.layers) {
+            for (ts, tt) in ls.tokens.iter().zip(&lt.tokens) {
+                for (&a, &b) in ts.iter().zip(tt) {
+                    assert_eq!(a as usize, (b as usize + 10) % 64);
+                }
+            }
+        }
+        // Full rotation is the identity.
+        let full = t.shift_experts(64);
+        assert_eq!(full.layers[0].tokens, t.layers[0].tokens);
     }
 
     #[test]

@@ -41,7 +41,7 @@ fn serve_batch_end_to_end_with_tar() {
         0.15,
         3,
     ));
-    let server = MoEServer::new(
+    let mut server = MoEServer::new(
         model.clone(),
         placement,
         topo,
@@ -51,6 +51,7 @@ fn serve_batch_end_to_end_with_tar() {
             queue_cap: 8,
             seed: 1,
             ffn_mode: FfnMode::PerExpert,
+            replan: None,
         },
     );
     let mut rng = Rng::new(5);
@@ -96,7 +97,7 @@ fn routing_policy_does_not_change_decoded_tokens() {
     let mut outputs = Vec::new();
     for policy in [RoutingPolicy::Primary, RoutingPolicy::Wrr,
                    RoutingPolicy::Tar, RoutingPolicy::LoadAware] {
-        let server = MoEServer::new(
+        let mut server = MoEServer::new(
             model.clone(),
             placement.clone(),
             topo.clone(),
@@ -106,6 +107,7 @@ fn routing_policy_does_not_change_decoded_tokens() {
                 queue_cap: 4,
                 seed: 2,
                 ffn_mode: FfnMode::PerExpert,
+                replan: None,
             },
         );
         let requests = vec![Request {
@@ -141,7 +143,7 @@ fn dsv2_variant_also_serves() {
         11,
     ));
     let coord = OnlineCoordinator::new(topo.clone(), RoutingPolicy::Tar);
-    let mut dist = DistributedMoE::new(&model, &placement, &coord,
+    let mut dist = DistributedMoE::new(&model, placement.clone(), &coord,
                                        FfnMode::GroupedPallas);
     let c = model.cfg.clone();
     let mut rng = Rng::new(13);
