@@ -1,0 +1,175 @@
+//! Serving-core bench: static-drain vs continuous batching on identical
+//! workloads, over the real scheduler on a virtual clock.
+//!
+//! Both arms run [`grace_moe::server::sched::simulate_serve`] — the same
+//! state machine the execute-mode server drives — with a deterministic
+//! token engine and an analytic step-cost model (per-dispatch-round
+//! overhead + per-token compute, A100-flavoured constants). The arms
+//! differ in exactly two ways, the two PR-5 claims:
+//!
+//! * **discipline** — `StaticDrain` admits only at the drain barrier
+//!   (the seed server); `Continuous` admits and retires at every step;
+//! * **forward shape** — the static arm charges the seed server's
+//!   per-sequence dispatch (`Σ ⌈len/tile_t⌉` rounds per layer), the
+//!   continuous arm the batched shared-tile dispatch
+//!   (`⌈Σ len/tile_t⌉` rounds per layer).
+//!
+//! Expected shape: continuous batching issues strictly fewer dispatch
+//! rounds per generated token (denser plans), and under open-loop
+//! Poisson arrivals its TTFT/queue-wait tails collapse relative to the
+//! drain barrier, at equal or better token throughput. The wall-clock
+//! `report_line` at the end times the scheduler machinery itself.
+//!
+//! Run: `cargo bench --bench serving`
+
+use grace_moe::bench::{bench, Table};
+use grace_moe::config::{ArrivalProcess, ServeLoad};
+use grace_moe::server::sched::{simulate_serve, SchedConfig, SchedMode};
+use grace_moe::server::Request;
+use grace_moe::stats::Rng;
+use grace_moe::testutil::fake_decode_token as fake_next;
+
+const CTX: usize = 64;
+const LAYERS: usize = 4;
+const TILE_T: usize = 16;
+/// Per-dispatch-round launch overhead, seconds (collective latency
+/// floor).
+const ROUND_S: f64 = 200e-6;
+/// Per-token expert+dense compute, seconds.
+const TOKEN_S: f64 = 40e-6;
+
+fn requests(load: &ServeLoad) -> Vec<Request> {
+    (0..load.requests)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..load.prompt)
+                .map(|p| ((i * 131 + p * 17) % 512) as i32)
+                .collect(),
+            max_new_tokens: load.new_tokens,
+        })
+        .collect()
+}
+
+/// One serving run: returns the metrics of the configured arm.
+fn run_arm(load: &ServeLoad, mode: SchedMode, seed: u64)
+           -> grace_moe::metrics::ServeMetrics {
+    let mut rng = Rng::new(seed);
+    let times = load.arrival_times(&mut rng);
+    let arrivals: Vec<(Request, f64)> =
+        requests(load).into_iter().zip(times).collect();
+    let cfg = SchedConfig {
+        mode,
+        max_batch: 8,
+        max_batch_tokens: 4 * CTX,
+        ctx: CTX,
+    };
+    let (_, metrics) = simulate_serve(
+        cfg,
+        arrivals,
+        |seqs| {
+            let tokens: usize =
+                seqs.iter().map(|(_, ids)| ids.len()).sum();
+            let rounds = match mode {
+                // Seed server: one forward per sequence per step.
+                SchedMode::StaticDrain => seqs
+                    .iter()
+                    .map(|(_, ids)| {
+                        LAYERS * ids.len().div_ceil(TILE_T)
+                    })
+                    .sum(),
+                // Batched decode: shared tiles across the live batch.
+                SchedMode::Continuous => {
+                    LAYERS * tokens.div_ceil(TILE_T)
+                }
+            };
+            let next =
+                seqs.iter().map(|(_, ids)| fake_next(ids)).collect();
+            Ok((next, rounds))
+        },
+        |tokens, rounds| {
+            rounds as f64 * ROUND_S + tokens as f64 * TOKEN_S
+        },
+    )
+    .expect("serving run");
+    metrics
+}
+
+fn main() {
+    let loads = [
+        ServeLoad {
+            requests: 64,
+            prompt: 12,
+            new_tokens: 16,
+            arrival: ArrivalProcess::Closed,
+        },
+        ServeLoad {
+            requests: 64,
+            prompt: 12,
+            new_tokens: 16,
+            arrival: ArrivalProcess::Poisson { rate: 24.0 },
+        },
+        ServeLoad {
+            requests: 96,
+            prompt: 24,
+            new_tokens: 8,
+            arrival: ArrivalProcess::Poisson { rate: 48.0 },
+        },
+    ];
+
+    let mut table = Table::new(&[
+        "WORKLOAD",
+        "SCHED",
+        "ROUNDS",
+        "ROUNDS/TOK",
+        "TTFT p50 (ms)",
+        "TTFT p95 (ms)",
+        "TTFT p99 (ms)",
+        "TPOT p50 (ms)",
+        "QWAIT p95 (ms)",
+        "TOK/S",
+    ]);
+
+    for load in &loads {
+        let mut per_mode = Vec::new();
+        for (name, mode) in [("static-drain", SchedMode::StaticDrain),
+                             ("continuous", SchedMode::Continuous)]
+        {
+            let m = run_arm(load, mode, 7);
+            let ttft = m.ttft_summary().expect("ttft");
+            let tpot = m.tpot_summary().expect("tpot");
+            let qw = m.queue_wait_summary().expect("queue wait");
+            table.row(vec![
+                load.label(),
+                name.to_string(),
+                format!("{}", m.dispatch_rounds),
+                format!("{:.2}", m.rounds_per_token()),
+                format!("{:.1}", ttft.p50() * 1e3),
+                format!("{:.1}", ttft.p95() * 1e3),
+                format!("{:.1}", ttft.p99() * 1e3),
+                format!("{:.2}", tpot.p50() * 1e3),
+                format!("{:.1}", qw.p95() * 1e3),
+                format!("{:.0}", m.throughput_tps()),
+            ]);
+            per_mode.push(m);
+        }
+        // The PR-5 acceptance bar, self-checked on every bench run:
+        // batched decode issues strictly fewer dispatch rounds per
+        // generated token than the per-sequence static drain.
+        assert!(
+            per_mode[1].rounds_per_token()
+                < per_mode[0].rounds_per_token(),
+            "{}: continuous {} rounds/tok !< static {}",
+            load.label(),
+            per_mode[1].rounds_per_token(),
+            per_mode[0].rounds_per_token()
+        );
+    }
+    println!("{}", table.render());
+
+    // Wall-clock of the scheduler machinery itself (admission, budget
+    // walk, retirement) — the serving-core overhead per request.
+    let load = loads[0];
+    let r = bench("scheduler machinery (64 reqs, closed loop)", 2, 30,
+                  || run_arm(&load, SchedMode::Continuous, 7));
+    println!("{}", r.report_line());
+}

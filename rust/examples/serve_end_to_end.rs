@@ -90,7 +90,8 @@ fn main() -> anyhow::Result<()> {
     for policy in [RoutingPolicy::Primary, RoutingPolicy::Wrr,
                    RoutingPolicy::Tar, RoutingPolicy::LoadAware] {
         let policy_coord = OnlineCoordinator::new(topo.clone(), policy);
-        let mut dist = DistributedMoE::new(&model, placement.clone(),
+        let mut dist = DistributedMoE::new(model.clone(),
+                                           placement.clone(),
                                            &policy_coord,
                                            FfnMode::GroupedPallas);
         let want = model.moe_layer_oracle(&x, 0)?;
@@ -119,7 +120,7 @@ fn main() -> anyhow::Result<()> {
             queue_cap: 64,
             seed,
             ffn_mode: FfnMode::PerExpert,
-            replan: None,
+            ..ServerConfig::default()
         },
     );
     let mut rng = Rng::new(seed);
@@ -148,6 +149,17 @@ fn main() -> anyhow::Result<()> {
         metrics.throughput_tps(),
         model.eng.exec_count.load(std::sync::atomic::Ordering::Relaxed)
     );
+    if let Some(t) = metrics.ttft_summary() {
+        println!(
+            "ttft mean {:.0} ms  p95 {:.0} ms  | {} steps, {} dispatch \
+             rounds ({:.2} rounds/token)",
+            t.mean() * 1e3,
+            t.p95() * 1e3,
+            metrics.steps,
+            metrics.dispatch_rounds,
+            metrics.rounds_per_token()
+        );
+    }
 
     // Determinism spot-check: greedy decode twice must agree.
     let mut server2 = MoEServer::with_coordinator(
@@ -159,7 +171,7 @@ fn main() -> anyhow::Result<()> {
             queue_cap: 64,
             seed,
             ffn_mode: FfnMode::PerExpert,
-            replan: None,
+            ..ServerConfig::default()
         },
     );
     let mut rng = Rng::new(seed);

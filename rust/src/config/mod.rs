@@ -11,6 +11,7 @@
 //!   real numerics through PJRT ([`crate::runtime`]).
 
 use crate::configio::Value;
+use crate::stats::{Exponential, Rng};
 
 /// Paper-scale MoE model architecture (Table 3 + public model cards).
 #[derive(Clone, Debug, PartialEq)]
@@ -207,6 +208,66 @@ impl Workload {
     }
 }
 
+/// Arrival process of a serving workload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Closed loop: every request is enqueued at t = 0 (the benchmark
+    /// drain workloads).
+    Closed,
+    /// Open loop: Poisson arrivals at `rate` requests/second
+    /// (exponential interarrival gaps via
+    /// [`crate::stats::Exponential`]).
+    Poisson {
+        /// Requests per second.
+        rate: f64,
+    },
+}
+
+/// Serving-side workload description — what the execute-mode serving
+/// front (`grace-moe serve`) and `benches/serving.rs` replay: request
+/// count and shape plus the arrival process.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ServeLoad {
+    /// Requests in the workload.
+    pub requests: usize,
+    /// Prompt tokens per request.
+    pub prompt: usize,
+    /// Tokens to generate per request.
+    pub new_tokens: usize,
+    /// When requests reach the admission queue.
+    pub arrival: ArrivalProcess,
+}
+
+impl ServeLoad {
+    /// Arrival times (seconds, ascending) for the workload — all zero
+    /// for the closed loop, cumulative exponential gaps for Poisson.
+    pub fn arrival_times(&self, rng: &mut Rng) -> Vec<f64> {
+        match self.arrival {
+            ArrivalProcess::Closed => vec![0.0; self.requests],
+            ArrivalProcess::Poisson { rate } => {
+                let exp = Exponential::new(rate);
+                let mut t = 0.0;
+                (0..self.requests)
+                    .map(|_| {
+                        t += exp.sample(rng);
+                        t
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Compact label for tables.
+    pub fn label(&self) -> String {
+        let arr = match self.arrival {
+            ArrivalProcess::Closed => "closed".to_string(),
+            ArrivalProcess::Poisson { rate } => format!("{rate}rps"),
+        };
+        format!("n{}-pf{}-gen{}-{arr}", self.requests, self.prompt,
+                self.new_tokens)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -252,5 +313,38 @@ mod tests {
     fn workload_from_bad_value_errors() {
         let v = Value::object(vec![("batch", Value::from(1usize))]);
         assert!(Workload::from_value(&v).is_err());
+    }
+
+    #[test]
+    fn serve_load_arrival_schedules() {
+        let closed = ServeLoad {
+            requests: 4,
+            prompt: 16,
+            new_tokens: 8,
+            arrival: ArrivalProcess::Closed,
+        };
+        let mut rng = Rng::new(1);
+        assert_eq!(closed.arrival_times(&mut rng), vec![0.0; 4]);
+        assert_eq!(closed.label(), "n4-pf16-gen8-closed");
+
+        let open = ServeLoad {
+            arrival: ArrivalProcess::Poisson { rate: 50.0 },
+            requests: 2000,
+            ..closed
+        };
+        let times = open.arrival_times(&mut rng);
+        assert_eq!(times.len(), 2000);
+        assert!(times.windows(2).all(|w| w[0] <= w[1]), "ascending");
+        // Mean interarrival ≈ 1/rate over a long schedule.
+        let mean_gap = times.last().unwrap() / 2000.0;
+        assert!((mean_gap - 0.02).abs() < 0.004, "mean gap {mean_gap}");
+        // Deterministic per seed.
+        let again = open.arrival_times(&mut Rng::new(1));
+        let first = {
+            let mut rng = Rng::new(1);
+            let _ = closed.arrival_times(&mut rng); // closed draws nothing
+            open.arrival_times(&mut rng)
+        };
+        assert_eq!(again, first);
     }
 }

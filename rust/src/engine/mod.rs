@@ -10,10 +10,14 @@
 //! * [`real`] — the *numerics* engine: executes the tiny AOT-compiled
 //!   model variants through PJRT ([`crate::runtime`]), performing actual
 //!   dispatch/combine in rust, and validates losslessness against the
-//!   single-device oracle artifact.
+//!   single-device oracle artifact. Its serving surface is the batched
+//!   multi-sequence step ([`real::DistributedMoE::decode_step`]): the
+//!   whole live batch shares MoE dispatch tiles, and each logical
+//!   rank's FFN shard executes concurrently on a worker pool.
 
 pub mod real;
 pub mod sim;
 
+pub use real::{DistributedMoE, FfnMode, RealModel};
 pub use sim::{simulate, simulate_rounds, simulate_with_placement,
               ReplanReport, SimConfig};

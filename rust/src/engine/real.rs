@@ -19,6 +19,7 @@
 use crate::baselines::GroupingStrategy;
 use crate::cluster::{GpuId, Topology};
 use crate::coordinator::{Coordinator, OnlineCoordinator};
+use crate::exec::ThreadPool;
 use crate::placement::Placement;
 use crate::replan::ReplanDelta;
 use crate::routing::{Assignment, DispatchPlan, Dispatcher,
@@ -27,6 +28,7 @@ use crate::runtime::manifest::{Manifest, TinyConfig};
 use crate::runtime::pjrt::{lit_f32, lit_i32, lit_scalar_i32, to_f32,
                            to_i32, PjrtEngine};
 use crate::runtime::WeightStore;
+use crate::server::even_src;
 use crate::stats::Rng;
 use crate::trace::{GateTrace, LayerTrace};
 use std::sync::Arc;
@@ -321,15 +323,23 @@ pub fn profile_real(model: &RealModel, n_tiles: usize, seed: u64)
 /// rebuilding the executor — the dispatcher (and any online policy
 /// state) survives the swap, exactly like a real deployment that keeps
 /// serving while replica weights are staged.
-pub struct DistributedMoE<'a> {
+///
+/// The model is shared via [`Arc`] too: each logical rank's FFN shard
+/// executes as its own job on the executor's [`ThreadPool`]
+/// ([`DistributedMoE::moe_layer`]), so ranks run concurrently the way a
+/// real cluster's GPUs do instead of being serialised on one thread.
+pub struct DistributedMoE {
     /// The loaded tiny model executing every compute step.
-    pub model: &'a RealModel,
+    pub model: Arc<RealModel>,
     /// FFN executable choice (see [`FfnMode`]); `GroupedPallas` is the
     /// default and the variant all losslessness tests pin down.
     pub ffn_mode: FfnMode,
     placement: Arc<Placement>,
     topo: Topology,
     dispatcher: Dispatcher,
+    /// Worker pool the per-rank FFN shards fan out over (one logical
+    /// rank per job, capped by host parallelism).
+    pool: ThreadPool,
 }
 
 /// Result of one distributed MoE layer execution.
@@ -343,22 +353,32 @@ pub struct LayerRun {
     pub plan: DispatchPlan,
 }
 
-impl<'a> DistributedMoE<'a> {
+impl DistributedMoE {
     /// Executor over `placement` routing through `coord`'s policy on its
     /// topology (the coordinator is only read at construction — the
     /// caller keeps it, and with it the re-planner, mutable).
-    pub fn new(model: &'a RealModel, placement: Arc<Placement>,
+    pub fn new(model: Arc<RealModel>, placement: Arc<Placement>,
                coord: &OnlineCoordinator, ffn_mode: FfnMode)
-               -> DistributedMoE<'a> {
+               -> DistributedMoE {
         // Per-copy payload: one f32 hidden activation vector.
         let token_bytes =
             (model.cfg.hidden * std::mem::size_of::<f32>()) as f64;
+        let workers = coord
+            .topo()
+            .num_gpus()
+            .min(
+                std::thread::available_parallelism()
+                    .map(|n| n.get())
+                    .unwrap_or(1),
+            )
+            .max(1);
         DistributedMoE {
             model,
             placement,
             topo: coord.topo().clone(),
             ffn_mode,
             dispatcher: coord.dispatcher(token_bytes),
+            pool: ThreadPool::new(workers),
         }
     }
 
@@ -387,7 +407,11 @@ impl<'a> DistributedMoE<'a> {
     ///
     /// `src_gpu_of` assigns each of the tile's tokens to its resident
     /// rank (data parallelism); one batched dispatch round then decides
-    /// which rank executes each expert assignment.
+    /// which rank executes each expert assignment. Every rank's FFN
+    /// shard (its slice of the plan's transfer lists) runs as one job on
+    /// the executor's [`ThreadPool`]; the weighted combine stays
+    /// sequential in rank order, so the floating-point accumulation is
+    /// bit-identical to the serial execution it replaces.
     pub fn moe_layer(&mut self, x_tile: &[f32], layer: usize,
                      src_gpu_of: &dyn Fn(usize) -> GpuId,
                      rng: &mut Rng) -> anyhow::Result<LayerRun> {
@@ -408,96 +432,232 @@ impl<'a> DistributedMoE<'a> {
         }
         let plan = self.dispatcher.dispatch(lp, layer, &batch, rng);
 
-        // Execute each rank's grouped FFN (over the plan's transfer lists
-        // destined to it) and combine.
+        // Per-rank buckets of (expert, token, gate weight) — the batch
+        // index recovers each assignment's gate weight. Empty ranks are
+        // dropped before the fan-out.
+        let jobs: Vec<(GpuId, Vec<(usize, usize, f32)>)> = (0..n_gpus)
+            .map(|gpu| {
+                (
+                    gpu,
+                    plan.for_rank(gpu)
+                        .map(|r| (r.expert, r.token, topw[r.index]))
+                        .collect::<Vec<_>>(),
+                )
+            })
+            .filter(|(_, bucket)| !bucket.is_empty())
+            .collect();
+
+        // Fan the rank shards out over the pool. `map` preserves input
+        // order, so the combine below walks ranks ascending exactly like
+        // the old serial loop.
+        let hidden = c.hidden;
+        let xn = Arc::new(xn);
+        let model = self.model.clone();
+        let mode = self.ffn_mode;
+        let outs = self.pool.map(jobs, move |(gpu, bucket)| {
+            rank_ffn(&model, layer, mode, &xn, gpu, bucket)
+        });
+
         let mut y = x_tile.to_vec(); // residual
-        for gpu in 0..n_gpus {
-            // (expert, token, gate weight) copies this rank executes; the
-            // batch index recovers the assignment's gate weight.
-            let bucket: Vec<(usize, usize, f32)> = plan
-                .for_rank(gpu)
-                .map(|r| (r.expert, r.token, topw[r.index]))
-                .collect();
-            if bucket.is_empty() {
-                continue;
-            }
-            // Expert-aligned layout: sort by expert, pad per expert to
-            // tile_m (the contract of the L1 tiled Pallas kernel).
-            let mut sorted = bucket;
-            sorted.sort_by_key(|&(e, t, _)| (e, t));
-
-            if self.ffn_mode == FfnMode::PerExpert {
-                // CPU fast path: one dense expert_ffn call per (expert,
-                // tile_t-chunk) of this rank's bucket.
-                let mut i = 0usize;
-                while i < sorted.len() {
-                    let e = sorted[i].0;
-                    let mut j = i;
-                    while j < sorted.len() && sorted[j].0 == e {
-                        j += 1;
-                    }
-                    for chunk in sorted[i..j].chunks(c.tile_t) {
-                        let mut xt = vec![0.0f32; c.tile_t * c.hidden];
-                        for (row, &(_, t, _)) in chunk.iter().enumerate() {
-                            xt[row * c.hidden..(row + 1) * c.hidden]
-                                .copy_from_slice(
-                                    &xn[t * c.hidden..(t + 1) * c.hidden],
-                                );
-                        }
-                        let yt = self.model.expert_ffn(layer, e, &xt)?;
-                        for (row, &(_, t, w)) in chunk.iter().enumerate() {
-                            for h in 0..c.hidden {
-                                y[t * c.hidden + h] +=
-                                    w * yt[row * c.hidden + h];
-                            }
-                        }
-                    }
-                    i = j;
-                }
-                continue;
-            }
-
-            let mut xa = vec![0.0f32; c.cap_rows() * c.hidden];
-            let mut tile_expert = vec![-1i32; c.cap_tiles];
-            let mut slot_meta: Vec<Option<(usize, f32)>> =
-                vec![None; c.cap_rows()];
-            let mut slot = 0usize;
-            let mut i = 0usize;
-            while i < sorted.len() {
-                let e = sorted[i].0;
-                let start_tile = slot / c.tile_m;
-                while i < sorted.len() && sorted[i].0 == e {
-                    let (_, t, w) = sorted[i];
-                    anyhow::ensure!(slot < c.cap_rows(),
-                                    "dispatch capacity exceeded on rank \
-                                     {gpu} (cap_rows {})", c.cap_rows());
-                    xa[slot * c.hidden..(slot + 1) * c.hidden]
-                        .copy_from_slice(
-                            &xn[t * c.hidden..(t + 1) * c.hidden],
-                        );
-                    slot_meta[slot] = Some((t, w));
-                    slot += 1;
-                    i += 1;
-                }
-                // pad to tile boundary
-                slot = (slot + c.tile_m - 1) / c.tile_m * c.tile_m;
-                let end_tile = slot / c.tile_m;
-                for tile in start_tile..end_tile.min(c.cap_tiles) {
-                    tile_expert[tile] = e as i32;
-                }
-            }
-            let ya = self.model.grouped_ffn(layer, &xa, &tile_expert)?;
-            for (s, meta) in slot_meta.iter().enumerate() {
-                if let Some((t, w)) = meta {
-                    for h in 0..c.hidden {
-                        y[t * c.hidden + h] += w * ya[s * c.hidden + h];
-                    }
+        for out in outs {
+            for (t, w, row) in out? {
+                for h in 0..hidden {
+                    y[t * hidden + h] += w * row[h];
                 }
             }
         }
 
         Ok(LayerRun { y, plan })
     }
+
+    /// One iteration-level step over a whole live batch of sequences:
+    /// the batched multi-sequence forward behind the serving front's
+    /// continuous-batching scheduler.
+    ///
+    /// Embedding, attention, and the LM head execute per sequence (the
+    /// AOT artifacts are single-sequence `[ctx, hidden]` programs), but
+    /// the MoE layers run over *shared* tiles packed across the batch:
+    /// every `tile_t` live tokens — regardless of which sequence they
+    /// belong to — form one dispatch round, so a step over N short
+    /// sequences issues `⌈Σ len / tile_t⌉` rounds per layer instead of
+    /// the per-sequence path's `Σ ⌈len / tile_t⌉`. Fewer, denser plans:
+    /// exactly what the locality-aware routing machinery and the comm
+    /// models want to see.
+    ///
+    /// Per-token numerics are independent of tile packing (gate LN,
+    /// expert FFN, and the weighted combine are all row-wise), so greedy
+    /// decode produces token-for-token the same outputs as stepping each
+    /// sequence alone — pinned by `batched_decode_is_batch_invariant`.
+    ///
+    /// `observe` sees every dispatched `(layer, plan)` in issue order;
+    /// returns the next greedy token per sequence.
+    pub fn decode_step(&mut self, seqs: &[&[i32]], rng: &mut Rng,
+                       observe: &mut dyn FnMut(usize, &DispatchPlan))
+                       -> anyhow::Result<Vec<i32>> {
+        let c = self.model.cfg.clone();
+        anyhow::ensure!(!seqs.is_empty(), "decode_step: empty batch");
+        for ids in seqs {
+            anyhow::ensure!(
+                !ids.is_empty() && ids.len() <= c.ctx,
+                "decode_step: sequence length {} outside 1..={}",
+                ids.len(),
+                c.ctx
+            );
+        }
+        let n_gpus = self.topo.num_gpus();
+
+        // Embed every sequence (ctx-padded, as the artifacts expect).
+        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(seqs.len());
+        for ids in seqs {
+            let mut padded = ids.to_vec();
+            padded.resize(c.ctx, 0);
+            xs.push(self.model.embed(&padded)?);
+        }
+
+        // Flat (sequence, position) map over the live tokens,
+        // sequence-major — the shared-tile packing order.
+        let flat: Vec<(usize, usize)> = seqs
+            .iter()
+            .enumerate()
+            .flat_map(|(s, ids)| (0..ids.len()).map(move |p| (s, p)))
+            .collect();
+        let total = flat.len();
+
+        for l in 0..c.layers {
+            for (s, ids) in seqs.iter().enumerate() {
+                let att = self.model.attention(&xs[s], l, ids.len())?;
+                xs[s] = att;
+            }
+            for (tile_idx, tile_toks) in flat.chunks(c.tile_t).enumerate()
+            {
+                // Gather the tile across sequences (zero-padded tail).
+                let mut x_tile = vec![0.0f32; c.tile_t * c.hidden];
+                for (row, &(s, p)) in tile_toks.iter().enumerate() {
+                    x_tile[row * c.hidden..(row + 1) * c.hidden]
+                        .copy_from_slice(
+                            &xs[s][p * c.hidden..(p + 1) * c.hidden],
+                        );
+                }
+                let base = tile_idx * c.tile_t;
+                let run = self.moe_layer(
+                    &x_tile,
+                    l,
+                    &|t| even_src(base + t, total, n_gpus),
+                    rng,
+                )?;
+                for (row, &(s, p)) in tile_toks.iter().enumerate() {
+                    xs[s][p * c.hidden..(p + 1) * c.hidden]
+                        .copy_from_slice(
+                            &run.y[row * c.hidden..(row + 1) * c.hidden],
+                        );
+                }
+                observe(l, &run.plan);
+            }
+        }
+
+        // Greedy next token per sequence off the last valid row.
+        let mut next = Vec::with_capacity(seqs.len());
+        for (s, ids) in seqs.iter().enumerate() {
+            let logits = self.model.lmhead(&xs[s])?;
+            let last = ids.len() - 1;
+            let row = &logits[last * c.vocab..(last + 1) * c.vocab];
+            let mut best = 0usize;
+            for (i, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = i;
+                }
+            }
+            next.push(best as i32);
+        }
+        Ok(next)
+    }
+}
+
+/// One rank's FFN shard: execute every routed copy in `bucket` and
+/// return the weighted-combine inputs `(token, gate weight, FFN output
+/// row)` in exactly the order the serial path accumulated them — the
+/// caller applies them sequentially so parallel rank execution cannot
+/// perturb the floating-point result.
+fn rank_ffn(model: &RealModel, layer: usize, mode: FfnMode, xn: &[f32],
+            gpu: GpuId, bucket: Vec<(usize, usize, f32)>)
+            -> anyhow::Result<Vec<(usize, f32, Vec<f32>)>> {
+    let c = &model.cfg;
+    // Expert-aligned layout: sort by expert, pad per expert to tile_m
+    // (the contract of the L1 tiled Pallas kernel).
+    let mut sorted = bucket;
+    sorted.sort_by_key(|&(e, t, _)| (e, t));
+    let mut out = Vec::with_capacity(sorted.len());
+
+    if mode == FfnMode::PerExpert {
+        // CPU fast path: one dense expert_ffn call per (expert,
+        // tile_t-chunk) of this rank's bucket.
+        let mut i = 0usize;
+        while i < sorted.len() {
+            let e = sorted[i].0;
+            let mut j = i;
+            while j < sorted.len() && sorted[j].0 == e {
+                j += 1;
+            }
+            for chunk in sorted[i..j].chunks(c.tile_t) {
+                let mut xt = vec![0.0f32; c.tile_t * c.hidden];
+                for (row, &(_, t, _)) in chunk.iter().enumerate() {
+                    xt[row * c.hidden..(row + 1) * c.hidden]
+                        .copy_from_slice(
+                            &xn[t * c.hidden..(t + 1) * c.hidden],
+                        );
+                }
+                let yt = model.expert_ffn(layer, e, &xt)?;
+                for (row, &(_, t, w)) in chunk.iter().enumerate() {
+                    out.push((
+                        t,
+                        w,
+                        yt[row * c.hidden..(row + 1) * c.hidden].to_vec(),
+                    ));
+                }
+            }
+            i = j;
+        }
+        return Ok(out);
+    }
+
+    let mut xa = vec![0.0f32; c.cap_rows() * c.hidden];
+    let mut tile_expert = vec![-1i32; c.cap_tiles];
+    let mut slot_meta: Vec<Option<(usize, f32)>> = vec![None; c.cap_rows()];
+    let mut slot = 0usize;
+    let mut i = 0usize;
+    while i < sorted.len() {
+        let e = sorted[i].0;
+        let start_tile = slot / c.tile_m;
+        while i < sorted.len() && sorted[i].0 == e {
+            let (_, t, w) = sorted[i];
+            anyhow::ensure!(slot < c.cap_rows(),
+                            "dispatch capacity exceeded on rank {gpu} \
+                             (cap_rows {})", c.cap_rows());
+            xa[slot * c.hidden..(slot + 1) * c.hidden].copy_from_slice(
+                &xn[t * c.hidden..(t + 1) * c.hidden],
+            );
+            slot_meta[slot] = Some((t, w));
+            slot += 1;
+            i += 1;
+        }
+        // pad to tile boundary
+        slot = (slot + c.tile_m - 1) / c.tile_m * c.tile_m;
+        let end_tile = slot / c.tile_m;
+        for tile in start_tile..end_tile.min(c.cap_tiles) {
+            tile_expert[tile] = e as i32;
+        }
+    }
+    let ya = model.grouped_ffn(layer, &xa, &tile_expert)?;
+    for (s, meta) in slot_meta.iter().enumerate() {
+        if let Some((t, w)) = *meta {
+            out.push((
+                t,
+                w,
+                ya[s * c.hidden..(s + 1) * c.hidden].to_vec(),
+            ));
+        }
+    }
+    Ok(out)
 }
 
 /// Build a placement for the tiny model from a *real* gate profile —
@@ -527,7 +687,7 @@ mod tests {
     use crate::placement::ReplicationMode;
     use std::path::PathBuf;
 
-    fn model() -> Option<RealModel> {
+    fn model() -> Option<Arc<RealModel>> {
         let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !d.join("manifest.json").exists() {
             eprintln!("skipping: artifacts not built");
@@ -538,7 +698,7 @@ mod tests {
                        stub) — execute-mode tests need real bindings");
             return None;
         }
-        Some(RealModel::load(&d, "olmoe_tiny").unwrap())
+        Some(Arc::new(RealModel::load(&d, "olmoe_tiny").unwrap()))
     }
 
     #[test]
@@ -560,7 +720,8 @@ mod tests {
             ));
             let coord = OnlineCoordinator::new(topo.clone(), policy);
             let mut dist = DistributedMoE::new(
-                &m, placement.clone(), &coord, FfnMode::GroupedPallas,
+                m.clone(), placement.clone(), &coord,
+                FfnMode::GroupedPallas,
             );
             let run = dist
                 .moe_layer(&x, 0, &(|t| t % 4), &mut Rng::new(5))
@@ -601,8 +762,9 @@ mod tests {
         let coord =
             OnlineCoordinator::new(topo.clone(), RoutingPolicy::Tar);
         for mode in [FfnMode::GroupedPallas, FfnMode::PerExpert] {
-            let mut dist =
-                DistributedMoE::new(&m, placement.clone(), &coord, mode);
+            let mut dist = DistributedMoE::new(
+                m.clone(), placement.clone(), &coord, mode,
+            );
             // identical routing randomness per mode
             let run =
                 dist.moe_layer(&x, 0, &(|t| t % 4), &mut Rng::new(6))
@@ -615,6 +777,77 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_err < 1e-4, "modes diverge: {max_err}");
+    }
+
+    #[test]
+    fn batched_decode_is_batch_invariant() {
+        // Token outputs of the batched multi-sequence forward must not
+        // depend on batch composition: stepping [a, b] together equals
+        // stepping each alone (per-token numerics are row-wise).
+        let Some(m) = model() else { return };
+        let topo = Topology::two_by_two();
+        let trace = profile_real(&m, 1, 17).unwrap();
+        let placement = Arc::new(place_real(
+            &m, &topo, &trace, ReplicationMode::Dynamic, 0.15, 17,
+        ));
+        let coord =
+            OnlineCoordinator::new(topo.clone(), RoutingPolicy::Tar);
+        let a: Vec<i32> = (0..9).map(|i| (i * 13 % 512) as i32).collect();
+        let b: Vec<i32> = (0..5).map(|i| (i * 29 % 512) as i32).collect();
+        let run = |seqs: &[&[i32]]| {
+            let mut dist = DistributedMoE::new(
+                m.clone(), placement.clone(), &coord, FfnMode::PerExpert,
+            );
+            dist.decode_step(seqs, &mut Rng::new(3), &mut |_, _| {})
+                .unwrap()
+        };
+        let together = run(&[&a, &b]);
+        let alone_a = run(&[&a]);
+        let alone_b = run(&[&b]);
+        assert_eq!(together[0], alone_a[0], "a's token changed in batch");
+        assert_eq!(together[1], alone_b[0], "b's token changed in batch");
+    }
+
+    #[test]
+    fn batched_decode_issues_fewer_dispatch_rounds() {
+        // Shared-tile packing: N short sequences stepped together issue
+        // ⌈Σ len / tile_t⌉ rounds per layer, strictly fewer than the
+        // per-sequence Σ ⌈len / tile_t⌉ whenever fragments combine.
+        let Some(m) = model() else { return };
+        let c = m.cfg.clone();
+        let topo = Topology::two_by_two();
+        let trace = profile_real(&m, 1, 23).unwrap();
+        let placement = Arc::new(place_real(
+            &m, &topo, &trace, ReplicationMode::Dynamic, 0.15, 23,
+        ));
+        let coord =
+            OnlineCoordinator::new(topo.clone(), RoutingPolicy::Tar);
+        let len = (c.tile_t / 2).max(1);
+        let seqs: Vec<Vec<i32>> = (0..3)
+            .map(|s| {
+                (0..len).map(|i| ((s * 31 + i * 7) % 512) as i32).collect()
+            })
+            .collect();
+        let refs: Vec<&[i32]> =
+            seqs.iter().map(|v| v.as_slice()).collect();
+        let mut dist = DistributedMoE::new(
+            m.clone(), placement.clone(), &coord, FfnMode::PerExpert,
+        );
+        let mut batched_rounds = 0usize;
+        dist.decode_step(&refs, &mut Rng::new(5), &mut |_, _| {
+            batched_rounds += 1;
+        })
+        .unwrap();
+        let per_seq_rounds: usize = seqs
+            .iter()
+            .map(|s| c.layers * s.len().div_ceil(c.tile_t))
+            .sum();
+        let want = c.layers * (3 * len).div_ceil(c.tile_t);
+        assert_eq!(batched_rounds, want);
+        assert!(
+            batched_rounds < per_seq_rounds,
+            "batched {batched_rounds} !< per-seq {per_seq_rounds}"
+        );
     }
 
     #[test]

@@ -199,8 +199,25 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Non-blocking receive: `None` when the queue is currently empty,
+    /// whether or not it is closed (callers that need to distinguish
+    /// "drained and closed" block on [`BoundedQueue::recv`] instead).
+    pub fn try_recv(&self) -> Option<T> {
+        let mut st = self.inner.state.lock().unwrap();
+        let item = st.0.pop_front();
+        if item.is_some() {
+            self.inner.not_full.notify_one();
+        }
+        item
+    }
+
     /// Drain up to `max` items without blocking beyond the first.
+    /// `recv_batch(0)` asks for nothing and returns nothing — it never
+    /// consumes an item it cannot hand back.
     pub fn recv_batch(&self, max: usize) -> Vec<T> {
+        if max == 0 {
+            return Vec::new();
+        }
         let mut out = Vec::new();
         if let Some(first) = self.recv() {
             out.push(first);
@@ -294,5 +311,100 @@ mod tests {
         let b = q.recv_batch(4);
         assert_eq!(b, vec![0, 1, 2, 3]);
         assert_eq!(q.len(), 6);
+    }
+
+    #[test]
+    fn recv_batch_boundary_semantics() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(16);
+        for i in 0..3 {
+            q.send(i).unwrap();
+        }
+        // max = 0 returns empty WITHOUT consuming (the old code popped
+        // one item it could never hand back).
+        assert!(q.recv_batch(0).is_empty());
+        assert_eq!(q.len(), 3);
+        // max beyond the queued count drains exactly what is there.
+        assert_eq!(q.recv_batch(10), vec![0, 1, 2]);
+        assert!(q.is_empty());
+        // closed + drained: the batch is empty, not a hang.
+        q.close();
+        assert!(q.recv_batch(4).is_empty());
+    }
+
+    #[test]
+    fn try_recv_never_blocks() {
+        let q: BoundedQueue<usize> = BoundedQueue::new(4);
+        assert_eq!(q.try_recv(), None);
+        q.send(9).unwrap();
+        assert_eq!(q.try_recv(), Some(9));
+        assert_eq!(q.try_recv(), None);
+        q.close();
+        assert_eq!(q.try_recv(), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_receiver_and_sender() {
+        // Blocked receiver: close() must deliver the terminal None.
+        let q: BoundedQueue<usize> = BoundedQueue::new(1);
+        let q2 = q.clone();
+        let recv = std::thread::spawn(move || q2.recv());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(recv.join().unwrap(), None);
+
+        // Blocked sender (queue full): close() must fail the send and
+        // hand the item back.
+        let q: BoundedQueue<usize> = BoundedQueue::new(1);
+        q.send(1).unwrap();
+        let q2 = q.clone();
+        let send = std::thread::spawn(move || q2.send(2));
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        q.close();
+        assert_eq!(send.join().unwrap(), Err(2));
+    }
+
+    #[test]
+    fn mpmc_stress_on_thread_pool() {
+        // 4 producers × 500 items against 4 consumers, with a deliberately
+        // tiny capacity so both sides block constantly. Producers run on
+        // one pool, consumers on another (a single pool could strand the
+        // producers behind blocked consumer jobs).
+        const PRODUCERS: usize = 4;
+        const PER_PRODUCER: usize = 500;
+        let q: BoundedQueue<usize> = BoundedQueue::new(2);
+
+        let consumed: Arc<Mutex<Vec<usize>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let consumers = ThreadPool::new(4);
+        for _ in 0..4 {
+            let q = q.clone();
+            let consumed = consumed.clone();
+            consumers.submit(move || {
+                while let Some(x) = q.recv() {
+                    consumed.lock().unwrap().push(x);
+                }
+            });
+        }
+
+        let producers = ThreadPool::new(PRODUCERS);
+        for p in 0..PRODUCERS {
+            let q = q.clone();
+            producers.submit(move || {
+                for i in 0..PER_PRODUCER {
+                    q.send(p * PER_PRODUCER + i).unwrap();
+                }
+            });
+        }
+        producers.join();
+        q.close();
+        consumers.join();
+
+        let mut got = Arc::try_unwrap(consumed)
+            .expect("consumers done")
+            .into_inner()
+            .unwrap();
+        got.sort_unstable();
+        let want: Vec<usize> = (0..PRODUCERS * PER_PRODUCER).collect();
+        assert_eq!(got, want, "every item delivered exactly once");
     }
 }

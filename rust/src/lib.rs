@@ -35,7 +35,7 @@
 //! | GRACE algorithms | [`grouping`], [`replication`], [`placement`], [`routing`] — `RoutePolicy` trait + `Dispatcher`/`DispatchPlan` batched dispatch |
 //! | online feedback | [`replan`] — epoch-based re-planning: measured loads → Eq. 3/4 recomputed → gated placement hot-swap |
 //! | coordination | [`coordinator`] — the L3 offline→online pipeline (`Coordinator` offline, `OnlineCoordinator` serving + epoch ticks) |
-//! | engine | [`engine`], [`runtime`], [`server`] |
+//! | engine | [`engine`], [`runtime`], [`server`] — continuous-batching serving core: [`server::sched`] iteration-level scheduler over the batched multi-sequence decode step |
 //! | evaluation | [`baselines`], [`metrics`], [`report`] |
 //!
 //! The paper-to-code map — every section, equation, and figure of the

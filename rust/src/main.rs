@@ -57,6 +57,12 @@ SERVE OPTIONS (tiny AOT model; run `make artifacts` first):
   --variant <olmoe_tiny|dsv2_tiny|qwen3_tiny>
   --requests <n>  --prompt <len>  --new-tokens <n>
   --policy <primary|wrr|tar|load-aware>
+  --sched <continuous|static>       batching discipline (default
+                                    continuous; static = drain barrier)
+  --max-batch <n>                   live-sequence cap (default 8)
+  --max-batch-tokens <n>            step token budget (default 256)
+  --arrival-rate <req/s>            open-loop Poisson arrivals
+                                    (default 0 = closed loop)
   --artifacts <dir>                 artifacts dir (default ./artifacts)
 ";
 
@@ -215,6 +221,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let prompt_len = args.usize_or("prompt", 24)?;
     let new_tokens = args.usize_or("new-tokens", 8)?;
     let seed = args.u64_or("seed", 42)?;
+    let arrival_rate = args.f64_or("arrival-rate", 0.0)?;
+    let sched = match args.str_or("sched", "continuous") {
+        "continuous" => grace_moe::server::SchedMode::Continuous,
+        "static" => grace_moe::server::SchedMode::StaticDrain,
+        other => anyhow::bail!("unknown scheduler '{other}'"),
+    };
+    let load = grace_moe::config::ServeLoad {
+        requests: n_requests,
+        prompt: prompt_len,
+        new_tokens,
+        arrival: if arrival_rate > 0.0 {
+            grace_moe::config::ArrivalProcess::Poisson {
+                rate: arrival_rate,
+            }
+        } else {
+            grace_moe::config::ArrivalProcess::Closed
+        },
+    };
 
     eprintln!("loading {variant} from {dir}…");
     let model = Arc::new(RealModel::load(dir, variant)?);
@@ -242,6 +266,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         coord,
         ServerConfig {
             max_batch: args.usize_or("max-batch", 8)?,
+            max_batch_tokens: args.usize_or("max-batch-tokens", 256)?,
+            sched,
             queue_cap: 64,
             seed,
             ffn_mode: if args.str_or("ffn", "per-expert") == "pallas" {
@@ -262,9 +288,19 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             max_new_tokens: new_tokens,
         })
         .collect();
-    eprintln!("serving {n_requests} requests (policy={})…",
-              policy.name());
-    let (responses, metrics) = server.serve(requests)?;
+    eprintln!("serving {} (policy={}, sched={:?})…", load.label(),
+              policy.name(), sched);
+    let (responses, metrics) = match load.arrival {
+        grace_moe::config::ArrivalProcess::Closed => {
+            server.serve(requests)?
+        }
+        grace_moe::config::ArrivalProcess::Poisson { .. } => {
+            let times = load.arrival_times(&mut rng);
+            server.serve_open_loop(
+                requests.into_iter().zip(times).collect(),
+            )?
+        }
+    };
     for r in &responses {
         println!(
             "request {}: {} tokens in {:.1} ms — {:?}",
@@ -276,13 +312,44 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(s) = metrics.latency_summary() {
         println!(
-            "latency mean {:.1} ms  p50 {:.1} ms  p99 {:.1} ms",
+            "latency   mean {:.1} ms  p50 {:.1} ms  p95 {:.1} ms  \
+             p99 {:.1} ms",
+            s.mean() * 1e3,
+            s.p50() * 1e3,
+            s.p95() * 1e3,
+            s.p99() * 1e3
+        );
+    }
+    if let Some(s) = metrics.ttft_summary() {
+        println!(
+            "ttft      mean {:.1} ms  p50 {:.1} ms  p95 {:.1} ms  \
+             p99 {:.1} ms",
+            s.mean() * 1e3,
+            s.p50() * 1e3,
+            s.p95() * 1e3,
+            s.p99() * 1e3
+        );
+    }
+    if let Some(s) = metrics.tpot_summary() {
+        println!(
+            "tpot      mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms",
             s.mean() * 1e3,
             s.p50() * 1e3,
             s.p99() * 1e3
         );
     }
-    println!("throughput: {:.1} tok/s", metrics.throughput_tps());
+    if let Some(s) = metrics.queue_wait_summary() {
+        println!("queue     mean {:.1} ms  p95 {:.1} ms",
+                 s.mean() * 1e3, s.p95() * 1e3);
+    }
+    println!(
+        "throughput {:.1} tok/s | {} steps, {} dispatch rounds \
+         ({:.2} rounds/token)",
+        metrics.throughput_tps(),
+        metrics.steps,
+        metrics.dispatch_rounds,
+        metrics.rounds_per_token()
+    );
     Ok(())
 }
 

@@ -72,24 +72,83 @@ impl RunMetrics {
     }
 }
 
-/// Serving-side metrics (per-request latencies, throughput).
+/// Timing of one served request on the driver clock (wall-clock seconds
+/// in the real server, virtual seconds in the scheduler harness). The
+/// logical step indices make admission ordering assertable without
+/// depending on machine speed.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RequestTiming {
+    /// The request's id.
+    pub id: u64,
+    /// Enqueue → admission into the live batch, seconds.
+    pub queue_wait: f64,
+    /// Enqueue → first generated token (TTFT), seconds; for a request
+    /// that generates nothing this is its completion latency.
+    pub ttft: f64,
+    /// Enqueue → completion, seconds.
+    pub latency: f64,
+    /// Mean time per output token after the first (TPOT), seconds;
+    /// zero when fewer than two tokens were generated.
+    pub tpot: f64,
+    /// Scheduler step at which the request was admitted.
+    pub admit_step: usize,
+    /// Scheduler step that produced the request's first token.
+    pub first_token_step: usize,
+}
+
+/// Serving-side metrics: per-request latency/TTFT/TPOT/queue-wait
+/// distributions plus scheduler-level counters (steps, dispatch rounds).
 #[derive(Clone, Debug, Default)]
 pub struct ServeMetrics {
     /// Per-request end-to-end latencies, seconds.
     pub latencies: Vec<f64>,
+    /// Per-request time-to-first-token, seconds (requests that generated
+    /// at least one token).
+    pub ttft: Vec<f64>,
+    /// Per-request mean time per output token, seconds (requests that
+    /// generated at least two tokens).
+    pub tpot: Vec<f64>,
+    /// Per-request queue wait (enqueue → admission), seconds.
+    pub queue_wait: Vec<f64>,
+    /// Per-request timings, sorted by request id.
+    pub per_request: Vec<RequestTiming>,
     /// Tokens generated.
     pub generated_tokens: usize,
     /// Wall-clock of the serving window, seconds.
     pub wall_time: f64,
+    /// Scheduler steps executed (one batched forward each).
+    pub steps: usize,
+    /// Dispatch rounds issued across all steps and layers.
+    pub dispatch_rounds: usize,
 }
 
 impl ServeMetrics {
     /// Latency distribution summary (`None` with no completed requests).
     pub fn latency_summary(&self) -> Option<Summary> {
-        if self.latencies.is_empty() {
+        Self::summarise(&self.latencies)
+    }
+
+    /// TTFT distribution summary (`None` when nothing was generated).
+    pub fn ttft_summary(&self) -> Option<Summary> {
+        Self::summarise(&self.ttft)
+    }
+
+    /// TPOT distribution summary (`None` when no request generated two
+    /// or more tokens).
+    pub fn tpot_summary(&self) -> Option<Summary> {
+        Self::summarise(&self.tpot)
+    }
+
+    /// Queue-wait distribution summary (`None` with no admissions).
+    pub fn queue_wait_summary(&self) -> Option<Summary> {
+        Self::summarise(&self.queue_wait)
+    }
+
+    fn summarise(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
             None
         } else {
-            Some(Summary::of(&self.latencies))
+            Some(Summary::of(xs))
         }
     }
 
@@ -99,6 +158,16 @@ impl ServeMetrics {
             0.0
         } else {
             self.generated_tokens as f64 / self.wall_time
+        }
+    }
+
+    /// Dispatch rounds per generated token — the density win of batched
+    /// decode (`benches/serving.rs` compares this across schedulers).
+    pub fn rounds_per_token(&self) -> f64 {
+        if self.generated_tokens == 0 {
+            0.0
+        } else {
+            self.dispatch_rounds as f64 / self.generated_tokens as f64
         }
     }
 }
@@ -148,9 +217,34 @@ mod tests {
             latencies: vec![0.1, 0.2],
             generated_tokens: 100,
             wall_time: 2.0,
+            ..Default::default()
         };
         assert_eq!(s.throughput_tps(), 50.0);
         assert!(s.latency_summary().unwrap().mean() > 0.0);
         assert_eq!(ServeMetrics::default().throughput_tps(), 0.0);
+    }
+
+    #[test]
+    fn serve_distributions_and_round_density() {
+        let s = ServeMetrics {
+            latencies: vec![0.4, 0.5],
+            ttft: vec![0.1, 0.3],
+            tpot: vec![0.02],
+            queue_wait: vec![0.0, 0.2],
+            generated_tokens: 20,
+            wall_time: 1.0,
+            steps: 10,
+            dispatch_rounds: 40,
+            ..Default::default()
+        };
+        assert_eq!(s.ttft_summary().unwrap().mean(), 0.2);
+        assert_eq!(s.tpot_summary().unwrap().mean(), 0.02);
+        assert_eq!(s.queue_wait_summary().unwrap().max(), 0.2);
+        assert_eq!(s.rounds_per_token(), 2.0);
+        let empty = ServeMetrics::default();
+        assert!(empty.ttft_summary().is_none());
+        assert!(empty.tpot_summary().is_none());
+        assert!(empty.queue_wait_summary().is_none());
+        assert_eq!(empty.rounds_per_token(), 0.0);
     }
 }

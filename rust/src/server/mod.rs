@@ -1,20 +1,34 @@
-//! Serving front: request queue → dynamic batcher → prefill/decode
-//! scheduler over the distributed MoE engine (execute mode).
+//! Serving front: request queue → iteration-level scheduler → batched
+//! decode over the distributed MoE engine (execute mode).
 //!
-//! Shape follows the vLLM-router architecture: an admission queue with
-//! backpressure ([`crate::exec::BoundedQueue`]), a batching loop that
-//! drains up to `max_batch` requests per round, and a scheduler that runs
-//! prefill then iterative greedy decode. Every token's MoE layers flow
+//! Shape follows the vLLM architecture: an admission queue with
+//! backpressure ([`crate::exec::BoundedQueue`]), the continuous-batching
+//! scheduler of [`sched`] (per-request state machine, token-budgeted
+//! microbatches, admission and retirement at every step), and one
+//! batched multi-sequence forward per step
+//! ([`DistributedMoE::decode_step`]) whose MoE layers pack the whole
+//! live batch into shared dispatch tiles. Every token's MoE layers flow
 //! through the same placement/routing machinery the paper describes;
 //! python is never touched.
 //!
+//! Two arrival modes: [`MoEServer::serve`] is closed-loop (every request
+//! enqueued up front — the benchmark workloads), and
+//! [`MoEServer::serve_open_loop`] replays a timed arrival schedule
+//! (e.g. Poisson via [`crate::config::ServeLoad`]) from a producer
+//! thread, so TTFT and queue-wait are measured under real arrival
+//! pressure.
+//!
 //! With [`ServerConfig::replan`] set, the server closes the re-planning
 //! loop online: every dispatched plan feeds the coordinator's
-//! [`crate::replan::Replanner`], and *between* batch drains — never
+//! [`crate::replan::Replanner`], and *between* decode steps — never
 //! mid-dispatch-round — an epoch tick may hot-swap the placement. The
 //! executor stages the new replicas' weights before the swap
 //! ([`DistributedMoE::apply_replan`]), so migration cost is paid where a
-//! real deployment pays it.
+//! real deployment pays it. On stationary traffic every tick is a
+//! structural no-op, so the re-planned server is a pure observer
+//! (`tests/replan.rs`).
+
+pub mod sched;
 
 use crate::cluster::{GpuId, Topology};
 use crate::coordinator::OnlineCoordinator;
@@ -23,10 +37,12 @@ use crate::exec::BoundedQueue;
 use crate::metrics::ServeMetrics;
 use crate::placement::Placement;
 use crate::replan::{self, CostParams, ReplanConfig, Replanner};
-use crate::routing::{DispatchPlan, RoutingPolicy};
+use crate::routing::RoutingPolicy;
 use crate::stats::Rng;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+pub use sched::{SchedConfig, SchedMode, Scheduler, SeqPhase, SeqState};
 
 /// One inference request.
 #[derive(Clone, Debug)]
@@ -53,8 +69,15 @@ pub struct Response {
 /// Server tunables.
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
-    /// Requests drained per batching round.
+    /// Maximum live sequences in the batch.
     pub max_batch: usize,
+    /// Step token budget of the continuous scheduler: the sum of live
+    /// sequence lengths one batched forward may recompute.
+    pub max_batch_tokens: usize,
+    /// Batching discipline ([`SchedMode::Continuous`] is the serving
+    /// core; [`SchedMode::StaticDrain`] reproduces the old drain-barrier
+    /// server for comparison).
+    pub sched: SchedMode,
     /// Admission queue capacity (backpressure bound).
     pub queue_cap: usize,
     /// Seed of the serving-side RNG (routing randomness).
@@ -72,11 +95,36 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             max_batch: 8,
+            max_batch_tokens: 256,
+            sched: SchedMode::Continuous,
             queue_cap: 64,
             seed: 7,
             ffn_mode: FfnMode::PerExpert,
             replan: None,
         }
+    }
+}
+
+impl ServerConfig {
+    /// Reject configurations that would silently serve nothing: the old
+    /// server accepted `max_batch = 0` and exited dropping every queued
+    /// request; now the foot-gun is a loud error before any request is
+    /// consumed.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.max_batch > 0,
+            "ServerConfig: max_batch = 0 would admit no request and \
+             drop the whole workload"
+        );
+        anyhow::ensure!(
+            self.queue_cap > 0,
+            "ServerConfig: queue_cap = 0 leaves no room to enqueue"
+        );
+        anyhow::ensure!(
+            self.max_batch_tokens > 0,
+            "ServerConfig: max_batch_tokens = 0 would never step"
+        );
+        Ok(())
     }
 }
 
@@ -88,8 +136,8 @@ impl Default for ServerConfig {
 pub struct MoEServer {
     /// The loaded tiny model (shared with the executor).
     pub model: Arc<RealModel>,
-    /// The placement being served; re-planning swaps it between batch
-    /// drains, so readers see the currently-active plan.
+    /// The placement being served; re-planning swaps it between decode
+    /// steps, so readers see the currently-active plan.
     pub placement: Arc<Placement>,
     /// The online coordination surface (policy, topology, re-planner).
     pub coord: OnlineCoordinator,
@@ -130,162 +178,162 @@ impl MoEServer {
         MoEServer { model, placement, coord, cfg }
     }
 
-    /// Full greedy forward of one sequence: returns the next token id.
-    /// Every dispatched layer plan is reported through `observe`
-    /// (layer index + plan) so the serving loop can feed the re-planner
-    /// without the executor knowing about it.
-    fn next_token(model: &RealModel, n_gpus: usize,
-                  dist: &mut DistributedMoE<'_>, ids: &[i32],
-                  rng: &mut Rng,
-                  observe: &mut dyn FnMut(usize, &DispatchPlan))
-                  -> anyhow::Result<i32> {
-        let c = &model.cfg;
-        anyhow::ensure!(ids.len() <= c.ctx,
-                        "sequence exceeds ctx {}", c.ctx);
-        let mut padded = ids.to_vec();
-        padded.resize(c.ctx, 0);
-        let mut x = model.embed(&padded)?;
-        for l in 0..c.layers {
-            x = model.attention(&x, l, ids.len())?;
-            // MoE over the valid prefix, tile by tile.
-            let tiles = ids.len().div_ceil(c.tile_t);
-            for tile in 0..tiles {
-                let s = tile * c.tile_t * c.hidden;
-                let e = s + c.tile_t * c.hidden;
-                let run = dist.moe_layer(
-                    &x[s..e],
-                    l,
-                    &|t| even_src(tile * c.tile_t + t, ids.len(), n_gpus),
-                    rng,
-                )?;
-                x[s..e].copy_from_slice(&run.y);
-                observe(l, &run.plan);
-            }
-        }
-        let logits = model.lmhead(&x)?;
-        let c_v = c.vocab;
-        let last = ids.len() - 1;
-        let row = &logits[last * c_v..(last + 1) * c_v];
-        let mut best = 0usize;
-        for (i, &v) in row.iter().enumerate() {
-            if v > row[best] {
-                best = i;
-            }
-        }
-        Ok(best as i32)
-    }
-
-    /// Serve a closed set of requests through the batching loop; returns
-    /// responses (request order) and aggregate metrics.
+    /// Serve a closed set of requests: every request is enqueued up
+    /// front (moved in — nothing is double-buffered), then the serving
+    /// loop runs until the queue drains and the last sequence retires.
+    /// Returns responses (request order) and aggregate metrics.
     ///
-    /// One executor (and thus one dispatcher) spans the whole drain, so
-    /// a stateful policy's online load estimates accumulate across every
-    /// token of every request instead of resetting per forward. Epoch
-    /// re-planning (when enabled) is evaluated between batch drains:
-    /// deltas stage their replica weights through the executor and then
-    /// hot-swap `self.placement` — never mid-dispatch-round.
+    /// The queue is sized to hold the whole closed workload so the
+    /// single-threaded enqueue can never deadlock against its own
+    /// backpressure; open-loop serving keeps the configured bound.
     pub fn serve(&mut self, requests: Vec<Request>)
                  -> anyhow::Result<(Vec<Response>, ServeMetrics)> {
-        let queue: BoundedQueue<(Request, Instant)> =
-            BoundedQueue::new(self.cfg.queue_cap);
-        for r in &requests {
+        self.cfg.validate()?;
+        let cap = self.cfg.queue_cap.max(requests.len()).max(1);
+        let queue: BoundedQueue<(Request, Instant)> = BoundedQueue::new(cap);
+        for r in requests {
             queue
-                .send((r.clone(), Instant::now()))
+                .send((r, Instant::now()))
                 .map_err(|_| anyhow::anyhow!("queue closed"))?;
         }
         queue.close();
-
         let wall0 = Instant::now();
+        self.drive(&queue, wall0)
+    }
+
+    /// Serve an open-loop workload: a producer thread replays the
+    /// `(request, arrival seconds)` schedule against the bounded queue
+    /// (blocking on backpressure like a real ingress would) while the
+    /// serving loop admits mid-flight at every step boundary.
+    pub fn serve_open_loop(&mut self, mut arrivals: Vec<(Request, f64)>)
+                           -> anyhow::Result<(Vec<Response>, ServeMetrics)>
+    {
+        self.cfg.validate()?;
+        // Validate and sort the schedule on the caller thread: a NaN
+        // inside the producer would panic after spawn without closing
+        // the queue, hanging `drive` in `recv` forever.
+        anyhow::ensure!(
+            arrivals.iter().all(|(_, t)| t.is_finite()),
+            "serve_open_loop: non-finite arrival time in schedule"
+        );
+        arrivals.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let queue: BoundedQueue<(Request, Instant)> =
+            BoundedQueue::new(self.cfg.queue_cap);
+        let producer_q = queue.clone();
+        let wall0 = Instant::now();
+        let producer = std::thread::spawn(move || {
+            for (req, t) in arrivals {
+                let target = wall0 + Duration::from_secs_f64(t.max(0.0));
+                if let Some(wait) =
+                    target.checked_duration_since(Instant::now())
+                {
+                    std::thread::sleep(wait);
+                }
+                if producer_q.send((req, Instant::now())).is_err() {
+                    break; // serving loop shut the queue down
+                }
+            }
+            producer_q.close();
+        });
+        let out = self.drive(&queue, wall0);
+        // On an engine error the producer may still be sleeping or
+        // blocked on backpressure: closing the queue fails its sends.
+        queue.close();
+        let _ = producer.join();
+        out
+    }
+
+    /// The serving loop shared by both arrival modes: iteration-level
+    /// admission from the queue, one batched decode step per iteration,
+    /// immediate retirement, and the re-plan epoch tick at the step
+    /// boundary (never mid-dispatch-round).
+    fn drive(&mut self, queue: &BoundedQueue<(Request, Instant)>,
+             wall0: Instant)
+             -> anyhow::Result<(Vec<Response>, ServeMetrics)> {
+        let secs =
+            |t: Instant| t.saturating_duration_since(wall0).as_secs_f64();
+        let mut sched = Scheduler::new(SchedConfig {
+            mode: self.cfg.sched,
+            max_batch: self.cfg.max_batch,
+            max_batch_tokens: self.cfg.max_batch_tokens,
+            ctx: self.model.cfg.ctx,
+        })?;
         let mut rng = Rng::new(self.cfg.seed);
-        let model = self.model.clone();
-        let n_gpus = self.coord.topo().num_gpus();
         let mut dist = DistributedMoE::new(
-            &model,
+            self.model.clone(),
             self.placement.clone(),
             &self.coord,
             self.cfg.ffn_mode,
         );
-        let mut responses: Vec<Response> = Vec::with_capacity(requests.len());
-        let mut generated = 0usize;
 
         loop {
-            let batch = queue.recv_batch(self.cfg.max_batch);
-            if batch.is_empty() {
-                break;
-            }
-            // Iterative decode round-robin across the batch (continuous-
-            // batching lite: every sequence advances one token per step).
-            let mut states: Vec<(Request, Instant, Vec<i32>)> = batch
-                .into_iter()
-                .map(|(r, t0)| {
-                    let ids = r.prompt.clone();
-                    (r, t0, ids)
-                })
-                .collect();
-            let max_steps = states
-                .iter()
-                .map(|(r, _, _)| r.max_new_tokens)
-                .max()
-                .unwrap_or(0);
-            for step in 0..max_steps {
-                for (r, _, ids) in states.iter_mut() {
-                    if step >= r.max_new_tokens
-                        || ids.len() >= self.model.cfg.ctx
-                    {
+            // --- Admission at the step boundary (non-blocking). ---
+            loop {
+                if sched.wants_offer() {
+                    if let Some((req, t)) = queue.try_recv() {
+                        sched.offer(req, secs(t));
                         continue;
                     }
-                    let next = Self::next_token(
-                        &model,
-                        n_gpus,
-                        &mut dist,
-                        ids,
-                        &mut rng,
-                        &mut |layer, plan| {
-                            self.coord.observe(
-                                layer,
-                                &self.placement.layers[layer],
-                                plan,
-                            );
-                        },
-                    )?;
-                    ids.push(next);
-                    generated += 1;
+                }
+                if !sched.admit_pending(secs(Instant::now()))? {
+                    break;
                 }
             }
-            for (r, t0, ids) in states {
-                responses.push(Response {
-                    id: r.id,
-                    tokens: ids[r.prompt.len()..].to_vec(),
-                    latency: t0.elapsed().as_secs_f64(),
-                });
+            // Nothing in flight: block for work, or finish when the
+            // queue is closed and drained.
+            if sched.is_idle() {
+                match queue.recv() {
+                    Some((req, t)) => {
+                        sched.offer(req, secs(t));
+                        continue; // re-run admission
+                    }
+                    None => break,
+                }
+            }
+            if sched.live().is_empty() {
+                anyhow::bail!("scheduler stalled with a pending request");
             }
 
-            // Epoch boundary between batch drains: re-plan if due.
+            // --- One batched decode step over the microbatch. ---
+            let batch = sched.microbatch();
+            let mut rounds = 0usize;
+            let next = {
+                let seqs: Vec<&[i32]> = batch
+                    .iter()
+                    .map(|&i| sched.live()[i].ids.as_slice())
+                    .collect();
+                dist.decode_step(&seqs, &mut rng, &mut |layer, plan| {
+                    rounds += 1;
+                    self.coord.observe(
+                        layer,
+                        &self.placement.layers[layer],
+                        plan,
+                    );
+                })?
+            };
+            sched.complete_step(&batch, &next,
+                                secs(Instant::now()), rounds)?;
+
+            // --- Step boundary: the only safe place to re-plan. ---
             let delta = self.coord.epoch_tick(&self.placement);
             if !delta.is_empty() {
-                let next =
+                let next_p =
                     Arc::new(replan::apply_delta(&self.placement, &delta));
-                dist.apply_replan(next.clone(), &delta)?;
-                self.placement = next;
+                dist.apply_replan(next_p.clone(), &delta)?;
+                self.placement = next_p;
             }
         }
 
-        responses.sort_by_key(|r| r.id);
-        let metrics = ServeMetrics {
-            latencies: responses.iter().map(|r| r.latency).collect(),
-            generated_tokens: generated,
-            wall_time: wall0.elapsed().as_secs_f64(),
-        };
-        Ok((responses, metrics))
+        Ok(sched.into_results(wall0.elapsed().as_secs_f64()))
     }
 }
 
 /// Even data-parallel assignment of a token index to a rank — the one
 /// token→rank rule every engine shares (the sim engine's chunk split and
-/// the serving forward's tile walk both route through it).
+/// the batched decode forward's shared-tile walk both route through it).
 ///
-/// `total` is the *live* population being split (e.g. the current
-/// sequence length, not the padded context). Indices at or past `total`
+/// `total` is the *live* population being split (e.g. the live batch's
+/// token count, not the padded context). Indices at or past `total`
 /// (padding rows of a partially-filled tile) clamp to the last rank
 /// instead of producing an out-of-range GPU id; `total == 0` maps
 /// everything to rank 0.
@@ -347,7 +395,25 @@ mod tests {
         }
     }
 
+    #[test]
+    fn zero_batch_config_is_a_loud_error() {
+        // Regression: `max_batch: 0` used to make `serve` exit silently,
+        // dropping every request. It must refuse before consuming any.
+        let cfg = ServerConfig { max_batch: 0, ..ServerConfig::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("max_batch"), "{err}");
+        let cfg = ServerConfig { queue_cap: 0, ..ServerConfig::default() };
+        assert!(cfg.validate().is_err());
+        let cfg = ServerConfig {
+            max_batch_tokens: 0,
+            ..ServerConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+        assert!(ServerConfig::default().validate().is_ok());
+    }
+
     // End-to-end serving over the real model is exercised in
-    // tests/integration.rs and examples/serve_end_to_end.rs (it needs the
-    // AOT artifacts and a PJRT client).
+    // tests/end_to_end.rs and examples/serve_end_to_end.rs (it needs the
+    // AOT artifacts and a PJRT client); scheduler semantics are pinned
+    // engine-free in `sched::tests` and tests/serving.rs.
 }

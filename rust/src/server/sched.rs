@@ -1,0 +1,708 @@
+//! Iteration-level scheduling — the continuous-batching core of the
+//! serving front.
+//!
+//! The seed server was "continuous-batching lite": it drained a static
+//! batch, ran every sequence's full forward one at a time, admitted
+//! nothing mid-flight, and only retired requests at the drain barrier.
+//! This module replaces that with a per-request state machine driven at
+//! *iteration* (decode-step) granularity, the discipline of vLLM-style
+//! serving systems:
+//!
+//! ```text
+//!              offer/admit            first token           retire
+//!   Queued ───────────────▶ Prefill ─────────────▶ Decode ────────▶ Done
+//!   (admission buffer /      (admitted, producing   (generating)   (out of
+//!    bounded queue)           its first token)                      the batch)
+//! ```
+//!
+//! * **Admission** happens between steps, never mid-forward: the driver
+//!   offers queued requests one at a time ([`Scheduler::offer`] →
+//!   [`Scheduler::admit_pending`]) and the scheduler accepts them FIFO
+//!   while the live batch stays under `max_batch` sequences and — in
+//!   [`SchedMode::Continuous`] — under the `max_batch_tokens` step
+//!   budget (a sequence costs its full current length per step: the
+//!   forward recomputes the whole prefix, there is no KV cache yet).
+//! * **Microbatching**: every step advances a token-budgeted FIFO prefix
+//!   of the live batch ([`Scheduler::microbatch`]); sequences over
+//!   budget wait a step instead of stalling the batch, and at least one
+//!   sequence always runs so an oversized sequence cannot deadlock.
+//! * **Retirement** is immediate: a sequence that reaches its token
+//!   budget or the model context leaves the batch at the end of the
+//!   step that finished it ([`Scheduler::complete_step`]); the freed
+//!   budget admits new work at the very next step.
+//! * **Replan safety**: the driver owns the step loop, so the epoch
+//!   re-planner's `epoch_tick` runs *between* steps — after
+//!   `complete_step`, before the next admission — and therefore never
+//!   mid-dispatch-round (the invariant `docs/ARCHITECTURE.md` pins).
+//!
+//! [`SchedMode::StaticDrain`] reproduces the seed server's behaviour on
+//! top of the same state machine (admission only into an empty batch, no
+//! token budget) so the serving bench can compare the two disciplines on
+//! identical workloads; greedy-decode outputs are token-for-token
+//! identical across modes because per-token numerics are independent of
+//! batch composition.
+//!
+//! [`simulate_serve`] is the virtual-clock driver used by tier-1 tests
+//! and `benches/serving.rs`: same scheduler, same admission rules, with
+//! the engine and the clock supplied as closures — so every scheduling
+//! property is pinned without PJRT artifacts.
+
+use super::{Request, Response};
+use crate::metrics::{RequestTiming, ServeMetrics};
+
+/// Request lifecycle within the serving core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SeqPhase {
+    /// Waiting in the admission queue (or the scheduler's one-deep
+    /// admission buffer).
+    Queued,
+    /// Admitted; its first token has not been produced yet.
+    Prefill,
+    /// Generating tokens.
+    Decode,
+    /// Finished; retired from the live batch.
+    Done,
+}
+
+/// Batching discipline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedMode {
+    /// Seed-server behaviour: admit only into an empty batch (up to
+    /// `max_batch` requests), run the drain to completion, repeat. No
+    /// token budget; kept as the baseline arm of `benches/serving.rs`.
+    StaticDrain,
+    /// Iteration-level continuous batching: admission between every
+    /// step under the `max_batch_tokens` budget, immediate retirement.
+    Continuous,
+}
+
+/// Scheduler tunables (the serving front copies these out of
+/// [`super::ServerConfig`]).
+#[derive(Clone, Copy, Debug)]
+pub struct SchedConfig {
+    /// Batching discipline.
+    pub mode: SchedMode,
+    /// Maximum live sequences.
+    pub max_batch: usize,
+    /// Step token budget (continuous mode): the sum of live sequence
+    /// lengths a step may recompute.
+    pub max_batch_tokens: usize,
+    /// Model context length (admission bound and finish condition).
+    pub ctx: usize,
+}
+
+/// One live (or finished) sequence and its timing record. Times are
+/// driver-clock seconds: wall-clock in the real server, virtual seconds
+/// under [`simulate_serve`].
+#[derive(Clone, Debug)]
+pub struct SeqState {
+    /// The originating request.
+    pub req: Request,
+    /// Prompt plus generated tokens.
+    pub ids: Vec<i32>,
+    /// Lifecycle phase.
+    pub phase: SeqPhase,
+    /// When the request entered the admission queue.
+    pub enqueue: f64,
+    /// When it was admitted into the live batch.
+    pub admit: f64,
+    /// Step index at admission.
+    pub admit_step: usize,
+    /// `(time, step)` of the first generated token.
+    pub first_token: Option<(f64, usize)>,
+    /// Completion time of the most recent token.
+    pub last_token: f64,
+    /// Completion time of the whole request.
+    pub finish: f64,
+}
+
+impl SeqState {
+    /// Tokens generated so far (prompt excluded).
+    pub fn generated(&self) -> usize {
+        self.ids.len() - self.req.prompt.len()
+    }
+
+    fn wants_tokens(&self, ctx: usize) -> bool {
+        self.generated() < self.req.max_new_tokens && self.ids.len() < ctx
+    }
+}
+
+/// The iteration-level scheduler: a FIFO live batch, a one-deep
+/// admission buffer, and the retired set. Drivers loop over
+/// offer/admit → [`Scheduler::microbatch`] → run the step →
+/// [`Scheduler::complete_step`]; see the module docs for the protocol.
+pub struct Scheduler {
+    cfg: SchedConfig,
+    /// Popped-but-unadmitted head of the queue (keeps FIFO order while
+    /// letting admission inspect the prompt before committing budget).
+    pending: Option<(Request, f64)>,
+    live: Vec<SeqState>,
+    done: Vec<SeqState>,
+    steps: usize,
+    dispatch_rounds: usize,
+    /// Static-drain admission window: open from the first admission
+    /// into an empty batch until the next step executes.
+    drain_open: bool,
+}
+
+impl Scheduler {
+    /// Scheduler over validated tunables (zero `max_batch`,
+    /// `max_batch_tokens`, or `ctx` would serve nothing — rejected
+    /// loudly instead of silently dropping every request).
+    pub fn new(cfg: SchedConfig) -> anyhow::Result<Scheduler> {
+        anyhow::ensure!(cfg.max_batch > 0,
+                        "scheduler: max_batch = 0 admits nothing");
+        anyhow::ensure!(cfg.max_batch_tokens > 0,
+                        "scheduler: max_batch_tokens = 0 steps nothing");
+        anyhow::ensure!(cfg.ctx > 0, "scheduler: ctx = 0");
+        Ok(Scheduler {
+            cfg,
+            pending: None,
+            live: Vec::new(),
+            done: Vec::new(),
+            steps: 0,
+            dispatch_rounds: 0,
+            drain_open: false,
+        })
+    }
+
+    /// The scheduler's configuration.
+    pub fn config(&self) -> &SchedConfig {
+        &self.cfg
+    }
+
+    /// Steps executed so far.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Dispatch rounds recorded across all steps.
+    pub fn dispatch_rounds(&self) -> usize {
+        self.dispatch_rounds
+    }
+
+    /// The live batch, in admission (FIFO) order.
+    pub fn live(&self) -> &[SeqState] {
+        &self.live
+    }
+
+    /// Retired sequences, in retirement order.
+    pub fn done(&self) -> &[SeqState] {
+        &self.done
+    }
+
+    /// Whether a request sits in the admission buffer.
+    pub fn has_pending(&self) -> bool {
+        self.pending.is_some()
+    }
+
+    /// Nothing live and nothing buffered: the driver should block on
+    /// the queue (or finish, if the queue is closed and drained).
+    pub fn is_idle(&self) -> bool {
+        self.live.is_empty() && self.pending.is_none()
+    }
+
+    /// Tokens the next full-batch step would recompute.
+    pub fn live_tokens(&self) -> usize {
+        self.live.iter().map(|s| s.ids.len()).sum()
+    }
+
+    /// Whether the driver should pull another request off the queue:
+    /// the admission buffer is free and admission is currently open.
+    pub fn wants_offer(&self) -> bool {
+        self.pending.is_none() && self.admission_open()
+    }
+
+    fn admission_open(&self) -> bool {
+        if self.live.len() >= self.cfg.max_batch {
+            return false;
+        }
+        match self.cfg.mode {
+            SchedMode::Continuous => true,
+            SchedMode::StaticDrain => {
+                self.live.is_empty() || self.drain_open
+            }
+        }
+    }
+
+    /// Buffer the next queued request for admission; `false` (refusing
+    /// the offer) when the one-deep buffer is occupied.
+    pub fn offer(&mut self, req: Request, enqueue: f64) -> bool {
+        if self.pending.is_some() {
+            return false;
+        }
+        self.pending = Some((req, enqueue));
+        true
+    }
+
+    /// Try to admit the buffered request under the mode's rules.
+    /// Returns whether a request left the buffer (admitted, or retired
+    /// instantly when it wants zero tokens). Errors on malformed
+    /// requests (empty prompt, prompt beyond the model context).
+    pub fn admit_pending(&mut self, now: f64) -> anyhow::Result<bool> {
+        let Some((req, _)) = self.pending.as_ref() else {
+            return Ok(false);
+        };
+        if !self.admission_open() {
+            return Ok(false);
+        }
+        let fits = match self.cfg.mode {
+            SchedMode::StaticDrain => true,
+            SchedMode::Continuous => {
+                self.live.is_empty()
+                    || self.live_tokens() + req.prompt.len()
+                        <= self.cfg.max_batch_tokens
+            }
+        };
+        if !fits {
+            return Ok(false);
+        }
+        let (req, enqueue) = self.pending.take().unwrap();
+        anyhow::ensure!(!req.prompt.is_empty(),
+                        "request {}: empty prompt", req.id);
+        anyhow::ensure!(req.prompt.len() <= self.cfg.ctx,
+                        "request {}: prompt {} exceeds ctx {}",
+                        req.id, req.prompt.len(), self.cfg.ctx);
+        let ids = req.prompt.clone();
+        let mut seq = SeqState {
+            req,
+            ids,
+            phase: SeqPhase::Prefill,
+            enqueue,
+            admit: now,
+            admit_step: self.steps,
+            first_token: None,
+            last_token: now,
+            finish: now,
+        };
+        if !seq.wants_tokens(self.cfg.ctx) {
+            // Zero-token request (max_new_tokens = 0 or a ctx-long
+            // prompt): completes at admission, generating nothing.
+            seq.phase = SeqPhase::Done;
+            seq.finish = now;
+            self.done.push(seq);
+            return Ok(true);
+        }
+        if self.live.is_empty() && self.cfg.mode == SchedMode::StaticDrain
+        {
+            self.drain_open = true;
+        }
+        self.live.push(seq);
+        Ok(true)
+    }
+
+    /// The FIFO token-budgeted microbatch for this step: indices into
+    /// [`Scheduler::live`]. Always non-empty when the batch is —
+    /// an over-budget head sequence runs alone rather than stalling.
+    pub fn microbatch(&self) -> Vec<usize> {
+        let mut batch = Vec::with_capacity(self.live.len());
+        let mut tokens = 0usize;
+        for (i, s) in self.live.iter().enumerate() {
+            let cost = s.ids.len();
+            if self.cfg.mode == SchedMode::Continuous
+                && !batch.is_empty()
+                && tokens + cost > self.cfg.max_batch_tokens
+            {
+                break;
+            }
+            batch.push(i);
+            tokens += cost;
+        }
+        batch
+    }
+
+    /// Tokens the given microbatch recomputes.
+    pub fn step_tokens(&self, batch: &[usize]) -> usize {
+        batch.iter().map(|&i| self.live[i].ids.len()).sum()
+    }
+
+    /// Record one executed step: `next[j]` is the token generated for
+    /// live sequence `batch[j]`. Finished sequences retire immediately;
+    /// the remaining live batch keeps FIFO order.
+    pub fn complete_step(&mut self, batch: &[usize], next: &[i32],
+                         now: f64, dispatch_rounds: usize)
+                         -> anyhow::Result<()> {
+        anyhow::ensure!(batch.len() == next.len(),
+                        "step produced {} tokens for {} sequences",
+                        next.len(), batch.len());
+        self.drain_open = false;
+        self.steps += 1;
+        self.dispatch_rounds += dispatch_rounds;
+        for (&i, &tok) in batch.iter().zip(next) {
+            let s = &mut self.live[i];
+            s.ids.push(tok);
+            if s.first_token.is_none() {
+                s.first_token = Some((now, self.steps - 1));
+                s.phase = SeqPhase::Decode;
+            }
+            s.last_token = now;
+        }
+        let ctx = self.cfg.ctx;
+        let mut i = 0;
+        while i < self.live.len() {
+            if self.live[i].wants_tokens(ctx) {
+                i += 1;
+            } else {
+                let mut s = self.live.remove(i);
+                s.phase = SeqPhase::Done;
+                s.finish = now;
+                self.done.push(s);
+            }
+        }
+        Ok(())
+    }
+
+    /// Consume the scheduler into responses (sorted by request id) and
+    /// serving metrics. `wall_time` is the driver clock at shutdown.
+    pub fn into_results(self, wall_time: f64)
+                        -> (Vec<Response>, ServeMetrics) {
+        debug_assert!(self.live.is_empty() && self.pending.is_none(),
+                      "into_results with work still in flight");
+        let mut done = self.done;
+        done.sort_by_key(|s| s.req.id);
+        let mut responses = Vec::with_capacity(done.len());
+        let mut metrics = ServeMetrics {
+            wall_time,
+            steps: self.steps,
+            dispatch_rounds: self.dispatch_rounds,
+            ..ServeMetrics::default()
+        };
+        for s in done {
+            let generated = s.generated();
+            let latency = s.finish - s.enqueue;
+            let queue_wait = s.admit - s.enqueue;
+            let mut timing = RequestTiming {
+                id: s.req.id,
+                queue_wait,
+                ttft: latency,
+                latency,
+                tpot: 0.0,
+                admit_step: s.admit_step,
+                first_token_step: s.admit_step,
+            };
+            if let Some((t, step)) = s.first_token {
+                timing.ttft = t - s.enqueue;
+                timing.first_token_step = step;
+                metrics.ttft.push(timing.ttft);
+                if generated >= 2 {
+                    timing.tpot =
+                        (s.last_token - t) / (generated - 1) as f64;
+                    metrics.tpot.push(timing.tpot);
+                }
+            }
+            metrics.latencies.push(latency);
+            metrics.queue_wait.push(queue_wait);
+            metrics.generated_tokens += generated;
+            metrics.per_request.push(timing);
+            responses.push(Response {
+                id: s.req.id,
+                tokens: s.ids[s.req.prompt.len()..].to_vec(),
+                latency,
+            });
+        }
+        (responses, metrics)
+    }
+}
+
+/// Virtual-clock serving driver for tests and benches: replays a
+/// (time-sorted) arrival schedule through the scheduler with the engine
+/// and the clock supplied by the caller. `step_fn` receives the
+/// microbatch as `(request id, token prefix)` pairs and returns the
+/// next token per sequence plus the dispatch rounds the step issued;
+/// `step_cost` maps `(step tokens, dispatch rounds)` to virtual
+/// seconds. The real server ([`super::MoEServer::serve`]) is the same
+/// loop on the wall clock and the PJRT engine.
+pub fn simulate_serve<F, C>(cfg: SchedConfig,
+                            mut arrivals: Vec<(Request, f64)>,
+                            mut step_fn: F, mut step_cost: C)
+                            -> anyhow::Result<(Vec<Response>, ServeMetrics)>
+where
+    F: FnMut(&[(u64, &[i32])]) -> anyhow::Result<(Vec<i32>, usize)>,
+    C: FnMut(usize, usize) -> f64,
+{
+    arrivals.sort_by(|a, b| {
+        a.1.partial_cmp(&b.1).expect("NaN arrival time")
+    });
+    let mut sched = Scheduler::new(cfg)?;
+    let mut next_arrival = 0usize;
+    let mut now = 0.0f64;
+    loop {
+        // Admission: pull every arrived request the scheduler will take.
+        loop {
+            if sched.wants_offer()
+                && next_arrival < arrivals.len()
+                && arrivals[next_arrival].1 <= now
+            {
+                let (req, t) = arrivals[next_arrival].clone();
+                next_arrival += 1;
+                sched.offer(req, t);
+                continue;
+            }
+            if !sched.admit_pending(now)? {
+                break;
+            }
+        }
+        if sched.is_idle() {
+            if next_arrival >= arrivals.len() {
+                break;
+            }
+            // Open-loop idle gap: jump the clock to the next arrival.
+            now = now.max(arrivals[next_arrival].1);
+            continue;
+        }
+        if sched.live().is_empty() {
+            anyhow::bail!("scheduler stalled with a pending request");
+        }
+        let batch = sched.microbatch();
+        let tokens = sched.step_tokens(&batch);
+        let (next, rounds) = {
+            let seqs: Vec<(u64, &[i32])> = batch
+                .iter()
+                .map(|&i| {
+                    let s = &sched.live()[i];
+                    (s.req.id, s.ids.as_slice())
+                })
+                .collect();
+            step_fn(&seqs)?
+        };
+        now += step_cost(tokens, rounds);
+        sched.complete_step(&batch, &next, now, rounds)?;
+    }
+    Ok(sched.into_results(now))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, prompt: usize, new_tokens: usize) -> Request {
+        Request {
+            id,
+            prompt: (0..prompt).map(|i| (id as i32) * 100 + i as i32)
+                .collect(),
+            max_new_tokens: new_tokens,
+        }
+    }
+
+    fn cfg(mode: SchedMode, max_batch: usize, budget: usize)
+           -> SchedConfig {
+        SchedConfig { mode, max_batch, max_batch_tokens: budget, ctx: 64 }
+    }
+
+    use crate::testutil::fake_decode_token as fake_next;
+
+    fn fake_step(seqs: &[(u64, &[i32])])
+                 -> anyhow::Result<(Vec<i32>, usize)> {
+        let tokens: usize = seqs.iter().map(|(_, ids)| ids.len()).sum();
+        let rounds = 2 * tokens.div_ceil(16); // 2 layers, tile 16
+        Ok((seqs.iter().map(|(_, ids)| fake_next(ids)).collect(), rounds))
+    }
+
+    #[test]
+    fn config_is_validated() {
+        assert!(Scheduler::new(cfg(SchedMode::Continuous, 0, 8)).is_err());
+        assert!(Scheduler::new(cfg(SchedMode::Continuous, 8, 0)).is_err());
+        let bad = SchedConfig { ctx: 0, ..cfg(SchedMode::Continuous, 8, 8) };
+        assert!(Scheduler::new(bad).is_err());
+    }
+
+    #[test]
+    fn state_machine_walks_queued_prefill_decode_done() {
+        let mut s =
+            Scheduler::new(cfg(SchedMode::Continuous, 4, 64)).unwrap();
+        assert!(s.offer(req(0, 4, 2), 0.0));
+        assert!(!s.offer(req(1, 4, 2), 0.0), "buffer is one deep");
+        assert!(s.admit_pending(0.5).unwrap());
+        assert_eq!(s.live()[0].phase, SeqPhase::Prefill);
+        assert_eq!(s.live()[0].admit, 0.5);
+
+        let batch = s.microbatch();
+        assert_eq!(batch, vec![0]);
+        let ids = s.live()[0].ids.clone();
+        s.complete_step(&batch, &[fake_next(&ids)], 1.0, 2).unwrap();
+        assert_eq!(s.live()[0].phase, SeqPhase::Decode);
+        assert_eq!(s.live()[0].first_token, Some((1.0, 0)));
+
+        let batch = s.microbatch();
+        let ids = s.live()[0].ids.clone();
+        s.complete_step(&batch, &[fake_next(&ids)], 2.0, 2).unwrap();
+        assert!(s.live().is_empty(), "finished sequences retire");
+        assert_eq!(s.done().len(), 1);
+        assert_eq!(s.done()[0].phase, SeqPhase::Done);
+        assert_eq!(s.done()[0].generated(), 2);
+        assert_eq!(s.steps(), 2);
+        assert_eq!(s.dispatch_rounds(), 4);
+    }
+
+    #[test]
+    fn continuous_admission_respects_the_token_budget() {
+        // Budget 10, prompts of 4: two fit, the third waits.
+        let mut s =
+            Scheduler::new(cfg(SchedMode::Continuous, 8, 10)).unwrap();
+        for id in 0..3 {
+            if s.wants_offer() {
+                s.offer(req(id, 4, 4), 0.0);
+            }
+            let _ = s.admit_pending(0.0).unwrap();
+        }
+        assert_eq!(s.live().len(), 2);
+        assert!(s.has_pending(), "third request buffered, not dropped");
+        assert!(!s.admit_pending(0.0).unwrap(), "over budget");
+        // An empty batch always admits, even over budget.
+        let mut s =
+            Scheduler::new(cfg(SchedMode::Continuous, 8, 2)).unwrap();
+        s.offer(req(9, 8, 1), 0.0);
+        assert!(s.admit_pending(0.0).unwrap());
+        assert_eq!(s.live().len(), 1);
+    }
+
+    #[test]
+    fn microbatch_is_a_fifo_budget_prefix() {
+        let mut s =
+            Scheduler::new(cfg(SchedMode::Continuous, 8, 100)).unwrap();
+        for id in 0..3 {
+            s.offer(req(id, 6, 4), 0.0);
+            assert!(s.admit_pending(0.0).unwrap());
+        }
+        // All three fit under 100.
+        assert_eq!(s.microbatch(), vec![0, 1, 2]);
+        assert_eq!(s.step_tokens(&s.microbatch()), 18);
+        // Shrink the budget: only the FIFO prefix runs.
+        let mut tight =
+            Scheduler::new(cfg(SchedMode::Continuous, 8, 13)).unwrap();
+        for id in 0..3 {
+            tight.offer(req(id, 6, 4), 0.0);
+            if !tight.admit_pending(0.0).unwrap() {
+                break;
+            }
+        }
+        assert_eq!(tight.live().len(), 2, "6 + 6 <= 13, third waits");
+        assert_eq!(tight.microbatch(), vec![0, 1]);
+    }
+
+    #[test]
+    fn static_drain_gates_admission_at_the_barrier() {
+        let mut s =
+            Scheduler::new(cfg(SchedMode::StaticDrain, 2, 1)).unwrap();
+        // Drain opens on an empty batch and ignores the token budget.
+        s.offer(req(0, 8, 2), 0.0);
+        assert!(s.admit_pending(0.0).unwrap());
+        assert!(s.wants_offer(), "drain window still open");
+        s.offer(req(1, 8, 3), 0.0);
+        assert!(s.admit_pending(0.0).unwrap());
+        assert!(!s.wants_offer(), "max_batch reached");
+        // First step closes the window: no mid-flight admission.
+        let batch = s.microbatch();
+        assert_eq!(batch.len(), 2, "static drain advances everyone");
+        let next: Vec<i32> = batch
+            .iter()
+            .map(|&i| fake_next(&s.live()[i].ids))
+            .collect();
+        s.complete_step(&batch, &next, 1.0, 1).unwrap();
+        assert!(!s.wants_offer(), "no admission mid-drain");
+        s.offer(req(2, 4, 1), 1.0);
+        assert!(!s.admit_pending(1.5).unwrap());
+        // Drain the batch; the window reopens.
+        while !s.live().is_empty() {
+            let batch = s.microbatch();
+            let next: Vec<i32> = batch
+                .iter()
+                .map(|&i| fake_next(&s.live()[i].ids))
+                .collect();
+            s.complete_step(&batch, &next, 2.0, 1).unwrap();
+        }
+        assert!(s.admit_pending(3.0).unwrap());
+        assert_eq!(s.live()[0].req.id, 2);
+    }
+
+    #[test]
+    fn zero_token_requests_complete_at_admission() {
+        let mut s =
+            Scheduler::new(cfg(SchedMode::Continuous, 4, 64)).unwrap();
+        s.offer(req(0, 4, 0), 0.0);
+        assert!(s.admit_pending(0.25).unwrap());
+        assert!(s.live().is_empty());
+        assert_eq!(s.done().len(), 1);
+        let (responses, metrics) = s.into_results(0.25);
+        assert!(responses[0].tokens.is_empty());
+        assert_eq!(metrics.generated_tokens, 0);
+        assert!(metrics.ttft.is_empty(), "no token, no TTFT sample");
+        assert_eq!(metrics.latencies.len(), 1);
+    }
+
+    #[test]
+    fn malformed_requests_error_loudly() {
+        let mut s =
+            Scheduler::new(cfg(SchedMode::Continuous, 4, 64)).unwrap();
+        s.offer(req(0, 0, 4), 0.0);
+        assert!(s.admit_pending(0.0).is_err(), "empty prompt");
+        let mut s =
+            Scheduler::new(cfg(SchedMode::Continuous, 4, 999)).unwrap();
+        s.offer(req(1, 65, 4), 0.0); // ctx is 64
+        assert!(s.admit_pending(0.0).is_err(), "prompt beyond ctx");
+    }
+
+    #[test]
+    fn sequences_truncate_at_ctx() {
+        let mut c = cfg(SchedMode::Continuous, 2, 64);
+        c.ctx = 6;
+        let (responses, _) = simulate_serve(
+            c,
+            vec![(req(0, 4, 100), 0.0)],
+            fake_step,
+            |_, _| 1.0,
+        )
+        .unwrap();
+        assert_eq!(responses[0].tokens.len(), 2, "4 + 2 == ctx");
+    }
+
+    #[test]
+    fn simulate_serve_completes_everything_and_times_the_clock() {
+        let arrivals: Vec<(Request, f64)> =
+            (0..5).map(|id| (req(id, 5, 3), 0.0)).collect();
+        let (responses, metrics) = simulate_serve(
+            cfg(SchedMode::Continuous, 4, 40),
+            arrivals,
+            fake_step,
+            |tokens, _| tokens as f64 * 1e-3,
+        )
+        .unwrap();
+        assert_eq!(responses.len(), 5);
+        assert!(responses.windows(2).all(|w| w[0].id < w[1].id));
+        for r in &responses {
+            assert_eq!(r.tokens.len(), 3);
+        }
+        assert_eq!(metrics.generated_tokens, 15);
+        assert_eq!(metrics.per_request.len(), 5);
+        assert_eq!(metrics.ttft.len(), 5);
+        assert_eq!(metrics.tpot.len(), 5);
+        assert!(metrics.wall_time > 0.0);
+        assert!(metrics.steps > 0);
+        assert!(metrics.dispatch_rounds > 0);
+        assert!(metrics.queue_wait.iter().all(|&w| w >= 0.0));
+    }
+
+    #[test]
+    fn step_budget_is_respected_throughout_the_run() {
+        // Every step's token count stays under the budget (prompts are
+        // all below it, so the at-least-one escape never triggers).
+        let arrivals: Vec<(Request, f64)> =
+            (0..8).map(|id| (req(id, 10, 6), 0.0)).collect();
+        let mut step_sizes: Vec<usize> = Vec::new();
+        let (responses, _) = simulate_serve(
+            cfg(SchedMode::Continuous, 8, 25),
+            arrivals,
+            |seqs| {
+                step_sizes
+                    .push(seqs.iter().map(|(_, ids)| ids.len()).sum());
+                fake_step(seqs)
+            },
+            |_, _| 1.0,
+        )
+        .unwrap();
+        assert_eq!(responses.len(), 8);
+        assert!(!step_sizes.is_empty());
+        assert!(step_sizes.iter().all(|&t| t <= 25),
+                "budget violated: {step_sizes:?}");
+    }
+}

@@ -5,6 +5,8 @@
 //! * [`AliasTable`] — Walker/Vose O(1) categorical sampling; this is also
 //!   the weighted-random-choice primitive behind the paper's Algorithm 3
 //!   (weighted round-robin replica selection).
+//! * [`Exponential`] — interarrival gaps of the serving front's open-loop
+//!   Poisson arrival generator (`--arrival-rate`).
 
 use super::rng::Rng;
 
@@ -115,6 +117,39 @@ impl AliasTable {
     }
 }
 
+/// Exponential(rate): interarrival gaps of a Poisson process with `rate`
+/// events per second — the open-loop arrival model of the serving bench
+/// and the CLI's `--arrival-rate`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Exponential {
+    rate: f64,
+}
+
+impl Exponential {
+    /// Exponential distribution with `rate` events per unit time.
+    pub fn new(rate: f64) -> Exponential {
+        assert!(rate > 0.0 && rate.is_finite(),
+                "Exponential rate must be positive, got {rate}");
+        Exponential { rate }
+    }
+
+    /// Events per unit time.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// Mean gap (`1 / rate`).
+    pub fn mean(&self) -> f64 {
+        1.0 / self.rate
+    }
+
+    /// Draw one gap via inverse-CDF (`-ln(1 - u) / rate`); `u < 1`
+    /// always, so the draw is finite.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        -(1.0 - rng.f64()).ln() / self.rate
+    }
+}
+
 /// Weighted choice without table build (O(n)); fine for tiny candidate
 /// sets like per-tier replica lists in TAR.
 pub fn weighted_choice(rng: &mut Rng, weights: &[f64]) -> usize {
@@ -207,6 +242,28 @@ mod tests {
         for k in 0..10 {
             assert!((z.pmf(k) - 0.1).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn exponential_mean_and_support() {
+        let exp = Exponential::new(4.0);
+        assert_eq!(exp.mean(), 0.25);
+        let mut rng = Rng::new(8);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = exp.sample(&mut rng);
+            assert!(x >= 0.0 && x.is_finite());
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.25).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn exponential_rejects_zero_rate() {
+        Exponential::new(0.0);
     }
 
     #[test]

@@ -13,6 +13,6 @@ pub mod dist;
 pub mod rng;
 pub mod summary;
 
-pub use dist::{AliasTable, Zipf};
+pub use dist::{AliasTable, Exponential, Zipf};
 pub use rng::Rng;
 pub use summary::Summary;

@@ -79,6 +79,11 @@ impl Summary {
         self.percentile(50.0)
     }
 
+    /// 95th percentile (serving-SLO tail).
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
     /// 99th percentile (tail latency).
     pub fn p99(&self) -> f64 {
         self.percentile(99.0)
@@ -127,6 +132,7 @@ mod tests {
         let s = Summary::of(&[7.0]);
         assert_eq!(s.mean(), 7.0);
         assert_eq!(s.std(), 0.0);
+        assert_eq!(s.p95(), 7.0);
         assert_eq!(s.p99(), 7.0);
     }
 

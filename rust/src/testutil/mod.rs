@@ -54,6 +54,18 @@ pub fn check_seed(seed: u64, prop: impl Fn(&mut Rng) -> PropResult) {
     }
 }
 
+/// Deterministic stand-in for greedy decode: the "next token" is a hash
+/// of the prefix, so the output depends only on the sequence — never on
+/// batch composition — exactly the independence the real per-row
+/// decoder has. Shared by the scheduler unit tests, `tests/serving.rs`,
+/// and `benches/serving.rs` so all three provably exercise the same
+/// fake engine.
+pub fn fake_decode_token(ids: &[i32]) -> i32 {
+    (ids.iter()
+        .fold(7i64, |a, &t| a.wrapping_mul(31).wrapping_add(t as i64))
+        .rem_euclid(97)) as i32
+}
+
 /// Generate a random partition sizing: `k` non-negative integers summing to
 /// `total` (common generator for load/size vectors).
 pub fn random_sizes(rng: &mut Rng, k: usize, total: usize) -> Vec<usize> {

@@ -8,7 +8,7 @@ use grace_moe::engine::real::{place_real, profile_real, DistributedMoE,
                               FfnMode, RealModel};
 use grace_moe::placement::ReplicationMode;
 use grace_moe::routing::RoutingPolicy;
-use grace_moe::server::{MoEServer, Request, ServerConfig};
+use grace_moe::server::{MoEServer, Request, SchedMode, ServerConfig};
 use grace_moe::stats::Rng;
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -51,7 +51,7 @@ fn serve_batch_end_to_end_with_tar() {
             queue_cap: 8,
             seed: 1,
             ffn_mode: FfnMode::PerExpert,
-            replan: None,
+            ..ServerConfig::default()
         },
     );
     let mut rng = Rng::new(5);
@@ -107,7 +107,7 @@ fn routing_policy_does_not_change_decoded_tokens() {
                 queue_cap: 4,
                 seed: 2,
                 ffn_mode: FfnMode::PerExpert,
-                replan: None,
+                ..ServerConfig::default()
             },
         );
         let requests = vec![Request {
@@ -127,6 +127,73 @@ fn routing_policy_does_not_change_decoded_tokens() {
 }
 
 #[test]
+fn continuous_batching_matches_static_drain_token_for_token() {
+    // Determinism parity: with a fixed seed, the continuous-batching
+    // scheduler must produce token-for-token identical responses to the
+    // old static-drain discipline on a closed-loop workload (per-token
+    // numerics are independent of batch composition, and routing replica
+    // choice is lossless by construction).
+    let Some(dir) = artifacts() else { return };
+    let topo = Topology::two_by_two();
+    let model = Arc::new(RealModel::load(&dir, "olmoe_tiny").unwrap());
+    let trace = profile_real(&model, 1, 5).unwrap();
+    let placement = Arc::new(place_real(
+        &model,
+        &topo,
+        &trace,
+        ReplicationMode::Dynamic,
+        0.15,
+        5,
+    ));
+    let mut rng = Rng::new(9);
+    let requests: Vec<Request> = (0..4)
+        .map(|i| Request {
+            id: i,
+            prompt: (0..6 + i as usize)
+                .map(|_| rng.index(model.cfg.vocab) as i32)
+                .collect(),
+            max_new_tokens: 3,
+        })
+        .collect();
+    let mut outputs = Vec::new();
+    let mut round_counts = Vec::new();
+    for mode in [SchedMode::StaticDrain, SchedMode::Continuous] {
+        let mut server = MoEServer::new(
+            model.clone(),
+            placement.clone(),
+            topo.clone(),
+            RoutingPolicy::Tar,
+            ServerConfig {
+                max_batch: 4,
+                sched: mode,
+                seed: 3,
+                ffn_mode: FfnMode::PerExpert,
+                ..ServerConfig::default()
+            },
+        );
+        let (responses, metrics) = server.serve(requests.clone()).unwrap();
+        outputs.push(
+            responses
+                .iter()
+                .map(|r| r.tokens.clone())
+                .collect::<Vec<_>>(),
+        );
+        round_counts.push(metrics.dispatch_rounds);
+        assert_eq!(metrics.generated_tokens, 12);
+        assert!(!metrics.ttft.is_empty());
+    }
+    assert_eq!(outputs[0], outputs[1],
+               "continuous batching changed decoded tokens");
+    assert!(
+        round_counts[1] <= round_counts[0],
+        "batched decode must not issue more dispatch rounds: \
+         continuous {} vs static {}",
+        round_counts[1],
+        round_counts[0]
+    );
+}
+
+#[test]
 fn dsv2_variant_also_serves() {
     // Second architecture (top-6): the whole stack is variant-generic.
     let Some(dir) = artifacts() else { return };
@@ -143,8 +210,8 @@ fn dsv2_variant_also_serves() {
         11,
     ));
     let coord = OnlineCoordinator::new(topo.clone(), RoutingPolicy::Tar);
-    let mut dist = DistributedMoE::new(&model, placement.clone(), &coord,
-                                       FfnMode::GroupedPallas);
+    let mut dist = DistributedMoE::new(model.clone(), placement.clone(),
+                                       &coord, FfnMode::GroupedPallas);
     let c = model.cfg.clone();
     let mut rng = Rng::new(13);
     let x: Vec<f32> = (0..c.tile_t * c.hidden)

@@ -13,11 +13,16 @@
 use grace_moe::baselines::SystemSpec;
 use grace_moe::cluster::Topology;
 use grace_moe::config::{ModelSpec, Workload};
+use grace_moe::coordinator::OnlineCoordinator;
 use grace_moe::engine::sim::{build_placement, simulate_rounds, SimConfig};
 use grace_moe::linalg::Matrix;
 use grace_moe::placement::{LayerPlacement, Placement, ReplicationMode};
 use grace_moe::profile::LayerProfile;
-use grace_moe::replan::ReplanConfig;
+use grace_moe::replan::{self, CostParams, ReplanConfig, Replanner};
+use grace_moe::routing::{Assignment, RoutingPolicy};
+use grace_moe::server::sched::{simulate_serve, SchedConfig, SchedMode};
+use grace_moe::server::{even_src, Request, Response};
+use grace_moe::stats::Rng;
 use grace_moe::trace::{GateTrace, LayerTrace, Profile, TraceGen};
 
 fn replan_cfg(payback: f64) -> ReplanConfig {
@@ -181,6 +186,117 @@ fn rotating_hot_expert_replan_beats_static_and_accounts_migration() {
     // the traffic accounting beyond the static run's identical rounds
     // would… at minimum the e2e time includes a positive migration term.
     assert!(md.e2e_time.is_finite() && md.e2e_time > 0.0);
+}
+
+#[test]
+fn scheduler_step_boundary_replan_is_a_pure_observer_when_stationary() {
+    // PR-5 extension: the continuous-batching scheduler re-homed the
+    // epoch tick from "between batch drains" to the decode-step
+    // boundary. Same invariant, new home: on stationary traffic every
+    // tick is a structural no-op, so serving with the re-planner
+    // attached is routing-identical (and token-identical) to serving
+    // without it. Exercised engine-free: a fake decode whose dispatch
+    // round replays the profiled distribution exactly, driven through
+    // the real Dispatcher + OnlineCoordinator + Replanner.
+    let topo = Topology::paper_testbed(1, 4);
+    let placement = fixture_placement(vec![280.0, 60.0, 40.0, 20.0]);
+    let counts = [280usize, 60, 40, 20];
+
+    let run = |with_replan: bool| {
+        let mut coord =
+            OnlineCoordinator::new(topo.clone(), RoutingPolicy::Tar);
+        if with_replan {
+            let rc = ReplanConfig {
+                epoch_rounds: 2,
+                min_drift: 0.05,
+                payback: 0.0,
+                alpha: 1.0,
+            };
+            coord = coord.with_replanner(Replanner::new(
+                topo.clone(),
+                rc,
+                CostParams { expert_bytes: 1e6,
+                             moe_s_per_assignment: 1e-6 },
+            ));
+        }
+        let mut dispatcher = coord.dispatcher(4096.0);
+        let mut rng = Rng::new(42);
+        let mut active = placement.clone();
+        let mut applied = 0usize;
+        let mut copies_rounds: Vec<Vec<usize>> = Vec::new();
+
+        let arrivals: Vec<(Request, f64)> = (0..6)
+            .map(|id| {
+                (Request {
+                    id,
+                    prompt: vec![1, 2, 3, 4],
+                    max_new_tokens: 3,
+                }, 0.0)
+            })
+            .collect();
+        let (responses, metrics) = simulate_serve(
+            SchedConfig {
+                mode: SchedMode::Continuous,
+                max_batch: 3,
+                max_batch_tokens: 64,
+                ctx: 16,
+            },
+            arrivals,
+            |seqs| {
+                // One stationary dispatch round per step: serving
+                // traffic replays the profiled load histogram exactly.
+                let total: usize = counts.iter().sum();
+                let mut batch = Vec::with_capacity(total);
+                let mut t = 0usize;
+                for (e, &c) in counts.iter().enumerate() {
+                    for _ in 0..c {
+                        batch.push(Assignment {
+                            token: t,
+                            expert: e,
+                            src: even_src(t, total, 4),
+                        });
+                        t += 1;
+                    }
+                }
+                let plan = {
+                    let lp = &active.layers[0];
+                    let plan = dispatcher.dispatch(lp, 0, &batch, &mut rng);
+                    coord.observe(0, lp, &plan);
+                    plan
+                };
+                copies_rounds.push(plan.copies_per_gpu().to_vec());
+                // Step boundary — the only place the epoch may tick.
+                let delta = coord.epoch_tick(&active);
+                if !delta.is_empty() {
+                    active = replan::apply_delta(&active, &delta);
+                    applied += 1;
+                }
+                let next: Vec<i32> = seqs
+                    .iter()
+                    .map(|(id, ids)| *id as i32 + ids.len() as i32)
+                    .collect();
+                Ok((next, 1))
+            },
+            |_, _| 1.0,
+        )
+        .unwrap();
+        (responses, metrics, copies_rounds, applied)
+    };
+
+    let (r_off, m_off, c_off, a_off) = run(false);
+    let (r_on, m_on, c_on, a_on) = run(true);
+    assert_eq!(a_off, 0, "no replanner, no deltas");
+    assert_eq!(a_on, 0,
+               "stationary epochs must be empty under the scheduler");
+    assert!(m_on.steps >= 4, "needs several epochs: {} steps", m_on.steps);
+    assert_eq!(c_off, c_on, "the re-planner perturbed routing");
+    assert_eq!(m_off.steps, m_on.steps);
+    assert_eq!(m_off.dispatch_rounds, m_on.dispatch_rounds);
+    let toks = |rs: &[Response]| {
+        rs.iter().map(|r| r.tokens.clone()).collect::<Vec<_>>()
+    };
+    assert_eq!(toks(&r_off), toks(&r_on),
+               "responses must be token-identical");
 }
 
 #[test]
