@@ -181,3 +181,76 @@ def layernorm_ref(x: jax.Array, eps: float = 1e-5) -> jax.Array:
     mu = jnp.mean(x, axis=-1, keepdims=True)
     var = jnp.var(x, axis=-1, keepdims=True)
     return (x - mu) * jax.lax.rsqrt(var + eps)
+
+
+def attention_prefill_ref(x: jax.Array, wqkv: jax.Array, wo: jax.Array,
+                          n_heads: int, valid_len):
+    """Full-prefix attention that also returns the K/V rows to cache.
+
+    The K/V of position ``p`` depend only on row ``p``'s layer input
+    (layernorm and the QKV matmul are row-wise), so the rows computed here
+    are exactly the rows :func:`attention_step_ref` would have produced one
+    token at a time — that identity is what makes incremental decode exact.
+
+    Args:
+      x: ``[C, H]`` ctx-padded layer input.
+      wqkv: ``[H, 3H]``; wo: ``[H, H]``.
+      n_heads: head count.
+      valid_len: number of valid rows; cache rows at or past it are zeroed.
+    Returns:
+      ``(out [C, H], k_cache [C, H], v_cache [C, H])`` where ``out`` is
+      bit-identical to :func:`attention_ref` on the same inputs.
+    """
+    out = attention_ref(x, wqkv, wo, n_heads, valid_len)
+    qkv = layernorm_ref(x) @ wqkv
+    _, k, v = jnp.split(qkv, 3, axis=-1)
+    vl = jnp.asarray(valid_len)
+    live = (jnp.arange(x.shape[0]) < vl)[:, None]
+    return out, jnp.where(live, k, 0.0), jnp.where(live, v, 0.0)
+
+
+def attention_step_ref(x_row: jax.Array, k_cache: jax.Array,
+                       v_cache: jax.Array, wqkv: jax.Array, wo: jax.Array,
+                       n_heads: int, pos):
+    """One incremental attention step against a K/V cache.
+
+    Computes the attended output for the single new token at position
+    ``pos``, given caches holding the K/V rows of positions ``< pos`` (rows
+    at and past ``pos`` are ignored and overwritten). Because softmax over
+    the causal window ``0..=pos`` sees exactly the keys the full-prefix
+    path sees for row ``pos``, the output row equals row ``pos`` of
+    :func:`attention_ref` up to float-reduction reassociation (the two
+    paths lower differently-shaped einsums); greedy token output is
+    identical — the parity tests pin both.
+
+    Args:
+      x_row: ``[1, H]`` the new token's layer input.
+      k_cache, v_cache: ``[C, H]`` caches; rows ``< pos`` must be populated.
+      wqkv: ``[H, 3H]``; wo: ``[H, H]``.
+      n_heads: head count.
+      pos: index of the new token (i32 scalar, ``0 <= pos < C``).
+    Returns:
+      ``(out [1, H], k_cache [C, H], v_cache [C, H])`` — the attended
+      residual row plus the caches with row ``pos`` appended.
+    """
+    C, H = k_cache.shape
+    hd = H // n_heads
+    p = jnp.asarray(pos)
+    qkv = layernorm_ref(x_row) @ wqkv  # [1, 3H]
+    q, k_new, v_new = jnp.split(qkv, 3, axis=-1)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new, (p, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new, (p, 0))
+
+    def heads(a):  # [C, H] -> [nh, C, hd]
+        return a.reshape(-1, n_heads, hd).transpose(1, 0, 2)
+
+    qh = heads(q)  # [nh, 1, hd]
+    kh, vh = heads(k_cache), heads(v_cache)  # [nh, C, hd]
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, dtype=x_row.dtype))
+    scores = jnp.einsum("hqd,hkd->hqk", qh, kh) * scale  # [nh, 1, C]
+    mask = (jnp.arange(C) <= p)[None, None, :]
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ctx = jnp.einsum("hqk,hkd->hqd", probs, vh)  # [nh, 1, hd]
+    ctx = ctx.transpose(1, 0, 2).reshape(1, H)
+    return x_row + ctx @ wo, k_cache, v_cache

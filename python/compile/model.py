@@ -15,8 +15,15 @@ artifact               computation
 ``{V}_expert_ffn``     single-expert SwiGLU FFN (per-expert baseline path +
                        compute-cost calibration)
 ``{V}_attention``      causal self-attention block with valid-length mask
+``{V}_attention_prefill``  full-prefix attention that also emits the K/V
+                       rows to seed a per-sequence cache
+``{V}_attention_step`` incremental attention: one new-token row against a
+                       cached ``[ctx, hidden]`` K/V pair → attended row +
+                       updated caches (the KV-cached decode hot path)
 ``{V}_embed``          token embedding lookup
 ``{V}_lmhead``         tied-embedding logits
+``{V}_lmhead_row``     tied-embedding logits for a single row (cached
+                       decode emits one row per live sequence)
 ``{V}_moe_layer_full`` the whole MoE layer on one device — the *lossless
                        oracle* the rust engine checks distributed execution
                        against (paper §1: "lossless co-optimization")
@@ -110,6 +117,18 @@ def expert_ffn_fn(cfg: ModelConfig, x, w1, w3, w2):
 
 def attention_fn(cfg: ModelConfig, x, wqkv, wo, valid_len):
     return (ref.attention_ref(x, wqkv, wo, cfg.heads, valid_len),)
+
+
+def attention_prefill_fn(cfg: ModelConfig, x, wqkv, wo, valid_len):
+    """Full-prefix attention + the K/V rows that seed a sequence's cache."""
+    return ref.attention_prefill_ref(x, wqkv, wo, cfg.heads, valid_len)
+
+
+def attention_step_fn(cfg: ModelConfig, x_row, k_cache, v_cache, wqkv, wo,
+                      pos):
+    """Incremental attention for one new token against a K/V cache."""
+    return ref.attention_step_ref(x_row, k_cache, v_cache, wqkv, wo,
+                                  cfg.heads, pos)
 
 
 def embed_fn(cfg: ModelConfig, ids, emb):
@@ -225,12 +244,24 @@ def artifact_specs(cfg: ModelConfig):
          functools.partial(attention_fn, c),
          [S((c.ctx, c.hidden)), S((c.hidden, 3 * c.hidden)),
           S((c.hidden, c.hidden)), S((), i32)]),
+        ("attention_prefill",
+         functools.partial(attention_prefill_fn, c),
+         [S((c.ctx, c.hidden)), S((c.hidden, 3 * c.hidden)),
+          S((c.hidden, c.hidden)), S((), i32)]),
+        ("attention_step",
+         functools.partial(attention_step_fn, c),
+         [S((1, c.hidden)), S((c.ctx, c.hidden)), S((c.ctx, c.hidden)),
+          S((c.hidden, 3 * c.hidden)), S((c.hidden, c.hidden)),
+          S((), i32)]),
         ("embed",
          functools.partial(embed_fn, c),
          [S((c.ctx,), i32), S((c.vocab, c.hidden))]),
         ("lmhead",
          functools.partial(lmhead_fn, c),
          [S((c.ctx, c.hidden)), S((c.vocab, c.hidden))]),
+        ("lmhead_row",
+         functools.partial(lmhead_fn, c),
+         [S((1, c.hidden)), S((c.vocab, c.hidden))]),
         ("moe_layer_full",
          functools.partial(moe_layer_full_fn, c),
          [S((c.tile_t, c.hidden)), S((c.hidden, c.experts)),

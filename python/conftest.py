@@ -28,6 +28,7 @@ def _available(module: str) -> bool:
 _REQUIREMENTS = {
     "tests/test_aot.py": ("jax", "numpy"),
     "tests/test_kernels.py": ("jax", "numpy", "hypothesis"),
+    "tests/test_kv_cache.py": ("jax", "numpy"),
     "tests/test_model.py": ("jax", "numpy", "hypothesis"),
 }
 

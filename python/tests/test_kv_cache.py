@@ -1,0 +1,206 @@
+"""Parity tests for the incremental-attention (KV cache) ref kernels.
+
+The headline invariant of the KV-cached decode path is that it produces
+*token-for-token* identical output to the full-recompute path: layernorm
+and the QKV projection are row-wise, so the K/V of position ``p`` depend
+only on row ``p``'s layer input, and the causal softmax over ``0..=p``
+sees exactly the same keys either way. Intermediate float rows agree up
+to XLA reduction reassociation (the two paths lower differently-shaped
+einsums); the greedy argmax chain — the actual output — is exact, and
+these tests pin both levels (the rust side pins them again at the
+serving level).
+
+Needs only jax + numpy (no hypothesis), so it runs wherever the AOT
+toolchain itself runs.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+CFG = model.ModelConfig(
+    name="test_tiny", experts=8, top_k=2, layers=2, paper_layers=2,
+    hidden=16, ffn=24, heads=2, vocab=64, tile_t=16, tile_m=4,
+    cap_tiles=24, ctx=24)
+
+
+def rand(key, shape, scale=0.3):
+    return jax.random.normal(key, shape) * scale
+
+
+def padded(x_valid, ctx):
+    """Zero-pad a [T, H] block to [ctx, H] (the rust engine's layout)."""
+    pad = jnp.zeros((ctx - x_valid.shape[0], x_valid.shape[1]))
+    return jnp.concatenate([x_valid, pad], axis=0)
+
+
+def test_prefill_matches_full_attention_and_caches_kv():
+    c = CFG
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    valid = 7
+    x = padded(rand(ks[0], (valid, c.hidden)), c.ctx)
+    wqkv = rand(ks[1], (c.hidden, 3 * c.hidden))
+    wo = rand(ks[2], (c.hidden, c.hidden))
+
+    out, k_cache, v_cache = ref.attention_prefill_ref(
+        x, wqkv, wo, c.heads, valid)
+    want = ref.attention_ref(x, wqkv, wo, c.heads, valid)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+    # Cached K/V rows are the row-wise projection of the *valid* inputs…
+    qkv = ref.layernorm_ref(x) @ wqkv
+    _, k_want, v_want = jnp.split(qkv, 3, axis=-1)
+    np.testing.assert_array_equal(
+        np.asarray(k_cache[:valid]), np.asarray(k_want[:valid]))
+    np.testing.assert_array_equal(
+        np.asarray(v_cache[:valid]), np.asarray(v_want[:valid]))
+    # …and padding rows are exactly zero (nothing leaks into the cache).
+    assert not np.asarray(k_cache[valid:]).any()
+    assert not np.asarray(v_cache[valid:]).any()
+
+
+def test_step_rows_match_full_prefix_rows():
+    # Feed a sequence one token at a time through attention_step_ref; every
+    # produced row must match the corresponding row of the one-shot
+    # full-prefix attention_ref on the same inputs. Same dot products, but
+    # XLA tiles the [1, C] and [T, C] einsum reductions differently, so
+    # the comparison is up-to-reassociation (ulp-level) — the same
+    # tolerance class the losslessness oracle uses. Token-level parity
+    # (below) is exact.
+    c = CFG
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    T = 9
+    x_valid = rand(ks[0], (T, c.hidden))
+    x = padded(x_valid, c.ctx)
+    wqkv = rand(ks[1], (c.hidden, 3 * c.hidden))
+    wo = rand(ks[2], (c.hidden, c.hidden))
+    want = ref.attention_ref(x, wqkv, wo, c.heads, T)
+
+    k_cache = jnp.zeros((c.ctx, c.hidden))
+    v_cache = jnp.zeros((c.ctx, c.hidden))
+    for p in range(T):
+        row, k_cache, v_cache = ref.attention_step_ref(
+            x[p:p + 1], k_cache, v_cache, wqkv, wo, c.heads, p)
+        np.testing.assert_allclose(
+            np.asarray(row[0]), np.asarray(want[p]),
+            rtol=1e-5, atol=1e-6,
+            err_msg=f"row {p} diverged from full-prefix attention")
+
+
+def test_step_appends_exactly_one_cache_row():
+    c = CFG
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    x = padded(rand(ks[0], (4, c.hidden)), c.ctx)
+    wqkv = rand(ks[1], (c.hidden, 3 * c.hidden))
+    wo = rand(ks[2], (c.hidden, c.hidden))
+    _, k0, v0 = ref.attention_prefill_ref(x, wqkv, wo, c.heads, 3)
+    _, k1, v1 = ref.attention_step_ref(
+        x[3:4], k0, v0, wqkv, wo, c.heads, 3)
+    # Rows < pos and rows > pos are untouched; row pos is newly written.
+    np.testing.assert_array_equal(np.asarray(k1[:3]), np.asarray(k0[:3]))
+    np.testing.assert_array_equal(np.asarray(v1[:3]), np.asarray(v0[:3]))
+    np.testing.assert_array_equal(np.asarray(k1[4:]), np.asarray(k0[4:]))
+    assert np.asarray(k1[3]).any(), "step must write cache row `pos`"
+
+
+def greedy_recompute(cfg, params, prompt, n_new):
+    """Oracle: greedy decode by full forward recompute every step."""
+    ids = list(prompt)
+    out = []
+    for _ in range(n_new):
+        padded_ids = jnp.array(
+            ids + [0] * (cfg.ctx - len(ids)), dtype=jnp.int32)
+        logits = model.forward_ref(cfg, params, padded_ids, len(ids))
+        t = int(jnp.argmax(logits[len(ids) - 1]))
+        out.append(t)
+        ids.append(t)
+    return out
+
+
+def greedy_cached(cfg, params, prompt, n_new):
+    """KV-cached greedy decode: prefill once, then one row per step.
+
+    Mirrors the rust `decode_step_cached` structure: per layer, attention
+    runs incrementally against the cache while the MoE layer (which has no
+    cross-token state) runs on just the new rows.
+    """
+    c = cfg
+    caches = [(jnp.zeros((c.ctx, c.hidden)), jnp.zeros((c.ctx, c.hidden)))
+              for _ in range(c.layers)]
+    ids = list(prompt)
+    out = []
+
+    def moe(x, l):
+        (y,) = model.moe_layer_full_fn(
+            c, x, params["wg"][l], params["w1"][l], params["w3"][l],
+            params["w2"][l])
+        return y
+
+    # Prefill: full-prefix pass that populates every layer's cache.
+    padded_ids = jnp.array(
+        ids + [0] * (c.ctx - len(ids)), dtype=jnp.int32)
+    (x,) = model.embed_fn(c, padded_ids, params["emb"])
+    for l in range(c.layers):
+        a, k, v = ref.attention_prefill_ref(
+            x, params["wqkv"][l], params["wo"][l], c.heads, len(ids))
+        caches[l] = (k, v)
+        x = moe(a, l)
+    (logits,) = model.lmhead_fn(c, x[len(ids) - 1:len(ids)], params["emb"])
+    t = int(jnp.argmax(logits[0]))
+    out.append(t)
+    ids.append(t)
+
+    # Decode: one token per step through attention_step + MoE on one row.
+    while len(out) < n_new:
+        pos = len(ids) - 1
+        (row,) = model.embed_fn(
+            c,
+            jnp.array(ids[pos:] + [0] * (c.ctx - 1), dtype=jnp.int32),
+            params["emb"])
+        row = row[:1]
+        for l in range(c.layers):
+            k, v = caches[l]
+            row, k, v = ref.attention_step_ref(
+                row, k, v, params["wqkv"][l], params["wo"][l], c.heads,
+                pos)
+            caches[l] = (k, v)
+            row = moe(row, l)
+        (logits,) = model.lmhead_fn(c, row, params["emb"])
+        t = int(jnp.argmax(logits[0]))
+        out.append(t)
+        ids.append(t)
+    return out
+
+
+@pytest.mark.parametrize("prompt_len,n_new", [(5, 6), (1, 4), (10, 8)])
+def test_cached_greedy_decode_matches_recompute(prompt_len, n_new):
+    # The end-to-end tentpole invariant, at the python level: KV-cached
+    # incremental decode produces token-for-token the same greedy output
+    # as full recompute. Attention rows agree bit-for-bit; the MoE layer
+    # sees identical inputs either way (it has no cross-token state), so
+    # the argmax chain cannot diverge.
+    params = model.init_params(CFG, seed=3)
+    prompt = [(i * 37 + 11) % CFG.vocab for i in range(prompt_len)]
+    want = greedy_recompute(CFG, params, prompt, n_new)
+    got = greedy_cached(CFG, params, prompt, n_new)
+    assert got == want, f"cached decode diverged: {got} vs {want}"
+
+
+def test_artifact_specs_include_incremental_entries():
+    # The manifest contract: the new artifacts exist with the shapes the
+    # rust engine binds to (new-token row + [ctx, hidden] caches).
+    specs = {name: shapes for name, _, shapes in model.artifact_specs(CFG)}
+    assert "attention_prefill" in specs
+    assert "attention_step" in specs
+    assert "lmhead_row" in specs
+    step = specs["attention_step"]
+    assert tuple(step[0].shape) == (1, CFG.hidden)
+    assert tuple(step[1].shape) == (CFG.ctx, CFG.hidden)
+    assert tuple(step[2].shape) == (CFG.ctx, CFG.hidden)
+    assert tuple(step[5].shape) == ()
+    assert tuple(specs["lmhead_row"][0].shape) == (1, CFG.hidden)

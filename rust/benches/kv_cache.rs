@@ -1,0 +1,184 @@
+//! KV-cache bench: cached incremental decode vs full recompute on
+//! identical workloads, over the real scheduler on a virtual clock.
+//!
+//! Both arms run [`grace_moe::server::sched::simulate_serve_with`] —
+//! the same state machine the execute-mode server drives — against a
+//! [`grace_moe::testutil::FakeKvEngine`] whose cost model follows the
+//! real packing rule (`layers × ⌈computed/tile_t⌉` dispatch rounds per
+//! step) and whose decoded tokens are a pure function of the prefix.
+//! The arms differ only in `SchedConfig::kv_cache`:
+//!
+//! * **recompute** (`--kv-cache off` in the server) re-feeds every
+//!   live prefix through the stack each step — a step costs
+//!   `Σ len(seq)` tokens;
+//! * **cached** (the default) prices a sequence at its uncached
+//!   suffix — the prompt once at prefill, then exactly **one token per
+//!   live sequence per decode step**.
+//!
+//! Self-checks on every run (the PR's acceptance bar): token-for-token
+//! output parity between the arms, the exact 1-token decode-step
+//! pricing (`computed = requests × (prompt + new − 1)`), and strictly
+//! fewer dispatch rounds per generated token with the cache on.
+//!
+//! Run: `cargo bench --bench kv_cache`
+
+use grace_moe::bench::{bench, Table};
+use grace_moe::config::{ArrivalProcess, ServeLoad};
+use grace_moe::server::sched::{simulate_serve_with, SchedConfig,
+                               SchedMode};
+use grace_moe::server::Request;
+use grace_moe::stats::Rng;
+use grace_moe::testutil::FakeKvEngine;
+use std::cell::RefCell;
+
+const CTX: usize = 64;
+const LAYERS: usize = 4;
+const TILE_T: usize = 16;
+/// Per-dispatch-round launch overhead, seconds (collective latency
+/// floor).
+const ROUND_S: f64 = 200e-6;
+/// Per-token expert+dense compute, seconds.
+const TOKEN_S: f64 = 40e-6;
+
+fn requests(load: &ServeLoad) -> Vec<Request> {
+    (0..load.requests)
+        .map(|i| Request {
+            id: i as u64,
+            prompt: (0..load.prompt)
+                .map(|p| ((i * 131 + p * 17) % 512) as i32)
+                .collect(),
+            max_new_tokens: load.new_tokens,
+        })
+        .collect()
+}
+
+/// One serving run of the configured arm: returns its responses and
+/// metrics.
+fn run_arm(load: &ServeLoad, kv: bool, seed: u64)
+           -> (Vec<grace_moe::server::Response>,
+               grace_moe::metrics::ServeMetrics) {
+    let mut rng = Rng::new(seed);
+    let times = load.arrival_times(&mut rng);
+    let arrivals: Vec<(Request, f64)> =
+        requests(load).into_iter().zip(times).collect();
+    let cfg = SchedConfig {
+        mode: SchedMode::Continuous,
+        max_batch: 8,
+        max_batch_tokens: 4 * CTX,
+        ctx: CTX,
+        kv_cache: kv,
+    };
+    let engine = RefCell::new(FakeKvEngine::new(LAYERS, TILE_T, kv));
+    let out = simulate_serve_with(
+        cfg,
+        arrivals,
+        |seqs| engine.borrow_mut().step(seqs),
+        |tokens, rounds| {
+            rounds as f64 * ROUND_S + tokens as f64 * TOKEN_S
+        },
+        |id| engine.borrow_mut().retire(id),
+    )
+    .expect("serving run");
+    assert_eq!(engine.borrow().live_caches(), 0,
+               "caches must all be evicted by the end of the run");
+    out
+}
+
+fn main() {
+    let loads = [
+        ServeLoad {
+            requests: 64,
+            prompt: 12,
+            new_tokens: 16,
+            arrival: ArrivalProcess::Closed,
+        },
+        ServeLoad {
+            requests: 64,
+            prompt: 12,
+            new_tokens: 16,
+            arrival: ArrivalProcess::Poisson { rate: 24.0 },
+        },
+        ServeLoad {
+            requests: 96,
+            prompt: 24,
+            new_tokens: 8,
+            arrival: ArrivalProcess::Poisson { rate: 48.0 },
+        },
+    ];
+
+    let mut table = Table::new(&[
+        "WORKLOAD",
+        "KV",
+        "COMPUTED",
+        "CACHED",
+        "HIT%",
+        "ROUNDS",
+        "ROUNDS/TOK",
+        "TTFT p50 (ms)",
+        "TTFT p95 (ms)",
+        "TOK/S",
+    ]);
+
+    for load in &loads {
+        let mut per_arm = Vec::new();
+        for (name, kv) in [("recompute", false), ("cached", true)] {
+            let (responses, m) = run_arm(load, kv, 7);
+            let ttft = m.ttft_summary().expect("ttft");
+            table.row(vec![
+                load.label(),
+                name.to_string(),
+                format!("{}", m.computed_tokens),
+                format!("{}", m.cached_tokens),
+                format!("{:.0}", m.cache_hit_rate() * 100.0),
+                format!("{}", m.dispatch_rounds),
+                format!("{:.2}", m.rounds_per_token()),
+                format!("{:.1}", ttft.p50() * 1e3),
+                format!("{:.1}", ttft.p95() * 1e3),
+                format!("{:.0}", m.throughput_tps()),
+            ]);
+            per_arm.push((responses, m));
+        }
+        let (re, kv) = (&per_arm[0], &per_arm[1]);
+
+        // Self-check 1 — the headline invariant: cached decode is
+        // token-for-token identical to full recompute.
+        assert_eq!(re.0.len(), kv.0.len());
+        for (a, b) in re.0.iter().zip(&kv.0) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens,
+                       "{}: request {} tokens diverged across arms",
+                       load.label(), a.id);
+        }
+
+        // Self-check 2 — exact decode pricing: with the cache on, each
+        // sequence is computed as its prompt once (prefill) and then
+        // exactly one token per decode step.
+        let want =
+            load.requests * (load.prompt + load.new_tokens - 1);
+        assert_eq!(
+            kv.1.computed_tokens, want,
+            "{}: cached arm computed {} tokens, expected \
+             requests×(prompt+new−1) = {}",
+            load.label(), kv.1.computed_tokens, want
+        );
+        assert_eq!(re.1.cached_tokens, 0);
+
+        // Self-check 3 — the density win: strictly fewer dispatch
+        // rounds per generated token with the cache on.
+        assert!(
+            kv.1.rounds_per_token() < re.1.rounds_per_token(),
+            "{}: cached {} rounds/tok !< recompute {}",
+            load.label(),
+            kv.1.rounds_per_token(),
+            re.1.rounds_per_token()
+        );
+    }
+    println!("{}", table.render());
+
+    // Wall-clock of the cached-arm scheduler machinery (admission,
+    // suffix pricing, cache bookkeeping, retirement).
+    let load = loads[0];
+    let r = bench("kv-cached scheduling (64 reqs, closed loop)", 2, 30,
+                  || run_arm(&load, true, 7));
+    println!("{}", r.report_line());
+}

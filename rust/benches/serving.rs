@@ -62,18 +62,22 @@ fn run_arm(load: &ServeLoad, mode: SchedMode, seed: u64)
         max_batch: 8,
         max_batch_tokens: 4 * CTX,
         ctx: CTX,
+        // Both arms price full prefixes: this bench isolates the PR-5
+        // discipline/forward-shape comparison (KV-cached pricing gets
+        // its own bench, `benches/kv_cache.rs`).
+        kv_cache: false,
     };
     let (_, metrics) = simulate_serve(
         cfg,
         arrivals,
         |seqs| {
             let tokens: usize =
-                seqs.iter().map(|(_, ids)| ids.len()).sum();
+                seqs.iter().map(|(_, ids, _)| ids.len()).sum();
             let rounds = match mode {
                 // Seed server: one forward per sequence per step.
                 SchedMode::StaticDrain => seqs
                     .iter()
-                    .map(|(_, ids)| {
+                    .map(|(_, ids, _)| {
                         LAYERS * ids.len().div_ceil(TILE_T)
                     })
                     .sum(),
@@ -83,7 +87,7 @@ fn run_arm(load: &ServeLoad, mode: SchedMode, seed: u64)
                 }
             };
             let next =
-                seqs.iter().map(|(_, ids)| fake_next(ids)).collect();
+                seqs.iter().map(|(_, ids, _)| fake_next(ids)).collect();
             Ok((next, rounds))
         },
         |tokens, rounds| {

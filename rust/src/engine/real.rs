@@ -264,6 +264,113 @@ impl RealModel {
         )?;
         to_f32(&out[0])
     }
+
+    /// Tied-embedding logits for a single row (`[1, hidden]` →
+    /// `[1, vocab]`) — the cached decode path only materialises one new
+    /// activation row per live sequence, so it never pays the full
+    /// `[ctx, vocab]` logits matmul.
+    pub fn lmhead_row(&self, x_row: &[f32]) -> anyhow::Result<Vec<f32>> {
+        let c = &self.cfg;
+        let out = self.run(
+            "lmhead_row",
+            &[lit_f32(x_row, &[1, c.hidden])?, self.emb.clone()],
+        )?;
+        to_f32(&out[0])
+    }
+
+    /// Full-prefix attention that also emits the K/V rows to seed a
+    /// sequence's [`KvCache`]: `[ctx, hidden]` → `(out, k, v)` each
+    /// `[ctx, hidden]`, where `out` is identical to [`Self::attention`]
+    /// and rows ≥ `valid_len` of the caches are zero.
+    pub fn attention_prefill(&self, x: &[f32], layer: usize,
+                             valid_len: usize)
+                             -> anyhow::Result<(Vec<f32>, Vec<f32>,
+                                                Vec<f32>)> {
+        let c = &self.cfg;
+        let out = self.run(
+            "attention_prefill",
+            &[
+                lit_f32(x, &[c.ctx, c.hidden])?,
+                self.layers[layer].wqkv.clone(),
+                self.layers[layer].wo.clone(),
+                lit_scalar_i32(valid_len as i32),
+            ],
+        )?;
+        Ok((to_f32(&out[0])?, to_f32(&out[1])?, to_f32(&out[2])?))
+    }
+
+    /// Incremental attention: one new-token row against a layer's cached
+    /// K/V. `x_row` is `[1, hidden]`, `k`/`v` are `[ctx, hidden]` with
+    /// rows `< pos` populated; returns the attended residual row plus the
+    /// caches with row `pos` appended. Because the causal window
+    /// `0..=pos` sees exactly the keys the full-prefix program sees for
+    /// row `pos`, greedy decode through this path is token-for-token
+    /// identical to full recompute (pinned by
+    /// `cached_decode_matches_recompute_token_for_token`).
+    pub fn attention_step(&self, x_row: &[f32], k: &[f32], v: &[f32],
+                          layer: usize, pos: usize)
+                          -> anyhow::Result<(Vec<f32>, Vec<f32>,
+                                             Vec<f32>)> {
+        let c = &self.cfg;
+        let out = self.run(
+            "attention_step",
+            &[
+                lit_f32(x_row, &[1, c.hidden])?,
+                lit_f32(k, &[c.ctx, c.hidden])?,
+                lit_f32(v, &[c.ctx, c.hidden])?,
+                self.layers[layer].wqkv.clone(),
+                self.layers[layer].wo.clone(),
+                lit_scalar_i32(pos as i32),
+            ],
+        )?;
+        Ok((to_f32(&out[0])?, to_f32(&out[1])?, to_f32(&out[2])?))
+    }
+}
+
+/// Per-sequence attention K/V cache: one `[ctx, hidden]` K and V buffer
+/// per layer, with the first [`KvCache::len`] rows populated. Owned by
+/// the serving front per *live* sequence — allocated at admission,
+/// dropped at retirement — so a decode step only has to feed each
+/// sequence's **new** token through attention instead of recomputing the
+/// whole prefix.
+pub struct KvCache {
+    /// Per-layer `(k, v)` buffers, each `[ctx, hidden]` row-major; rows
+    /// ≥ `len` are zero.
+    layers: Vec<(Vec<f32>, Vec<f32>)>,
+    /// Number of populated rows == tokens already attended and cached.
+    len: usize,
+}
+
+impl KvCache {
+    /// Empty cache sized for one sequence of `cfg`'s model.
+    pub fn new(cfg: &TinyConfig) -> KvCache {
+        let zeros = || vec![0.0f32; cfg.ctx * cfg.hidden];
+        KvCache {
+            layers: (0..cfg.layers).map(|_| (zeros(), zeros())).collect(),
+            len: 0,
+        }
+    }
+
+    /// Number of cached positions (tokens whose K/V rows are populated).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True before prefill has populated anything.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+/// One live sequence in a cached decode step: the full token ids plus the
+/// sequence's K/V cache, of which the first `cache.len()` positions are
+/// already populated (so `ids.len() - cache.len()` tokens are *new* this
+/// step — the whole prompt at prefill, exactly one during decode).
+pub struct CachedSeq<'a> {
+    /// Full token ids so far (prompt + generated), `1..=ctx` long.
+    pub ids: &'a [i32],
+    /// The sequence's cache; mutated in place by the step.
+    pub cache: &'a mut KvCache,
 }
 
 /// Profile the *real* gate: embed random tokens, run the reference layer
@@ -571,6 +678,159 @@ impl DistributedMoE {
         }
         Ok(next)
     }
+
+    /// KV-cached iteration step: one **new** token per live sequence
+    /// through attention and the MoE layers, instead of the full prefix.
+    ///
+    /// Each [`CachedSeq`] brings `ids.len() - cache.len()` new positions:
+    /// a freshly admitted sequence (empty cache) takes the prefill path —
+    /// one `attention_prefill` call per layer covers its whole prompt and
+    /// seeds the cache — while a decoding sequence takes one
+    /// `attention_step` call per layer against its cached K/V. Only the
+    /// new rows are packed into shared MoE tiles, so a steady-state
+    /// decode step over N live sequences issues `⌈N / tile_t⌉` dispatch
+    /// rounds per layer instead of [`Self::decode_step`]'s
+    /// `⌈Σ len / tile_t⌉`, and prices exactly one token per sequence
+    /// against the scheduler's budget.
+    ///
+    /// Output parity: greedy tokens are identical to [`Self::decode_step`]
+    /// on the same sequences (attention rows agree up to float
+    /// reassociation, the MoE layer is row-wise with no cross-token
+    /// state) — the recompute path survives as the parity oracle behind
+    /// `--kv-cache off`. The two paths consume routing randomness
+    /// differently (fewer tiles → fewer dispatch rounds), which is
+    /// allowed: replica choice is lossless by construction, so it can
+    /// never change tokens.
+    ///
+    /// On success every sequence's cache covers all of `ids`; on error
+    /// caches may be partially updated mid-step — callers must drop them
+    /// (the serving front retires the request on step failure).
+    pub fn decode_step_cached(&mut self, seqs: &mut [CachedSeq<'_>],
+                              rng: &mut Rng,
+                              observe: &mut dyn FnMut(usize,
+                                                      &DispatchPlan))
+                              -> anyhow::Result<Vec<i32>> {
+        let c = self.model.cfg.clone();
+        anyhow::ensure!(!seqs.is_empty(),
+                        "decode_step_cached: empty batch");
+        for s in seqs.iter() {
+            anyhow::ensure!(
+                !s.ids.is_empty() && s.ids.len() <= c.ctx,
+                "decode_step_cached: sequence length {} outside 1..={}",
+                s.ids.len(),
+                c.ctx
+            );
+            anyhow::ensure!(
+                s.cache.len < s.ids.len(),
+                "decode_step_cached: cache ({} rows) has no new tokens \
+                 for a {}-token sequence",
+                s.cache.len,
+                s.ids.len()
+            );
+            anyhow::ensure!(
+                s.cache.layers.len() == c.layers,
+                "decode_step_cached: cache built for {} layers, model \
+                 has {}",
+                s.cache.layers.len(),
+                c.layers
+            );
+        }
+        let n_gpus = self.topo.num_gpus();
+        let starts: Vec<usize> =
+            seqs.iter().map(|s| s.cache.len).collect();
+
+        // Embed (ctx-padded — the embed artifact's shape); only the new
+        // rows are read below.
+        let mut xs: Vec<Vec<f32>> = Vec::with_capacity(seqs.len());
+        for s in seqs.iter() {
+            let mut padded = s.ids.to_vec();
+            padded.resize(c.ctx, 0);
+            xs.push(self.model.embed(&padded)?);
+        }
+
+        // Flat (sequence, position) map over the NEW tokens only — the
+        // shared-tile packing order of the cached step.
+        let flat: Vec<(usize, usize)> = seqs
+            .iter()
+            .enumerate()
+            .flat_map(|(s, cs)| {
+                (starts[s]..cs.ids.len()).map(move |p| (s, p))
+            })
+            .collect();
+        let total_new = flat.len();
+
+        for l in 0..c.layers {
+            for (s, cs) in seqs.iter_mut().enumerate() {
+                if starts[s] == 0 {
+                    // Prefill: whole prompt in one call, cache seeded.
+                    let (att, k, v) = self.model.attention_prefill(
+                        &xs[s], l, cs.ids.len())?;
+                    xs[s] = att;
+                    cs.cache.layers[l] = (k, v);
+                } else {
+                    // Incremental: one step per new position (exactly
+                    // one in steady-state decode).
+                    for p in starts[s]..cs.ids.len() {
+                        let row = xs[s]
+                            [p * c.hidden..(p + 1) * c.hidden]
+                            .to_vec();
+                        let (kc, vc) = &cs.cache.layers[l];
+                        let (out, k, v) = self.model.attention_step(
+                            &row, kc, vc, l, p)?;
+                        xs[s][p * c.hidden..(p + 1) * c.hidden]
+                            .copy_from_slice(&out);
+                        cs.cache.layers[l] = (k, v);
+                    }
+                }
+            }
+            for (tile_idx, tile_toks) in flat.chunks(c.tile_t).enumerate()
+            {
+                let mut x_tile = vec![0.0f32; c.tile_t * c.hidden];
+                for (row, &(s, p)) in tile_toks.iter().enumerate() {
+                    x_tile[row * c.hidden..(row + 1) * c.hidden]
+                        .copy_from_slice(
+                            &xs[s][p * c.hidden..(p + 1) * c.hidden],
+                        );
+                }
+                let base = tile_idx * c.tile_t;
+                let run = self.moe_layer(
+                    &x_tile,
+                    l,
+                    &|t| even_src(base + t, total_new, n_gpus),
+                    rng,
+                )?;
+                for (row, &(s, p)) in tile_toks.iter().enumerate() {
+                    xs[s][p * c.hidden..(p + 1) * c.hidden]
+                        .copy_from_slice(
+                            &run.y[row * c.hidden..(row + 1) * c.hidden],
+                        );
+                }
+                observe(l, &run.plan);
+            }
+        }
+
+        // Commit: every cache now covers its full sequence.
+        for cs in seqs.iter_mut() {
+            cs.cache.len = cs.ids.len();
+        }
+
+        // Greedy next token off each sequence's last (new) row — a
+        // single-row LM head, not the full [ctx, vocab] matmul.
+        let mut next = Vec::with_capacity(seqs.len());
+        for (s, cs) in seqs.iter().enumerate() {
+            let last = cs.ids.len() - 1;
+            let row = &xs[s][last * c.hidden..(last + 1) * c.hidden];
+            let logits = self.model.lmhead_row(row)?;
+            let mut best = 0usize;
+            for (i, &v) in logits.iter().enumerate() {
+                if v > logits[best] {
+                    best = i;
+                }
+            }
+            next.push(best as i32);
+        }
+        Ok(next)
+    }
 }
 
 /// One rank's FFN shard: execute every routed copy in `bucket` and
@@ -848,6 +1108,116 @@ mod tests {
             batched_rounds < per_seq_rounds,
             "batched {batched_rounds} !< per-seq {per_seq_rounds}"
         );
+    }
+
+    #[test]
+    fn cached_decode_matches_recompute_token_for_token() {
+        // The headline KV-cache invariant on real numerics: greedy
+        // decode through decode_step_cached (prefill + one token per
+        // step) produces exactly the tokens of the full-recompute
+        // decode_step chain.
+        let Some(m) = model() else { return };
+        let topo = Topology::two_by_two();
+        let trace = profile_real(&m, 1, 31).unwrap();
+        let placement = Arc::new(place_real(
+            &m, &topo, &trace, ReplicationMode::Dynamic, 0.15, 31,
+        ));
+        let coord =
+            OnlineCoordinator::new(topo.clone(), RoutingPolicy::Tar);
+        let prompt: Vec<i32> =
+            (0..7).map(|i| (i * 41 % 512) as i32).collect();
+        let n_new = 4;
+
+        // Recompute oracle.
+        let mut dist = DistributedMoE::new(
+            m.clone(), placement.clone(), &coord, FfnMode::PerExpert,
+        );
+        let mut ids_r = prompt.clone();
+        for _ in 0..n_new {
+            let next = dist
+                .decode_step(&[&ids_r], &mut Rng::new(3), &mut |_, _| {})
+                .unwrap();
+            ids_r.push(next[0]);
+        }
+
+        // Cached path: prefill populates the cache, then one new token
+        // per step.
+        let mut dist = DistributedMoE::new(
+            m.clone(), placement.clone(), &coord, FfnMode::PerExpert,
+        );
+        let mut cache = KvCache::new(&m.cfg);
+        let mut ids_c = prompt.clone();
+        for step in 0..n_new {
+            let next = {
+                let mut seqs =
+                    [CachedSeq { ids: &ids_c, cache: &mut cache }];
+                dist.decode_step_cached(&mut seqs, &mut Rng::new(3),
+                                        &mut |_, _| {})
+                    .unwrap()
+            };
+            assert_eq!(cache.len(), ids_c.len(),
+                       "step {step}: cache must cover the sequence");
+            ids_c.push(next[0]);
+        }
+        assert_eq!(ids_r, ids_c,
+                   "cached decode diverged from full recompute");
+    }
+
+    #[test]
+    fn cached_decode_issues_fewer_rounds_per_token() {
+        // Steady-state decode over a batch: the cached step packs one
+        // row per live sequence into shared tiles (⌈live/tile_t⌉ rounds
+        // per layer), strictly fewer than recompute's ⌈Σ len/tile_t⌉
+        // once prefixes outgrow the batch.
+        let Some(m) = model() else { return };
+        let c = m.cfg.clone();
+        let topo = Topology::two_by_two();
+        let trace = profile_real(&m, 1, 37).unwrap();
+        let placement = Arc::new(place_real(
+            &m, &topo, &trace, ReplicationMode::Dynamic, 0.15, 37,
+        ));
+        let coord =
+            OnlineCoordinator::new(topo.clone(), RoutingPolicy::Tar);
+        let len = c.tile_t; // long enough that Σ len spans many tiles
+        let seqs: Vec<Vec<i32>> = (0..3)
+            .map(|s| {
+                (0..len).map(|i| ((s * 19 + i * 5) % 512) as i32).collect()
+            })
+            .collect();
+
+        let mut dist = DistributedMoE::new(
+            m.clone(), placement.clone(), &coord, FfnMode::PerExpert,
+        );
+        let mut caches: Vec<KvCache> =
+            (0..3).map(|_| KvCache::new(&m.cfg)).collect();
+        // Prefill step (caches empty) then one pure-decode step.
+        let mut rounds = [0usize; 2];
+        let mut ids = seqs.clone();
+        for (step, slot) in rounds.iter_mut().enumerate() {
+            let next = {
+                let mut batch: Vec<CachedSeq> = ids
+                    .iter()
+                    .zip(caches.iter_mut())
+                    .map(|(ids, cache)| CachedSeq { ids, cache })
+                    .collect();
+                dist.decode_step_cached(&mut batch, &mut Rng::new(7),
+                                        &mut |_, _| *slot += 1)
+                    .unwrap()
+            };
+            for (s, t) in next.into_iter().enumerate() {
+                ids[s].push(t);
+            }
+            let _ = step;
+        }
+        // Prefill packs Σ prompt len; the decode step packs 3 rows.
+        assert_eq!(rounds[0],
+                   c.layers * (3 * len).div_ceil(c.tile_t));
+        assert_eq!(rounds[1], c.layers, // ⌈3 / tile_t⌉ == 1 tile
+                   "a cached decode step must cost one tile of rounds");
+        let recompute_rounds =
+            c.layers * (3 * (len + 1)).div_ceil(c.tile_t);
+        assert!(rounds[1] < recompute_rounds,
+                "cached {} !< recompute {recompute_rounds}", rounds[1]);
     }
 
     #[test]

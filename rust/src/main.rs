@@ -59,6 +59,8 @@ SERVE OPTIONS (tiny AOT model; run `make artifacts` first):
   --policy <primary|wrr|tar|load-aware>
   --sched <continuous|static>       batching discipline (default
                                     continuous; static = drain barrier)
+  --kv-cache <on|off>               per-sequence KV caches (default on;
+                                    off = full-recompute parity oracle)
   --max-batch <n>                   live-sequence cap (default 8)
   --max-batch-tokens <n>            step token budget (default 256)
   --arrival-rate <req/s>            open-loop Poisson arrivals
@@ -227,6 +229,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "static" => grace_moe::server::SchedMode::StaticDrain,
         other => anyhow::bail!("unknown scheduler '{other}'"),
     };
+    let kv_cache = match args.str_or("kv-cache", "on") {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("unknown --kv-cache '{other}' \
+                                (expected on|off)"),
+    };
     let load = grace_moe::config::ServeLoad {
         requests: n_requests,
         prompt: prompt_len,
@@ -268,6 +276,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             max_batch: args.usize_or("max-batch", 8)?,
             max_batch_tokens: args.usize_or("max-batch-tokens", 256)?,
             sched,
+            kv_cache,
             queue_cap: 64,
             seed,
             ffn_mode: if args.str_or("ffn", "per-expert") == "pallas" {
@@ -288,8 +297,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             max_new_tokens: new_tokens,
         })
         .collect();
-    eprintln!("serving {} (policy={}, sched={:?})…", load.label(),
-              policy.name(), sched);
+    eprintln!("serving {} (policy={}, sched={:?}, kv-cache={})…",
+              load.label(), policy.name(), sched,
+              if kv_cache { "on" } else { "off" });
     let (responses, metrics) = match load.arrival {
         grace_moe::config::ArrivalProcess::Closed => {
             server.serve(requests)?
@@ -349,6 +359,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         metrics.steps,
         metrics.dispatch_rounds,
         metrics.rounds_per_token()
+    );
+    println!(
+        "kv cache  {} computed, {} cached ({:.0}% hit rate)",
+        metrics.computed_tokens,
+        metrics.cached_tokens,
+        metrics.cache_hit_rate() * 100.0
     );
     Ok(())
 }

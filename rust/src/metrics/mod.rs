@@ -120,6 +120,13 @@ pub struct ServeMetrics {
     pub steps: usize,
     /// Dispatch rounds issued across all steps and layers.
     pub dispatch_rounds: usize,
+    /// Tokens actually computed across all steps: uncached suffixes
+    /// under KV-cached decode (prompt at prefill, one per sequence per
+    /// step after), full prefixes under recompute.
+    pub computed_tokens: usize,
+    /// Prefix tokens served from the per-sequence KV cache instead of
+    /// being recomputed (0 with the cache off).
+    pub cached_tokens: usize,
 }
 
 impl ServeMetrics {
@@ -168,6 +175,18 @@ impl ServeMetrics {
             0.0
         } else {
             self.dispatch_rounds as f64 / self.generated_tokens as f64
+        }
+    }
+
+    /// Fraction of step-fed prefix tokens served from the KV cache:
+    /// `cached / (cached + computed)`. 0 with the cache off (or before
+    /// any step); approaches 1 as prefixes outgrow the per-step work.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let total = self.cached_tokens + self.computed_tokens;
+        if total == 0 {
+            0.0
+        } else {
+            self.cached_tokens as f64 / total as f64
         }
     }
 }
@@ -246,5 +265,16 @@ mod tests {
         assert!(empty.tpot_summary().is_none());
         assert!(empty.queue_wait_summary().is_none());
         assert_eq!(empty.rounds_per_token(), 0.0);
+    }
+
+    #[test]
+    fn cache_hit_rate_splits_cached_from_computed() {
+        let s = ServeMetrics {
+            computed_tokens: 25,
+            cached_tokens: 75,
+            ..Default::default()
+        };
+        assert_eq!(s.cache_hit_rate(), 0.75);
+        assert_eq!(ServeMetrics::default().cache_hit_rate(), 0.0);
     }
 }

@@ -5,11 +5,16 @@
 //! backpressure ([`crate::exec::BoundedQueue`]), the continuous-batching
 //! scheduler of [`sched`] (per-request state machine, token-budgeted
 //! microbatches, admission and retirement at every step), and one
-//! batched multi-sequence forward per step
-//! ([`DistributedMoE::decode_step`]) whose MoE layers pack the whole
-//! live batch into shared dispatch tiles. Every token's MoE layers flow
-//! through the same placement/routing machinery the paper describes;
-//! python is never touched.
+//! batched multi-sequence forward per step whose MoE layers pack the
+//! live batch into shared dispatch tiles. By default
+//! ([`ServerConfig::kv_cache`]) that forward is the KV-cached
+//! [`DistributedMoE::decode_step_cached`] — one *new* token per live
+//! sequence, per-sequence caches owned here (allocated at admission,
+//! dropped at retirement) — with the full-recompute
+//! [`DistributedMoE::decode_step`] kept behind `--kv-cache off` as the
+//! parity oracle. Every token's MoE layers flow through the same
+//! placement/routing machinery the paper describes; python is never
+//! touched.
 //!
 //! Two arrival modes: [`MoEServer::serve`] is closed-loop (every request
 //! enqueued up front — the benchmark workloads), and
@@ -32,7 +37,8 @@ pub mod sched;
 
 use crate::cluster::{GpuId, Topology};
 use crate::coordinator::OnlineCoordinator;
-use crate::engine::real::{DistributedMoE, FfnMode, RealModel};
+use crate::engine::real::{CachedSeq, DistributedMoE, FfnMode, KvCache,
+                          RealModel};
 use crate::exec::BoundedQueue;
 use crate::metrics::ServeMetrics;
 use crate::placement::Placement;
@@ -71,8 +77,10 @@ pub struct Response {
 pub struct ServerConfig {
     /// Maximum live sequences in the batch.
     pub max_batch: usize,
-    /// Step token budget of the continuous scheduler: the sum of live
-    /// sequence lengths one batched forward may recompute.
+    /// Step token budget of the continuous scheduler: the tokens one
+    /// batched forward may *compute*. With the KV cache on that is each
+    /// sequence's uncached suffix (prompt at prefill, one per step
+    /// after); with it off, the sum of full sequence lengths.
     pub max_batch_tokens: usize,
     /// Batching discipline ([`SchedMode::Continuous`] is the serving
     /// core; [`SchedMode::StaticDrain`] reproduces the old drain-barrier
@@ -89,6 +97,11 @@ pub struct ServerConfig {
     /// Epoch re-planning cadence/gates; `None` (the default) serves the
     /// offline placement statically.
     pub replan: Option<ReplanConfig>,
+    /// Decode through per-sequence KV caches (`true`, the default): one
+    /// new token per live sequence per step. `false` runs the
+    /// full-recompute forward — kept as the parity oracle behind
+    /// `--kv-cache off`; greedy outputs are identical either way.
+    pub kv_cache: bool,
 }
 
 impl Default for ServerConfig {
@@ -101,6 +114,7 @@ impl Default for ServerConfig {
             seed: 7,
             ffn_mode: FfnMode::PerExpert,
             replan: None,
+            kv_cache: true,
         }
     }
 }
@@ -257,6 +271,7 @@ impl MoEServer {
             max_batch: self.cfg.max_batch,
             max_batch_tokens: self.cfg.max_batch_tokens,
             ctx: self.model.cfg.ctx,
+            kv_cache: self.cfg.kv_cache,
         })?;
         let mut rng = Rng::new(self.cfg.seed);
         let mut dist = DistributedMoE::new(
@@ -265,6 +280,11 @@ impl MoEServer {
             &self.coord,
             self.cfg.ffn_mode,
         );
+        // Per-live-sequence KV caches, keyed by request id: allocated at
+        // admission, pulled out for each step the sequence runs in, and
+        // dropped the moment the scheduler retires the request.
+        let mut caches: std::collections::HashMap<u64, KvCache> =
+            std::collections::HashMap::new();
 
         loop {
             // --- Admission at the step boundary (non-blocking). ---
@@ -294,10 +314,64 @@ impl MoEServer {
                 anyhow::bail!("scheduler stalled with a pending request");
             }
 
+            // Allocate a cache for every newly admitted sequence.
+            if self.cfg.kv_cache {
+                for s in sched.live() {
+                    caches
+                        .entry(s.req.id)
+                        .or_insert_with(|| KvCache::new(&self.model.cfg));
+                }
+            }
+
             // --- One batched decode step over the microbatch. ---
             let batch = sched.microbatch();
             let mut rounds = 0usize;
-            let next = {
+            let next = if self.cfg.kv_cache {
+                // Pull the microbatch's caches out of the map so the
+                // engine can borrow them mutably next to the scheduler
+                // state; reinsert on success. On a step error the
+                // pulled caches are dropped — they may be mid-update —
+                // and the error propagates.
+                let mut step_caches: Vec<KvCache> = batch
+                    .iter()
+                    .map(|&i| {
+                        caches
+                            .remove(&sched.live()[i].req.id)
+                            .expect("cache allocated at admission")
+                    })
+                    .collect();
+                let next = {
+                    let mut seqs: Vec<CachedSeq> = batch
+                        .iter()
+                        .zip(step_caches.iter_mut())
+                        .map(|(&i, cache)| CachedSeq {
+                            ids: sched.live()[i].ids.as_slice(),
+                            cache,
+                        })
+                        .collect();
+                    dist.decode_step_cached(
+                        &mut seqs,
+                        &mut rng,
+                        &mut |layer, plan| {
+                            rounds += 1;
+                            self.coord.observe(
+                                layer,
+                                &self.placement.layers[layer],
+                                plan,
+                            );
+                        },
+                    )?
+                };
+                for (&i, cache) in batch.iter().zip(step_caches) {
+                    let s = &sched.live()[i];
+                    // Engine-side cache and scheduler-side pricing must
+                    // stay in lockstep: the cache now covers exactly
+                    // the tokens the step was fed.
+                    debug_assert_eq!(cache.len(), s.ids.len());
+                    caches.insert(s.req.id, cache);
+                }
+                next
+            } else {
                 let seqs: Vec<&[i32]> = batch
                     .iter()
                     .map(|&i| sched.live()[i].ids.as_slice())
@@ -311,8 +385,13 @@ impl MoEServer {
                     );
                 })?
             };
-            sched.complete_step(&batch, &next,
-                                secs(Instant::now()), rounds)?;
+            for id in sched.complete_step(&batch, &next,
+                                          secs(Instant::now()), rounds)?
+            {
+                // Retirement drops the sequence's cache immediately —
+                // no cache outlives its request.
+                caches.remove(&id);
+            }
 
             // --- Step boundary: the only safe place to re-plan. ---
             let delta = self.coord.epoch_tick(&self.placement);
@@ -324,6 +403,8 @@ impl MoEServer {
             }
         }
 
+        debug_assert!(caches.is_empty(),
+                      "KV caches must not outlive their requests");
         Ok(sched.into_results(wall0.elapsed().as_secs_f64()))
     }
 }

@@ -20,8 +20,11 @@
 //!   [`Scheduler::admit_pending`]) and the scheduler accepts them FIFO
 //!   while the live batch stays under `max_batch` sequences and — in
 //!   [`SchedMode::Continuous`] — under the `max_batch_tokens` step
-//!   budget (a sequence costs its full current length per step: the
-//!   forward recomputes the whole prefix, there is no KV cache yet).
+//!   budget. With the KV cache on (`kv_cache`, the default), a step
+//!   only computes each sequence's **uncached** tokens, so prefill
+//!   costs the prompt length and every later step costs exactly one
+//!   token per sequence; with it off, every step recomputes the whole
+//!   prefix and a sequence costs its full current length.
 //! * **Microbatching**: every step advances a token-budgeted FIFO prefix
 //!   of the live batch ([`Scheduler::microbatch`]); sequences over
 //!   budget wait a step instead of stalling the batch, and at least one
@@ -84,11 +87,17 @@ pub struct SchedConfig {
     pub mode: SchedMode,
     /// Maximum live sequences.
     pub max_batch: usize,
-    /// Step token budget (continuous mode): the sum of live sequence
-    /// lengths a step may recompute.
+    /// Step token budget (continuous mode): the number of tokens a step
+    /// may *compute*. Under KV-cached pricing that is each sequence's
+    /// uncached suffix (prompt length at prefill, one token thereafter);
+    /// under recompute pricing it is the full current length.
     pub max_batch_tokens: usize,
     /// Model context length (admission bound and finish condition).
     pub ctx: usize,
+    /// Price steps for KV-cached decode (1 token per live sequence after
+    /// prefill) instead of full-prefix recompute. Must match the engine
+    /// path the driver runs, or the budget meters the wrong cost.
+    pub kv_cache: bool,
 }
 
 /// One live (or finished) sequence and its timing record. Times are
@@ -114,6 +123,11 @@ pub struct SeqState {
     pub last_token: f64,
     /// Completion time of the whole request.
     pub finish: f64,
+    /// Tokens of `ids` whose K/V rows the engine has cached (0 until the
+    /// sequence's first step; stays 0 under recompute pricing). Mirrors
+    /// the engine-side `KvCache::len` — the server debug-asserts the two
+    /// agree every step.
+    pub cached_len: usize,
 }
 
 impl SeqState {
@@ -140,6 +154,12 @@ pub struct Scheduler {
     done: Vec<SeqState>,
     steps: usize,
     dispatch_rounds: usize,
+    /// Tokens actually computed across all steps (uncached suffixes
+    /// under KV pricing; full prefixes under recompute).
+    computed_tokens: usize,
+    /// Prefix tokens served from the KV cache instead of recomputed
+    /// (always 0 under recompute pricing).
+    cached_tokens: usize,
     /// Static-drain admission window: open from the first admission
     /// into an empty batch until the next step executes.
     drain_open: bool,
@@ -162,6 +182,8 @@ impl Scheduler {
             done: Vec::new(),
             steps: 0,
             dispatch_rounds: 0,
+            computed_tokens: 0,
+            cached_tokens: 0,
             drain_open: false,
         })
     }
@@ -202,9 +224,20 @@ impl Scheduler {
         self.live.is_empty() && self.pending.is_none()
     }
 
-    /// Tokens the next full-batch step would recompute.
+    /// What one step of `s` costs against the token budget: the uncached
+    /// suffix under KV pricing, the full prefix under recompute.
+    fn seq_cost(&self, s: &SeqState) -> usize {
+        if self.cfg.kv_cache {
+            s.ids.len() - s.cached_len
+        } else {
+            s.ids.len()
+        }
+    }
+
+    /// Tokens the next full-batch step would compute (budget-priced per
+    /// the `seq_cost` rule above).
     pub fn live_tokens(&self) -> usize {
-        self.live.iter().map(|s| s.ids.len()).sum()
+        self.live.iter().map(|s| self.seq_cost(s)).sum()
     }
 
     /// Whether the driver should pull another request off the queue:
@@ -263,6 +296,17 @@ impl Scheduler {
         anyhow::ensure!(req.prompt.len() <= self.cfg.ctx,
                         "request {}: prompt {} exceeds ctx {}",
                         req.id, req.prompt.len(), self.cfg.ctx);
+        // A prompt that already fills the context has no room to append
+        // even one generated token. Admitting it used to complete the
+        // request silently with zero tokens — reject loudly instead so
+        // callers learn their generation budget is unservable.
+        anyhow::ensure!(
+            req.max_new_tokens == 0 || req.prompt.len() < self.cfg.ctx,
+            "request {}: prompt fills the whole context ({} == ctx), \
+             leaving no room for any of the {} requested tokens — \
+             shorten the prompt or raise ctx",
+            req.id, req.prompt.len(), req.max_new_tokens
+        );
         let ids = req.prompt.clone();
         let mut seq = SeqState {
             req,
@@ -274,10 +318,11 @@ impl Scheduler {
             first_token: None,
             last_token: now,
             finish: now,
+            cached_len: 0,
         };
         if !seq.wants_tokens(self.cfg.ctx) {
-            // Zero-token request (max_new_tokens = 0 or a ctx-long
-            // prompt): completes at admission, generating nothing.
+            // Zero-token request (max_new_tokens = 0): completes at
+            // admission, generating nothing.
             seq.phase = SeqPhase::Done;
             seq.finish = now;
             self.done.push(seq);
@@ -298,7 +343,7 @@ impl Scheduler {
         let mut batch = Vec::with_capacity(self.live.len());
         let mut tokens = 0usize;
         for (i, s) in self.live.iter().enumerate() {
-            let cost = s.ids.len();
+            let cost = self.seq_cost(s);
             if self.cfg.mode == SchedMode::Continuous
                 && !batch.is_empty()
                 && tokens + cost > self.cfg.max_batch_tokens
@@ -311,17 +356,19 @@ impl Scheduler {
         batch
     }
 
-    /// Tokens the given microbatch recomputes.
+    /// Tokens the given microbatch computes (budget-priced per the
+    /// `seq_cost` rule above).
     pub fn step_tokens(&self, batch: &[usize]) -> usize {
-        batch.iter().map(|&i| self.live[i].ids.len()).sum()
+        batch.iter().map(|&i| self.seq_cost(&self.live[i])).sum()
     }
 
     /// Record one executed step: `next[j]` is the token generated for
-    /// live sequence `batch[j]`. Finished sequences retire immediately;
-    /// the remaining live batch keeps FIFO order.
+    /// live sequence `batch[j]`. Finished sequences retire immediately
+    /// (the remaining live batch keeps FIFO order); the retired request
+    /// ids are returned so the driver can evict their KV caches.
     pub fn complete_step(&mut self, batch: &[usize], next: &[i32],
                          now: f64, dispatch_rounds: usize)
-                         -> anyhow::Result<()> {
+                         -> anyhow::Result<Vec<u64>> {
         anyhow::ensure!(batch.len() == next.len(),
                         "step produced {} tokens for {} sequences",
                         next.len(), batch.len());
@@ -329,7 +376,15 @@ impl Scheduler {
         self.steps += 1;
         self.dispatch_rounds += dispatch_rounds;
         for (&i, &tok) in batch.iter().zip(next) {
+            let cost = self.seq_cost(&self.live[i]);
+            let full = self.live[i].ids.len();
+            self.computed_tokens += cost;
+            self.cached_tokens += full - cost;
             let s = &mut self.live[i];
+            if self.cfg.kv_cache {
+                // The engine's cache now covers every token it was fed.
+                s.cached_len = full;
+            }
             s.ids.push(tok);
             if s.first_token.is_none() {
                 s.first_token = Some((now, self.steps - 1));
@@ -338,6 +393,7 @@ impl Scheduler {
             s.last_token = now;
         }
         let ctx = self.cfg.ctx;
+        let mut retired = Vec::new();
         let mut i = 0;
         while i < self.live.len() {
             if self.live[i].wants_tokens(ctx) {
@@ -346,10 +402,11 @@ impl Scheduler {
                 let mut s = self.live.remove(i);
                 s.phase = SeqPhase::Done;
                 s.finish = now;
+                retired.push(s.req.id);
                 self.done.push(s);
             }
         }
-        Ok(())
+        Ok(retired)
     }
 
     /// Consume the scheduler into responses (sorted by request id) and
@@ -365,6 +422,8 @@ impl Scheduler {
             wall_time,
             steps: self.steps,
             dispatch_rounds: self.dispatch_rounds,
+            computed_tokens: self.computed_tokens,
+            cached_tokens: self.cached_tokens,
             ..ServeMetrics::default()
         };
         for s in done {
@@ -407,18 +466,39 @@ impl Scheduler {
 /// Virtual-clock serving driver for tests and benches: replays a
 /// (time-sorted) arrival schedule through the scheduler with the engine
 /// and the clock supplied by the caller. `step_fn` receives the
-/// microbatch as `(request id, token prefix)` pairs and returns the
-/// next token per sequence plus the dispatch rounds the step issued;
-/// `step_cost` maps `(step tokens, dispatch rounds)` to virtual
-/// seconds. The real server ([`super::MoEServer::serve`]) is the same
-/// loop on the wall clock and the PJRT engine.
+/// microbatch as `(request id, token prefix, cached prefix length)`
+/// triples — the cached length is 0 under recompute pricing, and tells
+/// a KV-aware fake engine how many leading tokens it may serve from its
+/// cache — and returns the next token per sequence plus the dispatch
+/// rounds the step issued; `step_cost` maps `(step tokens, dispatch
+/// rounds)` to virtual seconds. The real server
+/// ([`super::MoEServer::serve`]) is the same loop on the wall clock and
+/// the PJRT engine.
 pub fn simulate_serve<F, C>(cfg: SchedConfig,
-                            mut arrivals: Vec<(Request, f64)>,
-                            mut step_fn: F, mut step_cost: C)
+                            arrivals: Vec<(Request, f64)>,
+                            step_fn: F, step_cost: C)
                             -> anyhow::Result<(Vec<Response>, ServeMetrics)>
 where
-    F: FnMut(&[(u64, &[i32])]) -> anyhow::Result<(Vec<i32>, usize)>,
+    F: FnMut(&[(u64, &[i32], usize)]) -> anyhow::Result<(Vec<i32>, usize)>,
     C: FnMut(usize, usize) -> f64,
+{
+    simulate_serve_with(cfg, arrivals, step_fn, step_cost, |_| {})
+}
+
+/// [`simulate_serve`] plus a retirement hook: `retire_fn` is called with
+/// each request id the moment its sequence leaves the live batch —
+/// exactly when the real server drops the sequence's KV cache, so
+/// cache-eviction tests can mirror the lifecycle without PJRT.
+pub fn simulate_serve_with<F, C, R>(cfg: SchedConfig,
+                                    mut arrivals: Vec<(Request, f64)>,
+                                    mut step_fn: F, mut step_cost: C,
+                                    mut retire_fn: R)
+                                    -> anyhow::Result<(Vec<Response>,
+                                                       ServeMetrics)>
+where
+    F: FnMut(&[(u64, &[i32], usize)]) -> anyhow::Result<(Vec<i32>, usize)>,
+    C: FnMut(usize, usize) -> f64,
+    R: FnMut(u64),
 {
     arrivals.sort_by(|a, b| {
         a.1.partial_cmp(&b.1).expect("NaN arrival time")
@@ -456,17 +536,19 @@ where
         let batch = sched.microbatch();
         let tokens = sched.step_tokens(&batch);
         let (next, rounds) = {
-            let seqs: Vec<(u64, &[i32])> = batch
+            let seqs: Vec<(u64, &[i32], usize)> = batch
                 .iter()
                 .map(|&i| {
                     let s = &sched.live()[i];
-                    (s.req.id, s.ids.as_slice())
+                    (s.req.id, s.ids.as_slice(), s.cached_len)
                 })
                 .collect();
             step_fn(&seqs)?
         };
         now += step_cost(tokens, rounds);
-        sched.complete_step(&batch, &next, now, rounds)?;
+        for id in sched.complete_step(&batch, &next, now, rounds)? {
+            retire_fn(id);
+        }
     }
     Ok(sched.into_results(now))
 }
@@ -486,16 +568,23 @@ mod tests {
 
     fn cfg(mode: SchedMode, max_batch: usize, budget: usize)
            -> SchedConfig {
-        SchedConfig { mode, max_batch, max_batch_tokens: budget, ctx: 64 }
+        SchedConfig {
+            mode,
+            max_batch,
+            max_batch_tokens: budget,
+            ctx: 64,
+            kv_cache: false,
+        }
     }
 
     use crate::testutil::fake_decode_token as fake_next;
 
-    fn fake_step(seqs: &[(u64, &[i32])])
+    fn fake_step(seqs: &[(u64, &[i32], usize)])
                  -> anyhow::Result<(Vec<i32>, usize)> {
-        let tokens: usize = seqs.iter().map(|(_, ids)| ids.len()).sum();
+        let tokens: usize = seqs.iter().map(|(_, ids, _)| ids.len()).sum();
         let rounds = 2 * tokens.div_ceil(16); // 2 layers, tile 16
-        Ok((seqs.iter().map(|(_, ids)| fake_next(ids)).collect(), rounds))
+        Ok((seqs.iter().map(|(_, ids, _)| fake_next(ids)).collect(),
+            rounds))
     }
 
     #[test]
@@ -643,6 +732,126 @@ mod tests {
     }
 
     #[test]
+    fn ctx_filling_prompt_with_generation_budget_is_rejected() {
+        // Regression: a prompt at exactly ctx with max_new_tokens > 0
+        // used to be admitted and silently completed with zero tokens;
+        // it must now error loudly at admission.
+        let mut s =
+            Scheduler::new(cfg(SchedMode::Continuous, 4, 999)).unwrap();
+        s.offer(req(0, 64, 4), 0.0); // ctx is 64
+        let err = s.admit_pending(0.0).unwrap_err().to_string();
+        assert!(err.contains("no room"),
+                "want the no-room-to-generate error, got: {err}");
+        // The degenerate-but-honest case stays accepted: a ctx-long
+        // prompt that asks for nothing completes at admission.
+        let mut s =
+            Scheduler::new(cfg(SchedMode::Continuous, 4, 999)).unwrap();
+        s.offer(req(1, 64, 0), 0.0);
+        assert!(s.admit_pending(0.0).unwrap());
+        assert_eq!(s.done().len(), 1);
+    }
+
+    #[test]
+    fn kv_pricing_charges_prefill_then_one_token_per_step() {
+        let mut c = cfg(SchedMode::Continuous, 4, 64);
+        c.kv_cache = true;
+        let mut s = Scheduler::new(c).unwrap();
+        s.offer(req(0, 6, 3), 0.0);
+        assert!(s.admit_pending(0.0).unwrap());
+        // Prefill step: the whole prompt is uncached.
+        let batch = s.microbatch();
+        assert_eq!(s.step_tokens(&batch), 6);
+        assert_eq!(s.live_tokens(), 6);
+        let ids = s.live()[0].ids.clone();
+        s.complete_step(&batch, &[fake_next(&ids)], 1.0, 1).unwrap();
+        // Decode steps: exactly one uncached token per live sequence.
+        assert_eq!(s.live()[0].cached_len, 6);
+        let batch = s.microbatch();
+        assert_eq!(s.step_tokens(&batch), 1,
+                   "cached decode must cost 1 token");
+        assert_eq!(s.live_tokens(), 1);
+        let ids = s.live()[0].ids.clone();
+        s.complete_step(&batch, &[fake_next(&ids)], 2.0, 1).unwrap();
+        assert_eq!(s.live()[0].cached_len, 7);
+    }
+
+    #[test]
+    fn kv_budget_admits_deeper_batches_than_recompute() {
+        // Budget 10, prompts of 4 for 3 new tokens each. Recompute
+        // pricing fits two live sequences; KV pricing fits the same two
+        // at prefill but frees 3 tokens of budget the moment they decode
+        // (cost 1 each), so the third request is admitted mid-flight.
+        let run = |kv: bool| {
+            let mut c = cfg(SchedMode::Continuous, 8, 10);
+            c.kv_cache = kv;
+            let arrivals: Vec<(Request, f64)> =
+                (0..3).map(|id| (req(id, 4, 3), 0.0)).collect();
+            simulate_serve(c, arrivals, fake_step, |_, _| 1.0)
+                .unwrap()
+                .1
+        };
+        let kv = run(true);
+        let re = run(false);
+        assert_eq!(kv.generated_tokens, re.generated_tokens);
+        let wait = |m: &ServeMetrics| {
+            m.per_request.iter().find(|t| t.id == 2).unwrap().queue_wait
+        };
+        assert!(wait(&kv) < wait(&re),
+                "cached pricing must admit request 2 sooner: {} !< {}",
+                wait(&kv), wait(&re));
+    }
+
+    #[test]
+    fn kv_counters_split_computed_from_cached() {
+        // One request, prompt P = 5, N = 4 new tokens, loose budget.
+        // Computed = P + (N - 1) (prefill plus one per later step);
+        // cached = sum of the prefix lengths served from cache.
+        let mut c = cfg(SchedMode::Continuous, 4, 999);
+        c.kv_cache = true;
+        let (_, m) = simulate_serve(
+            c,
+            vec![(req(0, 5, 4), 0.0)],
+            fake_step,
+            |_, _| 1.0,
+        )
+        .unwrap();
+        assert_eq!(m.computed_tokens, 5 + 3);
+        // Steps feed prefixes of length 5, 6, 7, 8; all but the last
+        // token of each post-prefill step come from the cache.
+        assert_eq!(m.cached_tokens, 5 + 6 + 7);
+        assert!(m.cache_hit_rate() > 0.6);
+
+        // Recompute pricing: everything is computed, nothing cached.
+        let (_, m) = simulate_serve(
+            cfg(SchedMode::Continuous, 4, 999),
+            vec![(req(0, 5, 4), 0.0)],
+            fake_step,
+            |_, _| 1.0,
+        )
+        .unwrap();
+        assert_eq!(m.computed_tokens, 5 + 6 + 7 + 8);
+        assert_eq!(m.cached_tokens, 0);
+        assert_eq!(m.cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn retired_ids_are_reported_for_cache_eviction() {
+        let mut evicted: Vec<u64> = Vec::new();
+        let (responses, _) = simulate_serve_with(
+            cfg(SchedMode::Continuous, 4, 64),
+            (0..3).map(|id| (req(id, 4, 2), 0.0)).collect(),
+            fake_step,
+            |_, _| 1.0,
+            |id| evicted.push(id),
+        )
+        .unwrap();
+        assert_eq!(responses.len(), 3);
+        evicted.sort_unstable();
+        assert_eq!(evicted, vec![0, 1, 2],
+                   "every retired request must be reported exactly once");
+    }
+
+    #[test]
     fn sequences_truncate_at_ctx() {
         let mut c = cfg(SchedMode::Continuous, 2, 64);
         c.ctx = 6;
@@ -694,7 +903,7 @@ mod tests {
             arrivals,
             |seqs| {
                 step_sizes
-                    .push(seqs.iter().map(|(_, ids)| ids.len()).sum());
+                    .push(seqs.iter().map(|(_, ids, _)| ids.len()).sum());
                 fake_step(seqs)
             },
             |_, _| 1.0,

@@ -66,6 +66,86 @@ pub fn fake_decode_token(ids: &[i32]) -> i32 {
         .rem_euclid(97)) as i32
 }
 
+/// Deterministic KV-aware fake serving engine for the scheduler harness
+/// ([`crate::server::sched::simulate_serve`]): decoded tokens come from
+/// [`fake_decode_token`] — a pure function of the prefix — so outputs are
+/// identical with the cache on or off (the sim-level analogue of the
+/// real engine's cached/recompute parity), while the *cost* follows the
+/// real packing rule: per step, `layers × ⌈computed / tile_t⌉` dispatch
+/// rounds, where `computed` is the sum of uncached suffixes with the
+/// cache on and of full prefix lengths with it off. It also mirrors the
+/// per-request cache lifecycle (populate on step, evict on retirement)
+/// so eviction tests can assert no cache outlives its request. Shared by
+/// `tests/serving.rs` and `benches/kv_cache.rs`.
+pub struct FakeKvEngine {
+    layers: usize,
+    tile_t: usize,
+    kv: bool,
+    /// Live "caches": request id → cached prefix length.
+    caches: std::collections::HashMap<u64, usize>,
+    /// High-water mark of simultaneously live caches.
+    peak_caches: usize,
+}
+
+impl FakeKvEngine {
+    /// Engine with the given layer count and MoE tile size; `kv` picks
+    /// cached or full-recompute costing.
+    pub fn new(layers: usize, tile_t: usize, kv: bool) -> FakeKvEngine {
+        FakeKvEngine {
+            layers,
+            tile_t,
+            kv,
+            caches: std::collections::HashMap::new(),
+            peak_caches: 0,
+        }
+    }
+
+    /// One serving step over `(id, prefix, cached length)` microbatch
+    /// triples — the [`crate::server::sched::simulate_serve`] interface.
+    /// Errors if the scheduler's cached-length pricing ever disagrees
+    /// with the engine's own cache state (the lockstep the real server
+    /// debug-asserts).
+    pub fn step(&mut self, seqs: &[(u64, &[i32], usize)])
+                -> anyhow::Result<(Vec<i32>, usize)> {
+        let mut computed = 0usize;
+        for &(id, ids, cached) in seqs {
+            if self.kv {
+                let have = self.caches.get(&id).copied().unwrap_or(0);
+                anyhow::ensure!(
+                    have == cached,
+                    "request {id}: scheduler prices {cached} cached \
+                     tokens, engine cache holds {have}"
+                );
+                computed += ids.len() - cached;
+                self.caches.insert(id, ids.len());
+            } else {
+                computed += ids.len();
+            }
+        }
+        self.peak_caches = self.peak_caches.max(self.caches.len());
+        let rounds = self.layers * computed.div_ceil(self.tile_t);
+        Ok((seqs.iter().map(|&(_, ids, _)| fake_decode_token(ids))
+                .collect(),
+            rounds))
+    }
+
+    /// Evict a retired request's cache (wire to the harness's
+    /// retirement hook).
+    pub fn retire(&mut self, id: u64) {
+        self.caches.remove(&id);
+    }
+
+    /// Caches currently live.
+    pub fn live_caches(&self) -> usize {
+        self.caches.len()
+    }
+
+    /// Most caches ever simultaneously live.
+    pub fn peak_caches(&self) -> usize {
+        self.peak_caches
+    }
+}
+
 /// Generate a random partition sizing: `k` non-negative integers summing to
 /// `total` (common generator for load/size vectors).
 pub fn random_sizes(rng: &mut Rng, k: usize, total: usize) -> Vec<usize> {

@@ -194,6 +194,81 @@ fn continuous_batching_matches_static_drain_token_for_token() {
 }
 
 #[test]
+fn kv_cached_serving_matches_recompute_token_for_token() {
+    // The headline KV-cache invariant on the REAL compute path: serving
+    // with per-sequence KV caches (`kv_cache: true`, the default) must
+    // produce token-for-token identical responses to full-recompute
+    // decode (`--kv-cache off`, the parity oracle), while issuing
+    // strictly fewer MoE dispatch rounds and pricing cached prefixes
+    // into `ServeMetrics::cached_tokens`.
+    let Some(dir) = artifacts() else { return };
+    let topo = Topology::two_by_two();
+    let model = Arc::new(RealModel::load(&dir, "olmoe_tiny").unwrap());
+    let trace = profile_real(&model, 1, 5).unwrap();
+    let placement = Arc::new(place_real(
+        &model,
+        &topo,
+        &trace,
+        ReplicationMode::Dynamic,
+        0.15,
+        5,
+    ));
+    let mut rng = Rng::new(21);
+    let requests: Vec<Request> = (0..4)
+        .map(|i| Request {
+            id: i,
+            prompt: (0..6 + i as usize)
+                .map(|_| rng.index(model.cfg.vocab) as i32)
+                .collect(),
+            max_new_tokens: 4,
+        })
+        .collect();
+    let mut outputs = Vec::new();
+    let mut all_metrics = Vec::new();
+    for kv in [false, true] {
+        let mut server = MoEServer::new(
+            model.clone(),
+            placement.clone(),
+            topo.clone(),
+            RoutingPolicy::Tar,
+            ServerConfig {
+                max_batch: 4,
+                kv_cache: kv,
+                seed: 3,
+                ffn_mode: FfnMode::PerExpert,
+                ..ServerConfig::default()
+            },
+        );
+        let (responses, metrics) = server.serve(requests.clone()).unwrap();
+        outputs.push(
+            responses
+                .iter()
+                .map(|r| r.tokens.clone())
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(metrics.generated_tokens, 16);
+        all_metrics.push(metrics);
+    }
+    assert_eq!(outputs[0], outputs[1],
+               "KV-cached decode changed decoded tokens vs recompute");
+    let (re, kv) = (&all_metrics[0], &all_metrics[1]);
+    assert_eq!(re.cached_tokens, 0, "recompute must not hit a cache");
+    assert!(kv.cached_tokens > 0, "KV path never hit the cache");
+    assert!(
+        kv.computed_tokens < re.computed_tokens,
+        "KV decode must compute fewer tokens: {} vs {}",
+        kv.computed_tokens,
+        re.computed_tokens
+    );
+    assert!(
+        kv.dispatch_rounds < re.dispatch_rounds,
+        "KV decode must issue fewer dispatch rounds: {} vs {}",
+        kv.dispatch_rounds,
+        re.dispatch_rounds
+    );
+}
+
+#[test]
 fn dsv2_variant_also_serves() {
     // Second architecture (top-6): the whole stack is variant-generic.
     let Some(dir) = artifacts() else { return };

@@ -240,6 +240,7 @@ fn scheduler_step_boundary_replan_is_a_pure_observer_when_stationary() {
                 max_batch: 3,
                 max_batch_tokens: 64,
                 ctx: 16,
+                kv_cache: false,
             },
             arrivals,
             |seqs| {
@@ -273,7 +274,7 @@ fn scheduler_step_boundary_replan_is_a_pure_observer_when_stationary() {
                 }
                 let next: Vec<i32> = seqs
                     .iter()
-                    .map(|(id, ids)| *id as i32 + ids.len() as i32)
+                    .map(|(id, ids, _)| *id as i32 + ids.len() as i32)
                     .collect();
                 Ok((next, 1))
             },

@@ -17,26 +17,35 @@
 //!   virtual clock respects the schedule.
 
 use grace_moe::config::{ArrivalProcess, ServeLoad};
-use grace_moe::server::sched::{simulate_serve, SchedConfig, SchedMode};
+use grace_moe::server::sched::{simulate_serve, simulate_serve_with,
+                               SchedConfig, SchedMode};
 use grace_moe::server::Request;
 use grace_moe::stats::Rng;
 use grace_moe::testutil::fake_decode_token as fake_next;
+use grace_moe::testutil::FakeKvEngine;
 
 const CTX: usize = 64;
 const LAYERS: usize = 2;
 const TILE_T: usize = 16;
 
 fn cfg(mode: SchedMode, max_batch: usize, budget: usize) -> SchedConfig {
-    SchedConfig { mode, max_batch, max_batch_tokens: budget, ctx: CTX }
+    SchedConfig {
+        mode,
+        max_batch,
+        max_batch_tokens: budget,
+        ctx: CTX,
+        kv_cache: false,
+    }
 }
 
 /// Fake batched engine: per-step dispatch rounds follow the shared-tile
 /// packing rule of the real batched forward
 /// (`layers × ⌈step tokens / tile_t⌉`).
-fn fake_step(seqs: &[(u64, &[i32])]) -> anyhow::Result<(Vec<i32>, usize)> {
-    let tokens: usize = seqs.iter().map(|(_, ids)| ids.len()).sum();
+fn fake_step(seqs: &[(u64, &[i32], usize)])
+             -> anyhow::Result<(Vec<i32>, usize)> {
+    let tokens: usize = seqs.iter().map(|(_, ids, _)| ids.len()).sum();
     let rounds = LAYERS * tokens.div_ceil(TILE_T);
-    Ok((seqs.iter().map(|(_, ids)| fake_next(ids)).collect(), rounds))
+    Ok((seqs.iter().map(|(_, ids, _)| fake_next(ids)).collect(), rounds))
 }
 
 fn req(id: u64, prompt: usize, new_tokens: usize) -> Request {
@@ -173,7 +182,7 @@ fn batched_step_rounds_undercut_the_per_sequence_path() {
             batched += rounds;
             per_seq += seqs
                 .iter()
-                .map(|(_, ids)| LAYERS * ids.len().div_ceil(TILE_T))
+                .map(|(_, ids, _)| LAYERS * ids.len().div_ceil(TILE_T))
                 .sum::<usize>();
             Ok((next, rounds))
         },
@@ -186,6 +195,145 @@ fn batched_step_rounds_undercut_the_per_sequence_path() {
         "shared tiles must cut dispatch rounds: {batched} !< {per_seq}"
     );
     assert!(metrics.rounds_per_token() > 0.0);
+}
+
+#[test]
+fn kv_cached_decode_is_token_identical_across_modes_and_loads() {
+    // THE sim-level KV parity property: across Continuous/StaticDrain ×
+    // closed/Poisson loads, cached decode produces token-for-token the
+    // same responses as full recompute, while computing strictly fewer
+    // tokens and issuing strictly fewer dispatch rounds. The fake engine
+    // also errors if the scheduler's cached-length pricing ever drifts
+    // from the engine's cache state, so the lockstep is checked at every
+    // step of every run.
+    let arrivals = |poisson: bool| -> Vec<(Request, f64)> {
+        if poisson {
+            let load = ServeLoad {
+                requests: 16,
+                prompt: 6,
+                new_tokens: 5,
+                arrival: ArrivalProcess::Poisson { rate: 3.0 },
+            };
+            let mut rng = Rng::new(17);
+            let times = load.arrival_times(&mut rng);
+            (0..load.requests)
+                .map(|i| (req(i as u64, load.prompt, load.new_tokens),
+                          times[i]))
+                .collect()
+        } else {
+            (0..8)
+                .map(|id| (req(id, 4 + id as usize % 5, 5), 0.0))
+                .collect()
+        }
+    };
+    for mode in [SchedMode::Continuous, SchedMode::StaticDrain] {
+        for poisson in [false, true] {
+            let run = |kv: bool| {
+                let mut c = cfg(mode, 4, 256);
+                c.kv_cache = kv;
+                let eng = std::cell::RefCell::new(
+                    FakeKvEngine::new(LAYERS, TILE_T, kv));
+                simulate_serve_with(
+                    c,
+                    arrivals(poisson),
+                    |seqs| eng.borrow_mut().step(seqs),
+                    |_, _| 1.0,
+                    |id| eng.borrow_mut().retire(id),
+                )
+                .unwrap()
+            };
+            let (r_kv, m_kv) = run(true);
+            let (r_re, m_re) = run(false);
+            assert_eq!(r_kv.len(), r_re.len());
+            for (a, b) in r_kv.iter().zip(&r_re) {
+                assert_eq!(a.id, b.id);
+                assert_eq!(
+                    a.tokens, b.tokens,
+                    "request {} ({mode:?}, poisson={poisson}): KV cache \
+                     changed decoded tokens", a.id
+                );
+            }
+            assert_eq!(m_kv.generated_tokens, m_re.generated_tokens);
+            // The budget never binds here, so both runs walk the same
+            // schedule and the pricing identity is exact: every token
+            // recompute pays is either computed or a cache hit.
+            assert_eq!(m_kv.computed_tokens + m_kv.cached_tokens,
+                       m_re.computed_tokens);
+            assert_eq!(m_re.cached_tokens, 0);
+            assert!(
+                m_kv.computed_tokens < m_re.computed_tokens,
+                "({mode:?}, poisson={poisson}) cached {} !< recompute {}",
+                m_kv.computed_tokens, m_re.computed_tokens
+            );
+            assert!(
+                m_kv.dispatch_rounds < m_re.dispatch_rounds,
+                "({mode:?}, poisson={poisson}) cached decode must issue \
+                 fewer rounds: {} !< {}",
+                m_kv.dispatch_rounds, m_re.dispatch_rounds
+            );
+            assert!(m_kv.cache_hit_rate() > 0.0);
+        }
+    }
+}
+
+#[test]
+fn kv_parity_survives_a_binding_token_budget() {
+    // With a budget tight enough to change microbatch composition
+    // between the two pricings, per-request tokens still cannot differ
+    // (next-token is a pure function of the prefix).
+    for budget in [16usize, 24, 48] {
+        let run = |kv: bool| {
+            let mut c = cfg(SchedMode::Continuous, 8, budget);
+            c.kv_cache = kv;
+            let eng = std::cell::RefCell::new(
+                FakeKvEngine::new(LAYERS, TILE_T, kv));
+            simulate_serve_with(
+                c,
+                (0..6).map(|id| (req(id, 8, 6), 0.0)).collect(),
+                |seqs| eng.borrow_mut().step(seqs),
+                |_, _| 1.0,
+                |id| eng.borrow_mut().retire(id),
+            )
+            .unwrap()
+            .0
+        };
+        let r_kv = run(true);
+        let r_re = run(false);
+        for (a, b) in r_kv.iter().zip(&r_re) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens,
+                       "budget {budget}, request {}: tokens diverged",
+                       a.id);
+        }
+    }
+}
+
+#[test]
+fn kv_caches_are_evicted_at_retirement() {
+    // No cache growth over a long run: the number of live caches is
+    // bounded by the batch size and returns to zero when the workload
+    // drains.
+    let mut c = cfg(SchedMode::Continuous, 3, 64);
+    c.kv_cache = true;
+    let eng = std::cell::RefCell::new(
+        FakeKvEngine::new(LAYERS, TILE_T, true));
+    let arrivals: Vec<(Request, f64)> =
+        (0..24).map(|id| (req(id, 5, 4), 0.0)).collect();
+    let (responses, _) = simulate_serve_with(
+        c,
+        arrivals,
+        |seqs| eng.borrow_mut().step(seqs),
+        |_, _| 1.0,
+        |id| eng.borrow_mut().retire(id),
+    )
+    .unwrap();
+    assert_eq!(responses.len(), 24);
+    let eng = eng.into_inner();
+    assert_eq!(eng.live_caches(), 0,
+               "caches must all be evicted once the workload drains");
+    assert!(eng.peak_caches() <= 3,
+            "cache count exceeded the live batch bound: {}",
+            eng.peak_caches());
 }
 
 #[test]
