@@ -6,6 +6,9 @@
 #                     (writes rust/artifacts/; needed only for execute
 #                     mode — simulate mode and tier-1 tests run without it)
 #   make bench-smoke— compile every paper-figure bench without running it
+#   make bench-record — run the serving + cluster_sim benches with the
+#                     JSON emitter on, archiving BENCH_serving.json and
+#                     BENCH_cluster_sim.json in the repo root
 #   make lint       — rustfmt + clippy, as CI runs them
 #   make docs       — rustdoc with warnings-as-errors (missing_docs,
 #                     broken intra-doc links) + check that every public
@@ -16,7 +19,8 @@
 PYTHON       ?= python3
 ARTIFACTS    ?= rust/artifacts
 
-.PHONY: all build test artifacts bench-smoke lint docs pytest clean
+.PHONY: all build test artifacts bench-smoke bench-record lint docs \
+        pytest clean
 
 all: build
 
@@ -36,6 +40,14 @@ artifacts:
 
 bench-smoke:
 	cargo bench --no-run
+
+# Machine-readable bench archive: both serving-path benches run with the
+# JSON emitter enabled (see grace_moe::bench::JsonRecorder), writing
+# BENCH_<name>.json next to this Makefile. Each bench self-checks its
+# acceptance claim before recording, so a stale archive cannot pass.
+bench-record:
+	BENCH_JSON=$(CURDIR) cargo bench --bench serving
+	BENCH_JSON=$(CURDIR) cargo bench --bench cluster_sim
 
 lint:
 	cargo fmt --all --check

@@ -21,9 +21,14 @@
 //! `report_line` at the end times the scheduler machinery itself.
 //!
 //! Run: `cargo bench --bench serving`
+//! JSON archive: `cargo bench --bench serving -- --json`, or
+//! `BENCH_JSON=<dir>` (the `make bench-record` path) — writes
+//! `BENCH_serving.json` with both arms of every workload plus the
+//! self-check verdict.
 
-use grace_moe::bench::{bench, Table};
+use grace_moe::bench::{bench, JsonRecorder, Table};
 use grace_moe::config::{ArrivalProcess, ServeLoad};
+use grace_moe::configio::Value;
 use grace_moe::server::sched::{simulate_serve, SchedConfig, SchedMode};
 use grace_moe::server::Request;
 use grace_moe::stats::Rng;
@@ -120,6 +125,7 @@ fn main() {
         },
     ];
 
+    let mut rec = JsonRecorder::from_env("serving");
     let mut table = Table::new(&[
         "WORKLOAD",
         "SCHED",
@@ -154,6 +160,18 @@ fn main() {
                 format!("{:.1}", qw.p95() * 1e3),
                 format!("{:.0}", m.throughput_tps()),
             ]);
+            rec.record_value(
+                &format!("{}/{}", load.label(), name),
+                Value::object(vec![
+                    ("dispatch_rounds", Value::from(m.dispatch_rounds)),
+                    ("rounds_per_token",
+                     Value::num(m.rounds_per_token())),
+                    ("ttft_p99_ms", Value::num(ttft.p99() * 1e3)),
+                    ("tpot_p50_ms", Value::num(tpot.p50() * 1e3)),
+                    ("queue_wait_p95_ms", Value::num(qw.p95() * 1e3)),
+                    ("throughput_tps", Value::num(m.throughput_tps())),
+                ]),
+            );
             per_mode.push(m);
         }
         // The PR-5 acceptance bar, self-checked on every bench run:
@@ -168,6 +186,7 @@ fn main() {
             per_mode[0].rounds_per_token()
         );
     }
+    rec.record_value("self_check_rounds_per_token", Value::from(true));
     println!("{}", table.render());
 
     // Wall-clock of the scheduler machinery itself (admission, budget
@@ -176,4 +195,8 @@ fn main() {
     let r = bench("scheduler machinery (64 reqs, closed loop)", 2, 30,
                   || run_arm(&load, SchedMode::Continuous, 7));
     println!("{}", r.report_line());
+    rec.record(&r);
+    if let Some(path) = rec.finish().expect("write bench json") {
+        println!("wrote {}", path.display());
+    }
 }

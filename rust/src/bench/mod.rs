@@ -1,8 +1,12 @@
 //! Bench harness (criterion is unavailable offline): warmup + timed
 //! iterations + robust summary, plus a tiny table printer shared by the
-//! paper-figure benches under `benches/`.
+//! paper-figure benches under `benches/` and an opt-in JSON recorder
+//! ([`JsonRecorder`]) for machine-readable bench archives
+//! (`make bench-record`).
 
+use crate::configio::{self, Value};
 use crate::stats::Summary;
+use std::path::PathBuf;
 use std::time::Instant;
 
 /// Timing result of one benchmark case.
@@ -139,6 +143,83 @@ pub fn pct(frac: f64) -> String {
     format!("{}{:.2}%", if frac >= 0.0 { "+" } else { "" }, frac * 100.0)
 }
 
+/// Opt-in JSON emitter for bench results: enabled when the bench binary
+/// is invoked with `--json`, or when the `BENCH_JSON` environment
+/// variable names an output directory (the `make bench-record` path).
+/// Disabled, every call is a no-op, so bench output stays plain text by
+/// default. The document is a sorted-key JSON object, deterministic up
+/// to the timings themselves.
+#[derive(Debug)]
+pub struct JsonRecorder {
+    out: Option<PathBuf>,
+    fields: Vec<(String, Value)>,
+}
+
+impl JsonRecorder {
+    /// Recorder for bench `name`, gated on the process argv/environment.
+    /// Writes to `$BENCH_JSON/BENCH_<name>.json` (with `--json` alone,
+    /// `BENCH_<name>.json` in the current directory).
+    pub fn from_env(name: &str) -> JsonRecorder {
+        let flag = std::env::args().any(|a| a == "--json");
+        let dir = std::env::var("BENCH_JSON").ok()
+            .filter(|d| !d.is_empty());
+        Self::new(name, flag, dir)
+    }
+
+    /// Explicit-gate constructor (what [`JsonRecorder::from_env`]
+    /// resolves to; tests drive this directly).
+    pub fn new(name: &str, flag: bool, dir: Option<String>)
+               -> JsonRecorder {
+        let out = match (dir, flag) {
+            (Some(d), _) => Some(PathBuf::from(d)),
+            (None, true) => Some(PathBuf::from(".")),
+            (None, false) => None,
+        }
+        .map(|d| d.join(format!("BENCH_{name}.json")));
+        JsonRecorder { out, fields: Vec::new() }
+    }
+
+    /// `true` when [`JsonRecorder::finish`] will write a file.
+    pub fn enabled(&self) -> bool {
+        self.out.is_some()
+    }
+
+    /// Record one timed case under its bench name.
+    pub fn record(&mut self, r: &BenchResult) {
+        self.record_value(&r.name, Value::object(vec![
+            ("iters", Value::from(r.iters)),
+            ("mean_ms", Value::num(r.mean_ms())),
+            ("p50_ms", Value::num(r.p50_ms())),
+            ("p99_ms", Value::num(r.p99_ms())),
+        ]));
+    }
+
+    /// Record an arbitrary value under `key` (self-check evidence,
+    /// derived metrics, config echoes).
+    pub fn record_value(&mut self, key: &str, v: Value) {
+        if self.enabled() {
+            self.fields.push((key.to_string(), v));
+        }
+    }
+
+    /// Write the recorded document. Returns the path written, or `None`
+    /// when the recorder is disabled.
+    pub fn finish(&self) -> std::io::Result<Option<PathBuf>> {
+        let Some(path) = &self.out else {
+            return Ok(None);
+        };
+        let pairs: Vec<(&str, Value)> = self
+            .fields
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.clone()))
+            .collect();
+        let mut doc = configio::to_string_pretty(&Value::object(pairs));
+        doc.push('\n');
+        std::fs::write(path, doc)?;
+        Ok(Some(path.clone()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -184,5 +265,40 @@ mod tests {
     fn pct_formatting() {
         assert_eq!(pct(-0.3519), "-35.19%");
         assert_eq!(pct(1.0013), "+100.13%");
+    }
+
+    #[test]
+    fn disabled_recorder_is_a_no_op() {
+        let mut rec = JsonRecorder::new("off", false, None);
+        assert!(!rec.enabled());
+        rec.record_value("k", Value::num(1.0));
+        assert_eq!(rec.finish().unwrap(), None);
+    }
+
+    #[test]
+    fn enabled_recorder_writes_bench_json() {
+        let dir = std::env::temp_dir()
+            .join(format!("grace_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut rec = JsonRecorder::new(
+            "smoke", false, Some(dir.to_string_lossy().into_owned()));
+        assert!(rec.enabled());
+        let r = bench("case_a", 0, 3, || 1 + 1);
+        rec.record(&r);
+        rec.record_value("self_check", Value::from(true));
+        let path = rec.finish().unwrap().expect("path written");
+        assert_eq!(path.file_name().unwrap(), "BENCH_smoke.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let doc = configio::parse(&text).unwrap();
+        assert_eq!(doc.req("case_a").unwrap()
+                       .req_usize("iters").unwrap(), 3);
+        assert!(doc.req("self_check").is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn json_flag_defaults_to_current_dir() {
+        let rec = JsonRecorder::new("flagged", true, None);
+        assert!(rec.enabled());
     }
 }

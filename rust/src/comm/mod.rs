@@ -23,8 +23,15 @@
 //! ("tokens routed to multiple experts on the same destination are
 //! transmitted only once").
 
+//! [`sim`] is the contention-aware counterpart: the same traffic replayed
+//! through a discrete-event simulation of the cluster network (per-link
+//! FIFO queues, shared NICs, typed events on a binary-heap queue), with a
+//! [`CommBackend`] seam letting the engines pick either backend per run.
+
 pub mod model;
+pub mod sim;
 pub mod traffic;
 
 pub use model::{CommModel, CommReport};
+pub use sim::{CommBackend, CommBackendKind, NetworkSim};
 pub use traffic::{Dispatch, TrafficMatrix, TwoStageTraffic};

@@ -60,7 +60,9 @@ impl CommReport {
 
 /// Per-rank straggler slowdown factors for one synchronization scope.
 /// Returns the max over `ranks` of `1 + |N(0,1)| * jitter`.
-fn straggler_max(rng: &mut Rng, ranks: usize, jitter: f64) -> f64 {
+/// `pub(crate)` so the DES backend ([`crate::comm::sim`]) draws the
+/// *same* jitter stream in the same order as the analytic models.
+pub(crate) fn straggler_max(rng: &mut Rng, ranks: usize, jitter: f64) -> f64 {
     let mut worst = 1.0_f64;
     for _ in 0..ranks {
         worst = worst.max(1.0 + rng.gaussian().abs() * jitter);
@@ -75,7 +77,7 @@ fn straggler_max(rng: &mut Rng, ranks: usize, jitter: f64) -> f64 {
 /// Latency (α) is charged once per *active pair* — the collective
 /// aggregates all of a pair's tokens into one buffer exchange; per-token
 /// message floors would be off by the token count.
-fn stage_time(m: &TrafficMatrix, topo: &Topology) -> f64 {
+pub(crate) fn stage_time(m: &TrafficMatrix, topo: &Topology) -> f64 {
     let n = m.num_gpus();
     let mut worst = 0.0_f64;
     // Per-GPU link serialization + one latency floor per active pair.
@@ -118,8 +120,9 @@ fn stage_time(m: &TrafficMatrix, topo: &Topology) -> f64 {
 }
 
 /// Restrict a matrix to the (src, dst) pairs for which `keep` holds.
-fn filter_matrix(m: &TrafficMatrix, keep: impl Fn(usize, usize) -> bool)
-                 -> TrafficMatrix {
+pub(crate) fn filter_matrix(m: &TrafficMatrix,
+                            keep: impl Fn(usize, usize) -> bool)
+                            -> TrafficMatrix {
     let n = m.num_gpus();
     let mut out = TrafficMatrix::zeros(n);
     for s in 0..n {
@@ -157,7 +160,7 @@ pub fn flat_all_to_all(m: &TrafficMatrix, topo: &Topology,
 /// faster groups contend for the shared NIC and force slower ones to
 /// spin-wait; the paper observes this amplifies tail latency. We model the
 /// completion as `max_g t_g + κ·(max_g t_g − min_g t_g)` with κ = 0.5.
-const DECOUPLE_KAPPA: f64 = 0.5;
+pub(crate) const DECOUPLE_KAPPA: f64 = 0.5;
 
 /// Conventional staged hierarchical A2A: per-rail cross-node groups
 /// (physically partitioned, no global coordination), then per-node
@@ -255,7 +258,7 @@ pub fn hsc(ts: &TwoStageTraffic, topo: &Topology, overlap_budget: f64,
 }
 
 /// Pad every non-empty slot up to a multiple of `quantum` bytes.
-fn pad_matrix(m: &TrafficMatrix, quantum: f64) -> TrafficMatrix {
+pub(crate) fn pad_matrix(m: &TrafficMatrix, quantum: f64) -> TrafficMatrix {
     let n = m.num_gpus();
     let mut out = TrafficMatrix::zeros(n);
     for s in 0..n {

@@ -1,0 +1,932 @@
+//! Contention-aware discrete-event network simulator (DES).
+//!
+//! The analytic models of [`crate::comm::model`] price each collective in
+//! closed form and therefore cannot see *contention*: link queueing when
+//! rounds overlap in virtual time, NIC sharing across concurrent flows, or
+//! request ingest DMA colliding with dispatch traffic. This module replays
+//! the same [`TrafficMatrix`] transfers through an event-driven simulation
+//! of the cluster network:
+//!
+//! * The network is derived from [`Topology`]: one **egress port** and one
+//!   **ingress port** per GPU, plus one **NIC-out** and one **NIC-in**
+//!   resource per node that every cross-node flow of the node additionally
+//!   occupies (the shared-NIC squeeze of the analytic model, made
+//!   queue-accurate).
+//! * Each point-to-point transfer occupies *all* of its resources in
+//!   parallel and completes when the slowest leg finishes; every resource
+//!   is a FIFO queue with α latency + β service time per message
+//!   (`bytes/bw + lat`), advanced by the Lindley recursion
+//!   `begin = max(submit, busy_until)`.
+//! * Every leg emits typed [`EventKind::Arrive`]/[`EventKind::Depart`]
+//!   events onto a binary-heap event queue, drained in `(time, seq)`
+//!   order by [`NetworkSim::advance`] to maintain queue depths and a
+//!   deterministic FNV-1a event digest (the `des-smoke` CI gate).
+//!
+//! **Validation invariant** (pinned by `tests/cluster_sim.rs`): a single
+//! uncontended stage submitted to an idle network completes in exactly the
+//! analytic [`stage-time`](crate::comm::model) — each resource's queue
+//! serializes the same byte/latency terms the closed form sums — so the
+//! DES wrappers [`flat_all_to_all`]/[`staged_hierarchical`]/[`hsc`]
+//! reproduce the analytic `CommReport` times on uncontended traffic up to
+//! floating-point association. They draw straggler jitter from the shared
+//! [`Rng`] in *exactly* the analytic draw order, so the two backends stay
+//! comparable seed-for-seed.
+//!
+//! [`CommBackend`] is the seam the engine and the open-loop fleet driver
+//! ([`crate::engine::fleet`]) route rounds through: `Analytic` preserves
+//! the closed-form path bit-for-bit, `Des` replays every round (and
+//! request ingest) on the contended network at explicit virtual times.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+use super::model::{self, CommModel, CommReport};
+use super::traffic::{self, TrafficMatrix, TwoStageTraffic};
+use crate::cluster::{GpuId, Topology};
+use crate::metrics::ContentionReport;
+use crate::routing::DispatchPlan;
+use crate::stats::Rng;
+
+/// Queue-depth histogram resolution: depths ≥ this land in the overflow
+/// bucket, keeping memory flat over ~10⁶-request replays.
+const DEPTH_BUCKETS: usize = 64;
+
+/// Event type of one event-log entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// A transfer joined a link's FIFO queue.
+    Arrive,
+    /// A transfer's service on a link completed.
+    Depart,
+}
+
+/// One processed event, as retained by the optional event log
+/// ([`NetworkSim::enable_log`]) — the determinism tests compare two runs'
+/// logs entry-for-entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EventRecord {
+    /// Bit pattern of the event's virtual time (exact comparison).
+    pub time_bits: u64,
+    /// Global push sequence number (total order tiebreak).
+    pub seq: u64,
+    /// Arrive or depart.
+    pub kind: EventKind,
+    /// Link the event happened on (see [`NetworkSim`] link order).
+    pub link: u32,
+    /// Transfer the event belongs to.
+    pub transfer: u64,
+}
+
+/// Typed event on the simulator's binary-heap queue, min-ordered by
+/// `(time, seq)` via [`Reverse`].
+#[derive(Clone, Copy, Debug)]
+struct Event {
+    time: f64,
+    seq: u64,
+    kind: EventKind,
+    link: u32,
+    transfer: u64,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.cmp(other) == Ordering::Equal
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        self.time
+            .total_cmp(&other.time)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// Per-link occupancy accounting.
+#[derive(Clone, Debug, Default)]
+struct LinkStats {
+    /// Seconds the link spent serving transfers.
+    busy_s: f64,
+    /// Seconds transfers spent queued behind earlier transfers.
+    wait_s: f64,
+    /// Bytes served.
+    bytes: f64,
+}
+
+/// Event-driven model of the cluster network.
+///
+/// Link index space (`2·num_gpus + 2·nodes` FIFO resources):
+///
+/// | index | resource |
+/// |---|---|
+/// | `g` | egress port of GPU `g` |
+/// | `num_gpus + g` | ingress port of GPU `g` |
+/// | `2·num_gpus + m` | NIC-out of node `m` (cross-node flows only) |
+/// | `2·num_gpus + nodes + m` | NIC-in of node `m` (cross-node flows only) |
+#[derive(Clone, Debug)]
+pub struct NetworkSim {
+    nodes: usize,
+    gpus_per_node: usize,
+    num_gpus: usize,
+    intra_bw: f64,
+    inter_bw: f64,
+    intra_lat: f64,
+    inter_lat: f64,
+    /// Lindley state: when each link's queue drains.
+    busy_until: Vec<f64>,
+    stats: Vec<LinkStats>,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    next_transfer: u64,
+    /// Earliest submit time seen (utilization horizon start).
+    t0: f64,
+    /// Latest leg completion seen (utilization horizon end).
+    makespan: f64,
+    /// Current queue depth per link (in service + waiting).
+    depth: Vec<usize>,
+    depth_max: usize,
+    /// Arrival-sampled depth histogram; last bucket is overflow.
+    depth_hist: Vec<u64>,
+    digest: u64,
+    log: Option<Vec<EventRecord>>,
+    straggler_stall_s: f64,
+    events_processed: u64,
+}
+
+impl NetworkSim {
+    /// An idle network over `topo`'s ports and NICs.
+    pub fn new(topo: &Topology) -> NetworkSim {
+        let links = 2 * topo.num_gpus() + 2 * topo.nodes;
+        NetworkSim {
+            nodes: topo.nodes,
+            gpus_per_node: topo.gpus_per_node,
+            num_gpus: topo.num_gpus(),
+            intra_bw: topo.intra_bw,
+            inter_bw: topo.inter_bw,
+            intra_lat: topo.intra_lat,
+            inter_lat: topo.inter_lat,
+            busy_until: vec![0.0; links],
+            stats: vec![LinkStats::default(); links],
+            heap: BinaryHeap::new(),
+            seq: 0,
+            next_transfer: 0,
+            t0: f64::INFINITY,
+            makespan: f64::NEG_INFINITY,
+            depth: vec![0; links],
+            depth_max: 0,
+            depth_hist: vec![0; DEPTH_BUCKETS + 1],
+            digest: 0xcbf2_9ce4_8422_2325,
+            log: None,
+            straggler_stall_s: 0.0,
+            events_processed: 0,
+        }
+    }
+
+    /// Simulated FIFO resources.
+    pub fn num_links(&self) -> usize {
+        self.busy_until.len()
+    }
+
+    fn egress_link(&self, g: GpuId) -> usize {
+        g
+    }
+
+    fn ingress_link(&self, g: GpuId) -> usize {
+        self.num_gpus + g
+    }
+
+    fn nic_out_link(&self, node: usize) -> usize {
+        2 * self.num_gpus + node
+    }
+
+    fn nic_in_link(&self, node: usize) -> usize {
+        2 * self.num_gpus + self.nodes + node
+    }
+
+    fn node_of(&self, g: GpuId) -> usize {
+        g / self.gpus_per_node
+    }
+
+    /// Resource legs of one `(src, dst)` transfer: `(link, service_s)`.
+    /// Same α–β terms as the analytic `stage_time` — ports pay
+    /// `bytes/bw + lat` per message, NICs pay pure `bytes/bw`.
+    fn legs(&self, s: GpuId, d: GpuId, bytes: f64,
+            out: &mut [(usize, f64); 4]) -> usize {
+        if self.node_of(s) == self.node_of(d) {
+            let service = bytes / self.intra_bw + self.intra_lat;
+            out[0] = (self.egress_link(s), service);
+            out[1] = (self.ingress_link(d), service);
+            2
+        } else {
+            let service = bytes / self.inter_bw + self.inter_lat;
+            let nic = bytes / self.inter_bw;
+            out[0] = (self.egress_link(s), service);
+            out[1] = (self.ingress_link(d), service);
+            out[2] = (self.nic_out_link(self.node_of(s)), nic);
+            out[3] = (self.nic_in_link(self.node_of(d)), nic);
+            4
+        }
+    }
+
+    /// Occupy `legs` from `submit`, emit events, and return the
+    /// transfer's completion (max over legs).
+    fn commit_legs(&mut self, legs: &[(usize, f64)], bytes: f64,
+                   submit: f64) -> f64 {
+        let id = self.next_transfer;
+        self.next_transfer += 1;
+        let mut fin = submit;
+        for &(link, service) in legs {
+            let begin = self.busy_until[link].max(submit);
+            self.stats[link].wait_s += begin - submit;
+            self.stats[link].busy_s += service;
+            self.stats[link].bytes += bytes;
+            let end = begin + service;
+            self.busy_until[link] = end;
+            self.push_event(submit, EventKind::Arrive, link, id);
+            self.push_event(end, EventKind::Depart, link, id);
+            fin = fin.max(end);
+        }
+        self.t0 = self.t0.min(submit);
+        self.makespan = self.makespan.max(fin);
+        fin
+    }
+
+    /// Submit every active pair of `m` at `start` (all at once — the
+    /// collective hands the whole stage to the network) and return the
+    /// stage finish time. Committing: link occupancy, stats, and events
+    /// persist, so later stages queue behind this one.
+    ///
+    /// On an idle network this is exactly the analytic stage time: each
+    /// port's FIFO serializes the same `bytes/bw + lat` terms the closed
+    /// form sums, and the stage ends at the slowest resource.
+    pub fn replay_stage(&mut self, m: &TrafficMatrix, start: f64) -> f64 {
+        debug_assert_eq!(m.num_gpus(), self.num_gpus);
+        let n = m.num_gpus();
+        let mut legs = [(0usize, 0.0f64); 4];
+        let mut fin = start;
+        for s in 0..n {
+            for d in 0..n {
+                if s == d {
+                    continue; // same-GPU moves are free (no network leg)
+                }
+                if m.get(s, d) <= 0.0 && m.msg_count(s, d) == 0 {
+                    continue;
+                }
+                let bytes = m.get(s, d);
+                let k = self.legs(s, d, bytes, &mut legs);
+                let done = self.commit_legs(&legs[..k], bytes, start);
+                fin = fin.max(done);
+            }
+        }
+        fin
+    }
+
+    /// Hypothetical finish time of `m` submitted at `start` against the
+    /// *current* occupancy, without committing anything — how the staged
+    /// collective times each rail group in isolation while the combined
+    /// NIC occupancy is what actually lands on the network.
+    pub fn probe_stage(&self, m: &TrafficMatrix, start: f64) -> f64 {
+        debug_assert_eq!(m.num_gpus(), self.num_gpus);
+        let n = m.num_gpus();
+        let mut busy = self.busy_until.clone();
+        let mut legs = [(0usize, 0.0f64); 4];
+        let mut fin = start;
+        for s in 0..n {
+            for d in 0..n {
+                if s == d {
+                    continue;
+                }
+                if m.get(s, d) <= 0.0 && m.msg_count(s, d) == 0 {
+                    continue;
+                }
+                let k = self.legs(s, d, m.get(s, d), &mut legs);
+                for &(link, service) in &legs[..k] {
+                    let end = busy[link].max(start) + service;
+                    busy[link] = end;
+                    fin = fin.max(end);
+                }
+            }
+        }
+        fin
+    }
+
+    /// One request payload arriving from *outside* the cluster at `at`:
+    /// it DMAs through the destination node's NIC-in and the destination
+    /// GPU's ingress port, contending with whatever dispatch traffic is
+    /// in flight. Returns the delivery completion time.
+    pub fn ingest(&mut self, dst: GpuId, bytes: f64, at: f64) -> f64 {
+        let legs = [
+            (self.nic_in_link(self.node_of(dst)), bytes / self.inter_bw),
+            (self.ingress_link(dst), bytes / self.inter_bw + self.inter_lat),
+        ];
+        self.commit_legs(&legs, bytes, at)
+    }
+
+    /// Record straggler-synchronization seconds charged by a collective
+    /// wrapper (stalls happen on the compute side, not on a link).
+    fn note_stall(&mut self, seconds: f64) {
+        self.straggler_stall_s += seconds;
+    }
+
+    fn push_event(&mut self, time: f64, kind: EventKind, link: usize,
+                  transfer: u64) {
+        let ev = Event { time, seq: self.seq, kind, link: link as u32,
+                         transfer };
+        self.seq += 1;
+        self.heap.push(Reverse(ev));
+    }
+
+    /// Drain and process every queued event with `time ≤ upto` in
+    /// `(time, seq)` order: maintain per-link queue depths, sample the
+    /// depth histogram at arrivals, and fold each event into the FNV-1a
+    /// digest (and the retained log when enabled).
+    pub fn advance(&mut self, upto: f64) {
+        while let Some(&Reverse(ev)) = self.heap.peek() {
+            if ev.time > upto {
+                break;
+            }
+            self.heap.pop();
+            self.process(ev);
+        }
+    }
+
+    fn process(&mut self, ev: Event) {
+        self.events_processed += 1;
+        let l = ev.link as usize;
+        match ev.kind {
+            EventKind::Arrive => {
+                // A depart at the same instant has a larger seq (pushed
+                // after its own arrive), so depths never go negative.
+                self.depth[l] += 1;
+                let d = self.depth[l];
+                self.depth_max = self.depth_max.max(d);
+                self.depth_hist[d.min(DEPTH_BUCKETS)] += 1;
+            }
+            EventKind::Depart => {
+                self.depth[l] -= 1;
+            }
+        }
+        let kind_word = match ev.kind {
+            EventKind::Arrive => 0u64,
+            EventKind::Depart => 1u64,
+        };
+        self.fold(ev.time.to_bits());
+        self.fold(ev.seq);
+        self.fold(kind_word);
+        self.fold(u64::from(ev.link));
+        self.fold(ev.transfer);
+        if let Some(log) = &mut self.log {
+            log.push(EventRecord {
+                time_bits: ev.time.to_bits(),
+                seq: ev.seq,
+                kind: ev.kind,
+                link: ev.link,
+                transfer: ev.transfer,
+            });
+        }
+    }
+
+    /// FNV-1a fold of one 64-bit word.
+    fn fold(&mut self, x: u64) {
+        self.digest = (self.digest ^ x).wrapping_mul(0x100_0000_01b3);
+    }
+
+    /// Retain processed events for inspection (determinism tests).
+    pub fn enable_log(&mut self) {
+        self.log = Some(Vec::new());
+    }
+
+    /// Events processed so far, when logging is enabled.
+    pub fn log(&self) -> Option<&[EventRecord]> {
+        self.log.as_deref()
+    }
+
+    /// FNV-1a digest over all *processed* events — drain first
+    /// ([`NetworkSim::advance`] or [`NetworkSim::contention`]).
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// Bytes served by GPU `g`'s egress port.
+    pub fn egress_bytes(&self, g: GpuId) -> f64 {
+        self.stats[self.egress_link(g)].bytes
+    }
+
+    /// Bytes served by GPU `g`'s ingress port.
+    pub fn ingress_bytes(&self, g: GpuId) -> f64 {
+        self.stats[self.ingress_link(g)].bytes
+    }
+
+    /// Bytes served by node `node`'s NIC-out.
+    pub fn nic_out_bytes(&self, node: usize) -> f64 {
+        self.stats[self.nic_out_link(node)].bytes
+    }
+
+    /// Bytes served by node `node`'s NIC-in.
+    pub fn nic_in_bytes(&self, node: usize) -> f64 {
+        self.stats[self.nic_in_link(node)].bytes
+    }
+
+    fn depth_percentile(&self, q: f64) -> f64 {
+        let total: u64 = self.depth_hist.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = (q * total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (depth, &c) in self.depth_hist.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return depth as f64;
+            }
+        }
+        DEPTH_BUCKETS as f64
+    }
+
+    /// Drain all remaining events and summarize contention over the
+    /// whole replay (first submit → last departure).
+    pub fn contention(&mut self) -> ContentionReport {
+        self.advance(f64::INFINITY);
+        let horizon = if self.next_transfer == 0 {
+            0.0
+        } else {
+            (self.makespan - self.t0).max(0.0)
+        };
+        let per_link: Vec<f64> = self
+            .stats
+            .iter()
+            .map(|s| if horizon > 0.0 { s.busy_s / horizon } else { 0.0 })
+            .collect();
+        let max_utilization =
+            per_link.iter().cloned().fold(0.0, f64::max);
+        ContentionReport {
+            per_link_utilization: per_link,
+            max_utilization,
+            queue_depth_p50: self.depth_percentile(0.50),
+            queue_depth_p95: self.depth_percentile(0.95),
+            queue_depth_p99: self.depth_percentile(0.99),
+            queue_depth_max: self.depth_max,
+            queued_wait_s: self.stats.iter().map(|s| s.wait_s).sum(),
+            straggler_stall_s: self.straggler_stall_s,
+            transfers: self.next_transfer,
+            events: self.events_processed,
+            event_digest: self.digest,
+        }
+    }
+}
+
+// --- DES collective wrappers ------------------------------------------------
+//
+// Same structure, same report fields, and — critically — the same Rng
+// draw order as the analytic models, so the two backends see identical
+// jitter streams and differ only by queueing (zero when uncontended).
+
+/// DES flat All-to-All submitted at virtual time `at`.
+pub fn flat_all_to_all(net: &mut NetworkSim, m: &TrafficMatrix,
+                       topo: &Topology, at: f64, rng: &mut Rng)
+                       -> CommReport {
+    let start = at + topo.launch_overhead;
+    let t = net.replay_stage(m, start) - start;
+    let strag = model::straggler_max(rng, topo.num_gpus(), topo.jitter);
+    let sync = t * (strag - 1.0);
+    net.note_stall(sync);
+    CommReport {
+        time: topo.launch_overhead + t + sync,
+        cross_bytes: m.cross_node_bytes(topo),
+        intra_bytes: m.intra_node_bytes(topo),
+        launches: 1,
+        stage_times: vec![t],
+        sync_time: sync,
+    }
+}
+
+/// DES staged hierarchical A2A submitted at virtual time `at`.
+///
+/// Rail groups are timed in isolation via [`NetworkSim::probe_stage`]
+/// (independent progress), while the full cross matrix is what actually
+/// occupies the network — the committed replay *is* the analytic NIC
+/// floor, now queue-accurate under contention.
+pub fn staged_hierarchical(net: &mut NetworkSim, ts: &TwoStageTraffic,
+                           topo: &Topology, at: f64, rng: &mut Rng)
+                           -> CommReport {
+    let rails = topo.gpus_per_node;
+    let s1 = at + topo.launch_overhead * rails as f64;
+    let mut rail_times = Vec::with_capacity(rails);
+    for r in 0..rails {
+        let sub = model::filter_matrix(&ts.cross, |s, d| {
+            s % topo.gpus_per_node == r && d % topo.gpus_per_node == r
+        });
+        let t = net.probe_stage(&sub, s1) - s1;
+        let strag = model::straggler_max(rng, topo.nodes, topo.jitter);
+        rail_times.push(t * strag);
+    }
+    let t_max = rail_times.iter().cloned().fold(0.0, f64::max);
+    let t_min = rail_times.iter().cloned().fold(f64::INFINITY, f64::min);
+    let stall = if t_max > 0.0 {
+        model::DECOUPLE_KAPPA * (t_max - t_min.min(t_max))
+    } else {
+        0.0
+    };
+    let t_full = net.replay_stage(&ts.cross, s1) - s1;
+    let t1 = t_max.max(t_full) + stall;
+
+    let launches = rails + topo.nodes;
+    let s2 = at + topo.launch_overhead * launches as f64 + t1;
+    let t2 = net.replay_stage(&ts.intra, s2) - s2;
+    let strag2 = model::straggler_max(rng, topo.gpus_per_node, topo.jitter);
+    let sync2 = t2 * (strag2 - 1.0);
+    net.note_stall(stall + sync2);
+    CommReport {
+        time: topo.launch_overhead * launches as f64 + t1 + t2 + sync2,
+        cross_bytes: ts.cross.cross_node_bytes(topo),
+        intra_bytes: ts.intra.intra_node_bytes(topo)
+            + ts.cross.intra_node_bytes(topo),
+        launches,
+        stage_times: vec![t1, t2 + sync2],
+        sync_time: stall + sync2,
+    }
+}
+
+/// DES hierarchical sparse communication submitted at virtual time `at`.
+pub fn hsc(net: &mut NetworkSim, ts: &TwoStageTraffic, topo: &Topology,
+           overlap_budget: f64, at: f64, rng: &mut Rng) -> CommReport {
+    let padded = model::pad_matrix(&ts.cross, model::HSC_PAD_QUANTUM);
+    let s1 = at + topo.launch_overhead;
+    let t1_raw = net.replay_stage(&padded, s1) - s1;
+    let strag = model::straggler_max(rng, topo.num_gpus(), topo.jitter);
+    let sync1 = t1_raw * (strag - 1.0);
+    let t1 = (t1_raw + sync1).max(overlap_budget);
+
+    let s2 = s1 + t1 + topo.launch_overhead;
+    let t2 = net.replay_stage(&ts.intra, s2) - s2;
+    net.note_stall(sync1);
+    CommReport {
+        time: topo.launch_overhead * 2.0 + t1 + t2,
+        cross_bytes: padded.cross_node_bytes(topo),
+        intra_bytes: ts.intra.intra_node_bytes(topo)
+            + ts.cross.intra_node_bytes(topo),
+        launches: 2,
+        stage_times: vec![t1, t2],
+        sync_time: sync1,
+    }
+}
+
+// --- backend seam -----------------------------------------------------------
+
+/// Which communication backend prices a run's A2A rounds.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CommBackendKind {
+    /// Closed-form α–β models ([`crate::comm::model`]) — contention-blind,
+    /// bit-identical to the pre-seam engine.
+    #[default]
+    Analytic,
+    /// Discrete-event replay through the contended network.
+    Des,
+}
+
+impl CommBackendKind {
+    /// Parse a `--comm` CLI value.
+    pub fn from_name(name: &str) -> Option<CommBackendKind> {
+        match name {
+            "analytic" => Some(CommBackendKind::Analytic),
+            "des" => Some(CommBackendKind::Des),
+            _ => None,
+        }
+    }
+
+    /// CLI name of the backend.
+    pub fn name(self) -> &'static str {
+        match self {
+            CommBackendKind::Analytic => "analytic",
+            CommBackendKind::Des => "des",
+        }
+    }
+}
+
+enum Inner {
+    Analytic,
+    Des { net: NetworkSim, cursor: f64 },
+}
+
+/// The seam between the engines and the two communication backends.
+///
+/// `Analytic` delegates to [`crate::comm::model`] verbatim. `Des` replays
+/// rounds on a persistent [`NetworkSim`]: [`CommBackend::round`] submits
+/// at the internal cursor (back-to-back rounds — the serialized-engine
+/// case, uncontended by construction), [`CommBackend::round_at`] at an
+/// explicit virtual time (the fleet driver's clock, where ingest DMA and
+/// dispatch rounds genuinely overlap).
+pub struct CommBackend {
+    inner: Inner,
+}
+
+impl CommBackend {
+    /// Build a backend of `kind` over `topo`'s network.
+    pub fn new(kind: CommBackendKind, topo: &Topology) -> CommBackend {
+        let inner = match kind {
+            CommBackendKind::Analytic => Inner::Analytic,
+            CommBackendKind::Des => {
+                Inner::Des { net: NetworkSim::new(topo), cursor: 0.0 }
+            }
+        };
+        CommBackend { inner }
+    }
+
+    /// The backend's kind.
+    pub fn kind(&self) -> CommBackendKind {
+        match self.inner {
+            Inner::Analytic => CommBackendKind::Analytic,
+            Inner::Des { .. } => CommBackendKind::Des,
+        }
+    }
+
+    /// Current virtual-time cursor (0 for the analytic backend).
+    pub fn cursor(&self) -> f64 {
+        match &self.inner {
+            Inner::Analytic => 0.0,
+            Inner::Des { cursor, .. } => *cursor,
+        }
+    }
+
+    /// The underlying network, for DES backends (log control, byte
+    /// conservation accessors).
+    pub fn net_mut(&mut self) -> Option<&mut NetworkSim> {
+        match &mut self.inner {
+            Inner::Analytic => None,
+            Inner::Des { net, .. } => Some(net),
+        }
+    }
+
+    /// One A2A round under `comm`, consuming the routed batch's
+    /// [`DispatchPlan`], submitted at the internal cursor (which then
+    /// advances past the round).
+    pub fn round(&mut self, comm: CommModel, dedup_flat: bool,
+                 topo: &Topology, plan: &DispatchPlan, overlap: f64,
+                 rng: &mut Rng) -> CommReport {
+        let at = self.cursor();
+        self.round_at(comm, dedup_flat, topo, plan, overlap, at, rng)
+    }
+
+    /// One A2A round submitted at explicit virtual time `at`; the cursor
+    /// advances to at least `at + time`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn round_at(&mut self, comm: CommModel, dedup_flat: bool,
+                    topo: &Topology, plan: &DispatchPlan, overlap: f64,
+                    at: f64, rng: &mut Rng) -> CommReport {
+        match &mut self.inner {
+            Inner::Analytic => match comm {
+                CommModel::Flat => {
+                    let m = if dedup_flat {
+                        traffic::per_gpu_dedup_plan(plan)
+                    } else {
+                        traffic::per_copy_plan(plan)
+                    };
+                    model::flat_all_to_all(&m, topo, rng)
+                }
+                CommModel::StagedHierarchical => {
+                    let ts = traffic::two_stage_plan(plan, topo);
+                    model::staged_hierarchical(&ts, topo, rng)
+                }
+                CommModel::Hsc => {
+                    let ts = traffic::two_stage_plan(plan, topo);
+                    model::hsc(&ts, topo, overlap, rng)
+                }
+            },
+            Inner::Des { net, cursor } => {
+                let rep = match comm {
+                    CommModel::Flat => {
+                        let m = if dedup_flat {
+                            traffic::per_gpu_dedup_plan(plan)
+                        } else {
+                            traffic::per_copy_plan(plan)
+                        };
+                        flat_all_to_all(net, &m, topo, at, rng)
+                    }
+                    CommModel::StagedHierarchical => {
+                        let ts = traffic::two_stage_plan(plan, topo);
+                        staged_hierarchical(net, &ts, topo, at, rng)
+                    }
+                    CommModel::Hsc => {
+                        let ts = traffic::two_stage_plan(plan, topo);
+                        hsc(net, &ts, topo, overlap, at, rng)
+                    }
+                };
+                *cursor = cursor.max(at + rep.time);
+                rep
+            }
+        }
+    }
+
+    /// Price a raw traffic matrix through the flat collective at `at`
+    /// (expert-weight migration transfers).
+    pub fn flat_round_at(&mut self, m: &TrafficMatrix, topo: &Topology,
+                         at: f64, rng: &mut Rng) -> CommReport {
+        match &mut self.inner {
+            Inner::Analytic => model::flat_all_to_all(m, topo, rng),
+            Inner::Des { net, cursor } => {
+                let rep = flat_all_to_all(net, m, topo, at, rng);
+                *cursor = cursor.max(at + rep.time);
+                rep
+            }
+        }
+    }
+
+    /// Submit one external request payload arriving at `at` (DES: DMA
+    /// through NIC-in + ingress port; analytic: free). Returns delivery
+    /// completion.
+    pub fn ingest(&mut self, dst: GpuId, bytes: f64, at: f64) -> f64 {
+        match &mut self.inner {
+            Inner::Analytic => at,
+            Inner::Des { net, .. } => net.ingest(dst, bytes, at),
+        }
+    }
+
+    /// Drain the event queue and summarize contention (`None` for the
+    /// analytic backend, which has nothing to contend).
+    pub fn contention(&mut self) -> Option<ContentionReport> {
+        match &mut self.inner {
+            Inner::Analytic => None,
+            Inner::Des { net, .. } => Some(net.contention()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::traffic::{per_copy, two_stage, Dispatch};
+
+    fn topo() -> Topology {
+        Topology::two_by_two()
+    }
+
+    fn no_jitter(mut t: Topology) -> Topology {
+        t.jitter = 0.0;
+        t
+    }
+
+    fn cross_heavy(n_tokens: usize) -> Vec<Dispatch> {
+        (0..n_tokens)
+            .map(|i| Dispatch { src: i % 2, dsts: vec![2, 3] })
+            .collect()
+    }
+
+    fn close(a: f64, b: f64) -> bool {
+        (a - b).abs() <= 1e-9 * a.abs().max(b.abs()).max(1.0)
+    }
+
+    #[test]
+    fn idle_stage_replay_matches_analytic_stage_time() {
+        let t = topo();
+        let m = per_copy(&cross_heavy(200), 4, 1024.0);
+        let mut net = NetworkSim::new(&t);
+        let fin = net.replay_stage(&m, 0.0);
+        let want = model::stage_time(&m, &t);
+        assert!(close(fin, want), "des {fin} vs analytic {want}");
+    }
+
+    #[test]
+    fn second_round_queues_behind_first() {
+        let t = topo();
+        let m = per_copy(&cross_heavy(200), 4, 1024.0);
+        let mut net = NetworkSim::new(&t);
+        let fin1 = net.replay_stage(&m, 0.0);
+        // Same traffic submitted again at time 0: it must wait for the
+        // first round's queues to drain.
+        let fin2 = net.replay_stage(&m, 0.0);
+        assert!(close(fin2, 2.0 * fin1), "fin2 {fin2} vs 2×{fin1}");
+        // A third probe sees the same occupancy without committing.
+        let probe = net.probe_stage(&m, 0.0);
+        assert!(close(probe, 3.0 * fin1));
+        let probe_again = net.probe_stage(&m, 0.0);
+        assert!(close(probe_again, probe), "probe must not commit");
+    }
+
+    #[test]
+    fn ingest_contends_with_dispatch_on_nic_in() {
+        let t = topo();
+        let mut net = NetworkSim::new(&t);
+        // Saturate node 1's NIC-in with dispatch traffic…
+        let m = per_copy(&cross_heavy(500), 4, 1024.0);
+        net.replay_stage(&m, 0.0);
+        // …then an external arrival at t=0 must queue behind it.
+        let idle_delivery = {
+            let mut fresh = NetworkSim::new(&t);
+            fresh.ingest(2, 4096.0, 0.0)
+        };
+        let contended = net.ingest(2, 4096.0, 0.0);
+        assert!(contended > idle_delivery * 2.0,
+                "contended {contended} vs idle {idle_delivery}");
+    }
+
+    #[test]
+    fn event_queue_orders_by_time_then_seq_and_depth_stays_sane() {
+        let t = topo();
+        let m = per_copy(&cross_heavy(50), 4, 1024.0);
+        let mut net = NetworkSim::new(&t);
+        net.enable_log();
+        net.replay_stage(&m, 0.0);
+        let rep = net.contention();
+        let log = net.log().unwrap();
+        assert_eq!(rep.events as usize, log.len());
+        // Processed order is non-decreasing in (time, seq).
+        for w in log.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            let ta = f64::from_bits(a.time_bits);
+            let tb = f64::from_bits(b.time_bits);
+            assert!(ta < tb || (ta == tb && a.seq < b.seq));
+        }
+        assert!(rep.queue_depth_max >= 1);
+        assert!(rep.queue_depth_p99 >= rep.queue_depth_p50);
+    }
+
+    #[test]
+    fn bytes_are_conserved_per_link() {
+        let t = topo();
+        let disp = cross_heavy(300);
+        let m = per_copy(&disp, 4, 1024.0);
+        let mut net = NetworkSim::new(&t);
+        net.replay_stage(&m, 0.0);
+        for g in 0..4 {
+            assert_eq!(net.egress_bytes(g), m.egress(g));
+            assert_eq!(net.ingress_bytes(g), m.ingress(g));
+        }
+        // NIC totals: everything entering a node's NIC leaves it on the
+        // GPUs' ingress side of that node, and vice versa.
+        let out: f64 = (0..2).map(|n| net.nic_out_bytes(n)).sum();
+        let inn: f64 = (0..2).map(|n| net.nic_in_bytes(n)).sum();
+        assert_eq!(out, inn);
+        assert_eq!(out, m.cross_node_bytes(&t));
+    }
+
+    #[test]
+    fn uncontended_wrappers_match_analytic_reports() {
+        let t = topo();
+        let disp = cross_heavy(400);
+        let flat_m = per_copy(&disp, 4, 1024.0);
+        let ts = two_stage(&disp, &t, 1024.0);
+        for seed in 0..5 {
+            let a = model::flat_all_to_all(&flat_m, &t,
+                                           &mut Rng::new(seed));
+            let mut net = NetworkSim::new(&t);
+            let d = flat_all_to_all(&mut net, &flat_m, &t, 0.0,
+                                    &mut Rng::new(seed));
+            assert!(close(a.time, d.time), "flat {} vs {}", a.time, d.time);
+            assert_eq!(a.cross_bytes, d.cross_bytes);
+
+            let a = model::staged_hierarchical(&ts, &t, &mut Rng::new(seed));
+            let mut net = NetworkSim::new(&t);
+            let d = staged_hierarchical(&mut net, &ts, &t, 0.0,
+                                        &mut Rng::new(seed));
+            assert!(close(a.time, d.time),
+                    "staged {} vs {}", a.time, d.time);
+
+            let a = model::hsc(&ts, &t, 1e-5, &mut Rng::new(seed));
+            let mut net = NetworkSim::new(&t);
+            let d = hsc(&mut net, &ts, &t, 1e-5, 0.0, &mut Rng::new(seed));
+            assert!(close(a.time, d.time), "hsc {} vs {}", a.time, d.time);
+            assert_eq!(a.launches, d.launches);
+        }
+    }
+
+    #[test]
+    fn empty_traffic_costs_only_launch() {
+        let t = no_jitter(topo());
+        let m = TrafficMatrix::zeros(4);
+        let mut net = NetworkSim::new(&t);
+        let r = flat_all_to_all(&mut net, &m, &t, 0.0, &mut Rng::new(4));
+        assert!((r.time - t.launch_overhead).abs() < 1e-12);
+        assert_eq!(net.contention().transfers, 0);
+    }
+
+    #[test]
+    fn backend_kind_round_trips_names() {
+        for kind in [CommBackendKind::Analytic, CommBackendKind::Des] {
+            assert_eq!(CommBackendKind::from_name(kind.name()), Some(kind));
+        }
+        assert_eq!(CommBackendKind::from_name("magic"), None);
+        assert_eq!(CommBackendKind::default(), CommBackendKind::Analytic);
+    }
+
+    #[test]
+    fn backend_cursor_advances_past_each_round() {
+        let t = topo();
+        let mut b = CommBackend::new(CommBackendKind::Des, &t);
+        assert_eq!(b.cursor(), 0.0);
+        let m = per_copy(&cross_heavy(100), 4, 1024.0);
+        let rep = b.flat_round_at(&m, &t, 1.0, &mut Rng::new(7));
+        assert!(close(b.cursor(), 1.0 + rep.time));
+        assert!(b.contention().is_some());
+        let mut a = CommBackend::new(CommBackendKind::Analytic, &t);
+        assert!(a.contention().is_none());
+        assert_eq!(a.ingest(0, 4096.0, 2.0), 2.0);
+    }
+}

@@ -266,6 +266,22 @@ impl ServeLoad {
         format!("n{}-pf{}-gen{}-{arr}", self.requests, self.prompt,
                 self.new_tokens)
     }
+
+    /// Loud shape validation: a zero-length trace or a non-positive
+    /// Poisson rate would otherwise produce an empty replay or an
+    /// infinite/NaN arrival schedule deep inside a driver.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.requests > 0,
+                        "serve load needs at least one request");
+        anyhow::ensure!(self.prompt > 0,
+                        "prompt length must be at least 1 token");
+        if let ArrivalProcess::Poisson { rate } = self.arrival {
+            anyhow::ensure!(rate.is_finite() && rate > 0.0,
+                            "Poisson arrival rate must be finite and \
+                             positive, got {rate}");
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -338,6 +354,7 @@ mod tests {
         // Mean interarrival ≈ 1/rate over a long schedule.
         let mean_gap = times.last().unwrap() / 2000.0;
         assert!((mean_gap - 0.02).abs() < 0.004, "mean gap {mean_gap}");
+        assert!(open.validate().is_ok());
         // Deterministic per seed.
         let again = open.arrival_times(&mut Rng::new(1));
         let first = {
@@ -346,5 +363,25 @@ mod tests {
             open.arrival_times(&mut rng)
         };
         assert_eq!(again, first);
+    }
+
+    #[test]
+    fn serve_load_validation_is_loud() {
+        let good = ServeLoad {
+            requests: 4,
+            prompt: 16,
+            new_tokens: 8,
+            arrival: ArrivalProcess::Closed,
+        };
+        assert!(good.validate().is_ok());
+        assert!(ServeLoad { requests: 0, ..good }.validate().is_err());
+        assert!(ServeLoad { prompt: 0, ..good }.validate().is_err());
+        for rate in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let bad = ServeLoad {
+                arrival: ArrivalProcess::Poisson { rate },
+                ..good
+            };
+            assert!(bad.validate().is_err(), "rate {rate} accepted");
+        }
     }
 }

@@ -1,0 +1,600 @@
+//! Open-loop fleet replay: large request traces through the continuous
+//! scheduler, the online re-planner, and the contended network.
+//!
+//! The timing engine ([`super::sim`]) prices one representative chunk per
+//! phase and scales; the serving harness
+//! ([`crate::server::sched::simulate_serve_with`]) drives real steps but
+//! prices them with a caller-supplied flat cost. This driver closes the
+//! gap: it replays a whole [`ServeLoad`] (up to 10⁵–10⁶ Poisson arrivals
+//! on the *virtual* clock) where every scheduler step is priced by
+//! routing its actual token batch through the dispatcher and the
+//! [`CommBackend`] seam. With [`CommBackendKind::Des`] the dispatch and
+//! combine collectives of concurrent steps queue on the simulated links,
+//! and each request's prompt payload is DMA-ed through its host GPU's
+//! ingress path at the arrival instant — so admission bursts contend
+//! with decode traffic for the NIC, which is exactly the regime the
+//! analytic α–β models cannot see.
+//!
+//! Re-planning rides along as in the timing engine (systems with
+//! [`SystemSpec::online_replan`] plus a [`SimConfig::replan`] cadence):
+//! every layer round is observed, epoch boundaries fall between steps,
+//! and accepted migrations are priced through the same backend — on the
+//! DES arm the weight copies queue behind serving traffic. The migration
+//! cost model is refreshed from *measured* step time via
+//! [`CostParams::from_observed`], so the payback gate uses the replay's
+//! own tokens-per-second rather than the a-priori GPU model.
+
+use crate::baselines::SystemSpec;
+use crate::comm::model::{CommModel, CommReport};
+use crate::comm::sim::{CommBackend, CommBackendKind};
+use crate::config::ServeLoad;
+use crate::configio::Value;
+use crate::metrics::{ContentionReport, ServeMetrics};
+use crate::placement::Placement;
+use crate::replan::{self, CostParams, Replanner};
+use crate::routing::{Assignment, DispatchPlan, Dispatcher};
+use crate::server::sched::{SchedConfig, SchedMode, Scheduler};
+use crate::server::{even_src, Request};
+use crate::stats::Rng;
+use crate::testutil::fake_decode_token;
+use crate::trace::TraceGen;
+
+use super::sim::{build_placement, coordinator, SimConfig,
+                 ROUTE_DECISION_COST};
+
+/// Configuration of one fleet replay: the system under test, the
+/// simulated model/cluster, the request workload, and the scheduler's
+/// admission limits. The communication backend is taken from
+/// [`SimConfig::comm_backend`].
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// System under test (placement/routing/communication strategy).
+    pub sys: SystemSpec,
+    /// Model, cluster, seed, and backend of the simulated deployment.
+    pub sim: SimConfig,
+    /// Request workload (count, shape, arrival process).
+    pub load: ServeLoad,
+    /// Maximum concurrently-live sequences.
+    pub max_batch: usize,
+    /// Token budget one batched step may compute.
+    pub max_batch_tokens: usize,
+}
+
+impl FleetConfig {
+    /// Fleet over `sys`/`sim`/`load` with default admission limits
+    /// (32 live sequences, 2048 computed tokens per step).
+    pub fn new(sys: SystemSpec, sim: SimConfig, load: ServeLoad)
+               -> FleetConfig {
+        FleetConfig { sys, sim, load, max_batch: 32,
+                      max_batch_tokens: 2048 }
+    }
+
+    /// Loud input validation: a zero-length trace, an empty prompt, a
+    /// non-positive arrival rate, or zero admission limits would
+    /// otherwise surface as a silent empty report or a scheduler stall
+    /// deep into the replay.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.load.validate()?;
+        anyhow::ensure!(self.max_batch > 0,
+                        "max_batch must be at least 1");
+        anyhow::ensure!(self.max_batch_tokens > 0,
+                        "max_batch_tokens must be at least 1");
+        if let Some(rc) = self.sim.replan {
+            rc.validate()?;
+        }
+        Ok(())
+    }
+}
+
+/// Outcome of one fleet replay.
+#[derive(Clone, Debug)]
+pub struct FleetReport {
+    /// Which communication backend priced the replay.
+    pub backend: CommBackendKind,
+    /// Serving-side metrics (latency/TTFT/TPOT distributions, steps,
+    /// throughput) on the virtual clock.
+    pub serve: ServeMetrics,
+    /// Communication totals accumulated over every dispatch, combine,
+    /// and migration collective.
+    pub comm: CommReport,
+    /// Network contention diagnostics (`None` on the analytic backend).
+    pub contention: Option<ContentionReport>,
+    /// Re-planning deltas applied during the replay.
+    pub replans: usize,
+    /// Expert-weight bytes migrated by applied deltas.
+    pub migration_bytes: f64,
+}
+
+impl FleetReport {
+    /// Deterministic JSON-style rendering — two replays with the same
+    /// config must serialise identically (the `des-smoke` CI gate diffs
+    /// this, including the DES event digest).
+    pub fn to_value(&self) -> Value {
+        let mean = |s: Option<crate::stats::Summary>| {
+            Value::num(s.as_ref().map_or(0.0, |s| s.mean()))
+        };
+        let mut fields = vec![
+            ("backend", Value::str(self.backend.name())),
+            ("requests", Value::from(self.serve.latencies.len())),
+            ("steps", Value::from(self.serve.steps)),
+            ("dispatch_rounds", Value::from(self.serve.dispatch_rounds)),
+            ("generated_tokens", Value::from(self.serve.generated_tokens)),
+            ("computed_tokens", Value::from(self.serve.computed_tokens)),
+            ("wall_time_s", Value::num(self.serve.wall_time)),
+            ("throughput_tps", Value::num(self.serve.throughput_tps())),
+            ("latency_mean_s", mean(self.serve.latency_summary())),
+            ("latency_p99_s",
+             Value::num(self.serve.latency_summary()
+                 .map_or(0.0, |s| s.p99()))),
+            ("ttft_mean_s", mean(self.serve.ttft_summary())),
+            ("tpot_mean_s", mean(self.serve.tpot_summary())),
+            ("queue_wait_mean_s", mean(self.serve.queue_wait_summary())),
+            ("a2a_time_s", Value::num(self.comm.time)),
+            ("a2a_sync_s", Value::num(self.comm.sync_time)),
+            ("cross_bytes", Value::num(self.comm.cross_bytes)),
+            ("intra_bytes", Value::num(self.comm.intra_bytes)),
+            ("launches", Value::from(self.comm.launches)),
+            ("replans", Value::from(self.replans)),
+            ("migration_bytes", Value::num(self.migration_bytes)),
+        ];
+        if let Some(c) = &self.contention {
+            fields.push(("contention", Value::object(vec![
+                ("max_utilization", Value::num(c.max_utilization)),
+                ("queue_depth_p50", Value::num(c.queue_depth_p50)),
+                ("queue_depth_p95", Value::num(c.queue_depth_p95)),
+                ("queue_depth_p99", Value::num(c.queue_depth_p99)),
+                ("queue_depth_max", Value::from(c.queue_depth_max)),
+                ("queued_wait_s", Value::num(c.queued_wait_s)),
+                ("straggler_stall_s", Value::num(c.straggler_stall_s)),
+                ("transfers", Value::from(c.transfers as usize)),
+                ("events", Value::from(c.events as usize)),
+                ("event_digest",
+                 Value::str(format!("{:016x}", c.event_digest))),
+            ])));
+        }
+        Value::object(fields)
+    }
+}
+
+/// Re-planning state riding along a fleet replay (mirrors the timing
+/// engine's `EpochState`, but prices migrations through the replay's
+/// [`CommBackend`] at the current virtual time).
+struct FleetEpoch {
+    active: Placement,
+    replanner: Replanner,
+    /// Jitter stream for migration transfers, separate from the dispatch
+    /// RNG so empty epochs leave the dispatch stream untouched.
+    mig_rng: Rng,
+    migration_bytes: f64,
+    replans: usize,
+}
+
+impl FleetEpoch {
+    fn new(active: Placement, sys: &SystemSpec, cfg: &SimConfig)
+           -> Option<FleetEpoch> {
+        let rc = match (sys.online_replan, cfg.replan) {
+            (true, Some(rc)) => rc,
+            _ => return None,
+        };
+        let cost = CostParams::paper(&cfg.model, &cfg.gpu,
+                                     sys.compute_eff);
+        Some(FleetEpoch {
+            active,
+            replanner: Replanner::new(cfg.topo.clone(), rc, cost),
+            mig_rng: Rng::new(cfg.seed ^ 0x4D16),
+            migration_bytes: 0.0,
+            replans: 0,
+        })
+    }
+
+    fn observe(&mut self, layer: usize, plan: &DispatchPlan) {
+        self.replanner
+            .observe(layer, &self.active.layers[layer], plan);
+    }
+
+    /// Epoch boundary between steps: evaluate, apply, and price the
+    /// weight migration through the backend at virtual time `at`.
+    /// Returns the seconds the migration blocks the serving pipeline.
+    fn tick(&mut self, cfg: &SimConfig, backend: &mut CommBackend,
+            at: f64, comm_total: &mut CommReport) -> f64 {
+        let delta = self.replanner.epoch_tick(&self.active);
+        if delta.is_empty() {
+            return 0.0;
+        }
+        let traffic = replan::migration_traffic(
+            &delta,
+            &self.active,
+            self.replanner.cost().expert_bytes,
+        );
+        let rep = backend.flat_round_at(&traffic, &cfg.topo, at,
+                                        &mut self.mig_rng);
+        self.migration_bytes += delta.migration_bytes;
+        self.replans += 1;
+        self.active = replan::apply_delta(&self.active, &delta);
+        let secs = rep.time;
+        fold_comm(comm_total, &rep);
+        secs
+    }
+}
+
+/// Accumulate a collective's scalar costs without retaining its
+/// per-stage diagnostics (a million-step replay would otherwise grow
+/// `stage_times` unboundedly).
+fn fold_comm(total: &mut CommReport, rep: &CommReport) {
+    total.time += rep.time;
+    total.cross_bytes += rep.cross_bytes;
+    total.intra_bytes += rep.intra_bytes;
+    total.launches += rep.launches;
+    total.sync_time += rep.sync_time;
+}
+
+/// Deterministic synthetic prompt for request `id`.
+fn synth_request(id: u64, prompt: usize, new_tokens: usize) -> Request {
+    let prompt = (0..prompt)
+        .map(|p| ((id as usize * 1009 + p * 31) % 997) as i32)
+        .collect();
+    Request { id, prompt, max_new_tokens: new_tokens }
+}
+
+/// Replay the whole [`ServeLoad`] through scheduler + re-planner +
+/// network on the virtual clock.
+///
+/// Each scheduler step routes its actual computed-token batch through
+/// every MoE layer (one dispatch round per layer, dispatch + combine
+/// collectives priced at the step's virtual time) and advances the
+/// clock by the resulting step seconds; arrivals land their prompt
+/// payloads on the network at their arrival instants. The whole replay
+/// is deterministic per [`SimConfig::seed`].
+pub fn replay_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetReport> {
+    cfg.validate()?;
+    let sim = &cfg.sim;
+    let topo = &sim.topo;
+    let n_gpus = topo.num_gpus();
+    let token_bytes = sim.model.token_bytes();
+
+    let placement = build_placement(&cfg.sys, sim);
+    let mut dispatcher =
+        coordinator(&cfg.sys, sim).dispatcher(token_bytes);
+    let mut rng = Rng::new(sim.seed ^ 0x5E21);
+    let mut backend = CommBackend::new(sim.comm_backend, topo);
+    let mut epoch = FleetEpoch::new(placement.clone(), &cfg.sys, sim);
+
+    // Arrival schedule (ascending) and synthetic requests, from an RNG
+    // stream decoupled from dispatch so both backends replay the same
+    // trace.
+    let mut arr_rng = Rng::new(sim.seed ^ 0xA441);
+    let arrivals: Vec<(Request, f64)> = cfg
+        .load
+        .arrival_times(&mut arr_rng)
+        .into_iter()
+        .enumerate()
+        .map(|(i, t)| {
+            (synth_request(i as u64, cfg.load.prompt,
+                           cfg.load.new_tokens), t)
+        })
+        .collect();
+
+    let mut sched = Scheduler::new(SchedConfig {
+        mode: SchedMode::Continuous,
+        max_batch: cfg.max_batch,
+        max_batch_tokens: cfg.max_batch_tokens,
+        ctx: cfg.load.prompt + cfg.load.new_tokens,
+        kv_cache: true,
+    })?;
+
+    let mut comm_total = CommReport::default();
+    let mut now = 0.0f64;
+    let mut next_arrival = 0usize;
+    let mut next_ingest = 0usize;
+    let mut measured_secs = 0.0f64;
+    let mut measured_tokens = 0usize;
+
+    loop {
+        // Prompt payload DMA: every request that has arrived by `now`
+        // occupies its host GPU's NIC-in/ingress path at the arrival
+        // instant (analytic backend: free, as in the α–β models).
+        while next_ingest < arrivals.len()
+            && arrivals[next_ingest].1 <= now
+        {
+            let (req, t) = &arrivals[next_ingest];
+            let dst = (req.id as usize) % n_gpus;
+            backend.ingest(dst, req.prompt.len() as f64 * token_bytes,
+                           *t);
+            next_ingest += 1;
+        }
+
+        // Offer arrived requests / admit from the pending queue.
+        loop {
+            if sched.wants_offer() && next_arrival < arrivals.len()
+                && arrivals[next_arrival].1 <= now
+            {
+                let (req, t) = arrivals[next_arrival].clone();
+                next_arrival += 1;
+                sched.offer(req, t);
+                continue;
+            }
+            if !sched.admit_pending(now)? {
+                break;
+            }
+        }
+        if sched.is_idle() {
+            if next_arrival >= arrivals.len() {
+                break;
+            }
+            now = now.max(arrivals[next_arrival].1);
+            continue;
+        }
+        anyhow::ensure!(!sched.live().is_empty(),
+                        "fleet scheduler stalled with a pending request");
+
+        // One batched step, priced through the network at `now`.
+        let batch = sched.microbatch();
+        let tokens = sched.step_tokens(&batch);
+        let step = sched.steps();
+        let (dt, rounds) = network_step(
+            &cfg.sys, sim, &mut dispatcher, &mut backend, &placement,
+            &mut epoch, tokens, step, now, &mut rng, &mut comm_total,
+        );
+        let next: Vec<i32> = batch
+            .iter()
+            .map(|&i| fake_decode_token(&sched.live()[i].ids))
+            .collect();
+        now += dt;
+        measured_secs += dt;
+        measured_tokens += tokens;
+        sched.complete_step(&batch, &next, now, rounds)?;
+
+        // Epoch boundary between steps: refresh the payback gate's cost
+        // model from measured step time, then evaluate.
+        if let Some(s) = &mut epoch {
+            if let Some(cost) = CostParams::from_observed(
+                &sim.model, measured_secs, measured_tokens)
+            {
+                s.replanner.update_cost(cost);
+            }
+            now += s.tick(sim, &mut backend, now, &mut comm_total);
+        }
+    }
+
+    let (_responses, serve) = sched.into_results(now);
+    let contention = backend.contention();
+    Ok(FleetReport {
+        backend: sim.comm_backend,
+        serve,
+        comm: comm_total,
+        contention,
+        replans: epoch.as_ref().map_or(0, |s| s.replans),
+        migration_bytes: epoch.as_ref()
+            .map_or(0.0, |s| s.migration_bytes),
+    })
+}
+
+/// Price one scheduler step: route `tokens` computed tokens through
+/// every MoE layer (dispatch + combine per layer through `backend` at
+/// the accumulating virtual time), mirroring the timing engine's
+/// per-layer cost model. Returns the step's seconds and its dispatch
+/// round count.
+#[allow(clippy::too_many_arguments)]
+fn network_step(sys: &SystemSpec, cfg: &SimConfig,
+                dispatcher: &mut Dispatcher, backend: &mut CommBackend,
+                placement: &Placement, epoch: &mut Option<FleetEpoch>,
+                tokens: usize, step: usize, at: f64, rng: &mut Rng,
+                comm_total: &mut CommReport) -> (f64, usize) {
+    let topo = &cfg.topo;
+    let n_gpus = topo.num_gpus();
+    let spec = &cfg.model;
+    let trace = TraceGen {
+        experts: spec.experts,
+        top_k: spec.top_k,
+        layers: spec.moe_layers,
+        profile: cfg.serve_profile,
+        seed: cfg
+            .seed
+            .wrapping_mul(0x1009)
+            .wrapping_add(0xF1EE + step as u64),
+    }
+    .generate(tokens);
+
+    let mut t = at;
+    for (layer_idx, layer) in trace.layers.iter().enumerate() {
+        let plan = {
+            let lp = match epoch {
+                Some(s) => &s.active.layers[layer_idx],
+                None => &placement.layers[layer_idx],
+            };
+            let mut batch: Vec<Assignment> =
+                Vec::with_capacity(tokens * spec.top_k);
+            for (tok, experts) in layer.tokens.iter().enumerate() {
+                let src = even_src(tok, tokens, n_gpus);
+                for &e in experts {
+                    let e = e as usize;
+                    if sys.prune_remote > 0.0 {
+                        let primary = lp.primary[e];
+                        if !topo.same_node(src, primary)
+                            && rng.chance(sys.prune_remote)
+                        {
+                            continue;
+                        }
+                    }
+                    batch.push(Assignment { token: tok, expert: e, src });
+                }
+            }
+            dispatcher.dispatch(lp, layer_idx, &batch, rng)
+        };
+
+        let overlap = if sys.comm == CommModel::Hsc {
+            tokens as f64 * ROUTE_DECISION_COST / n_gpus as f64
+        } else {
+            0.0
+        };
+        let mut comm = backend.round_at(sys.comm, sys.dedup_flat, topo,
+                                        &plan, overlap, t, rng);
+        let combine = backend.round_at(sys.comm, sys.dedup_flat, topo,
+                                       &plan, 0.0, t + comm.time, rng);
+        comm.accumulate(&combine);
+
+        let mut t_max = 0.0f64;
+        for &c in plan.copies_per_gpu() {
+            let tc = cfg.gpu.moe_time(spec, c as f64) / sys.compute_eff
+                + cfg.gpu.layer_overhead;
+            t_max = t_max.max(tc);
+        }
+        let dense = cfg.gpu
+            .dense_time(spec, tokens as f64 / n_gpus as f64)
+            + cfg.gpu.layer_overhead;
+        t += comm.time * sys.comm_eff + t_max + dense;
+        fold_comm(comm_total, &comm);
+        if let Some(s) = epoch {
+            s.observe(layer_idx, &plan);
+        }
+    }
+    (t - at, 2 * spec.moe_layers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::config::{ArrivalProcess, ModelSpec, Workload};
+    use crate::replan::ReplanConfig;
+
+    fn small_sim(backend: CommBackendKind) -> SimConfig {
+        let model = ModelSpec { moe_layers: 2, ..ModelSpec::olmoe() };
+        let mut sim = SimConfig::new(
+            model,
+            Topology::two_by_two(),
+            Workload { batch: 8, prefill: 8, decode: 2 },
+        );
+        sim.profile_tokens = 256;
+        sim.max_chunk = 256;
+        sim.comm_backend = backend;
+        sim
+    }
+
+    fn small_load(rate: f64) -> ServeLoad {
+        ServeLoad {
+            requests: 12,
+            prompt: 8,
+            new_tokens: 3,
+            arrival: ArrivalProcess::Poisson { rate },
+        }
+    }
+
+    fn small_fleet(backend: CommBackendKind, rate: f64) -> FleetConfig {
+        let mut cfg = FleetConfig::new(SystemSpec::grace(0.15),
+                                       small_sim(backend),
+                                       small_load(rate));
+        cfg.max_batch = 4;
+        cfg.max_batch_tokens = 64;
+        cfg
+    }
+
+    #[test]
+    fn fleet_serves_every_request_and_is_deterministic() {
+        let cfg = small_fleet(CommBackendKind::Analytic, 200.0);
+        let a = replay_fleet(&cfg).unwrap();
+        let b = replay_fleet(&cfg).unwrap();
+        assert_eq!(a.serve.latencies.len(), 12);
+        assert_eq!(a.serve.generated_tokens, 12 * 3);
+        assert!(a.serve.wall_time > 0.0);
+        assert!(a.comm.time > 0.0);
+        assert!(a.contention.is_none(), "analytic has no contention");
+        assert_eq!(a.serve.wall_time, b.serve.wall_time);
+        assert_eq!(a.comm.time, b.comm.time);
+    }
+
+    #[test]
+    fn des_fleet_reports_contention_and_matches_request_count() {
+        let cfg = small_fleet(CommBackendKind::Des, 200.0);
+        let r = replay_fleet(&cfg).unwrap();
+        assert_eq!(r.serve.latencies.len(), 12);
+        let c = r.contention.expect("DES must report contention");
+        assert!(c.transfers > 0);
+        assert!(c.events >= 4 * c.transfers,
+                "each transfer arrives and departs on every leg");
+        assert!(c.max_utilization > 0.0 && c.max_utilization <= 1.0);
+    }
+
+    #[test]
+    fn des_replay_is_bit_deterministic() {
+        let cfg = small_fleet(CommBackendKind::Des, 500.0);
+        let a = replay_fleet(&cfg).unwrap();
+        let b = replay_fleet(&cfg).unwrap();
+        let (ca, cb) = (a.contention.unwrap(), b.contention.unwrap());
+        assert_eq!(ca.event_digest, cb.event_digest);
+        assert_eq!(ca.events, cb.events);
+        assert_eq!(a.serve.wall_time, b.serve.wall_time);
+        assert_eq!(a.to_value(), b.to_value());
+    }
+
+    #[test]
+    fn saturating_arrivals_inflate_des_latency_over_analytic() {
+        // Same workload, both backends: at a crush arrival rate the DES
+        // queues prompt DMA + dispatch traffic on finite links, so its
+        // mean latency must exceed the uncontended analytic pricing.
+        let slow = replay_fleet(&small_fleet(CommBackendKind::Des, 1e5))
+            .unwrap();
+        let fast =
+            replay_fleet(&small_fleet(CommBackendKind::Analytic, 1e5))
+                .unwrap();
+        let l_des = slow.serve.latency_summary().unwrap().mean();
+        let l_ana = fast.serve.latency_summary().unwrap().mean();
+        assert!(l_des >= l_ana,
+                "contended {l_des} must not beat uncontended {l_ana}");
+    }
+
+    #[test]
+    fn replanning_fleet_runs_and_stays_deterministic() {
+        let mut cfg = small_fleet(CommBackendKind::Des, 300.0);
+        cfg.sys = SystemSpec::grace_dyn(0.15);
+        cfg.sim.replan =
+            Some(ReplanConfig { epoch_rounds: 2,
+                                ..ReplanConfig::default() });
+        let a = replay_fleet(&cfg).unwrap();
+        let b = replay_fleet(&cfg).unwrap();
+        assert_eq!(a.serve.latencies.len(), 12);
+        assert_eq!(a.replans, b.replans);
+        assert_eq!(a.migration_bytes, b.migration_bytes);
+        assert_eq!(a.contention.unwrap().event_digest,
+                   b.contention.unwrap().event_digest);
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_inputs() {
+        let good = small_fleet(CommBackendKind::Analytic, 10.0);
+        assert!(good.validate().is_ok());
+
+        let mut zero_req = good.clone();
+        zero_req.load.requests = 0;
+        assert!(replay_fleet(&zero_req).is_err());
+
+        let mut zero_prompt = good.clone();
+        zero_prompt.load.prompt = 0;
+        assert!(replay_fleet(&zero_prompt).is_err());
+
+        let mut bad_rate = good.clone();
+        bad_rate.load.arrival = ArrivalProcess::Poisson { rate: 0.0 };
+        assert!(replay_fleet(&bad_rate).is_err());
+
+        let mut no_batch = good.clone();
+        no_batch.max_batch = 0;
+        assert!(replay_fleet(&no_batch).is_err());
+
+        let mut bad_epoch = good;
+        bad_epoch.sim.replan =
+            Some(ReplanConfig { epoch_rounds: 0,
+                                ..ReplanConfig::default() });
+        assert!(replay_fleet(&bad_epoch).is_err());
+    }
+
+    #[test]
+    fn report_serialises_key_fields() {
+        let cfg = small_fleet(CommBackendKind::Des, 100.0);
+        let v = replay_fleet(&cfg).unwrap().to_value();
+        assert_eq!(v.str_or("backend", ""), "des");
+        assert_eq!(v.req_usize("requests").unwrap(), 12);
+        assert!(v.req_f64("wall_time_s").unwrap() > 0.0);
+        let c = v.req("contention").unwrap();
+        assert_eq!(c.req_str("event_digest").unwrap().len(), 16);
+    }
+}

@@ -7,6 +7,10 @@
 //!   (profile → group → replicate → route → communicate → compute) over
 //!   paper-scale models and the [`crate::cluster::Topology`] cost model.
 //!   All evaluation tables/figures are generated from this mode.
+//! * [`fleet`] — the *open-loop replay* driver layered on [`sim`]'s
+//!   cost model: whole Poisson request traces through the continuous
+//!   scheduler, the online re-planner, and the [`crate::comm::sim`]
+//!   contended network on a virtual clock.
 //! * [`real`] — the *numerics* engine: executes the tiny AOT-compiled
 //!   model variants through PJRT ([`crate::runtime`]), performing actual
 //!   dispatch/combine in rust, and validates losslessness against the
@@ -15,9 +19,11 @@
 //!   whole live batch shares MoE dispatch tiles, and each logical
 //!   rank's FFN shard executes concurrently on a worker pool.
 
+pub mod fleet;
 pub mod real;
 pub mod sim;
 
+pub use fleet::{replay_fleet, FleetConfig, FleetReport};
 pub use real::{DistributedMoE, FfnMode, RealModel};
-pub use sim::{simulate, simulate_rounds, simulate_with_placement,
-              ReplanReport, SimConfig};
+pub use sim::{simulate, simulate_rounds, simulate_with_contention,
+              simulate_with_placement, ReplanReport, SimConfig};

@@ -32,11 +32,11 @@
 
 use crate::baselines::SystemSpec;
 use crate::cluster::Topology;
-use crate::comm::model::{self, CommModel, CommReport};
-use crate::comm::traffic;
+use crate::comm::model::{self, CommModel};
+use crate::comm::sim::{CommBackend, CommBackendKind};
 use crate::config::{GpuModel, ModelSpec, Workload};
 use crate::coordinator::Coordinator;
-use crate::metrics::RunMetrics;
+use crate::metrics::{ContentionReport, RunMetrics};
 use crate::placement::Placement;
 use crate::replan::{self, CostParams, ReplanConfig, Replanner};
 use crate::routing::{Assignment, DispatchPlan, Dispatcher};
@@ -73,6 +73,10 @@ pub struct SimConfig {
     /// Epoch re-planning cadence/gates; only consulted by systems with
     /// [`SystemSpec::online_replan`] set (the `grace-dyn` spec).
     pub replan: Option<ReplanConfig>,
+    /// Communication backend: closed-form analytic models (the default,
+    /// bit-identical to the pre-seam engine) or discrete-event replay
+    /// through the contended network ([`crate::comm::sim`]).
+    pub comm_backend: CommBackendKind,
 }
 
 impl SimConfig {
@@ -91,6 +95,7 @@ impl SimConfig {
             profile_tokens: 2048,
             max_chunk: 4096,
             replan: None,
+            comm_backend: CommBackendKind::Analytic,
         }
     }
 }
@@ -127,11 +132,23 @@ pub fn simulate(sys: &SystemSpec, cfg: &SimConfig) -> RunMetrics {
 /// epoch boundaries may hot-swap the active placement between phases.
 pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
                                placement: &Placement) -> RunMetrics {
+    simulate_with_contention(sys, cfg, placement).0
+}
+
+/// [`simulate_with_placement`] plus the communication backend's
+/// contention diagnostics (`None` for the analytic backend; with
+/// [`CommBackendKind::Des`] the rounds replay back-to-back on the
+/// virtual clock, so utilization/queue stats quantify how close the
+/// serialized engine runs to saturation).
+pub fn simulate_with_contention(sys: &SystemSpec, cfg: &SimConfig,
+                                placement: &Placement)
+                                -> (RunMetrics, Option<ContentionReport>) {
     assert_eq!(placement.experts, cfg.model.experts);
     assert_eq!(placement.num_gpus, cfg.topo.num_gpus());
     let coord = coordinator(sys, cfg);
     let mut dispatcher = coord.dispatcher(cfg.model.token_bytes());
     let mut rng = Rng::new(cfg.seed ^ 0x5E21);
+    let mut backend = CommBackend::new(cfg.comm_backend, &cfg.topo);
     let mut metrics = RunMetrics::default();
     let mut epoch = epoch_state(sys, cfg, placement);
 
@@ -141,8 +158,8 @@ pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
     if chunk > 0 {
         let scale = prefill_tokens as f64 / chunk as f64;
         let trace = serve_trace(cfg, chunk, 1);
-        sim_phase(sys, cfg, &mut dispatcher, placement, &trace, scale,
-                  &mut rng, &mut metrics, &mut epoch);
+        sim_phase(sys, cfg, &mut dispatcher, &mut backend, placement,
+                  &trace, scale, &mut rng, &mut metrics, &mut epoch);
         if let Some(s) = &mut epoch {
             s.tick(cfg, &mut metrics);
         }
@@ -155,15 +172,16 @@ pub fn simulate_with_placement(sys: &SystemSpec, cfg: &SimConfig,
         let scale = cfg.workload.decode as f64 * decode_tokens as f64
             / dchunk as f64;
         let trace = serve_trace(cfg, dchunk, 2);
-        sim_phase(sys, cfg, &mut dispatcher, placement, &trace, scale,
-                  &mut rng, &mut metrics, &mut epoch);
+        sim_phase(sys, cfg, &mut dispatcher, &mut backend, placement,
+                  &trace, scale, &mut rng, &mut metrics, &mut epoch);
         if let Some(s) = &mut epoch {
             s.tick(cfg, &mut metrics);
         }
     }
 
     metrics.tokens = cfg.workload.total_tokens();
-    metrics
+    let contention = backend.contention();
+    (metrics, contention)
 }
 
 /// Outcome summary of a round-by-round (re-planned) run.
@@ -215,6 +233,7 @@ pub fn simulate_rounds(sys: &SystemSpec, cfg: &SimConfig,
     let coord = coordinator(sys, cfg);
     let mut dispatcher = coord.dispatcher(cfg.model.token_bytes());
     let mut rng = Rng::new(cfg.seed ^ 0x5E21);
+    let mut backend = CommBackend::new(cfg.comm_backend, &cfg.topo);
     let mut metrics = RunMetrics::default();
     let mut report = ReplanReport::default();
     let mut epoch = replan_cfg
@@ -222,9 +241,9 @@ pub fn simulate_rounds(sys: &SystemSpec, cfg: &SimConfig,
 
     for trace in rounds {
         report.rounds += 1;
-        let copies = sim_phase(sys, cfg, &mut dispatcher, placement,
-                               trace, 1.0, &mut rng, &mut metrics,
-                               &mut epoch);
+        let copies = sim_phase(sys, cfg, &mut dispatcher, &mut backend,
+                               placement, trace, 1.0, &mut rng,
+                               &mut metrics, &mut epoch);
         report.copies_rounds.push(copies);
         if let Some(s) = &mut epoch {
             if s.tick(cfg, &mut metrics) {
@@ -363,10 +382,10 @@ fn serve_trace(cfg: &SimConfig, tokens: usize, phase_tag: u64) -> GateTrace {
 /// placement and is observed by the re-planner after dispatch.
 #[allow(clippy::too_many_arguments)]
 fn sim_phase(sys: &SystemSpec, cfg: &SimConfig,
-             dispatcher: &mut Dispatcher, placement: &Placement,
-             trace: &GateTrace, scale: f64, rng: &mut Rng,
-             metrics: &mut RunMetrics, epoch: &mut Option<EpochState>)
-             -> Vec<f64> {
+             dispatcher: &mut Dispatcher, backend: &mut CommBackend,
+             placement: &Placement, trace: &GateTrace, scale: f64,
+             rng: &mut Rng, metrics: &mut RunMetrics,
+             epoch: &mut Option<EpochState>) -> Vec<f64> {
     let chunk = trace.num_tokens();
     let mut phase_copies = vec![0.0f64; cfg.topo.num_gpus()];
 
@@ -376,8 +395,8 @@ fn sim_phase(sys: &SystemSpec, cfg: &SimConfig,
                 Some(s) => &s.active.layers[layer_idx],
                 None => &placement.layers[layer_idx],
             };
-            layer_round(sys, cfg, dispatcher, lp, layer_idx, layer,
-                        chunk, scale, rng, metrics)
+            layer_round(sys, cfg, dispatcher, backend, lp, layer_idx,
+                        layer, chunk, scale, rng, metrics)
         };
         for (acc, &c) in phase_copies.iter_mut()
             .zip(plan.copies_per_gpu())
@@ -397,7 +416,7 @@ fn sim_phase(sys: &SystemSpec, cfg: &SimConfig,
 /// caller can observe it.
 #[allow(clippy::too_many_arguments)]
 fn layer_round(sys: &SystemSpec, cfg: &SimConfig,
-               dispatcher: &mut Dispatcher,
+               dispatcher: &mut Dispatcher, backend: &mut CommBackend,
                lp: &crate::placement::LayerPlacement, layer_idx: usize,
                layer: &LayerTrace, chunk: usize, scale: f64,
                rng: &mut Rng, metrics: &mut RunMetrics) -> DispatchPlan {
@@ -441,8 +460,10 @@ fn layer_round(sys: &SystemSpec, cfg: &SimConfig,
     } else {
         0.0
     };
-    let mut comm = comm_round(sys, topo, &plan, overlap, rng);
-    let combine = comm_round(sys, topo, &plan, 0.0, rng);
+    let mut comm = backend.round(sys.comm, sys.dedup_flat, topo, &plan,
+                                 overlap, rng);
+    let combine = backend.round(sys.comm, sys.dedup_flat, topo, &plan,
+                                0.0, rng);
     comm.accumulate(&combine);
 
     // --- Expert compute + synchronization idle. ---
@@ -472,31 +493,6 @@ fn layer_round(sys: &SystemSpec, cfg: &SimConfig,
         + cfg.gpu.layer_overhead;
     metrics.e2e_time += (layer_time + dense) * scale;
     plan
-}
-
-/// One A2A round under the system's collective, consuming the routed
-/// batch's [`DispatchPlan`] (payload size from the plan's own byte
-/// accounting).
-fn comm_round(sys: &SystemSpec, topo: &Topology, plan: &DispatchPlan,
-              overlap: f64, rng: &mut Rng) -> CommReport {
-    match sys.comm {
-        CommModel::Flat => {
-            let m = if sys.dedup_flat {
-                traffic::per_gpu_dedup_plan(plan)
-            } else {
-                traffic::per_copy_plan(plan)
-            };
-            model::flat_all_to_all(&m, topo, rng)
-        }
-        CommModel::StagedHierarchical => {
-            let ts = traffic::two_stage_plan(plan, topo);
-            model::staged_hierarchical(&ts, topo, rng)
-        }
-        CommModel::Hsc => {
-            let ts = traffic::two_stage_plan(plan, topo);
-            model::hsc(&ts, topo, overlap, rng)
-        }
-    }
 }
 
 #[cfg(test)]

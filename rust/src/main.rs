@@ -12,16 +12,23 @@
 //! * `replan`    — drifting-workload comparison: static GRACE vs the
 //!   epoch re-planned `grace-dyn` on a trace whose hot-expert set rotates
 //!   mid-run.
+//! * `fleet`     — open-loop fleet replay: a Poisson request trace
+//!   through scheduler + re-planner + the contended discrete-event
+//!   network (`--comm des`) on a virtual clock.
 
 use grace_moe::baselines::{GroupingStrategy, SystemSpec};
 use grace_moe::cli::Args;
 use grace_moe::cluster::Topology;
-use grace_moe::config::{ModelSpec, Workload};
+use grace_moe::comm::CommBackendKind;
+use grace_moe::config::{ArrivalProcess, ModelSpec, ServeLoad, Workload};
+use grace_moe::configio::Value;
 use grace_moe::coordinator::Coordinator;
+use grace_moe::engine::fleet::{replay_fleet, FleetConfig};
 use grace_moe::engine::real::{profile_real, RealModel};
 use grace_moe::engine::sim::{build_placement, drifting_rounds,
-                             simulate_rounds};
+                             simulate_rounds, simulate_with_contention};
 use grace_moe::engine::{simulate, SimConfig};
+use grace_moe::metrics::ContentionReport;
 use grace_moe::placement::ReplicationMode;
 use grace_moe::replan::ReplanConfig;
 use grace_moe::report;
@@ -35,7 +42,8 @@ const USAGE: &str = "\
 grace-moe — GRACE-MoE distributed MoE inference (paper reproduction)
 
 USAGE:
-  grace-moe <simulate|compare|components|serve|placement|replan> [options]
+  grace-moe <simulate|compare|components|serve|placement|replan|fleet>
+            [options]
 
 COMMON OPTIONS:
   --model <olmoe|dsv2_lite|qwen3>   model (default olmoe)
@@ -46,7 +54,17 @@ COMMON OPTIONS:
   --placement-dataset <...>         profiling profile (default = dataset)
   --r <ratio>                       non-uniformity ratio (default 0.15)
   --seed <u64>                      run seed (default 42)
+  --comm <analytic|des>             communication backend (default
+                                    analytic; des = contended
+                                    discrete-event network)
   --json                            machine-readable output
+
+FLEET OPTIONS (open-loop replay; also honours --comm and the
+re-planning options with --system grace-dyn):
+  --requests <n>  --prompt <len>  --new-tokens <n>
+  --arrival-rate <req/s>            Poisson rate (default 256; must be
+                                    finite and positive)
+  --max-batch <n>  --max-batch-tokens <n>  scheduler admission limits
 
 RE-PLANNING OPTIONS (simulate --system grace-dyn, serve, replan):
   --replan-epoch <rounds>           epoch length in dispatch rounds
@@ -92,19 +110,24 @@ fn run(argv: Vec<String>) -> anyhow::Result<()> {
         "serve" => cmd_serve(&args),
         "placement" => cmd_placement(&args),
         "replan" => cmd_replan(&args),
+        "fleet" => cmd_fleet(&args),
         other => anyhow::bail!("unknown subcommand '{other}'\n{USAGE}"),
     }
 }
 
-/// Parse the shared re-planning knobs (defaults per subcommand).
+/// Parse the shared re-planning knobs (defaults per subcommand),
+/// rejecting degenerate values (`--replan-epoch 0`, NaN thresholds) at
+/// parse time instead of silently never ticking.
 fn replan_config(args: &Args, default_epoch: u64)
                  -> anyhow::Result<ReplanConfig> {
-    Ok(ReplanConfig {
+    let rc = ReplanConfig {
         epoch_rounds: args.u64_or("replan-epoch", default_epoch)?,
         min_drift: args.f64_or("replan-threshold",
                                ReplanConfig::default().min_drift)?,
         ..ReplanConfig::default()
-    })
+    };
+    rc.validate()?;
+    Ok(rc)
 }
 
 fn sim_config(args: &Args) -> anyhow::Result<SimConfig> {
@@ -128,13 +151,17 @@ fn sim_config(args: &Args) -> anyhow::Result<SimConfig> {
     cfg.placement_profile = Profile::from_name(&pds)
         .ok_or_else(|| anyhow::anyhow!("unknown dataset '{pds}'"))?;
     cfg.seed = args.u64_or("seed", 42)?;
+    let comm = args.str_or("comm", "analytic");
+    cfg.comm_backend = CommBackendKind::from_name(comm)
+        .ok_or_else(|| anyhow::anyhow!(
+            "unknown --comm '{comm}' (expected analytic|des)"))?;
     Ok(cfg)
 }
 
-fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
-    let mut cfg = sim_config(args)?;
+/// Parse the `--system` selector shared by simulate and fleet.
+fn system_spec(args: &Args) -> anyhow::Result<SystemSpec> {
     let r = args.f64_or("r", 0.15)?;
-    let sys = match args.str_or("system", "grace") {
+    Ok(match args.str_or("system", "grace") {
         "grace" => SystemSpec::grace(r),
         "grace-la" => SystemSpec::grace_load_aware(r),
         "grace-dyn" => SystemSpec::grace_dyn(r),
@@ -145,21 +172,127 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         "vllm" => SystemSpec::vllm(),
         "c2r" => SystemSpec::c2r(),
         other => anyhow::bail!("unknown system '{other}'"),
-    };
+    })
+}
+
+/// Contention diagnostics as a JSON object (the DES backend's extra
+/// output, schema shared with `fleet --json`).
+fn contention_json(c: &ContentionReport) -> Value {
+    Value::object(vec![
+        ("max_utilization", Value::num(c.max_utilization)),
+        ("queue_depth_p50", Value::num(c.queue_depth_p50)),
+        ("queue_depth_p95", Value::num(c.queue_depth_p95)),
+        ("queue_depth_p99", Value::num(c.queue_depth_p99)),
+        ("queue_depth_max", Value::from(c.queue_depth_max)),
+        ("queued_wait_s", Value::num(c.queued_wait_s)),
+        ("straggler_stall_s", Value::num(c.straggler_stall_s)),
+        ("transfers", Value::from(c.transfers as usize)),
+        ("events", Value::from(c.events as usize)),
+        ("event_digest", Value::str(format!("{:016x}", c.event_digest))),
+    ])
+}
+
+/// One-line human rendering of the contention diagnostics.
+fn contention_line(c: &ContentionReport) -> String {
+    format!(
+        "des: max link util {:.1}% | queue depth p50/p95/p99 \
+         {:.1}/{:.1}/{:.1} (max {}) | queued {:.3} ms | stall {:.3} ms \
+         | {} transfers, {} events, digest {:016x}",
+        c.max_utilization * 100.0,
+        c.queue_depth_p50,
+        c.queue_depth_p95,
+        c.queue_depth_p99,
+        c.queue_depth_max,
+        c.queued_wait_s * 1e3,
+        c.straggler_stall_s * 1e3,
+        c.transfers,
+        c.events,
+        c.event_digest
+    )
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let mut cfg = sim_config(args)?;
+    let sys = system_spec(args)?;
     if sys.online_replan {
         // Two phases per run ⇒ default to an epoch per dispatch round.
         cfg.replan = Some(replan_config(args, 1)?);
     }
-    let m = simulate(&sys, &cfg);
+    let placement = build_placement(&sys, &cfg);
+    let (m, contention) =
+        simulate_with_contention(&sys, &cfg, &placement);
     if args.flag("json") {
-        println!(
-            "{}",
-            grace_moe::configio::to_string_pretty(&report::metrics_json(
-                sys.name, &m
-            ))
-        );
+        let mut v = report::metrics_json(sys.name, &m);
+        if let Some(c) = &contention {
+            if let Value::Object(map) = &mut v {
+                map.insert("contention".to_string(), contention_json(c));
+            }
+        }
+        println!("{}", grace_moe::configio::to_string_pretty(&v));
     } else {
         println!("{}", report::e2e_table(&[sys.name], &[m]).render());
+        if let Some(c) = &contention {
+            println!("{}", contention_line(c));
+        }
+    }
+    Ok(())
+}
+
+fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
+    let sim = sim_config(args)?;
+    let sys = system_spec(args)?;
+    let rate = args.f64_or("arrival-rate", 256.0)?;
+    anyhow::ensure!(rate.is_finite() && rate > 0.0,
+                    "--arrival-rate must be finite and positive, \
+                     got {rate}");
+    let load = ServeLoad {
+        requests: args.usize_or("requests", 512)?,
+        prompt: args.usize_or("prompt", 64)?,
+        new_tokens: args.usize_or("new-tokens", 16)?,
+        arrival: ArrivalProcess::Poisson { rate },
+    };
+    let mut fc = FleetConfig::new(sys, sim, load);
+    fc.max_batch = args.usize_or("max-batch", 32)?;
+    fc.max_batch_tokens = args.usize_or("max-batch-tokens", 1024)?;
+    if fc.sys.online_replan {
+        fc.sim.replan = Some(replan_config(args, 64)?);
+    }
+    eprintln!("fleet: {} on {} ({} backend)…", fc.load.label(),
+              fc.sys.name, fc.sim.comm_backend.name());
+    let rep = replay_fleet(&fc)?;
+    if args.flag("json") {
+        println!("{}",
+                 grace_moe::configio::to_string_pretty(&rep.to_value()));
+        return Ok(());
+    }
+    let s = &rep.serve;
+    if let Some(l) = s.latency_summary() {
+        println!("latency   mean {:.2} ms  p50 {:.2} ms  p99 {:.2} ms",
+                 l.mean() * 1e3, l.p50() * 1e3, l.p99() * 1e3);
+    }
+    if let Some(t) = s.ttft_summary() {
+        println!("ttft      mean {:.2} ms  p99 {:.2} ms",
+                 t.mean() * 1e3, t.p99() * 1e3);
+    }
+    if let Some(q) = s.queue_wait_summary() {
+        println!("queue     mean {:.2} ms  p95 {:.2} ms",
+                 q.mean() * 1e3, q.p95() * 1e3);
+    }
+    println!(
+        "virtual   {:.3} s for {} requests | {:.1} tok/s | {} steps, \
+         {} rounds",
+        s.wall_time, s.latencies.len(), s.throughput_tps(), s.steps,
+        s.dispatch_rounds
+    );
+    println!(
+        "comm      {:.3} s a2a | {:.1} MB cross | {:.1} MB intra | \
+         {} launches | {} replans ({:.1} MB migrated)",
+        rep.comm.time, rep.comm.cross_bytes / 1e6,
+        rep.comm.intra_bytes / 1e6, rep.comm.launches, rep.replans,
+        rep.migration_bytes / 1e6
+    );
+    if let Some(c) = &rep.contention {
+        println!("{}", contention_line(c));
     }
     Ok(())
 }
@@ -224,6 +357,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let new_tokens = args.usize_or("new-tokens", 8)?;
     let seed = args.u64_or("seed", 42)?;
     let arrival_rate = args.f64_or("arrival-rate", 0.0)?;
+    if args.get("arrival-rate").is_some() {
+        // Explicitly-passed rates must be usable; a silent fall-back to
+        // the closed loop would misreport every latency metric.
+        anyhow::ensure!(arrival_rate.is_finite() && arrival_rate > 0.0,
+                        "--arrival-rate must be finite and positive, \
+                         got {arrival_rate}; omit it for the closed \
+                         loop");
+    }
     let sched = match args.str_or("sched", "continuous") {
         "continuous" => grace_moe::server::SchedMode::Continuous,
         "static" => grace_moe::server::SchedMode::StaticDrain,
@@ -247,6 +388,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             grace_moe::config::ArrivalProcess::Closed
         },
     };
+    load.validate()?;
 
     eprintln!("loading {variant} from {dir}…");
     let model = Arc::new(RealModel::load(dir, variant)?);
@@ -408,6 +550,9 @@ fn cmd_replan(args: &Args) -> anyhow::Result<()> {
     let cfg = sim_config(args)?;
     let r = args.f64_or("r", 0.15)?;
     let rounds_n = args.usize_or("rounds", 12)?;
+    anyhow::ensure!(rounds_n > 0,
+                    "--rounds must be at least 1 (a zero-length trace \
+                     replays nothing)");
     let drift_at = args.usize_or("drift-at", rounds_n / 3)?;
     let tokens = args
         .usize_or("round-tokens", 2048)?

@@ -72,6 +72,42 @@ impl RunMetrics {
     }
 }
 
+/// Contention diagnostics of one discrete-event network replay
+/// ([`crate::comm::sim`]): how hard each simulated link was driven and
+/// how much time transfers spent queued behind one another — the
+/// quantities the analytic α–β models cannot see.
+///
+/// Link order matches [`crate::comm::sim::NetworkSim`]: per-GPU egress
+/// ports, per-GPU ingress ports, per-node NIC-out, per-node NIC-in.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ContentionReport {
+    /// Busy fraction of each link over the replay horizon (first submit
+    /// → last departure).
+    pub per_link_utilization: Vec<f64>,
+    /// Utilization of the hottest link (the saturation indicator).
+    pub max_utilization: f64,
+    /// Median link queue depth sampled at transfer arrivals.
+    pub queue_depth_p50: f64,
+    /// 95th-percentile arrival-sampled queue depth.
+    pub queue_depth_p95: f64,
+    /// 99th-percentile arrival-sampled queue depth.
+    pub queue_depth_p99: f64,
+    /// Deepest queue observed on any link.
+    pub queue_depth_max: usize,
+    /// Seconds transfers spent waiting behind earlier transfers, summed
+    /// over all links (zero on uncontended traffic).
+    pub queued_wait_s: f64,
+    /// Seconds lost to straggler synchronization across all collectives.
+    pub straggler_stall_s: f64,
+    /// Point-to-point transfers replayed.
+    pub transfers: u64,
+    /// Typed events processed by the event loop.
+    pub events: u64,
+    /// FNV-1a digest of the full event log — two runs with the same seed
+    /// must agree bit-for-bit (the `des-smoke` CI gate).
+    pub event_digest: u64,
+}
+
 /// Timing of one served request on the driver clock (wall-clock seconds
 /// in the real server, virtual seconds in the scheduler harness). The
 /// logical step indices make admission ordering assertable without

@@ -50,6 +50,7 @@ use crate::cluster::{GpuId, Topology};
 use crate::comm::traffic::TrafficMatrix;
 use crate::config::{GpuModel, ModelSpec};
 use crate::linalg::Matrix;
+use crate::metrics::ServeMetrics;
 use crate::placement::{instances_for, LayerPlacement, Placement};
 use crate::profile::LayerProfile;
 use crate::replication::{self, polling_weights, predict_loads,
@@ -86,6 +87,24 @@ impl Default for ReplanConfig {
     }
 }
 
+impl ReplanConfig {
+    /// Loud validation of the cadence and gates: a zero epoch cadence
+    /// would never tick, and out-of-range gates silently disable the
+    /// re-planner instead of erroring.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.epoch_rounds >= 1,
+                        "replan epoch cadence must be at least 1 round");
+        anyhow::ensure!(self.min_drift.is_finite() && self.min_drift >= 0.0,
+                        "min_drift must be finite and non-negative");
+        anyhow::ensure!(self.payback.is_finite() && self.payback >= 0.0,
+                        "payback must be finite and non-negative");
+        anyhow::ensure!(self.alpha > 0.0 && self.alpha <= 1.0,
+                        "EWMA alpha must be in (0, 1], got {}",
+                        self.alpha);
+        Ok(())
+    }
+}
+
 /// Physical constants of the migration cost model.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CostParams {
@@ -117,6 +136,38 @@ impl CostParams {
             expert_bytes: (3 * cfg.hidden * cfg.ffn * 4) as f64,
             moe_s_per_assignment: 100e-6,
         }
+    }
+
+    /// Cost model observed from a serving window: `secs` of measured
+    /// step time over `computed_tokens` computed tokens (each token is
+    /// [`ModelSpec::top_k`] routed assignments). `None` when the window
+    /// is empty or the measurement degenerate — callers then keep their
+    /// previous cost model.
+    pub fn from_observed(model: &ModelSpec, secs: f64,
+                         computed_tokens: usize) -> Option<CostParams> {
+        if computed_tokens == 0 || !secs.is_finite() || secs <= 0.0 {
+            return None;
+        }
+        let assignments = (computed_tokens * model.top_k) as f64;
+        Some(CostParams {
+            expert_bytes: model.expert_bytes(),
+            moe_s_per_assignment: secs / assignments,
+        })
+    }
+
+    /// Cost model from measured serving metrics: prefers the TPOT
+    /// distribution (mean seconds per decoded token, i.e. per computed
+    /// token under KV-cached decode), falling back to wall time over
+    /// computed tokens when no request decoded two tokens. The payback
+    /// gate then prices migrations with the deployment's *measured*
+    /// speed instead of the a-priori GPU model.
+    pub fn from_measured(model: &ModelSpec, serve: &ServeMetrics)
+                         -> Option<CostParams> {
+        if let Some(tpot) = serve.tpot_summary() {
+            return Self::from_observed(model, tpot.mean(), 1);
+        }
+        Self::from_observed(model, serve.wall_time,
+                            serve.computed_tokens)
     }
 }
 
@@ -262,6 +313,15 @@ impl Replanner {
     /// The configured migration cost model.
     pub fn cost(&self) -> CostParams {
         self.cost
+    }
+
+    /// Replace the migration cost model mid-run — the measured-feedback
+    /// path ([`CostParams::from_measured`] /
+    /// [`CostParams::from_observed`]): serving drivers refresh the
+    /// payback gate with observed per-step wall time so gating tracks
+    /// the deployment's real speed.
+    pub fn update_cost(&mut self, cost: CostParams) {
+        self.cost = cost;
     }
 
     /// Epochs evaluated so far (ticks that reached the boundary).
@@ -611,6 +671,104 @@ mod tests {
             }
         }
         assert_eq!(rp.epochs(), 2, "epochs at rounds 3 and 6");
+    }
+
+    #[test]
+    fn config_validation_is_loud() {
+        assert!(ReplanConfig::default().validate().is_ok());
+        let bad_epoch =
+            ReplanConfig { epoch_rounds: 0, ..ReplanConfig::default() };
+        assert!(bad_epoch.validate().is_err());
+        let bad_drift = ReplanConfig { min_drift: f64::NAN,
+                                       ..ReplanConfig::default() };
+        assert!(bad_drift.validate().is_err());
+        let bad_payback = ReplanConfig { payback: -1.0,
+                                         ..ReplanConfig::default() };
+        assert!(bad_payback.validate().is_err());
+        let bad_alpha =
+            ReplanConfig { alpha: 0.0, ..ReplanConfig::default() };
+        assert!(bad_alpha.validate().is_err());
+    }
+
+    #[test]
+    fn observed_cost_divides_secs_by_assignments() {
+        let model = crate::config::ModelSpec::olmoe();
+        let c = CostParams::from_observed(&model, 0.8, 100).unwrap();
+        assert_eq!(c.expert_bytes, model.expert_bytes());
+        // 100 tokens × top-8 = 800 assignments over 0.8 s → 1 ms each.
+        assert!((c.moe_s_per_assignment - 1e-3).abs() < 1e-12);
+        assert!(CostParams::from_observed(&model, 0.8, 0).is_none());
+        assert!(CostParams::from_observed(&model, 0.0, 100).is_none());
+        assert!(CostParams::from_observed(&model, f64::NAN, 100)
+            .is_none());
+    }
+
+    #[test]
+    fn measured_cost_prefers_tpot_then_wall_time() {
+        let model = crate::config::ModelSpec::olmoe();
+        let with_tpot = crate::metrics::ServeMetrics {
+            tpot: vec![8e-3, 8e-3],
+            wall_time: 100.0,
+            computed_tokens: 10,
+            ..Default::default()
+        };
+        let c = CostParams::from_measured(&model, &with_tpot).unwrap();
+        // TPOT path: 8 ms per token / top-8 = 1 ms per assignment —
+        // the wall-time fallback (100 s / 80) must NOT be used.
+        assert!((c.moe_s_per_assignment - 1e-3).abs() < 1e-12);
+
+        let no_tpot = crate::metrics::ServeMetrics {
+            wall_time: 0.8,
+            computed_tokens: 100,
+            ..Default::default()
+        };
+        let c = CostParams::from_measured(&model, &no_tpot).unwrap();
+        assert!((c.moe_s_per_assignment - 1e-3).abs() < 1e-12);
+
+        let empty = crate::metrics::ServeMetrics::default();
+        assert!(CostParams::from_measured(&model, &empty).is_none());
+    }
+
+    #[test]
+    fn measured_cost_reopens_the_payback_gate() {
+        // Regression for the measured-feedback path: the same drift
+        // that a dear a-priori cost model withholds must be applied
+        // once update_cost installs a measured model whose compute is
+        // expensive enough to repay the copy. Mirrors
+        // cost_gate_withholds_unprofitable_migrations.
+        let p = placement_from_loads(vec![280.0, 60.0, 40.0, 20.0]);
+        let dear = CostParams {
+            expert_bytes: 8.0,
+            moe_s_per_assignment: 1e-12,
+        };
+        let mut rp = Replanner::new(topo(), cfg_every_round(1.0), dear);
+        for _ in 0..6 {
+            observe_round(&mut rp, &p, &[20, 40, 60, 280]);
+            assert!(rp.epoch_tick(&p).is_empty(),
+                    "dear cost model must withhold the migration");
+        }
+        assert!(rp.rejected() > 0);
+
+        // A serving window measured at 1 ms per assignment: slow
+        // compute, so flattening the load is worth the 8-byte copy.
+        let model = crate::config::ModelSpec::olmoe();
+        let measured =
+            CostParams::from_observed(&model, 0.8, 100).unwrap();
+        rp.update_cost(CostParams {
+            expert_bytes: 8.0,
+            moe_s_per_assignment: measured.moe_s_per_assignment,
+        });
+        assert_eq!(rp.cost().moe_s_per_assignment, 1e-3);
+        let mut applied = false;
+        for _ in 0..6 {
+            observe_round(&mut rp, &p, &[20, 40, 60, 280]);
+            if !rp.epoch_tick(&p).is_empty() {
+                applied = true;
+                break;
+            }
+        }
+        assert!(applied,
+                "measured cost model must reopen the payback gate");
     }
 
     #[test]

@@ -1,0 +1,258 @@
+//! Integration tests for the contention-aware cluster simulator: the
+//! PR-7 acceptance invariants pinned from outside the crate.
+//!
+//! * **agreement** — uncontended DES collectives reproduce the analytic
+//!   closed forms, per collective and end-to-end through the serialized
+//!   engine (`simulate_with_contention` on the `des` backend);
+//! * **determinism** — same seed ⇒ bit-identical event log, digest, and
+//!   contention report (the `des-smoke` CI gate in miniature);
+//! * **conservation** — bytes entering each link equal bytes leaving it,
+//!   including external request ingest;
+//! * **fleet** — open-loop replay serves every request on both backends,
+//!   the DES arm never beats the uncontended closed form, and a
+//!   saturating burst strictly exceeds it;
+//! * **validation** — degenerate loads and configs fail loudly at
+//!   construction, not as NaNs mid-replay.
+
+use grace_moe::baselines::SystemSpec;
+use grace_moe::cluster::Topology;
+use grace_moe::comm::model;
+use grace_moe::comm::sim as des;
+use grace_moe::comm::traffic::{per_copy, two_stage, Dispatch};
+use grace_moe::comm::{CommBackend, CommBackendKind, NetworkSim};
+use grace_moe::config::{ArrivalProcess, ModelSpec, ServeLoad, Workload};
+use grace_moe::engine::sim::{build_placement, simulate_with_contention,
+                             SimConfig};
+use grace_moe::engine::{replay_fleet, FleetConfig};
+use grace_moe::replan::ReplanConfig;
+use grace_moe::stats::Rng;
+
+fn close(a: f64, b: f64, rel: f64) -> bool {
+    (a - b).abs() <= rel * a.abs().max(b.abs()).max(1.0)
+}
+
+/// Cross-node-heavy dispatch set: every token fans out to both GPUs of
+/// the other node.
+fn cross_heavy(n_tokens: usize, num_gpus: usize) -> Vec<Dispatch> {
+    let half = num_gpus / 2;
+    (0..n_tokens)
+        .map(|i| Dispatch {
+            src: i % half,
+            dsts: (half..num_gpus).collect(),
+        })
+        .collect()
+}
+
+fn small_sim(backend: CommBackendKind) -> SimConfig {
+    let model = ModelSpec { moe_layers: 2, ..ModelSpec::olmoe() };
+    let mut sim = SimConfig::new(
+        model,
+        Topology::two_by_two(),
+        Workload { batch: 8, prefill: 8, decode: 2 },
+    );
+    sim.profile_tokens = 256;
+    sim.max_chunk = 256;
+    sim.comm_backend = backend;
+    sim
+}
+
+fn fleet_cfg(backend: CommBackendKind, rate: f64) -> FleetConfig {
+    let load = ServeLoad {
+        requests: 10,
+        prompt: 6,
+        new_tokens: 2,
+        arrival: ArrivalProcess::Poisson { rate },
+    };
+    let mut cfg = FleetConfig::new(SystemSpec::grace(0.15),
+                                   small_sim(backend), load);
+    cfg.max_batch = 4;
+    cfg.max_batch_tokens = 48;
+    cfg
+}
+
+// --- agreement --------------------------------------------------------------
+
+#[test]
+fn uncontended_collectives_reproduce_analytic_times() {
+    let t = Topology::paper_testbed(2, 4);
+    let disp = cross_heavy(300, t.num_gpus());
+    let flat_m = per_copy(&disp, t.num_gpus(), 2048.0);
+    let ts = two_stage(&disp, &t, 2048.0);
+    for seed in 0..4 {
+        let a = model::flat_all_to_all(&flat_m, &t, &mut Rng::new(seed));
+        let mut net = NetworkSim::new(&t);
+        let d = des::flat_all_to_all(&mut net, &flat_m, &t, 0.0,
+                                     &mut Rng::new(seed));
+        assert!(close(a.time, d.time, 1e-9),
+                "flat seed {seed}: analytic {} vs DES {}", a.time, d.time);
+
+        let a = model::staged_hierarchical(&ts, &t, &mut Rng::new(seed));
+        let mut net = NetworkSim::new(&t);
+        let d = des::staged_hierarchical(&mut net, &ts, &t, 0.0,
+                                         &mut Rng::new(seed));
+        assert!(close(a.time, d.time, 1e-9),
+                "staged seed {seed}: analytic {} vs DES {}",
+                a.time, d.time);
+
+        let a = model::hsc(&ts, &t, 1e-5, &mut Rng::new(seed));
+        let mut net = NetworkSim::new(&t);
+        let d = des::hsc(&mut net, &ts, &t, 1e-5, 0.0,
+                         &mut Rng::new(seed));
+        assert!(close(a.time, d.time, 1e-9),
+                "hsc seed {seed}: analytic {} vs DES {}", a.time, d.time);
+    }
+}
+
+#[test]
+fn serialized_engine_on_des_backend_matches_analytic_end_to_end() {
+    // The round-based engine submits every collective at the DES cursor
+    // (back-to-back rounds), so the contended network never actually
+    // queues and the whole run must reproduce the analytic metrics.
+    for sys in [SystemSpec::vanilla(), SystemSpec::grace(0.15)] {
+        let ana = small_sim(CommBackendKind::Analytic);
+        let placement = build_placement(&sys, &ana);
+        let (ma, ca) = simulate_with_contention(&sys, &ana, &placement);
+        let des_cfg = small_sim(CommBackendKind::Des);
+        let (md, cd) = simulate_with_contention(&sys, &des_cfg,
+                                                &placement);
+        assert!(ca.is_none(), "analytic backend reports no contention");
+        assert!(close(ma.a2a_time, md.a2a_time, 1e-6),
+                "{}: a2a {} vs {}", sys.name, ma.a2a_time, md.a2a_time);
+        assert!(close(ma.e2e_time, md.e2e_time, 1e-6),
+                "{}: e2e {} vs {}", sys.name, ma.e2e_time, md.e2e_time);
+        assert_eq!(ma.launches, md.launches);
+        let c = cd.expect("DES backend reports contention");
+        assert!(c.transfers > 0);
+        assert!(c.max_utilization > 0.0 && c.max_utilization <= 1.0 + 1e-9,
+                "utilization {}", c.max_utilization);
+    }
+}
+
+// --- determinism ------------------------------------------------------------
+
+#[test]
+fn same_seed_produces_identical_event_log_and_digest() {
+    let t = Topology::two_by_two();
+    let disp = cross_heavy(120, 4);
+    let m = per_copy(&disp, 4, 1024.0);
+    let run = || {
+        let mut b = CommBackend::new(CommBackendKind::Des, &t);
+        b.net_mut().unwrap().enable_log();
+        let mut rng = Rng::new(11);
+        // Overlapping submissions: two rounds at the same instant plus
+        // an ingest DMA landing mid-flight, so contention is real.
+        b.flat_round_at(&m, &t, 0.0, &mut rng);
+        b.flat_round_at(&m, &t, 0.0, &mut rng);
+        b.ingest(2, 8192.0, 1e-6);
+        let rep = b.contention().unwrap();
+        let log = b.net_mut().unwrap().log().unwrap().to_vec();
+        (rep, log)
+    };
+    let (ra, la) = run();
+    let (rb, lb) = run();
+    assert_eq!(ra, rb, "contention reports diverge across reruns");
+    assert_eq!(la, lb, "event logs diverge across reruns");
+    assert!(!la.is_empty());
+    assert!(ra.queued_wait_s > 0.0,
+            "overlapping rounds must actually queue");
+}
+
+#[test]
+fn replanning_fleet_on_the_contended_network_is_deterministic() {
+    let mut cfg = fleet_cfg(CommBackendKind::Des, 5e4);
+    cfg.sys = SystemSpec::grace_dyn(0.15);
+    cfg.sim.replan = Some(ReplanConfig {
+        epoch_rounds: 2,
+        min_drift: 0.05,
+        ..ReplanConfig::default()
+    });
+    let a = replay_fleet(&cfg).unwrap();
+    let b = replay_fleet(&cfg).unwrap();
+    assert_eq!(a.serve.latencies.len(), 10);
+    assert_eq!(a.to_value(), b.to_value(),
+               "fleet replay with replanning diverges across reruns");
+}
+
+// --- conservation -----------------------------------------------------------
+
+#[test]
+fn bytes_entering_each_link_equal_bytes_leaving() {
+    let t = Topology::two_by_two();
+    let disp = cross_heavy(250, 4);
+    let m = per_copy(&disp, 4, 1024.0);
+    let mut net = NetworkSim::new(&t);
+    net.replay_stage(&m, 0.0);
+    let ingest_bytes = 4096.0;
+    net.ingest(3, ingest_bytes, 0.0);
+    for g in 0..4 {
+        assert_eq!(net.egress_bytes(g), m.egress(g),
+                   "egress bytes of GPU {g}");
+        let extra = if g == 3 { ingest_bytes } else { 0.0 };
+        assert_eq!(net.ingress_bytes(g), m.ingress(g) + extra,
+                   "ingress bytes of GPU {g}");
+    }
+    let out: f64 = (0..2).map(|n| net.nic_out_bytes(n)).sum();
+    let inn: f64 = (0..2).map(|n| net.nic_in_bytes(n)).sum();
+    assert_eq!(out, m.cross_node_bytes(&t));
+    assert_eq!(inn, m.cross_node_bytes(&t) + ingest_bytes,
+               "NIC-in must carry the cross traffic plus the ingest DMA");
+}
+
+// --- fleet ------------------------------------------------------------------
+
+#[test]
+fn des_fleet_never_beats_analytic_and_saturation_strictly_exceeds_it() {
+    for (rate, must_exceed) in [(3.0, false), (5e4, true)] {
+        let ana = replay_fleet(&fleet_cfg(CommBackendKind::Analytic,
+                                          rate))
+            .unwrap();
+        let d = replay_fleet(&fleet_cfg(CommBackendKind::Des, rate))
+            .unwrap();
+        assert_eq!(ana.serve.latencies.len(), 10);
+        assert_eq!(d.serve.latencies.len(), 10);
+        let la = ana.serve.latency_summary().unwrap().mean();
+        let ld = d.serve.latency_summary().unwrap().mean();
+        assert!(ld >= la - 1e-12,
+                "rate {rate}: DES mean {ld} beats analytic {la}");
+        if must_exceed {
+            assert!(ld > la,
+                    "saturating burst shows no contention: DES {ld} vs \
+                     analytic {la}");
+            let c = d.contention.expect("DES contention report");
+            assert!(c.queued_wait_s > 0.0,
+                    "burst arm recorded no link queueing");
+        }
+    }
+}
+
+// --- validation -------------------------------------------------------------
+
+#[test]
+fn degenerate_configs_fail_loudly_before_replaying() {
+    let ok = fleet_cfg(CommBackendKind::Des, 100.0);
+
+    let mut bad = ok.clone();
+    bad.load.requests = 0;
+    assert!(replay_fleet(&bad).is_err(), "zero requests must error");
+
+    let mut bad = ok.clone();
+    bad.load.arrival = ArrivalProcess::Poisson { rate: 0.0 };
+    assert!(replay_fleet(&bad).is_err(), "zero rate must error");
+
+    let mut bad = ok.clone();
+    bad.load.arrival = ArrivalProcess::Poisson { rate: f64::NAN };
+    assert!(replay_fleet(&bad).is_err(), "NaN rate must error");
+
+    let mut bad = ok.clone();
+    bad.max_batch = 0;
+    assert!(replay_fleet(&bad).is_err(), "zero max_batch must error");
+
+    let bad_replan = ReplanConfig { epoch_rounds: 0,
+                                    ..ReplanConfig::default() };
+    assert!(bad_replan.validate().is_err(),
+            "zero-round replan epoch must error");
+
+    assert_eq!(CommBackendKind::from_name("bogus"), None);
+    assert_eq!(CommBackendKind::from_name("des"),
+               Some(CommBackendKind::Des));
+}
