@@ -48,6 +48,7 @@ fn requests(load: &ServeLoad) -> Vec<Request> {
                 .map(|p| ((i * 131 + p * 17) % 512) as i32)
                 .collect(),
             max_new_tokens: load.new_tokens,
+            priority: 0,
         })
         .collect()
 }
@@ -67,6 +68,7 @@ fn run_arm(load: &ServeLoad, kv: bool, seed: u64)
         max_batch_tokens: 4 * CTX,
         ctx: CTX,
         kv_cache: kv,
+        ..SchedConfig::default()
     };
     let engine = RefCell::new(FakeKvEngine::new(LAYERS, TILE_T, kv));
     let out = simulate_serve_with(

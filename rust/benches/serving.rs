@@ -51,6 +51,7 @@ fn requests(load: &ServeLoad) -> Vec<Request> {
                 .map(|p| ((i * 131 + p * 17) % 512) as i32)
                 .collect(),
             max_new_tokens: load.new_tokens,
+            priority: 0,
         })
         .collect()
 }
@@ -71,6 +72,7 @@ fn run_arm(load: &ServeLoad, mode: SchedMode, seed: u64)
         // discipline/forward-shape comparison (KV-cached pricing gets
         // its own bench, `benches/kv_cache.rs`).
         kv_cache: false,
+        ..SchedConfig::default()
     };
     let (_, metrics) = simulate_serve(
         cfg,

@@ -129,6 +129,7 @@ fn main() -> anyhow::Result<()> {
             id: i,
             prompt: (0..24).map(|_| rng.index(c.vocab) as i32).collect(),
             max_new_tokens: 8,
+            priority: 0,
         })
         .collect();
     let t0 = Instant::now();
@@ -180,6 +181,7 @@ fn main() -> anyhow::Result<()> {
             id: i,
             prompt: (0..24).map(|_| rng.index(c.vocab) as i32).collect(),
             max_new_tokens: 8,
+            priority: 0,
         })
         .collect();
     let (responses2, _) = server2.serve(again)?;

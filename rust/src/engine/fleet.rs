@@ -58,15 +58,25 @@ pub struct FleetConfig {
     pub max_batch: usize,
     /// Token budget one batched step may compute.
     pub max_batch_tokens: usize,
+    /// Priority classes to spread the trace over: request `i` gets
+    /// class `i % priority_classes` (1, the default, keeps the whole
+    /// trace in class 0 — the pre-priority replay, bit-for-bit).
+    pub priority_classes: usize,
+    /// Evict lower-priority decodes for higher-priority arrivals.
+    pub preempt: bool,
+    /// Per-class TTFT deadlines, seconds (empty: no SLO shedding).
+    pub ttft_slo: Vec<f64>,
 }
 
 impl FleetConfig {
     /// Fleet over `sys`/`sim`/`load` with default admission limits
-    /// (32 live sequences, 2048 computed tokens per step).
+    /// (32 live sequences, 2048 computed tokens per step), one
+    /// priority class, and no preemption or SLO shedding.
     pub fn new(sys: SystemSpec, sim: SimConfig, load: ServeLoad)
                -> FleetConfig {
         FleetConfig { sys, sim, load, max_batch: 32,
-                      max_batch_tokens: 2048 }
+                      max_batch_tokens: 2048, priority_classes: 1,
+                      preempt: false, ttft_slo: Vec::new() }
     }
 
     /// Loud input validation: a zero-length trace, an empty prompt, a
@@ -79,6 +89,13 @@ impl FleetConfig {
                         "max_batch must be at least 1");
         anyhow::ensure!(self.max_batch_tokens > 0,
                         "max_batch_tokens must be at least 1");
+        anyhow::ensure!(self.priority_classes > 0,
+                        "priority_classes must be at least 1");
+        for (class, &slo) in self.ttft_slo.iter().enumerate() {
+            anyhow::ensure!(slo.is_finite() && slo > 0.0,
+                            "ttft_slo[{class}] = {slo} (want a \
+                             positive finite deadline)");
+        }
         if let Some(rc) = self.sim.replan {
             rc.validate()?;
         }
@@ -136,7 +153,32 @@ impl FleetReport {
             ("launches", Value::from(self.comm.launches)),
             ("replans", Value::from(self.replans)),
             ("migration_bytes", Value::num(self.migration_bytes)),
+            ("preemptions", Value::from(self.serve.preemptions)),
+            ("resumes", Value::from(self.serve.resumes)),
+            ("rejected", Value::from(self.serve.rejected.len())),
         ];
+        // Per-priority-class tails: the quantities the preemption bench
+        // compares (urgent traffic's TTFT must not sit behind
+        // background decodes).
+        let classes = self.serve.priority_classes();
+        let class_fields: Vec<(String, Value)> = classes
+            .iter()
+            .flat_map(|&c| {
+                let ttft = self.serve.ttft_summary_class(c);
+                let tpot = self.serve.tpot_summary_class(c);
+                vec![
+                    (format!("ttft_p95_class{c}_s"),
+                     Value::num(ttft.as_ref()
+                         .map_or(0.0, |s| s.p95()))),
+                    (format!("tpot_mean_class{c}_s"),
+                     Value::num(tpot.as_ref()
+                         .map_or(0.0, |s| s.mean()))),
+                ]
+            })
+            .collect();
+        for (k, v) in &class_fields {
+            fields.push((k.as_str(), v.clone()));
+        }
         if let Some(c) = &self.contention {
             fields.push(("contention", Value::object(vec![
                 ("max_utilization", Value::num(c.max_utilization)),
@@ -228,12 +270,16 @@ fn fold_comm(total: &mut CommReport, rep: &CommReport) {
     total.sync_time += rep.sync_time;
 }
 
-/// Deterministic synthetic prompt for request `id`.
-fn synth_request(id: u64, prompt: usize, new_tokens: usize) -> Request {
+/// Deterministic synthetic prompt for request `id`; priority class
+/// round-robins over `classes` so a mixed-priority trace interleaves
+/// urgent and background traffic uniformly.
+fn synth_request(id: u64, prompt: usize, new_tokens: usize,
+                 classes: usize) -> Request {
     let prompt = (0..prompt)
         .map(|p| ((id as usize * 1009 + p * 31) % 997) as i32)
         .collect();
-    Request { id, prompt, max_new_tokens: new_tokens }
+    Request { id, prompt, max_new_tokens: new_tokens,
+              priority: id as usize % classes.max(1) }
 }
 
 /// Replay the whole [`ServeLoad`] through scheduler + re-planner +
@@ -270,7 +316,8 @@ pub fn replay_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetReport> {
         .enumerate()
         .map(|(i, t)| {
             (synth_request(i as u64, cfg.load.prompt,
-                           cfg.load.new_tokens), t)
+                           cfg.load.new_tokens, cfg.priority_classes),
+             t)
         })
         .collect();
 
@@ -280,6 +327,9 @@ pub fn replay_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetReport> {
         max_batch_tokens: cfg.max_batch_tokens,
         ctx: cfg.load.prompt + cfg.load.new_tokens,
         kv_cache: true,
+        preempt: cfg.preempt,
+        retain_cache_tokens: usize::MAX,
+        ttft_slo: cfg.ttft_slo.clone(),
     })?;
 
     let mut comm_total = CommReport::default();
@@ -313,7 +363,14 @@ pub fn replay_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetReport> {
                 sched.offer(req, t);
                 continue;
             }
-            if !sched.admit_pending(now)? {
+            let progressed = sched.admit_pending(now)?;
+            // No engine-side caches to keep in lockstep here — cached
+            // pricing self-accounts through `cached_len` (a dropped
+            // cache re-prices resume as a full prefill) — but the
+            // event buffer must not grow unboundedly over a 10⁵-request
+            // replay.
+            sched.take_events();
+            if !progressed {
                 break;
             }
         }
@@ -580,6 +637,14 @@ mod tests {
         no_batch.max_batch = 0;
         assert!(replay_fleet(&no_batch).is_err());
 
+        let mut no_class = good.clone();
+        no_class.priority_classes = 0;
+        assert!(replay_fleet(&no_class).is_err());
+
+        let mut bad_slo = good.clone();
+        bad_slo.ttft_slo = vec![0.0];
+        assert!(replay_fleet(&bad_slo).is_err());
+
         let mut bad_epoch = good;
         bad_epoch.sim.replan =
             Some(ReplanConfig { epoch_rounds: 0,
@@ -594,7 +659,41 @@ mod tests {
         assert_eq!(v.str_or("backend", ""), "des");
         assert_eq!(v.req_usize("requests").unwrap(), 12);
         assert!(v.req_f64("wall_time_s").unwrap() > 0.0);
+        assert_eq!(v.req_usize("preemptions").unwrap(), 0);
+        assert_eq!(v.req_usize("rejected").unwrap(), 0);
+        assert!(v.req_f64("ttft_p95_class0_s").unwrap() > 0.0);
         let c = v.req("contention").unwrap();
         assert_eq!(c.req_str("event_digest").unwrap().len(), 16);
+    }
+
+    #[test]
+    fn priority_fleet_replays_per_class_and_stays_deterministic() {
+        // Two classes, preemption on, a crush arrival rate: every
+        // request still completes (no SLO set), both classes report
+        // tails, and the replay stays bit-deterministic.
+        let mut cfg = small_fleet(CommBackendKind::Analytic, 1e4);
+        cfg.priority_classes = 2;
+        cfg.preempt = true;
+        let a = replay_fleet(&cfg).unwrap();
+        let b = replay_fleet(&cfg).unwrap();
+        assert_eq!(a.serve.latencies.len(), 12);
+        assert_eq!(a.serve.rejected.len(), 0);
+        assert_eq!(a.serve.priority_classes(), vec![0, 1]);
+        assert_eq!(a.to_value(), b.to_value());
+        let v = a.to_value();
+        assert!(v.req_f64("ttft_p95_class0_s").unwrap() > 0.0);
+        assert!(v.req_f64("ttft_p95_class1_s").unwrap() > 0.0);
+        // SLO shedding surfaces loudly in the report.
+        let mut shed = small_fleet(CommBackendKind::Analytic, 1e4);
+        shed.ttft_slo = vec![1e-9, 1e9];
+        shed.priority_classes = 2;
+        let r = replay_fleet(&shed).unwrap();
+        assert!(!r.serve.rejected.is_empty(),
+                "a 1 ns class-0 deadline must shed");
+        assert_eq!(
+            r.serve.latencies.len() + r.serve.rejected.len(),
+            12,
+            "every request either completes or is shed loudly"
+        );
     }
 }

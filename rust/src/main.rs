@@ -59,6 +59,16 @@ COMMON OPTIONS:
                                     discrete-event network)
   --json                            machine-readable output
 
+PRIORITY OPTIONS (serve, fleet):
+  --priority-classes <n>            round-robin request priority classes
+                                    (default 1; class 0 most urgent)
+  --preempt <on|off>                evict lower-priority decodes when a
+                                    higher-priority arrival cannot be
+                                    admitted (default off)
+  --ttft-slo <s[,s...]>             per-class TTFT deadline in seconds;
+                                    requests predicted to miss it are
+                                    rejected loudly (default: no SLO)
+
 FLEET OPTIONS (open-loop replay; also honours --comm and the
 re-planning options with --system grace-dyn):
   --requests <n>  --prompt <len>  --new-tokens <n>
@@ -128,6 +138,35 @@ fn replan_config(args: &Args, default_epoch: u64)
     };
     rc.validate()?;
     Ok(rc)
+}
+
+/// Parse the priority/preemption knobs shared by `serve` and `fleet`:
+/// `--priority-classes`, `--preempt on|off`, `--ttft-slo s[,s...]`.
+/// Degenerate values (zero classes, non-positive deadlines) are loud
+/// parse errors, mirroring the library-side validation.
+fn priority_opts(args: &Args) -> anyhow::Result<(usize, bool, Vec<f64>)> {
+    let classes = args.usize_or("priority-classes", 1)?;
+    anyhow::ensure!(classes >= 1,
+                    "--priority-classes must be at least 1");
+    let preempt = match args.str_or("preempt", "off") {
+        "on" => true,
+        "off" => false,
+        other => anyhow::bail!("unknown --preempt '{other}' \
+                                (expected on|off)"),
+    };
+    let mut slo = Vec::new();
+    if let Some(spec) = args.get("ttft-slo") {
+        for tok in spec.split(',') {
+            let t = tok.trim();
+            let s: f64 = t.parse().map_err(|_| anyhow::anyhow!(
+                "--ttft-slo: '{t}' is not a number"))?;
+            anyhow::ensure!(s.is_finite() && s > 0.0,
+                            "--ttft-slo deadlines must be finite and \
+                             positive, got {s}");
+            slo.push(s);
+        }
+    }
+    Ok((classes, preempt, slo))
 }
 
 fn sim_config(args: &Args) -> anyhow::Result<SimConfig> {
@@ -254,6 +293,10 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     let mut fc = FleetConfig::new(sys, sim, load);
     fc.max_batch = args.usize_or("max-batch", 32)?;
     fc.max_batch_tokens = args.usize_or("max-batch-tokens", 1024)?;
+    let (classes, preempt, slo) = priority_opts(args)?;
+    fc.priority_classes = classes;
+    fc.preempt = preempt;
+    fc.ttft_slo = slo;
     if fc.sys.online_replan {
         fc.sim.replan = Some(replan_config(args, 64)?);
     }
@@ -273,6 +316,19 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     if let Some(t) = s.ttft_summary() {
         println!("ttft      mean {:.2} ms  p99 {:.2} ms",
                  t.mean() * 1e3, t.p99() * 1e3);
+    }
+    if classes > 1 {
+        for c in s.priority_classes() {
+            if let Some(t) = s.ttft_summary_class(c) {
+                println!("ttft[{c}]   mean {:.2} ms  p95 {:.2} ms  \
+                          p99 {:.2} ms",
+                         t.mean() * 1e3, t.p95() * 1e3, t.p99() * 1e3);
+            }
+        }
+    }
+    if s.preemptions > 0 || s.resumes > 0 || !s.rejected.is_empty() {
+        println!("sched     {} preemptions | {} resumes | {} rejected",
+                 s.preemptions, s.resumes, s.rejected.len());
     }
     if let Some(q) = s.queue_wait_summary() {
         println!("queue     mean {:.2} ms  p95 {:.2} ms",
@@ -376,6 +432,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         other => anyhow::bail!("unknown --kv-cache '{other}' \
                                 (expected on|off)"),
     };
+    let (classes, preempt, ttft_slo) = priority_opts(args)?;
     let load = grace_moe::config::ServeLoad {
         requests: n_requests,
         prompt: prompt_len,
@@ -427,6 +484,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 grace_moe::engine::real::FfnMode::PerExpert
             },
             replan,
+            preempt,
+            retain_cache_tokens: usize::MAX,
+            ttft_slo,
         },
     );
     let mut rng = Rng::new(seed);
@@ -437,6 +497,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 .map(|_| rng.index(server.model.cfg.vocab) as i32)
                 .collect(),
             max_new_tokens: new_tokens,
+            priority: i % classes,
         })
         .collect();
     eprintln!("serving {} (policy={}, sched={:?}, kv-cache={})…",
@@ -488,6 +549,23 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             s.mean() * 1e3,
             s.p50() * 1e3,
             s.p99() * 1e3
+        );
+    }
+    if classes > 1 {
+        for c in metrics.priority_classes() {
+            if let Some(s) = metrics.ttft_summary_class(c) {
+                println!("ttft[{c}]   mean {:.1} ms  p95 {:.1} ms",
+                         s.mean() * 1e3, s.p95() * 1e3);
+            }
+        }
+    }
+    if metrics.preemptions > 0 || metrics.resumes > 0
+        || !metrics.rejected.is_empty()
+    {
+        println!(
+            "sched     {} preemptions | {} resumes | {} rejected {:?}",
+            metrics.preemptions, metrics.resumes,
+            metrics.rejected.len(), metrics.rejected
         );
     }
     if let Some(s) = metrics.queue_wait_summary() {

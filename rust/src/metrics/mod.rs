@@ -116,6 +116,8 @@ pub struct ContentionReport {
 pub struct RequestTiming {
     /// The request's id.
     pub id: u64,
+    /// The request's priority class (0 = most urgent).
+    pub priority: usize,
     /// Enqueue → admission into the live batch, seconds.
     pub queue_wait: f64,
     /// Enqueue → first generated token (TTFT), seconds; for a request
@@ -130,6 +132,10 @@ pub struct RequestTiming {
     pub admit_step: usize,
     /// Scheduler step that produced the request's first token.
     pub first_token_step: usize,
+    /// Times the request was evicted mid-decode and later resumed.
+    pub preemptions: usize,
+    /// Tokens the request generated (0 for a zero-budget request).
+    pub tokens: usize,
 }
 
 /// Serving-side metrics: per-request latency/TTFT/TPOT/queue-wait
@@ -163,6 +169,13 @@ pub struct ServeMetrics {
     /// Prefix tokens served from the per-sequence KV cache instead of
     /// being recomputed (0 with the cache off).
     pub cached_tokens: usize,
+    /// Mid-decode evictions performed by the priority scheduler.
+    pub preemptions: usize,
+    /// Preempted sequences re-admitted into the live batch.
+    pub resumes: usize,
+    /// Request ids shed by SLO admission control (sorted); these never
+    /// entered the live batch and have no response or timing record.
+    pub rejected: Vec<u64>,
 }
 
 impl ServeMetrics {
@@ -212,6 +225,39 @@ impl ServeMetrics {
         } else {
             self.dispatch_rounds as f64 / self.generated_tokens as f64
         }
+    }
+
+    /// Priority classes present among completed requests, ascending.
+    pub fn priority_classes(&self) -> Vec<usize> {
+        let mut classes: Vec<usize> =
+            self.per_request.iter().map(|t| t.priority).collect();
+        classes.sort_unstable();
+        classes.dedup();
+        classes
+    }
+
+    /// TTFT summary restricted to one priority class (`None` when no
+    /// request of that class generated a token).
+    pub fn ttft_summary_class(&self, class: usize) -> Option<Summary> {
+        let xs: Vec<f64> = self
+            .per_request
+            .iter()
+            .filter(|t| t.priority == class && t.tokens > 0)
+            .map(|t| t.ttft)
+            .collect();
+        Self::summarise(&xs)
+    }
+
+    /// TPOT summary restricted to one priority class (`None` when no
+    /// request of that class generated two or more tokens).
+    pub fn tpot_summary_class(&self, class: usize) -> Option<Summary> {
+        let xs: Vec<f64> = self
+            .per_request
+            .iter()
+            .filter(|t| t.priority == class && t.tokens >= 2)
+            .map(|t| t.tpot)
+            .collect();
+        Self::summarise(&xs)
     }
 
     /// Fraction of step-fed prefix tokens served from the KV cache:
@@ -301,6 +347,30 @@ mod tests {
         assert!(empty.tpot_summary().is_none());
         assert!(empty.queue_wait_summary().is_none());
         assert_eq!(empty.rounds_per_token(), 0.0);
+    }
+
+    #[test]
+    fn per_class_summaries_filter_by_priority() {
+        let t = |priority: usize, ttft: f64, tpot: f64, tokens: usize| {
+            RequestTiming { priority, ttft, tpot, tokens,
+                            ..Default::default() }
+        };
+        let s = ServeMetrics {
+            per_request: vec![
+                t(0, 0.1, 0.01, 4),
+                t(0, 0.3, 0.03, 4),
+                t(1, 0.8, 0.05, 4),
+                t(1, 0.0, 0.0, 0), // zero-token: excluded everywhere
+            ],
+            ..Default::default()
+        };
+        assert_eq!(s.priority_classes(), vec![0, 1]);
+        let c0 = s.ttft_summary_class(0).unwrap();
+        assert!((c0.mean() - 0.2).abs() < 1e-12);
+        let c1 = s.ttft_summary_class(1).unwrap();
+        assert_eq!(c1.mean(), 0.8);
+        assert!(s.ttft_summary_class(2).is_none());
+        assert_eq!(s.tpot_summary_class(1).unwrap().mean(), 0.05);
     }
 
     #[test]

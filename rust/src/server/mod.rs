@@ -48,7 +48,8 @@ use crate::stats::Rng;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-pub use sched::{SchedConfig, SchedMode, Scheduler, SeqPhase, SeqState};
+pub use sched::{SchedConfig, SchedEvent, SchedMode, Scheduler, SeqPhase,
+                SeqState};
 
 /// One inference request.
 #[derive(Clone, Debug)]
@@ -59,6 +60,11 @@ pub struct Request {
     pub prompt: Vec<i32>,
     /// Tokens to generate (greedy decode).
     pub max_new_tokens: usize,
+    /// Priority class, 0 = most urgent (the default). Classes order
+    /// admission; with [`ServerConfig::preempt`] a higher-priority
+    /// arrival may evict lower-priority decodes, and
+    /// [`ServerConfig::ttft_slo`] deadlines are looked up by class.
+    pub priority: usize,
 }
 
 /// Completed response.
@@ -73,7 +79,7 @@ pub struct Response {
 }
 
 /// Server tunables.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ServerConfig {
     /// Maximum live sequences in the batch.
     pub max_batch: usize,
@@ -102,6 +108,16 @@ pub struct ServerConfig {
     /// full-recompute forward — kept as the parity oracle behind
     /// `--kv-cache off`; greedy outputs are identical either way.
     pub kv_cache: bool,
+    /// Evict lower-priority decodes when a higher-priority arrival
+    /// cannot be admitted (continuous mode only; `--preempt on`).
+    pub preempt: bool,
+    /// Total KV-cache tokens preempted sequences may keep warm across
+    /// evictions; over the cap a victim's cache is dropped and resume
+    /// re-prefills. `usize::MAX` (the default) retains everything.
+    pub retain_cache_tokens: usize,
+    /// Per-class TTFT deadlines, seconds, indexed by priority class
+    /// (`--ttft-slo`). Empty (the default) disables SLO admission.
+    pub ttft_slo: Vec<f64>,
 }
 
 impl Default for ServerConfig {
@@ -115,6 +131,9 @@ impl Default for ServerConfig {
             ffn_mode: FfnMode::PerExpert,
             replan: None,
             kv_cache: true,
+            preempt: false,
+            retain_cache_tokens: usize::MAX,
+            ttft_slo: Vec::new(),
         }
     }
 }
@@ -138,6 +157,13 @@ impl ServerConfig {
             self.max_batch_tokens > 0,
             "ServerConfig: max_batch_tokens = 0 would never step"
         );
+        for (class, &slo) in self.ttft_slo.iter().enumerate() {
+            anyhow::ensure!(
+                slo.is_finite() && slo > 0.0,
+                "ServerConfig: ttft_slo[{class}] = {slo} (want a \
+                 positive finite deadline in seconds)"
+            );
+        }
         Ok(())
     }
 }
@@ -272,6 +298,9 @@ impl MoEServer {
             max_batch_tokens: self.cfg.max_batch_tokens,
             ctx: self.model.cfg.ctx,
             kv_cache: self.cfg.kv_cache,
+            preempt: self.cfg.preempt,
+            retain_cache_tokens: self.cfg.retain_cache_tokens,
+            ttft_slo: self.cfg.ttft_slo.clone(),
         })?;
         let mut rng = Rng::new(self.cfg.seed);
         let mut dist = DistributedMoE::new(
@@ -295,7 +324,24 @@ impl MoEServer {
                         continue;
                     }
                 }
-                if !sched.admit_pending(secs(Instant::now()))? {
+                let progressed = sched.admit_pending(secs(Instant::now()))?;
+                // Keep the engine-side caches in lockstep with the
+                // scheduler: an eviction past the retain cap frees the
+                // victim's cache now (resume re-prefills from scratch);
+                // retained caches stay warm in the map. Rejected
+                // requests never had a cache; resumed-with-cache
+                // sequences find theirs still present, resumed-after-
+                // drop ones get a fresh one below at allocation.
+                for e in sched.take_events() {
+                    if let SchedEvent::Preempted {
+                        id,
+                        cache_dropped: true,
+                    } = e
+                    {
+                        caches.remove(&id);
+                    }
+                }
+                if !progressed {
                     break;
                 }
             }

@@ -11,13 +11,16 @@
 //! ```text
 //!              offer/admit            first token           retire
 //!   Queued ───────────────▶ Prefill ─────────────▶ Decode ────────▶ Done
-//!   (admission buffer /      (admitted, producing   (generating)   (out of
-//!    bounded queue)           its first token)                      the batch)
+//!     │                                            ▲    │
+//!     │ SLO shed                            resume │    │ evict
+//!     ▼                                            │    ▼
+//!  Rejected                                      Preempted
 //! ```
 //!
 //! * **Admission** happens between steps, never mid-forward: the driver
-//!   offers queued requests one at a time ([`Scheduler::offer`] →
-//!   [`Scheduler::admit_pending`]) and the scheduler accepts them FIFO
+//!   offers queued requests into a `max_batch`-deep admission window
+//!   ([`Scheduler::offer`] → [`Scheduler::admit_pending`]) and the
+//!   scheduler admits the best-priority candidate (FIFO within a class)
 //!   while the live batch stays under `max_batch` sequences and — in
 //!   [`SchedMode::Continuous`] — under the `max_batch_tokens` step
 //!   budget. With the KV cache on (`kv_cache`, the default), a step
@@ -25,6 +28,22 @@
 //!   costs the prompt length and every later step costs exactly one
 //!   token per sequence; with it off, every step recomputes the whole
 //!   prefix and a sequence costs its full current length.
+//! * **Priority & preemption** (`preempt`, Continuous only): requests
+//!   carry a priority class (`0` = most urgent). When a candidate with
+//!   a better class cannot be admitted, the scheduler evicts the
+//!   deepest decode among strictly-lower-priority live sequences
+//!   (Decode → Preempted) until the candidate fits — and only if
+//!   eviction actually makes it fit, so no work is thrown away in
+//!   vain. A preempted sequence keeps its KV cache while the retained
+//!   total stays under `retain_cache_tokens`; over the cap the cache is
+//!   dropped (`cached_len` → 0) and resume re-prefills the whole
+//!   prefix. Resumes compete with fresh admissions by class (resumes
+//!   win ties) and are themselves non-preempting.
+//! * **SLO admission** (`ttft_slo`): per-class TTFT deadlines. A
+//!   candidate is rejected loudly — surfaced via
+//!   [`SchedEvent::Rejected`] and `ServeMetrics::rejected`, never
+//!   silently dropped — when the larger of its wait so far and the p95
+//!   of recent same-class admission waits exceeds its class deadline.
 //! * **Microbatching**: every step advances a token-budgeted FIFO prefix
 //!   of the live batch ([`Scheduler::microbatch`]); sequences over
 //!   budget wait a step instead of stalling the batch, and at least one
@@ -40,29 +59,41 @@
 //!
 //! [`SchedMode::StaticDrain`] reproduces the seed server's behaviour on
 //! top of the same state machine (admission only into an empty batch, no
-//! token budget) so the serving bench can compare the two disciplines on
-//! identical workloads; greedy-decode outputs are token-for-token
-//! identical across modes because per-token numerics are independent of
-//! batch composition.
+//! token budget, preemption inert) so the serving bench can compare the
+//! disciplines on identical workloads; greedy-decode outputs are
+//! token-for-token identical across modes — and across preempt/resume —
+//! because per-token numerics are independent of batch composition.
 //!
 //! [`simulate_serve`] is the virtual-clock driver used by tier-1 tests
 //! and `benches/serving.rs`: same scheduler, same admission rules, with
 //! the engine and the clock supplied as closures — so every scheduling
-//! property is pinned without PJRT artifacts.
+//! property is pinned without PJRT artifacts. [`simulate_serve_events`]
+//! additionally surfaces the full [`SchedEvent`] stream (preemptions,
+//! resumes, rejections, retirements) so cache-lifecycle tests can
+//! mirror the real server's KV bookkeeping.
+
+use std::collections::HashMap;
 
 use super::{Request, Response};
 use crate::metrics::{RequestTiming, ServeMetrics};
+use crate::stats::Summary;
+
+/// How many recent same-class admission waits feed the SLO predictor.
+const SLO_WINDOW: usize = 32;
 
 /// Request lifecycle within the serving core.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SeqPhase {
-    /// Waiting in the admission queue (or the scheduler's one-deep
-    /// admission buffer).
+    /// Waiting in the admission queue (or the scheduler's
+    /// `max_batch`-deep admission window).
     Queued,
     /// Admitted; its first token has not been produced yet.
     Prefill,
     /// Generating tokens.
     Decode,
+    /// Evicted mid-decode by a higher-priority admission; waiting to
+    /// resume (Decode → Preempted → Decode).
+    Preempted,
     /// Finished; retired from the live batch.
     Done,
 }
@@ -81,11 +112,11 @@ pub enum SchedMode {
 
 /// Scheduler tunables (the serving front copies these out of
 /// [`super::ServerConfig`]).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct SchedConfig {
     /// Batching discipline.
     pub mode: SchedMode,
-    /// Maximum live sequences.
+    /// Maximum live sequences (also the admission-window depth).
     pub max_batch: usize,
     /// Step token budget (continuous mode): the number of tokens a step
     /// may *compute*. Under KV-cached pricing that is each sequence's
@@ -98,6 +129,72 @@ pub struct SchedConfig {
     /// prefill) instead of full-prefix recompute. Must match the engine
     /// path the driver runs, or the budget meters the wrong cost.
     pub kv_cache: bool,
+    /// Evict lower-priority decodes when a higher-priority candidate
+    /// cannot be admitted (Continuous mode only; inert under
+    /// StaticDrain).
+    pub preempt: bool,
+    /// Total KV-cache tokens preempted sequences may keep warm. Evicting
+    /// past the cap drops the victim's cache instead (resume then
+    /// re-prefills the whole prefix). `usize::MAX` retains everything.
+    pub retain_cache_tokens: usize,
+    /// Per-class TTFT deadlines, seconds, indexed by priority class.
+    /// Classes beyond the vector have no deadline; empty (the default)
+    /// disables SLO admission entirely.
+    pub ttft_slo: Vec<f64>,
+}
+
+impl Default for SchedConfig {
+    fn default() -> SchedConfig {
+        SchedConfig {
+            mode: SchedMode::Continuous,
+            max_batch: 8,
+            max_batch_tokens: 512,
+            ctx: 128,
+            kv_cache: true,
+            preempt: false,
+            retain_cache_tokens: usize::MAX,
+            ttft_slo: Vec::new(),
+        }
+    }
+}
+
+/// Scheduler-side lifecycle notifications, drained by the driver via
+/// [`Scheduler::take_events`] (or delivered by
+/// [`simulate_serve_events`]). The driver owns the engine-side KV
+/// caches, so cache drops on preemption and eviction at retirement are
+/// *its* job — these events are the contract that keeps the two sides
+/// in lockstep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SchedEvent {
+    /// A live sequence was evicted mid-decode. When `cache_dropped`,
+    /// the driver must free the engine-side KV cache for `id` (the
+    /// scheduler has already zeroed its `cached_len`); otherwise the
+    /// cache stays warm for resume.
+    Preempted {
+        /// Request id of the evicted sequence.
+        id: u64,
+        /// Whether the KV cache was dropped (over the retain cap or
+        /// KV caching disabled) rather than kept warm.
+        cache_dropped: bool,
+    },
+    /// A preempted sequence re-entered the live batch.
+    Resumed {
+        /// Request id of the resumed sequence.
+        id: u64,
+    },
+    /// A candidate was shed by SLO admission control: it never entered
+    /// the live batch and produces no response.
+    Rejected {
+        /// Request id of the shed candidate.
+        id: u64,
+    },
+    /// A sequence finished and left the live batch; the driver evicts
+    /// its KV cache. Fires exactly once per admitted request, no
+    /// matter how many times it was preempted and resumed.
+    Retired {
+        /// Request id of the finished sequence.
+        id: u64,
+    },
 }
 
 /// One live (or finished) sequence and its timing record. Times are
@@ -124,10 +221,13 @@ pub struct SeqState {
     /// Completion time of the whole request.
     pub finish: f64,
     /// Tokens of `ids` whose K/V rows the engine has cached (0 until the
-    /// sequence's first step; stays 0 under recompute pricing). Mirrors
-    /// the engine-side `KvCache::len` — the server debug-asserts the two
-    /// agree every step.
+    /// sequence's first step; stays 0 under recompute pricing; reset to
+    /// 0 when an eviction drops the cache). Mirrors the engine-side
+    /// `KvCache::len` — the server debug-asserts the two agree every
+    /// step.
     pub cached_len: usize,
+    /// How many times this sequence has been evicted mid-decode.
+    pub preemptions: usize,
 }
 
 impl SeqState {
@@ -141,19 +241,38 @@ impl SeqState {
     }
 }
 
-/// The iteration-level scheduler: a FIFO live batch, a one-deep
-/// admission buffer, and the retired set. Drivers loop over
-/// offer/admit → [`Scheduler::microbatch`] → run the step →
+/// The iteration-level scheduler: a FIFO live batch, a
+/// `max_batch`-deep priority admission window, the preempted set, and
+/// the retired set. Drivers loop over offer/admit →
+/// [`Scheduler::microbatch`] → run the step →
 /// [`Scheduler::complete_step`]; see the module docs for the protocol.
 pub struct Scheduler {
     cfg: SchedConfig,
-    /// Popped-but-unadmitted head of the queue (keeps FIFO order while
-    /// letting admission inspect the prompt before committing budget).
-    pending: Option<(Request, f64)>,
+    /// Offered-but-unadmitted candidates: `(request, enqueue time,
+    /// offer sequence number)`. Bounded by `max_batch`; admission picks
+    /// by `(priority class, offer order)` so equal-priority traffic is
+    /// served strictly FIFO — bit-identical to the pre-priority
+    /// scheduler.
+    pending: Vec<(Request, f64, u64)>,
+    /// Monotone offer counter (the FIFO tie-breaker within a class).
+    offer_seq: u64,
     live: Vec<SeqState>,
+    /// Evicted-mid-decode sequences awaiting resume, in eviction order.
+    preempted: Vec<SeqState>,
     done: Vec<SeqState>,
+    /// Ids shed by SLO admission control, in rejection order.
+    rejected: Vec<u64>,
+    /// Undrained lifecycle events (preemptions/resumes/rejections).
+    events: Vec<SchedEvent>,
+    /// KV tokens currently held warm by preempted sequences.
+    retained_cache: usize,
+    /// Recent admission queue-waits per class, feeding the SLO
+    /// predictor (last [`SLO_WINDOW`] samples).
+    recent_waits: HashMap<usize, Vec<f64>>,
     steps: usize,
     dispatch_rounds: usize,
+    preemptions: usize,
+    resumes: usize,
     /// Tokens actually computed across all steps (uncached suffixes
     /// under KV pricing; full prefixes under recompute).
     computed_tokens: usize,
@@ -168,20 +287,34 @@ pub struct Scheduler {
 impl Scheduler {
     /// Scheduler over validated tunables (zero `max_batch`,
     /// `max_batch_tokens`, or `ctx` would serve nothing — rejected
-    /// loudly instead of silently dropping every request).
+    /// loudly instead of silently dropping every request; SLO deadlines
+    /// must be positive and finite).
     pub fn new(cfg: SchedConfig) -> anyhow::Result<Scheduler> {
         anyhow::ensure!(cfg.max_batch > 0,
                         "scheduler: max_batch = 0 admits nothing");
         anyhow::ensure!(cfg.max_batch_tokens > 0,
                         "scheduler: max_batch_tokens = 0 steps nothing");
         anyhow::ensure!(cfg.ctx > 0, "scheduler: ctx = 0");
+        for (class, &slo) in cfg.ttft_slo.iter().enumerate() {
+            anyhow::ensure!(slo.is_finite() && slo > 0.0,
+                            "scheduler: ttft_slo[{class}] = {slo} \
+                             (want a positive finite deadline)");
+        }
         Ok(Scheduler {
             cfg,
-            pending: None,
+            pending: Vec::new(),
+            offer_seq: 0,
             live: Vec::new(),
+            preempted: Vec::new(),
             done: Vec::new(),
+            rejected: Vec::new(),
+            events: Vec::new(),
+            retained_cache: 0,
+            recent_waits: HashMap::new(),
             steps: 0,
             dispatch_rounds: 0,
+            preemptions: 0,
+            resumes: 0,
             computed_tokens: 0,
             cached_tokens: 0,
             drain_open: false,
@@ -208,20 +341,50 @@ impl Scheduler {
         &self.live
     }
 
+    /// Sequences evicted mid-decode and awaiting resume, in eviction
+    /// order.
+    pub fn preempted(&self) -> &[SeqState] {
+        &self.preempted
+    }
+
     /// Retired sequences, in retirement order.
     pub fn done(&self) -> &[SeqState] {
         &self.done
     }
 
-    /// Whether a request sits in the admission buffer.
-    pub fn has_pending(&self) -> bool {
-        self.pending.is_some()
+    /// Ids shed by SLO admission control so far, in rejection order.
+    pub fn rejected_ids(&self) -> &[u64] {
+        &self.rejected
     }
 
-    /// Nothing live and nothing buffered: the driver should block on
+    /// Evictions performed so far.
+    pub fn preemptions(&self) -> usize {
+        self.preemptions
+    }
+
+    /// Preempted sequences re-admitted so far.
+    pub fn resumes(&self) -> usize {
+        self.resumes
+    }
+
+    /// Whether any request sits in the admission window.
+    pub fn has_pending(&self) -> bool {
+        !self.pending.is_empty()
+    }
+
+    /// Drain the undrained lifecycle events (preemptions, resumes,
+    /// rejections) accumulated since the last call. Drivers that own
+    /// engine-side KV caches must act on `Preempted { cache_dropped:
+    /// true }` by freeing the cache.
+    pub fn take_events(&mut self) -> Vec<SchedEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Nothing live, buffered, or preempted: the driver should block on
     /// the queue (or finish, if the queue is closed and drained).
     pub fn is_idle(&self) -> bool {
-        self.live.is_empty() && self.pending.is_none()
+        self.live.is_empty() && self.pending.is_empty()
+            && self.preempted.is_empty()
     }
 
     /// What one step of `s` costs against the token budget: the uncached
@@ -240,10 +403,18 @@ impl Scheduler {
         self.live.iter().map(|s| self.seq_cost(s)).sum()
     }
 
-    /// Whether the driver should pull another request off the queue:
-    /// the admission buffer is free and admission is currently open.
+    /// Whether the driver should pull another request off the queue
+    /// into the admission window. With preemption on, the window keeps
+    /// filling even when the live batch is full — a higher-priority
+    /// arrival must become *visible* to trigger an eviction.
     pub fn wants_offer(&self) -> bool {
-        self.pending.is_none() && self.admission_open()
+        if self.pending.len() >= self.cfg.max_batch {
+            return false;
+        }
+        if self.cfg.mode == SchedMode::Continuous && self.cfg.preempt {
+            return true;
+        }
+        self.admission_open()
     }
 
     fn admission_open(&self) -> bool {
@@ -258,39 +429,191 @@ impl Scheduler {
         }
     }
 
-    /// Buffer the next queued request for admission; `false` (refusing
-    /// the offer) when the one-deep buffer is occupied.
+    /// Buffer a queued request in the admission window; `false`
+    /// (refusing the offer) when the window is `max_batch` deep.
     pub fn offer(&mut self, req: Request, enqueue: f64) -> bool {
-        if self.pending.is_some() {
+        if self.pending.len() >= self.cfg.max_batch {
             return false;
         }
-        self.pending = Some((req, enqueue));
+        let seq = self.offer_seq;
+        self.offer_seq += 1;
+        self.pending.push((req, enqueue, seq));
         true
     }
 
-    /// Try to admit the buffered request under the mode's rules.
-    /// Returns whether a request left the buffer (admitted, or retired
-    /// instantly when it wants zero tokens). Errors on malformed
-    /// requests (empty prompt, prompt beyond the model context).
-    pub fn admit_pending(&mut self, now: f64) -> anyhow::Result<bool> {
-        let Some((req, _)) = self.pending.as_ref() else {
-            return Ok(false);
-        };
-        if !self.admission_open() {
-            return Ok(false);
+    /// Admissibility of a new `cost`-token sequence against the current
+    /// live batch (or a hypothetical `(slots, tokens)` state during a
+    /// preemption dry-run). An empty batch always admits — the
+    /// at-least-one escape.
+    fn fits(&self, slots: usize, tokens: usize, cost: usize) -> bool {
+        if slots >= self.cfg.max_batch {
+            return false;
         }
-        let fits = match self.cfg.mode {
-            SchedMode::StaticDrain => true,
-            SchedMode::Continuous => {
-                self.live.is_empty()
-                    || self.live_tokens() + req.prompt.len()
-                        <= self.cfg.max_batch_tokens
+        match self.cfg.mode {
+            SchedMode::StaticDrain => {
+                slots == 0 || self.drain_open
             }
-        };
-        if !fits {
+            SchedMode::Continuous => {
+                slots == 0
+                    || tokens + cost <= self.cfg.max_batch_tokens
+            }
+        }
+    }
+
+    /// Best resume candidate: `(priority class, eviction order)`.
+    fn best_preempted(&self) -> Option<usize> {
+        (0..self.preempted.len())
+            .min_by_key(|&i| (self.preempted[i].req.priority, i))
+    }
+
+    /// Best fresh candidate: `(priority class, offer order)` — strict
+    /// FIFO within a class.
+    fn best_pending(&self) -> Option<usize> {
+        (0..self.pending.len())
+            .min_by_key(|&i| (self.pending[i].0.priority,
+                              self.pending[i].2))
+    }
+
+    /// p95 of recent same-class admission waits; 0 with no history.
+    fn predicted_wait(&self, class: usize) -> f64 {
+        match self.recent_waits.get(&class) {
+            Some(w) if !w.is_empty() => Summary::of(w).p95(),
+            _ => 0.0,
+        }
+    }
+
+    /// Try to admit (or resume, or SLO-shed) the best-priority
+    /// candidate under the mode's rules. Returns whether the scheduler
+    /// made progress — admitted a request, resumed a preempted
+    /// sequence, retired a zero-token request instantly, or rejected a
+    /// candidate past its deadline — so drivers loop `while
+    /// admit_pending()?`. Strictly head-of-line: if the best candidate
+    /// cannot move (even after eviction, with preemption on), worse
+    /// candidates are not tried. Errors on malformed requests (empty
+    /// prompt, prompt beyond the model context).
+    pub fn admit_pending(&mut self, now: f64) -> anyhow::Result<bool> {
+        let resume = self.best_preempted();
+        let fresh = self.best_pending();
+        match (resume, fresh) {
+            (None, None) => Ok(false),
+            (Some(r), None) => Ok(self.try_resume(r)),
+            (Some(r), Some(p))
+                if self.preempted[r].req.priority
+                    <= self.pending[p].0.priority =>
+            {
+                // Resumes win ties within a class: finishing evicted
+                // work beats starting fresh work of the same urgency.
+                Ok(self.try_resume(r))
+            }
+            (_, Some(p)) => self.try_admit(p, now),
+        }
+    }
+
+    /// Re-admit preempted sequence `i` if it fits. Resumes are
+    /// non-preempting: a resume that does not fit simply waits.
+    fn try_resume(&mut self, i: usize) -> bool {
+        let cost = self.seq_cost(&self.preempted[i]);
+        if !self.fits(self.live.len(), self.live_tokens(), cost) {
+            return false;
+        }
+        let mut s = self.preempted.remove(i);
+        self.retained_cache =
+            self.retained_cache.saturating_sub(s.cached_len);
+        s.phase = SeqPhase::Decode;
+        self.resumes += 1;
+        self.events.push(SchedEvent::Resumed { id: s.req.id });
+        self.live.push(s);
+        true
+    }
+
+    /// Evict strictly-lower-priority decodes, deepest first, until a
+    /// `cost`-token class-`prio` candidate fits — but only if eviction
+    /// actually achieves that (dry-run first; no work is thrown away
+    /// for an admission that still fails). Continuous mode only.
+    fn preempt_to_fit(&mut self, prio: usize, cost: usize) -> bool {
+        if !self.cfg.preempt || self.cfg.mode != SchedMode::Continuous {
+            return false;
+        }
+        let mut victims: Vec<usize> = (0..self.live.len())
+            .filter(|&i| {
+                self.live[i].phase == SeqPhase::Decode
+                    && self.live[i].req.priority > prio
+            })
+            .collect();
+        // Deepest decode first (most budget freed per eviction under
+        // recompute pricing; least remaining work disturbed is the
+        // paper-level trade we accept for the priority inversion fix).
+        victims.sort_by_key(|&i| {
+            std::cmp::Reverse((self.live[i].ids.len(), i))
+        });
+        let mut slots = self.live.len();
+        let mut tokens = self.live_tokens();
+        let mut chosen: Vec<usize> = Vec::new();
+        for &v in &victims {
+            if self.fits(slots, tokens, cost) {
+                break;
+            }
+            chosen.push(v);
+            slots -= 1;
+            tokens -= self.seq_cost(&self.live[v]);
+        }
+        if !self.fits(slots, tokens, cost) {
+            return false;
+        }
+        // Evict back-to-front so earlier indices stay valid.
+        chosen.sort_unstable_by(|a, b| b.cmp(a));
+        for v in chosen {
+            self.evict(v);
+        }
+        true
+    }
+
+    /// Move live sequence `i` to the preempted set, retaining or
+    /// dropping its KV cache under the retain cap.
+    fn evict(&mut self, i: usize) {
+        let mut s = self.live.remove(i);
+        s.phase = SeqPhase::Preempted;
+        s.preemptions += 1;
+        self.preemptions += 1;
+        let retain = self.cfg.kv_cache
+            && self.retained_cache.saturating_add(s.cached_len)
+                <= self.cfg.retain_cache_tokens;
+        let cache_dropped = self.cfg.kv_cache && !retain;
+        if retain {
+            self.retained_cache += s.cached_len;
+        } else {
+            s.cached_len = 0;
+        }
+        self.events.push(SchedEvent::Preempted {
+            id: s.req.id,
+            cache_dropped,
+        });
+        self.preempted.push(s);
+    }
+
+    /// Admit pending candidate `p`: SLO shed, fit (evicting if allowed
+    /// and necessary), validate, and enter the live batch.
+    fn try_admit(&mut self, p: usize, now: f64) -> anyhow::Result<bool> {
+        let class = self.pending[p].0.priority;
+        if let Some(&slo) = self.cfg.ttft_slo.get(class) {
+            let waited = now - self.pending[p].1;
+            // Shed when the deadline is already blown or recent history
+            // says it will be: predicted TTFT ≈ queue wait (the first
+            // step after admission is fast relative to queueing).
+            if waited.max(self.predicted_wait(class)) > slo {
+                let (req, _, _) = self.pending.remove(p);
+                self.events.push(SchedEvent::Rejected { id: req.id });
+                self.rejected.push(req.id);
+                return Ok(true);
+            }
+        }
+        let cost = self.pending[p].0.prompt.len();
+        if !self.fits(self.live.len(), self.live_tokens(), cost)
+            && !self.preempt_to_fit(class, cost)
+        {
             return Ok(false);
         }
-        let (req, enqueue) = self.pending.take().unwrap();
+        let (req, enqueue, _) = self.pending.remove(p);
         anyhow::ensure!(!req.prompt.is_empty(),
                         "request {}: empty prompt", req.id);
         anyhow::ensure!(req.prompt.len() <= self.cfg.ctx,
@@ -307,6 +630,11 @@ impl Scheduler {
              shorten the prompt or raise ctx",
             req.id, req.prompt.len(), req.max_new_tokens
         );
+        let waits = self.recent_waits.entry(class).or_default();
+        if waits.len() >= SLO_WINDOW {
+            waits.remove(0);
+        }
+        waits.push(now - enqueue);
         let ids = req.prompt.clone();
         let mut seq = SeqState {
             req,
@@ -319,6 +647,7 @@ impl Scheduler {
             last_token: now,
             finish: now,
             cached_len: 0,
+            preemptions: 0,
         };
         if !seq.wants_tokens(self.cfg.ctx) {
             // Zero-token request (max_new_tokens = 0): completes at
@@ -411,12 +740,17 @@ impl Scheduler {
 
     /// Consume the scheduler into responses (sorted by request id) and
     /// serving metrics. `wall_time` is the driver clock at shutdown.
+    /// SLO-shed requests produce no response; their ids are surfaced
+    /// (sorted) in `ServeMetrics::rejected`.
     pub fn into_results(self, wall_time: f64)
                         -> (Vec<Response>, ServeMetrics) {
-        debug_assert!(self.live.is_empty() && self.pending.is_none(),
+        debug_assert!(self.live.is_empty() && self.pending.is_empty()
+                          && self.preempted.is_empty(),
                       "into_results with work still in flight");
         let mut done = self.done;
         done.sort_by_key(|s| s.req.id);
+        let mut rejected = self.rejected;
+        rejected.sort_unstable();
         let mut responses = Vec::with_capacity(done.len());
         let mut metrics = ServeMetrics {
             wall_time,
@@ -424,6 +758,9 @@ impl Scheduler {
             dispatch_rounds: self.dispatch_rounds,
             computed_tokens: self.computed_tokens,
             cached_tokens: self.cached_tokens,
+            preemptions: self.preemptions,
+            resumes: self.resumes,
+            rejected,
             ..ServeMetrics::default()
         };
         for s in done {
@@ -432,12 +769,15 @@ impl Scheduler {
             let queue_wait = s.admit - s.enqueue;
             let mut timing = RequestTiming {
                 id: s.req.id,
+                priority: s.req.priority,
                 queue_wait,
                 ttft: latency,
                 latency,
                 tpot: 0.0,
                 admit_step: s.admit_step,
                 first_token_step: s.admit_step,
+                preemptions: s.preemptions,
+                tokens: generated,
             };
             if let Some((t, step)) = s.first_token {
                 timing.ttft = t - s.enqueue;
@@ -486,12 +826,15 @@ where
 }
 
 /// [`simulate_serve`] plus a retirement hook: `retire_fn` is called with
-/// each request id the moment its sequence leaves the live batch —
-/// exactly when the real server drops the sequence's KV cache, so
-/// cache-eviction tests can mirror the lifecycle without PJRT.
+/// each request id the moment its sequence *finishes* and leaves the
+/// live batch — exactly when the real server drops the sequence's KV
+/// cache, so cache-eviction tests can mirror the lifecycle without
+/// PJRT. Fires exactly once per admitted request, even across
+/// preempt/resume cycles (preemption-time cache drops are surfaced
+/// separately, by [`simulate_serve_events`]).
 pub fn simulate_serve_with<F, C, R>(cfg: SchedConfig,
-                                    mut arrivals: Vec<(Request, f64)>,
-                                    mut step_fn: F, mut step_cost: C,
+                                    arrivals: Vec<(Request, f64)>,
+                                    step_fn: F, step_cost: C,
                                     mut retire_fn: R)
                                     -> anyhow::Result<(Vec<Response>,
                                                        ServeMetrics)>
@@ -499,6 +842,29 @@ where
     F: FnMut(&[(u64, &[i32], usize)]) -> anyhow::Result<(Vec<i32>, usize)>,
     C: FnMut(usize, usize) -> f64,
     R: FnMut(u64),
+{
+    simulate_serve_events(cfg, arrivals, step_fn, step_cost, |e| {
+        if let SchedEvent::Retired { id } = e {
+            retire_fn(*id);
+        }
+    })
+}
+
+/// [`simulate_serve`] plus the full [`SchedEvent`] stream: `event_fn`
+/// sees every preemption (with its cache-drop verdict), resume,
+/// SLO rejection, and retirement, in scheduler order — the same
+/// notifications `server::drive` uses to keep engine-side KV caches in
+/// lockstep with the scheduler.
+pub fn simulate_serve_events<F, C, E>(cfg: SchedConfig,
+                                      mut arrivals: Vec<(Request, f64)>,
+                                      mut step_fn: F, mut step_cost: C,
+                                      mut event_fn: E)
+                                      -> anyhow::Result<(Vec<Response>,
+                                                         ServeMetrics)>
+where
+    F: FnMut(&[(u64, &[i32], usize)]) -> anyhow::Result<(Vec<i32>, usize)>,
+    C: FnMut(usize, usize) -> f64,
+    E: FnMut(&SchedEvent),
 {
     arrivals.sort_by(|a, b| {
         a.1.partial_cmp(&b.1).expect("NaN arrival time")
@@ -518,7 +884,11 @@ where
                 sched.offer(req, t);
                 continue;
             }
-            if !sched.admit_pending(now)? {
+            let progressed = sched.admit_pending(now)?;
+            for e in sched.take_events() {
+                event_fn(&e);
+            }
+            if !progressed {
                 break;
             }
         }
@@ -531,7 +901,7 @@ where
             continue;
         }
         if sched.live().is_empty() {
-            anyhow::bail!("scheduler stalled with a pending request");
+            anyhow::bail!("scheduler stalled with pending work");
         }
         let batch = sched.microbatch();
         let tokens = sched.step_tokens(&batch);
@@ -547,7 +917,7 @@ where
         };
         now += step_cost(tokens, rounds);
         for id in sched.complete_step(&batch, &next, now, rounds)? {
-            retire_fn(id);
+            event_fn(&SchedEvent::Retired { id });
         }
     }
     Ok(sched.into_results(now))
@@ -563,7 +933,13 @@ mod tests {
             prompt: (0..prompt).map(|i| (id as i32) * 100 + i as i32)
                 .collect(),
             max_new_tokens: new_tokens,
+            priority: 0,
         }
+    }
+
+    fn preq(id: u64, prompt: usize, new_tokens: usize, priority: usize)
+            -> Request {
+        Request { priority, ..req(id, prompt, new_tokens) }
     }
 
     fn cfg(mode: SchedMode, max_batch: usize, budget: usize)
@@ -574,6 +950,7 @@ mod tests {
             max_batch_tokens: budget,
             ctx: 64,
             kv_cache: false,
+            ..SchedConfig::default()
         }
     }
 
@@ -593,6 +970,11 @@ mod tests {
         assert!(Scheduler::new(cfg(SchedMode::Continuous, 8, 0)).is_err());
         let bad = SchedConfig { ctx: 0, ..cfg(SchedMode::Continuous, 8, 8) };
         assert!(Scheduler::new(bad).is_err());
+        let bad = SchedConfig {
+            ttft_slo: vec![1.0, -0.5],
+            ..cfg(SchedMode::Continuous, 8, 8)
+        };
+        assert!(Scheduler::new(bad).is_err(), "negative SLO deadline");
     }
 
     #[test]
@@ -600,7 +982,6 @@ mod tests {
         let mut s =
             Scheduler::new(cfg(SchedMode::Continuous, 4, 64)).unwrap();
         assert!(s.offer(req(0, 4, 2), 0.0));
-        assert!(!s.offer(req(1, 4, 2), 0.0), "buffer is one deep");
         assert!(s.admit_pending(0.5).unwrap());
         assert_eq!(s.live()[0].phase, SeqPhase::Prefill);
         assert_eq!(s.live()[0].admit, 0.5);
@@ -621,6 +1002,17 @@ mod tests {
         assert_eq!(s.done()[0].generated(), 2);
         assert_eq!(s.steps(), 2);
         assert_eq!(s.dispatch_rounds(), 4);
+    }
+
+    #[test]
+    fn admission_window_is_max_batch_deep() {
+        let mut s =
+            Scheduler::new(cfg(SchedMode::Continuous, 2, 64)).unwrap();
+        assert!(s.offer(req(0, 4, 2), 0.0));
+        assert!(s.offer(req(1, 4, 2), 0.0));
+        assert!(!s.offer(req(2, 4, 2), 0.0),
+                "window is max_batch deep");
+        assert!(s.has_pending());
     }
 
     #[test]
@@ -913,5 +1305,205 @@ mod tests {
         assert!(!step_sizes.is_empty());
         assert!(step_sizes.iter().all(|&t| t <= 25),
                 "budget violated: {step_sizes:?}");
+    }
+
+    #[test]
+    fn priority_jumps_the_admission_queue() {
+        // A later class-0 offer is admitted ahead of an earlier
+        // class-1 offer; equal classes stay strictly FIFO.
+        let mut s =
+            Scheduler::new(cfg(SchedMode::Continuous, 4, 64)).unwrap();
+        s.offer(preq(0, 4, 2, 1), 0.0);
+        s.offer(preq(1, 4, 2, 0), 0.1);
+        assert!(s.admit_pending(0.2).unwrap());
+        assert_eq!(s.live()[0].req.id, 1, "class 0 jumps the queue");
+        assert!(s.admit_pending(0.2).unwrap());
+        assert_eq!(s.live()[1].req.id, 0);
+    }
+
+    #[test]
+    fn preemption_evicts_deepest_lower_priority_decode() {
+        let mut c = cfg(SchedMode::Continuous, 2, 20);
+        c.preempt = true;
+        let mut s = Scheduler::new(c).unwrap();
+        // Two class-1 decodes of different depths.
+        s.offer(preq(0, 8, 20, 1), 0.0);
+        assert!(s.admit_pending(0.0).unwrap());
+        s.offer(preq(1, 6, 20, 1), 0.0);
+        assert!(s.admit_pending(0.0).unwrap());
+        for t in 0..2 {
+            let batch = s.microbatch();
+            let next: Vec<i32> = batch
+                .iter()
+                .map(|&i| fake_next(&s.live()[i].ids))
+                .collect();
+            s.complete_step(&batch, &next, t as f64 + 1.0, 1).unwrap();
+        }
+        assert_eq!(s.live()[0].ids.len(), 10);
+        assert_eq!(s.live()[1].ids.len(), 8);
+        // A class-0 arrival needs both a slot and budget: the deepest
+        // class-1 decode (request 0) is evicted, the shallower stays.
+        s.offer(preq(2, 10, 2, 0), 2.0);
+        assert!(s.admit_pending(2.0).unwrap());
+        assert_eq!(s.preempted().len(), 1);
+        assert_eq!(s.preempted()[0].req.id, 0, "deepest decode evicted");
+        assert_eq!(s.preempted()[0].phase, SeqPhase::Preempted);
+        assert_eq!(s.preempted()[0].preemptions, 1);
+        assert_eq!(s.preemptions(), 1);
+        let live_ids: Vec<u64> =
+            s.live().iter().map(|q| q.req.id).collect();
+        assert_eq!(live_ids, vec![1, 2]);
+        let events = s.take_events();
+        assert!(events.contains(&SchedEvent::Preempted {
+            id: 0,
+            cache_dropped: false, // recompute pricing holds no cache
+        }), "events: {events:?}");
+        // No resume yet: request 0 (cost 10) over budget next to the
+        // live pair.
+        assert!(!s.admit_pending(2.5).unwrap());
+        // Drain the live batch, then the victim resumes and finishes.
+        while !s.live().is_empty() {
+            let batch = s.microbatch();
+            let next: Vec<i32> = batch
+                .iter()
+                .map(|&i| fake_next(&s.live()[i].ids))
+                .collect();
+            s.complete_step(&batch, &next, 3.0, 1).unwrap();
+            while s.admit_pending(3.0).unwrap() {}
+        }
+        assert!(s.preempted().is_empty(), "victim resumed");
+        assert_eq!(s.resumes(), 1);
+        let events = s.take_events();
+        assert!(events.contains(&SchedEvent::Resumed { id: 0 }));
+        assert_eq!(s.done().len(), 3);
+    }
+
+    #[test]
+    fn preempted_cache_retained_under_cap_dropped_over_it() {
+        let mut c = cfg(SchedMode::Continuous, 2, 30);
+        c.kv_cache = true;
+        c.preempt = true;
+        c.retain_cache_tokens = 10;
+        let mut s = Scheduler::new(c).unwrap();
+        for (id, prompt) in [(0u64, 8usize), (1, 12)] {
+            s.offer(preq(id, prompt, 20, 1), 0.0);
+            assert!(s.admit_pending(0.0).unwrap());
+            let batch = s.microbatch();
+            let next: Vec<i32> = batch
+                .iter()
+                .map(|&i| fake_next(&s.live()[i].ids))
+                .collect();
+            s.complete_step(&batch, &next, 1.0, 1).unwrap();
+        }
+        // Caches: request 0 holds 9 rows, request 1 holds 12. The
+        // first class-0 arrival evicts the deepest victim (request 1,
+        // 12 rows > the 10-token retain cap → cache dropped); a second
+        // class-0 arrival evicts request 0 (9 rows ≤ cap → retained).
+        s.offer(preq(2, 28, 2, 0), 2.0);
+        assert!(s.admit_pending(2.0).unwrap());
+        let events = s.take_events();
+        assert!(events.contains(&SchedEvent::Preempted {
+            id: 1,
+            cache_dropped: true,
+        }), "over-cap cache dropped: {events:?}");
+        s.offer(preq(3, 2, 1, 0), 2.0);
+        assert!(s.admit_pending(2.0).unwrap());
+        let events = s.take_events();
+        assert!(events.contains(&SchedEvent::Preempted {
+            id: 0,
+            cache_dropped: false,
+        }), "under-cap cache retained: {events:?}");
+        let by_id = |id: u64| {
+            s.preempted().iter().find(|q| q.req.id == id).unwrap()
+        };
+        assert_eq!(by_id(1).cached_len, 0, "dropped cache zeroed");
+        assert_eq!(by_id(0).cached_len, 9, "retained cache kept");
+    }
+
+    #[test]
+    fn slo_sheds_late_requests_loudly() {
+        // Serial capacity (budget == prompt) with a 0.5 s deadline:
+        // request 0 admits at t = 0; by the time it retires the rest
+        // have blown the deadline and are shed, not served.
+        let mut c = cfg(SchedMode::Continuous, 4, 4);
+        c.ttft_slo = vec![0.5];
+        let arrivals: Vec<(Request, f64)> =
+            (0..3).map(|id| (req(id, 4, 2), 0.0)).collect();
+        let mut shed: Vec<u64> = Vec::new();
+        let (responses, metrics) = simulate_serve_events(
+            c,
+            arrivals,
+            fake_step,
+            |_, _| 1.0,
+            |e| {
+                if let SchedEvent::Rejected { id } = e {
+                    shed.push(*id);
+                }
+            },
+        )
+        .unwrap();
+        assert_eq!(responses.len(), 1, "only request 0 served");
+        assert_eq!(responses[0].id, 0);
+        assert_eq!(metrics.rejected, vec![1, 2]);
+        shed.sort_unstable();
+        assert_eq!(shed, vec![1, 2]);
+        // The shed property: every *served* request met its deadline.
+        assert!(metrics.per_request.iter().all(|t| t.queue_wait <= 0.5));
+        // No SLO vector, no shedding: same trace serves everyone.
+        let (responses, metrics) = simulate_serve(
+            cfg(SchedMode::Continuous, 4, 4),
+            (0..3).map(|id| (req(id, 4, 2), 0.0)).collect(),
+            fake_step,
+            |_, _| 1.0,
+        )
+        .unwrap();
+        assert_eq!(responses.len(), 3);
+        assert!(metrics.rejected.is_empty());
+    }
+
+    #[test]
+    fn uniform_priority_preempt_on_matches_off() {
+        // With every request in the same class there is never a
+        // strictly-lower-priority victim, so preemption must be a
+        // no-op: token-for-token and metric-for-metric identical.
+        let run = |preempt: bool| {
+            let c = SchedConfig {
+                preempt,
+                ..cfg(SchedMode::Continuous, 4, 24)
+            };
+            let arrivals: Vec<(Request, f64)> = (0..6)
+                .map(|id| (req(id, 5, 4), 0.3 * id as f64))
+                .collect();
+            simulate_serve(c, arrivals, fake_step, |_, _| 0.25).unwrap()
+        };
+        let (resp_on, m_on) = run(true);
+        let (resp_off, m_off) = run(false);
+        assert_eq!(m_on.preemptions, 0);
+        for (a, b) in resp_on.iter().zip(&resp_off) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.tokens, b.tokens);
+        }
+        assert_eq!(m_on.per_request.len(), m_off.per_request.len());
+        for (a, b) in m_on.per_request.iter().zip(&m_off.per_request) {
+            assert_eq!(a.queue_wait, b.queue_wait);
+            assert_eq!(a.ttft, b.ttft);
+        }
+    }
+
+    #[test]
+    fn static_drain_never_preempts() {
+        let c = SchedConfig {
+            preempt: true,
+            ..cfg(SchedMode::StaticDrain, 2, 8)
+        };
+        let arrivals: Vec<(Request, f64)> = vec![
+            (preq(0, 8, 6, 1), 0.0),
+            (preq(1, 4, 2, 0), 1.0),
+        ];
+        let (responses, metrics) =
+            simulate_serve(c, arrivals, fake_step, |_, _| 1.0).unwrap();
+        assert_eq!(responses.len(), 2);
+        assert_eq!(metrics.preemptions, 0, "preempt inert under drain");
+        assert_eq!(metrics.resumes, 0);
     }
 }

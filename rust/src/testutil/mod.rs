@@ -135,6 +135,22 @@ impl FakeKvEngine {
         self.caches.remove(&id);
     }
 
+    /// Mirror a scheduler preemption: when the scheduler dropped the
+    /// victim's cache (over the retain cap, or KV off), free the
+    /// engine-side entry too — exactly what `server::drive` does on
+    /// [`crate::server::SchedEvent::Preempted`]. A retained cache stays
+    /// warm for resume.
+    pub fn preempt(&mut self, id: u64, cache_dropped: bool) {
+        if cache_dropped {
+            self.caches.remove(&id);
+        }
+    }
+
+    /// Total cached tokens currently held (live + retained).
+    pub fn cached_tokens(&self) -> usize {
+        self.caches.values().sum()
+    }
+
     /// Caches currently live.
     pub fn live_caches(&self) -> usize {
         self.caches.len()

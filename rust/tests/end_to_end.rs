@@ -62,6 +62,7 @@ fn serve_batch_end_to_end_with_tar() {
                 .map(|_| rng.index(model.cfg.vocab) as i32)
                 .collect(),
             max_new_tokens: 3,
+            priority: 0,
         })
         .collect();
     let (responses, metrics) = server.serve(requests).unwrap();
@@ -114,6 +115,7 @@ fn routing_policy_does_not_change_decoded_tokens() {
             id: 0,
             prompt: (0..10).map(|i| (i * 37 % 512) as i32).collect(),
             max_new_tokens: 4,
+            priority: 0,
         }];
         let (responses, _) = server.serve(requests).unwrap();
         outputs.push(responses[0].tokens.clone());
@@ -153,6 +155,7 @@ fn continuous_batching_matches_static_drain_token_for_token() {
                 .map(|_| rng.index(model.cfg.vocab) as i32)
                 .collect(),
             max_new_tokens: 3,
+            priority: 0,
         })
         .collect();
     let mut outputs = Vec::new();
@@ -221,6 +224,7 @@ fn kv_cached_serving_matches_recompute_token_for_token() {
                 .map(|_| rng.index(model.cfg.vocab) as i32)
                 .collect(),
             max_new_tokens: 4,
+            priority: 0,
         })
         .collect();
     let mut outputs = Vec::new();

@@ -231,6 +231,7 @@ fn scheduler_step_boundary_replan_is_a_pure_observer_when_stationary() {
                     id,
                     prompt: vec![1, 2, 3, 4],
                     max_new_tokens: 3,
+                    priority: 0,
                 }, 0.0)
             })
             .collect();
@@ -241,6 +242,7 @@ fn scheduler_step_boundary_replan_is_a_pure_observer_when_stationary() {
                 max_batch_tokens: 64,
                 ctx: 16,
                 kv_cache: false,
+                ..SchedConfig::default()
             },
             arrivals,
             |seqs| {

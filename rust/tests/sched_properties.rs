@@ -1,0 +1,276 @@
+//! Scheduler property/fuzz suite: seeded random workloads through every
+//! discipline × KV × preemption combination, with the core safety
+//! invariants asserted after *every* scheduler interaction — not just at
+//! the end of a run.
+//!
+//! Invariants pinned here (the scheduler's contract with the server):
+//!
+//! * a Continuous step never computes more than `max_batch_tokens`
+//!   unless the batch is a single over-budget sequence (the no-stall
+//!   escape);
+//! * the live batch never exceeds `max_batch`;
+//! * `cached_len` never exceeds the sequence length, and is always 0
+//!   under recompute pricing;
+//! * preempted sequences never hold more than `retain_cache_tokens` of
+//!   warm KV between them;
+//! * the engine-side KV-cache map (mirrored by
+//!   [`grace_moe::testutil::FakeKvEngine`] off the event stream) stays
+//!   in lockstep with the scheduler's pricing and is empty at exit;
+//! * every offered request lands in done ∪ rejected exactly once, and
+//!   every stepped request fires exactly one `Retired` event no matter
+//!   how often it was preempted and resumed.
+//!
+//! Case count defaults to a quick smoke; CI raises it via
+//! `SCHED_FUZZ_CASES`. A failing case panics with its seed — replay
+//! exactly that case with `SCHED_FUZZ_SEED=<seed> cargo test --test
+//! sched_properties replay`.
+
+use grace_moe::server::sched::{SchedConfig, SchedEvent, SchedMode,
+                               Scheduler};
+use grace_moe::server::Request;
+use grace_moe::stats::Rng;
+use grace_moe::testutil::{check, check_seed, prop_assert, FakeKvEngine,
+                          PropResult};
+use std::collections::{HashMap, HashSet};
+
+/// Hard ceiling on steps per case: the workloads are tiny (≤ 12
+/// requests × ≤ 6 tokens), so hitting this means the scheduler stopped
+/// making progress.
+const MAX_STEPS: usize = 20_000;
+
+/// Random but always-valid scheduler config: every mode × KV ×
+/// preemption combination, tight batch/budget bounds so admission
+/// pressure (and with it preemption) actually occurs.
+fn random_config(rng: &mut Rng) -> SchedConfig {
+    let mode = if rng.chance(0.5) {
+        SchedMode::Continuous
+    } else {
+        SchedMode::StaticDrain
+    };
+    let retain = match rng.index(3) {
+        0 => 0,
+        1 => 8,
+        _ => usize::MAX,
+    };
+    // Deadlines drawn around the virtual-clock scale below: some shed,
+    // some never fire.
+    let ttft_slo = if rng.chance(0.3) {
+        (0..1 + rng.index(3)).map(|_| rng.range_f64(0.5, 50.0)).collect()
+    } else {
+        Vec::new()
+    };
+    SchedConfig {
+        mode,
+        max_batch: 1 + rng.index(4),
+        max_batch_tokens: 8 + rng.index(57),
+        ctx: 32,
+        kv_cache: rng.chance(0.5),
+        preempt: rng.chance(0.5),
+        retain_cache_tokens: retain,
+        ttft_slo,
+    }
+}
+
+/// Random valid workload: ids are dense, prompts fit the context with
+/// generation room to spare, priorities span three classes, and some
+/// requests ask for zero tokens (the retire-at-admission edge).
+fn random_arrivals(rng: &mut Rng) -> Vec<(Request, f64)> {
+    let n = 1 + rng.index(12);
+    let mut t = 0.0;
+    (0..n)
+        .map(|i| {
+            t += rng.range_f64(0.0, 4.0);
+            let prompt = 1 + rng.index(8);
+            let req = Request {
+                id: i as u64,
+                prompt: (0..prompt)
+                    .map(|p| (i * 100 + p) as i32)
+                    .collect(),
+                max_new_tokens: rng.index(7),
+                priority: rng.index(3),
+            };
+            (req, t)
+        })
+        .collect()
+}
+
+/// Drive one random workload to completion, asserting the invariants
+/// after every admission round and every step.
+fn scheduler_invariants(rng: &mut Rng) -> PropResult {
+    let cfg = random_config(rng);
+    let arrivals = random_arrivals(rng);
+    let offered: HashSet<u64> =
+        arrivals.iter().map(|(r, _)| r.id).collect();
+    let n_offered = offered.len();
+
+    let mut engine = FakeKvEngine::new(2, 8, cfg.kv_cache);
+    let mut sched = Scheduler::new(cfg.clone())
+        .map_err(|e| format!("config rejected: {e}"))?;
+    let mut retired_events: HashMap<u64, usize> = HashMap::new();
+    let mut rejected_events: HashSet<u64> = HashSet::new();
+    let mut next_arrival = 0usize;
+    let mut now = 0.0f64;
+
+    // Invariants over the scheduler's visible state, checked after
+    // every interaction.
+    let state_ok = |sched: &Scheduler| -> PropResult {
+        prop_assert(sched.live().len() <= cfg.max_batch,
+                    format!("live {} > max_batch {}",
+                            sched.live().len(), cfg.max_batch))?;
+        for s in sched.live().iter().chain(sched.preempted()) {
+            prop_assert(s.cached_len <= s.ids.len(),
+                        format!("request {}: cached_len {} > len {}",
+                                s.req.id, s.cached_len, s.ids.len()))?;
+            if !cfg.kv_cache {
+                prop_assert(s.cached_len == 0,
+                            format!("request {}: cached_len {} with \
+                                     KV off", s.req.id, s.cached_len))?;
+            }
+        }
+        let warm: usize =
+            sched.preempted().iter().map(|s| s.cached_len).sum();
+        prop_assert(warm <= cfg.retain_cache_tokens,
+                    format!("warm preempted KV {warm} over retain cap \
+                             {}", cfg.retain_cache_tokens))
+    };
+
+    loop {
+        loop {
+            if sched.wants_offer()
+                && next_arrival < arrivals.len()
+                && arrivals[next_arrival].1 <= now
+            {
+                let (req, t) = arrivals[next_arrival].clone();
+                next_arrival += 1;
+                prop_assert(sched.offer(req, t),
+                            "wants_offer lied: offer refused")?;
+                continue;
+            }
+            let progressed = sched
+                .admit_pending(now)
+                .map_err(|e| format!("admit failed: {e}"))?;
+            for e in sched.take_events() {
+                match e {
+                    SchedEvent::Preempted { id, cache_dropped } => {
+                        engine.preempt(id, cache_dropped);
+                    }
+                    SchedEvent::Rejected { id } => {
+                        prop_assert(rejected_events.insert(id),
+                                    format!("request {id} rejected \
+                                             twice"))?;
+                    }
+                    SchedEvent::Resumed { .. } => {}
+                    SchedEvent::Retired { id } => {
+                        return Err(format!(
+                            "request {id}: Retired via the event \
+                             stream at admission time"));
+                    }
+                }
+            }
+            state_ok(&sched)?;
+            if !progressed {
+                break;
+            }
+        }
+        if sched.is_idle() {
+            if next_arrival >= arrivals.len() {
+                break;
+            }
+            now = now.max(arrivals[next_arrival].1);
+            continue;
+        }
+        prop_assert(!sched.live().is_empty(),
+                    "stalled: work pending but nothing live")?;
+        prop_assert(sched.steps() < MAX_STEPS,
+                    format!("runaway: {MAX_STEPS} steps without \
+                             draining"))?;
+
+        let batch = sched.microbatch();
+        prop_assert(!batch.is_empty(), "empty microbatch")?;
+        let tokens = sched.step_tokens(&batch);
+        if cfg.mode == SchedMode::Continuous {
+            prop_assert(
+                tokens <= cfg.max_batch_tokens || batch.len() == 1,
+                format!("step computes {tokens} > budget {} with {} \
+                         sequences", cfg.max_batch_tokens, batch.len()))?;
+        }
+        let seqs: Vec<(u64, &[i32], usize)> = batch
+            .iter()
+            .map(|&i| {
+                let s = &sched.live()[i];
+                (s.req.id, s.ids.as_slice(), s.cached_len)
+            })
+            .collect();
+        // The fake engine errors if the scheduler's cached-length
+        // pricing disagrees with the engine-side cache map.
+        let (next, rounds) = engine
+            .step(&seqs)
+            .map_err(|e| format!("engine/scheduler divergence: {e}"))?;
+        now += 0.5 * tokens as f64 + rounds as f64;
+        let retired = sched
+            .complete_step(&batch, &next, now, rounds)
+            .map_err(|e| format!("complete_step failed: {e}"))?;
+        for id in retired {
+            engine.retire(id);
+            *retired_events.entry(id).or_insert(0) += 1;
+        }
+        state_ok(&sched)?;
+    }
+
+    // Exit accounting: no warm cache survives the drain, and every
+    // offered request is in done ∪ rejected exactly once.
+    prop_assert(engine.live_caches() == 0,
+                format!("{} KV caches leaked past the drain",
+                        engine.live_caches()))?;
+    let done_ids: Vec<u64> =
+        sched.done().iter().map(|s| s.req.id).collect();
+    let done_set: HashSet<u64> = done_ids.iter().copied().collect();
+    prop_assert(done_set.len() == done_ids.len(),
+                "a request retired twice")?;
+    let rej_set: HashSet<u64> =
+        sched.rejected_ids().iter().copied().collect();
+    prop_assert(rej_set == rejected_events,
+                "rejected ids disagree with Rejected events")?;
+    prop_assert(done_set.is_disjoint(&rej_set),
+                "a request both retired and was rejected")?;
+    prop_assert(done_set.len() + rej_set.len() == n_offered,
+                format!("{} done + {} rejected != {} offered",
+                        done_set.len(), rej_set.len(), n_offered))?;
+    prop_assert(done_set.union(&rej_set).count() == n_offered,
+                "done ∪ rejected misses an offered id")?;
+    for s in sched.done() {
+        let fired = retired_events.get(&s.req.id).copied().unwrap_or(0);
+        let expect = usize::from(s.generated() > 0);
+        prop_assert(fired == expect,
+                    format!("request {}: {} retirement events, \
+                             expected {expect}", s.req.id, fired))?;
+    }
+    Ok(())
+}
+
+fn fuzz_cases() -> usize {
+    std::env::var("SCHED_FUZZ_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(120)
+}
+
+#[test]
+fn scheduler_invariants_hold_under_fuzz() {
+    check(fuzz_cases(), scheduler_invariants);
+}
+
+/// Replay a single failing seed printed by a fuzz panic:
+/// `SCHED_FUZZ_SEED=0x5eed0042 cargo test --test sched_properties
+/// replay`.
+#[test]
+fn replay_seed_from_env() {
+    if let Ok(s) = std::env::var("SCHED_FUZZ_SEED") {
+        let seed = if let Some(hex) = s.strip_prefix("0x") {
+            u64::from_str_radix(hex, 16).expect("hex seed")
+        } else {
+            s.parse().expect("decimal seed")
+        };
+        check_seed(seed, scheduler_invariants);
+    }
+}

@@ -17,12 +17,15 @@
 //!   virtual clock respects the schedule.
 
 use grace_moe::config::{ArrivalProcess, ServeLoad};
-use grace_moe::server::sched::{simulate_serve, simulate_serve_with,
-                               SchedConfig, SchedMode};
+use grace_moe::server::sched::{simulate_serve, simulate_serve_events,
+                               simulate_serve_with, SchedConfig,
+                               SchedEvent, SchedMode};
 use grace_moe::server::Request;
 use grace_moe::stats::Rng;
 use grace_moe::testutil::fake_decode_token as fake_next;
 use grace_moe::testutil::FakeKvEngine;
+use std::cell::RefCell;
+use std::collections::HashMap;
 
 const CTX: usize = 64;
 const LAYERS: usize = 2;
@@ -35,6 +38,7 @@ fn cfg(mode: SchedMode, max_batch: usize, budget: usize) -> SchedConfig {
         max_batch_tokens: budget,
         ctx: CTX,
         kv_cache: false,
+        ..SchedConfig::default()
     }
 }
 
@@ -55,7 +59,13 @@ fn req(id: u64, prompt: usize, new_tokens: usize) -> Request {
             .map(|i| ((id as usize * 131 + i * 17) % 512) as i32)
             .collect(),
         max_new_tokens: new_tokens,
+        priority: 0,
     }
+}
+
+fn preq(id: u64, prompt: usize, new_tokens: usize, priority: usize)
+        -> Request {
+    Request { priority, ..req(id, prompt, new_tokens) }
 }
 
 #[test]
@@ -358,4 +368,147 @@ fn queue_wait_reflects_budget_pressure() {
             "tight {} !> loose {}", p95(&tight), p95(&loose));
     assert_eq!(loose.queue_wait.iter().filter(|&&w| w > 0.0).count(), 0,
                "loose budget admits everyone at t=0");
+}
+
+#[test]
+fn preempt_resume_parity_with_cache_retained_and_dropped() {
+    // A high-priority arrival evicts the lone low-priority decode. The
+    // victim's tokens must be unchanged whether its KV survived the
+    // eviction warm (retain cap = ∞) or was dropped and re-prefilled on
+    // resume (retain cap = 0) — eviction may change timing and cost,
+    // never outputs. The fake engine errors if the scheduler's cached
+    // pricing drifts from the engine-side cache on either path.
+    let solo = {
+        let mut c = cfg(SchedMode::Continuous, 2, 12);
+        c.kv_cache = true;
+        let eng = RefCell::new(FakeKvEngine::new(LAYERS, TILE_T, true));
+        simulate_serve_with(
+            c,
+            vec![(preq(0, 10, 20, 1), 0.0)],
+            |seqs| eng.borrow_mut().step(seqs),
+            |_, _| 1.0,
+            |id| eng.borrow_mut().retire(id),
+        )
+        .unwrap()
+        .0
+    };
+    let mut computed = Vec::new();
+    for retain in [usize::MAX, 0usize] {
+        let mut c = cfg(SchedMode::Continuous, 2, 12);
+        c.kv_cache = true;
+        c.preempt = true;
+        c.retain_cache_tokens = retain;
+        let eng = RefCell::new(FakeKvEngine::new(LAYERS, TILE_T, true));
+        let drops = RefCell::new(0usize);
+        let (responses, m) = simulate_serve_events(
+            c,
+            vec![(preq(0, 10, 20, 1), 0.0), (preq(1, 12, 3, 0), 3.0)],
+            |seqs| eng.borrow_mut().step(seqs),
+            |_, _| 1.0,
+            |e| match *e {
+                SchedEvent::Preempted { id, cache_dropped } => {
+                    eng.borrow_mut().preempt(id, cache_dropped);
+                    if cache_dropped {
+                        *drops.borrow_mut() += 1;
+                    }
+                }
+                SchedEvent::Retired { id } => {
+                    eng.borrow_mut().retire(id);
+                }
+                _ => {}
+            },
+        )
+        .unwrap();
+        assert_eq!(m.preemptions, 1, "retain={retain}");
+        assert_eq!(m.resumes, 1, "retain={retain}");
+        // Under the zero cap the victim's cache is dropped; under the
+        // unbounded cap it stays warm.
+        assert_eq!(*drops.borrow(), usize::from(retain == 0),
+                   "retain={retain}");
+        let r0 = responses.iter().find(|r| r.id == 0).unwrap();
+        assert_eq!(r0.tokens, solo[0].tokens,
+                   "retain={retain}: eviction changed request 0's \
+                    tokens");
+        assert_eq!(r0.tokens.len(), 20);
+        assert_eq!(
+            responses.iter().find(|r| r.id == 1).unwrap().tokens.len(),
+            3
+        );
+        assert_eq!(eng.borrow().live_caches(), 0,
+                   "retain={retain}: caches leaked past the drain");
+        assert_eq!(
+            m.per_request.iter().find(|t| t.id == 0).unwrap()
+                .preemptions,
+            1
+        );
+        computed.push(m.computed_tokens);
+    }
+    // Dropping the cache forces a re-prefill of the whole prefix, so
+    // the zero-cap run computes strictly more tokens.
+    assert!(computed[1] > computed[0],
+            "drop-path compute {} !> retain-path {}", computed[1],
+            computed[0]);
+}
+
+#[test]
+fn preemption_bounds_short_request_ttft_fifo_starves_it() {
+    // Starvation regression: a short class-0 request arriving behind a
+    // long class-1 decode under a budget too tight to share. Without
+    // preemption it waits for the entire 30-token drain; with it, the
+    // long request is evicted and the short one's TTFT stays bounded.
+    let arrivals =
+        vec![(preq(0, 16, 30, 1), 0.0), (preq(1, 8, 2, 0), 2.0)];
+    let run = |preempt: bool| {
+        let mut c = cfg(SchedMode::Continuous, 4, 24);
+        c.preempt = preempt;
+        simulate_serve(c, arrivals.clone(), fake_step, |_, _| 1.0)
+            .unwrap()
+    };
+    let (r_fifo, m_fifo) = run(false);
+    let (r_pre, m_pre) = run(true);
+    let ttft1 = |m: &grace_moe::metrics::ServeMetrics| {
+        m.per_request.iter().find(|t| t.id == 1).unwrap().ttft
+    };
+    // FIFO: request 1 starves behind the drain (admitted ~t=30).
+    assert!(ttft1(&m_fifo) > 25.0,
+            "fifo TTFT {} not starved", ttft1(&m_fifo));
+    assert_eq!(m_fifo.preemptions, 0);
+    // Preemption: first token within a few steps of arrival.
+    assert!(ttft1(&m_pre) < 5.0,
+            "preempt TTFT {} not bounded", ttft1(&m_pre));
+    assert_eq!(m_pre.preemptions, 1);
+    assert_eq!(m_pre.resumes, 1);
+    // The evicted long request still decodes to completion, token for
+    // token.
+    assert_eq!(r_fifo[0].id, 0);
+    assert_eq!(r_pre[0].id, 0);
+    assert_eq!(r_fifo[0].tokens, r_pre[0].tokens,
+               "eviction changed the long request's tokens");
+    assert_eq!(r_pre[0].tokens.len(), 30);
+}
+
+#[test]
+fn retire_hook_fires_exactly_once_across_preempt_resume() {
+    // The retirement hook of simulate_serve_with is the KV-eviction
+    // contract: exactly one fire per admitted request, no matter how
+    // often it was preempted and resumed mid-decode.
+    let mut c = cfg(SchedMode::Continuous, 4, 24);
+    c.preempt = true;
+    let fired: RefCell<HashMap<u64, usize>> =
+        RefCell::new(HashMap::new());
+    let (responses, m) = simulate_serve_with(
+        c,
+        vec![(preq(0, 16, 30, 1), 0.0), (preq(1, 8, 2, 0), 2.0)],
+        fake_step,
+        |_, _| 1.0,
+        |id| *fired.borrow_mut().entry(id).or_insert(0) += 1,
+    )
+    .unwrap();
+    assert_eq!(m.preemptions, 1,
+               "trace must actually exercise eviction");
+    assert_eq!(responses.len(), 2);
+    let fired = fired.into_inner();
+    assert_eq!(fired.len(), 2, "{fired:?}");
+    assert!(fired.values().all(|&n| n == 1),
+            "a request retired more than once: {fired:?}");
 }
