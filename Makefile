@@ -6,9 +6,10 @@
 #                     (writes rust/artifacts/; needed only for execute
 #                     mode — simulate mode and tier-1 tests run without it)
 #   make bench-smoke— compile every paper-figure bench without running it
-#   make bench-record — run the serving + cluster_sim benches with the
-#                     JSON emitter on, archiving BENCH_serving.json and
-#                     BENCH_cluster_sim.json in the repo root
+#   make bench-record — run the serving + cluster_sim + fleet_sharding
+#                     benches with the JSON emitter on, archiving
+#                     BENCH_serving.json, BENCH_cluster_sim.json, and
+#                     BENCH_fleet_sharding.json in the repo root
 #   make lint       — rustfmt + clippy, as CI runs them
 #   make docs       — rustdoc with warnings-as-errors (missing_docs,
 #                     broken intra-doc links) + check that every public
@@ -41,13 +42,14 @@ artifacts:
 bench-smoke:
 	cargo bench --no-run
 
-# Machine-readable bench archive: both serving-path benches run with the
+# Machine-readable bench archive: the serving-path benches run with the
 # JSON emitter enabled (see grace_moe::bench::JsonRecorder), writing
 # BENCH_<name>.json next to this Makefile. Each bench self-checks its
 # acceptance claim before recording, so a stale archive cannot pass.
 bench-record:
 	BENCH_JSON=$(CURDIR) cargo bench --bench serving
 	BENCH_JSON=$(CURDIR) cargo bench --bench cluster_sim
+	BENCH_JSON=$(CURDIR) cargo bench --bench fleet_sharding
 
 lint:
 	cargo fmt --all --check

@@ -1,0 +1,194 @@
+//! Fleet-sharding bench: the PR-9 acceptance bars, self-checked on
+//! every run.
+//!
+//! Two arms over the virtual-clock fleet replay
+//! ([`grace_moe::engine::fleet::replay_fleet`]):
+//!
+//! * **scaling** — the same saturating Poisson trace through 1 vs 4
+//!   jsq-routed replicas. Four replicas are 4× the hardware, so the
+//!   bar is ≥ 2.5× the single-replica token throughput (the front-end,
+//!   interleave, and residual imbalance are allowed to cost at most
+//!   ~37%) *and* a strictly lower p95 TTFT — scale-out must shorten
+//!   the admission queue, not just widen the pipe.
+//! * **affinity** — class-conditioned traffic (`class_shift`) over
+//!   class-specialised replicas (`replica_profiles`), jsq vs
+//!   placement-affinity routing at equal completed token counts. The
+//!   bar: affinity moves strictly fewer cross-node bytes, because it
+//!   sends each class to the replica that locally replicates that
+//!   class's hot experts instead of spraying classes over mismatched
+//!   placements.
+//!
+//! Run: `cargo bench --bench fleet_sharding`
+//! JSON archive: `cargo bench --bench fleet_sharding -- --json`, or
+//! `BENCH_JSON=<dir>` (the `make bench-record` path) — writes
+//! `BENCH_fleet_sharding.json` with both arms plus the self-check
+//! verdicts.
+
+use grace_moe::baselines::SystemSpec;
+use grace_moe::bench::{bench, JsonRecorder, Table};
+use grace_moe::cluster::Topology;
+use grace_moe::config::{ArrivalProcess, ModelSpec, ServeLoad, Workload};
+use grace_moe::configio::Value;
+use grace_moe::engine::fleet::{replay_fleet, FleetConfig, FleetReport};
+use grace_moe::engine::SimConfig;
+use grace_moe::server::shard::FleetRoutePolicy;
+
+/// A saturating open-loop workload: arrivals far faster than any shard
+/// drains, so the admission queue (not the arrival process) sets TTFT.
+const REQUESTS: usize = 96;
+const RATE: f64 = 1e4;
+
+fn fleet_cfg(replicas: usize, route: FleetRoutePolicy) -> FleetConfig {
+    let model = ModelSpec { moe_layers: 2, ..ModelSpec::olmoe() };
+    let mut sim = SimConfig::new(
+        model,
+        Topology::two_by_two(),
+        Workload { batch: 8, prefill: 16, decode: 4 },
+    );
+    sim.profile_tokens = 256;
+    sim.max_chunk = 256;
+    let load = ServeLoad {
+        requests: REQUESTS,
+        prompt: 16,
+        new_tokens: 4,
+        arrival: ArrivalProcess::Poisson { rate: RATE },
+    };
+    let mut cfg =
+        FleetConfig::new(SystemSpec::grace(0.15), sim, load);
+    // Tight admission limits so the single-replica arm actually queues.
+    cfg.max_batch = 4;
+    cfg.max_batch_tokens = 64;
+    cfg.shard.replicas = replicas;
+    cfg.shard.route = route;
+    cfg
+}
+
+fn row(table: &mut Table, arm: &str, rep: &FleetReport) {
+    let ttft = rep.serve.ttft_summary().expect("ttft");
+    table.row(vec![
+        arm.to_string(),
+        format!("{}", rep.replicas),
+        rep.serve.latencies.len().to_string(),
+        format!("{:.0}", rep.serve.throughput_tps()),
+        format!("{:.2}", ttft.p95() * 1e3),
+        format!("{:.2}", rep.comm.cross_bytes / 1e6),
+        format!("{:.2}", rep.fleet_imbalance()),
+    ]);
+}
+
+fn report_json(rep: &FleetReport) -> Value {
+    Value::object(vec![
+        ("replicas", Value::from(rep.replicas)),
+        ("requests", Value::from(rep.serve.latencies.len())),
+        ("generated_tokens", Value::from(rep.serve.generated_tokens)),
+        ("throughput_tps", Value::num(rep.serve.throughput_tps())),
+        ("ttft_p95_ms",
+         Value::num(rep.serve.ttft_summary()
+             .map_or(0.0, |s| s.p95()) * 1e3)),
+        ("cross_bytes", Value::num(rep.comm.cross_bytes)),
+        ("fleet_imbalance", Value::num(rep.fleet_imbalance())),
+    ])
+}
+
+fn main() {
+    let mut rec = JsonRecorder::from_env("fleet_sharding");
+    let mut table = Table::new(&[
+        "ARM",
+        "REPLICAS",
+        "REQS",
+        "TOK/S",
+        "TTFT p95 (ms)",
+        "CROSS MB",
+        "IMBALANCE",
+    ]);
+
+    // ---- scaling: 1 vs 4 jsq replicas on the same saturating trace --
+    let one = replay_fleet(&fleet_cfg(1, FleetRoutePolicy::Jsq))
+        .expect("1-replica replay");
+    let four = replay_fleet(&fleet_cfg(4, FleetRoutePolicy::Jsq))
+        .expect("4-replica replay");
+    row(&mut table, "scaling/jsq", &one);
+    row(&mut table, "scaling/jsq", &four);
+    rec.record_value("scaling/replicas1", report_json(&one));
+    rec.record_value("scaling/replicas4", report_json(&four));
+
+    assert_eq!(one.serve.latencies.len(), REQUESTS);
+    assert_eq!(four.serve.latencies.len(), REQUESTS);
+    for (r, m) in four.per_replica.iter().enumerate() {
+        assert!(m.steps > 0, "replica {r} never stepped");
+    }
+    let speedup =
+        four.serve.throughput_tps() / one.serve.throughput_tps();
+    assert!(
+        speedup >= 2.5,
+        "4-replica fleet must deliver >= 2.5x the single-replica \
+         throughput on a saturating trace, got {speedup:.2}x \
+         ({:.0} vs {:.0} tok/s)",
+        four.serve.throughput_tps(),
+        one.serve.throughput_tps()
+    );
+    let p95_one = one.serve.ttft_summary().expect("ttft").p95();
+    let p95_four = four.serve.ttft_summary().expect("ttft").p95();
+    assert!(
+        p95_four < p95_one,
+        "4 replicas must strictly shorten the admission queue: p95 \
+         TTFT {:.2} ms !< {:.2} ms",
+        p95_four * 1e3,
+        p95_one * 1e3
+    );
+    rec.record_value("self_check_speedup", Value::num(speedup));
+    rec.record_value("self_check_ttft_p95_lower", Value::from(true));
+
+    // ---- affinity: class-aware routing vs jsq, equal token counts ---
+    let arm = |route| {
+        let mut cfg = fleet_cfg(4, route);
+        cfg.priority_classes = 4;
+        cfg.class_shift = true;
+        cfg.replica_profiles = true;
+        replay_fleet(&cfg).expect("affinity-arm replay")
+    };
+    let jsq = arm(FleetRoutePolicy::Jsq);
+    let aff = arm(FleetRoutePolicy::Affinity);
+    row(&mut table, "affinity/jsq", &jsq);
+    row(&mut table, "affinity/affinity", &aff);
+    rec.record_value("affinity/jsq", report_json(&jsq));
+    rec.record_value("affinity/affinity", report_json(&aff));
+
+    assert_eq!(
+        jsq.serve.generated_tokens, aff.serve.generated_tokens,
+        "the cross-bytes comparison is only meaningful at equal \
+         completed token counts"
+    );
+    assert!(
+        aff.comm.cross_bytes < jsq.comm.cross_bytes,
+        "placement-affinity routing must move strictly fewer \
+         cross-node bytes than jsq over class-specialised replicas: \
+         {:.2} MB !< {:.2} MB",
+        aff.comm.cross_bytes / 1e6,
+        jsq.comm.cross_bytes / 1e6
+    );
+    rec.record_value(
+        "self_check_affinity_cross_bytes",
+        Value::object(vec![
+            ("jsq", Value::num(jsq.comm.cross_bytes)),
+            ("affinity", Value::num(aff.comm.cross_bytes)),
+            ("saved_frac",
+             Value::num(1.0 - aff.comm.cross_bytes
+                 / jsq.comm.cross_bytes)),
+        ]),
+    );
+
+    println!("{}", table.render());
+
+    // Wall-clock of the fleet machinery itself (routing, interleave,
+    // per-shard pricing) — the scale-out overhead per replay.
+    let r = bench("fleet replay (4 replicas, 96 reqs)", 2, 5, || {
+        replay_fleet(&fleet_cfg(4, FleetRoutePolicy::Jsq))
+            .expect("bench replay")
+    });
+    println!("{}", r.report_line());
+    rec.record(&r);
+    if let Some(path) = rec.finish().expect("write bench json") {
+        println!("wrote {}", path.display());
+    }
+}

@@ -89,6 +89,98 @@ fn main() {
     });
     println!("{}", r.report_line());
 
+    // ---- replan rollout: instance-table cache ---------------------------
+    // A fleet rollout applies one accepted delta to N replica placements.
+    // The naive path (`apply_delta` per replica) rebuilds each changed
+    // layer's instance table N times; `PreparedDelta` builds it once and
+    // clones it into every replica whose primary map still matches. The
+    // `instances_build_count` counter pins the allocation counts exactly
+    // (this bench is its own process, so no parallel test perturbs it).
+    {
+        use grace_moe::placement::instances_build_count;
+        use grace_moe::replan::{apply_delta, LayerDelta, PreparedDelta,
+                                ReplanDelta};
+
+        let lp0 = &placement.layers[0];
+        // Force a structural change: replicate the first two experts
+        // onto every GPU that hosts neither primary.
+        let mut repl = lp0.replication.clone();
+        repl.hot_experts = vec![0, 1];
+        repl.replica_gpus = (0..placement.num_gpus)
+            .filter(|&g| g != lp0.primary[0] && g != lp0.primary[1])
+            .collect();
+        repl.n_replica = repl.replica_gpus.len();
+        repl.computed = true;
+        let delta = ReplanDelta {
+            layers: vec![LayerDelta {
+                layer: 0,
+                replication: repl,
+                added: Vec::new(),
+                removed: Vec::new(),
+                predicted: lp0.predicted.clone(),
+                polling: lp0.polling.clone(),
+                rho_live: 0.0,
+                migration_bytes: 0.0,
+                benefit_s: 0.0,
+                cost_s: 0.0,
+            }],
+            migration_bytes: 0.0,
+            benefit_s: 0.0,
+            cost_s: 0.0,
+        };
+        const REPLICAS: usize = 8;
+
+        let before = instances_build_count();
+        let naive: Vec<_> = (0..REPLICAS)
+            .map(|_| apply_delta(&placement, &delta))
+            .collect();
+        let naive_builds = instances_build_count() - before;
+        assert_eq!(naive_builds, REPLICAS as u64,
+                   "apply_delta must rebuild the changed layer's \
+                    instance table once per replica");
+
+        let before = instances_build_count();
+        let prep = PreparedDelta::new(&placement, delta.clone());
+        let cached: Vec<_> = (0..REPLICAS)
+            .map(|_| prep.apply(&placement))
+            .collect();
+        let cached_builds = instances_build_count() - before;
+        assert_eq!(cached_builds, 1,
+                   "PreparedDelta must build the changed layer's \
+                    instance table exactly once for the whole rollout, \
+                    got {cached_builds}");
+
+        for (n, c) in naive.iter().zip(&cached) {
+            assert_eq!(n.layers[0].instances, c.layers[0].instances,
+                       "cached rollout must equal the naive one");
+            assert_ne!(n.layers[0].instances, placement.layers[0].instances,
+                       "the bench delta must actually change layer 0");
+        }
+
+        // Empty deltas (the common every-epoch case) must not rebuild
+        // anything at all.
+        let before = instances_build_count();
+        let noop = PreparedDelta::new(&placement, ReplanDelta::default());
+        assert!(noop.is_empty());
+        assert_eq!(instances_build_count() - before, 0,
+                   "preparing an empty delta must not touch \
+                    instances_for");
+
+        let r = bench("replan rollout apply_delta x8", 3, 50, || {
+            (0..REPLICAS)
+                .map(|_| apply_delta(&placement, &delta).layers.len())
+                .sum::<usize>()
+        });
+        println!("{}", r.report_line());
+        let r = bench("replan rollout PreparedDelta x8", 3, 50, || {
+            let prep = PreparedDelta::new(&placement, delta.clone());
+            (0..REPLICAS)
+                .map(|_| prep.apply(&placement).layers.len())
+                .sum::<usize>()
+        });
+        println!("{}", r.report_line());
+    }
+
     // ---- PJRT execution (needs artifacts + a real PJRT runtime) ---------
     let dir = std::path::Path::new("artifacts");
     if dir.join("manifest.json").exists()

@@ -1,5 +1,6 @@
 //! Open-loop fleet replay: large request traces through the continuous
-//! scheduler, the online re-planner, and the contended network.
+//! scheduler, the online re-planner, and the contended network — now
+//! over a *replica-sharded fleet* of N independent serving shards.
 //!
 //! The timing engine ([`super::sim`]) prices one representative chunk per
 //! phase and scales; the serving harness
@@ -15,14 +16,31 @@
 //! with decode traffic for the NIC, which is exactly the regime the
 //! analytic α–β models cannot see.
 //!
+//! **Fleet sharding** ([`ShardConfig::replicas`] > 1): the replay
+//! becomes the virtual-clock twin of the threaded
+//! [`crate::server::shard::FleetFrontend`]. One admission front-end
+//! routes each arrival to exactly one shard through the shared
+//! [`FleetRouter`] (jsq / wrr / placement-affinity over the per-class
+//! gate profiles of [`ClassProfiles`]); each shard owns its own
+//! scheduler, dispatcher, placement copy, and network backend, and the
+//! shards are interleaved deterministically by a min-virtual-clock loop
+//! (always step the shard whose next work item is earliest, ties to the
+//! lowest index). A single-replica fleet reduces *bit-for-bit* to the
+//! pre-sharding replay — `tests::reference` keeps the old loop alive as
+//! the parity oracle.
+//!
 //! Re-planning rides along as in the timing engine (systems with
 //! [`SystemSpec::online_replan`] plus a [`SimConfig::replan`] cadence):
-//! every layer round is observed, epoch boundaries fall between steps,
-//! and accepted migrations are priced through the same backend — on the
-//! DES arm the weight copies queue behind serving traffic. The migration
-//! cost model is refreshed from *measured* step time via
-//! [`CostParams::from_observed`], so the payback gate uses the replay's
-//! own tokens-per-second rather than the a-priori GPU model.
+//! every layer round from every shard feeds one fleet-wide
+//! [`Replanner`], epoch boundaries fall between steps, and accepted
+//! deltas roll out replica-by-replica through
+//! [`crate::replan::RollingReplan`] — at most one shard swaps per
+//! epoch, its migration priced through its own backend at its own
+//! virtual time, while the other N−1 shards keep serving (no global
+//! barrier). The migration cost model is refreshed from *measured*
+//! fleet step time via [`CostParams::from_observed`], so the payback
+//! gate uses the replay's own tokens-per-second rather than the
+//! a-priori GPU model.
 
 use crate::baselines::SystemSpec;
 use crate::comm::model::{CommModel, CommReport};
@@ -31,21 +49,30 @@ use crate::config::ServeLoad;
 use crate::configio::Value;
 use crate::metrics::{ContentionReport, ServeMetrics};
 use crate::placement::Placement;
-use crate::replan::{self, CostParams, Replanner};
-use crate::routing::{Assignment, DispatchPlan, Dispatcher};
-use crate::server::sched::{SchedConfig, SchedMode, Scheduler};
+use crate::replan::{self, CostParams, PreparedDelta, Replanner,
+                    RollingReplan};
+use crate::routing::{Assignment, Dispatcher};
+use crate::server::sched::{SchedConfig, SchedEvent, SchedMode, Scheduler};
+use crate::server::shard::{ClassProfiles, FleetRoutePolicy, FleetRouter,
+                           ShardConfig};
 use crate::server::{even_src, Request};
 use crate::stats::Rng;
 use crate::testutil::fake_decode_token;
 use crate::trace::TraceGen;
+use std::collections::VecDeque;
 
 use super::sim::{build_placement, coordinator, SimConfig,
                  ROUTE_DECISION_COST};
 
+/// Per-shard seed decorrelation stride (splitmix64's golden-gamma);
+/// shard 0 keeps the base seed so a single-replica fleet replays the
+/// pre-sharding RNG streams bit-for-bit.
+const SHARD_SEED_STRIDE: u64 = 0x9E3779B97F4A7C15;
+
 /// Configuration of one fleet replay: the system under test, the
-/// simulated model/cluster, the request workload, and the scheduler's
-/// admission limits. The communication backend is taken from
-/// [`SimConfig::comm_backend`].
+/// simulated model/cluster, the request workload, the scheduler's
+/// admission limits, and the fleet shape ([`ShardConfig`]). The
+/// communication backend is taken from [`SimConfig::comm_backend`].
 #[derive(Clone, Debug)]
 pub struct FleetConfig {
     /// System under test (placement/routing/communication strategy).
@@ -54,9 +81,9 @@ pub struct FleetConfig {
     pub sim: SimConfig,
     /// Request workload (count, shape, arrival process).
     pub load: ServeLoad,
-    /// Maximum concurrently-live sequences.
+    /// Maximum concurrently-live sequences (per shard).
     pub max_batch: usize,
-    /// Token budget one batched step may compute.
+    /// Token budget one batched step may compute (per shard).
     pub max_batch_tokens: usize,
     /// Priority classes to spread the trace over: request `i` gets
     /// class `i % priority_classes` (1, the default, keeps the whole
@@ -66,25 +93,58 @@ pub struct FleetConfig {
     pub preempt: bool,
     /// Per-class TTFT deadlines, seconds (empty: no SLO shedding).
     pub ttft_slo: Vec<f64>,
+    /// Fleet shape: replica count, route policy, and fleet-wide
+    /// admission queue capacity. The replay default keeps the queue
+    /// unbounded (`usize::MAX`) so a single-replica fleet reproduces
+    /// the pre-sharding closed-loop behaviour exactly; a finite cap
+    /// sheds overflow arrivals loudly into the rejected list.
+    pub shard: ShardConfig,
+    /// Condition the synthetic gate trace on priority class: each
+    /// token's expert picks rotate by `class · experts / classes`, so
+    /// different classes exercise different hot experts (the regime
+    /// where placement-affinity routing has something to win). Off by
+    /// default — the unconditioned trace is the bit-compatible one.
+    pub class_shift: bool,
+    /// Give replica `r` a placement built from the profiling trace
+    /// shifted by class `r % priority_classes` (instead of a clone of
+    /// the shared offline placement), specialising each replica to one
+    /// class's hot experts. Off by default.
+    pub replica_profiles: bool,
 }
 
 impl FleetConfig {
     /// Fleet over `sys`/`sim`/`load` with default admission limits
     /// (32 live sequences, 2048 computed tokens per step), one
-    /// priority class, and no preemption or SLO shedding.
+    /// priority class, no preemption or SLO shedding, and a
+    /// single-replica jsq fleet with an unbounded admission queue.
     pub fn new(sys: SystemSpec, sim: SimConfig, load: ServeLoad)
                -> FleetConfig {
-        FleetConfig { sys, sim, load, max_batch: 32,
-                      max_batch_tokens: 2048, priority_classes: 1,
-                      preempt: false, ttft_slo: Vec::new() }
+        FleetConfig {
+            sys,
+            sim,
+            load,
+            max_batch: 32,
+            max_batch_tokens: 2048,
+            priority_classes: 1,
+            preempt: false,
+            ttft_slo: Vec::new(),
+            shard: ShardConfig {
+                queue_cap: usize::MAX,
+                ..ShardConfig::default()
+            },
+            class_shift: false,
+            replica_profiles: false,
+        }
     }
 
     /// Loud input validation: a zero-length trace, an empty prompt, a
-    /// non-positive arrival rate, or zero admission limits would
-    /// otherwise surface as a silent empty report or a scheduler stall
-    /// deep into the replay.
+    /// non-positive arrival rate, zero admission limits, or a
+    /// degenerate fleet shape (`--replicas 0`, queue smaller than the
+    /// fleet) would otherwise surface as a silent empty report or a
+    /// scheduler stall deep into the replay.
     pub fn validate(&self) -> anyhow::Result<()> {
         self.load.validate()?;
+        self.shard.validate()?;
         anyhow::ensure!(self.max_batch > 0,
                         "max_batch must be at least 1");
         anyhow::ensure!(self.max_batch_tokens > 0,
@@ -108,30 +168,67 @@ impl FleetConfig {
 pub struct FleetReport {
     /// Which communication backend priced the replay.
     pub backend: CommBackendKind,
-    /// Serving-side metrics (latency/TTFT/TPOT distributions, steps,
-    /// throughput) on the virtual clock.
+    /// Replica shards the fleet ran.
+    pub replicas: usize,
+    /// Fleet-wide serving metrics on the virtual clock: per-replica
+    /// distributions merged, counters summed, wall-clock the slowest
+    /// shard's (shards serve concurrently).
     pub serve: ServeMetrics,
+    /// Per-replica serving metrics, indexed by shard.
+    pub per_replica: Vec<ServeMetrics>,
     /// Communication totals accumulated over every dispatch, combine,
-    /// and migration collective.
+    /// and migration collective on every shard.
     pub comm: CommReport,
-    /// Network contention diagnostics (`None` on the analytic backend).
+    /// Network contention diagnostics folded across shards (`None` on
+    /// the analytic backend).
     pub contention: Option<ContentionReport>,
-    /// Re-planning deltas applied during the replay.
+    /// Completed re-plan rollouts (every shard swapped to the delta).
     pub replans: usize,
+    /// Individual replica placement swaps (one per shard per rollout;
+    /// `replans × replicas` once every rollout has completed).
+    pub swaps: usize,
+    /// The rolling-replan swap log: `(epoch, shard)` per swap, in
+    /// commit order — the "at most one shard swaps per epoch"
+    /// invariant is assertable directly on it.
+    pub swap_log: Vec<(u64, usize)>,
     /// Expert-weight bytes migrated by applied deltas.
     pub migration_bytes: f64,
 }
 
 impl FleetReport {
+    /// Fleet load imbalance: the busiest shard's generated tokens over
+    /// the per-shard mean (1.0 = perfectly balanced; 0.0 when nothing
+    /// was generated).
+    pub fn fleet_imbalance(&self) -> f64 {
+        let total: usize = self
+            .per_replica
+            .iter()
+            .map(|m| m.generated_tokens)
+            .sum();
+        if total == 0 || self.per_replica.is_empty() {
+            return 0.0;
+        }
+        let mean = total as f64 / self.per_replica.len() as f64;
+        let max = self
+            .per_replica
+            .iter()
+            .map(|m| m.generated_tokens)
+            .max()
+            .unwrap_or(0) as f64;
+        max / mean
+    }
+
     /// Deterministic JSON-style rendering — two replays with the same
-    /// config must serialise identically (the `des-smoke` CI gate diffs
-    /// this, including the DES event digest).
+    /// config must serialise identically (the `des-smoke` and
+    /// `fleet-smoke` CI gates diff this, including the DES event
+    /// digest).
     pub fn to_value(&self) -> Value {
         let mean = |s: Option<crate::stats::Summary>| {
             Value::num(s.as_ref().map_or(0.0, |s| s.mean()))
         };
         let mut fields = vec![
             ("backend", Value::str(self.backend.name())),
+            ("replicas", Value::from(self.replicas)),
             ("requests", Value::from(self.serve.latencies.len())),
             ("steps", Value::from(self.serve.steps)),
             ("dispatch_rounds", Value::from(self.serve.dispatch_rounds)),
@@ -152,7 +249,9 @@ impl FleetReport {
             ("intra_bytes", Value::num(self.comm.intra_bytes)),
             ("launches", Value::from(self.comm.launches)),
             ("replans", Value::from(self.replans)),
+            ("swaps", Value::from(self.swaps)),
             ("migration_bytes", Value::num(self.migration_bytes)),
+            ("fleet_imbalance", Value::num(self.fleet_imbalance())),
             ("preemptions", Value::from(self.serve.preemptions)),
             ("resumes", Value::from(self.serve.resumes)),
             ("rejected", Value::from(self.serve.rejected.len())),
@@ -179,6 +278,29 @@ impl FleetReport {
         for (k, v) in &class_fields {
             fields.push((k.as_str(), v.clone()));
         }
+        // Per-replica breakdown: enough to read shard balance and
+        // per-shard latency off the report without a second run.
+        let replica_fields: Vec<(String, Value)> = self
+            .per_replica
+            .iter()
+            .enumerate()
+            .map(|(r, m)| {
+                (format!("replica{r}"),
+                 Value::object(vec![
+                     ("requests", Value::from(m.latencies.len())),
+                     ("generated_tokens",
+                      Value::from(m.generated_tokens)),
+                     ("steps", Value::from(m.steps)),
+                     ("wall_time_s", Value::num(m.wall_time)),
+                     ("ttft_mean_s",
+                      Value::num(m.ttft_summary()
+                          .map_or(0.0, |s| s.mean()))),
+                 ]))
+            })
+            .collect();
+        for (k, v) in &replica_fields {
+            fields.push((k.as_str(), v.clone()));
+        }
         if let Some(c) = &self.contention {
             fields.push(("contention", Value::object(vec![
                 ("max_utilization", Value::num(c.max_utilization)),
@@ -198,63 +320,116 @@ impl FleetReport {
     }
 }
 
-/// Re-planning state riding along a fleet replay (mirrors the timing
-/// engine's `EpochState`, but prices migrations through the replay's
-/// [`CommBackend`] at the current virtual time).
-struct FleetEpoch {
+/// One serving shard of the fleet: its own scheduler, dispatcher,
+/// network backend, RNG stream, active placement copy, admission
+/// queue, and virtual clock. Shard 0's streams equal the pre-sharding
+/// replay's.
+struct Shard {
+    sched: Scheduler,
+    dispatcher: Dispatcher,
+    backend: CommBackend,
+    rng: Rng,
     active: Placement,
+    queue: VecDeque<(Request, f64)>,
+    now: f64,
+    /// Base of this shard's per-step trace seeds.
+    seed: u64,
+}
+
+impl Shard {
+    /// The earliest virtual time at which this shard can run one
+    /// serving iteration: now if sequences are in flight, the head
+    /// arrival's instant if only queued work exists, `None` when the
+    /// shard has nothing to do.
+    fn ready_time(&self) -> Option<f64> {
+        if !self.sched.is_idle() {
+            Some(self.now)
+        } else {
+            self.queue.front().map(|&(_, ta)| self.now.max(ta))
+        }
+    }
+}
+
+/// Fleet-wide re-planning state: one shared [`Replanner`] aggregating
+/// every shard's observed dispatch plans, rolled out shard-by-shard
+/// through [`RollingReplan`] (at most one shard drains/swaps per epoch;
+/// the other N−1 keep serving). Mirrors the timing engine's
+/// `EpochState`, but prices each shard's migration through that shard's
+/// [`CommBackend`] at its own virtual time.
+struct FleetEpochs {
     replanner: Replanner,
+    rolling: RollingReplan,
     /// Jitter stream for migration transfers, separate from the dispatch
-    /// RNG so empty epochs leave the dispatch stream untouched.
+    /// RNGs so empty epochs leave the dispatch streams untouched.
     mig_rng: Rng,
     migration_bytes: f64,
+    /// Completed rollouts (every shard swapped).
     replans: usize,
 }
 
-impl FleetEpoch {
-    fn new(active: Placement, sys: &SystemSpec, cfg: &SimConfig)
-           -> Option<FleetEpoch> {
+impl FleetEpochs {
+    fn new(sys: &SystemSpec, cfg: &SimConfig, replicas: usize)
+           -> Option<FleetEpochs> {
         let rc = match (sys.online_replan, cfg.replan) {
             (true, Some(rc)) => rc,
             _ => return None,
         };
         let cost = CostParams::paper(&cfg.model, &cfg.gpu,
                                      sys.compute_eff);
-        Some(FleetEpoch {
-            active,
+        Some(FleetEpochs {
             replanner: Replanner::new(cfg.topo.clone(), rc, cost),
+            rolling: RollingReplan::new(replicas),
             mig_rng: Rng::new(cfg.seed ^ 0x4D16),
             migration_bytes: 0.0,
             replans: 0,
         })
     }
 
-    fn observe(&mut self, layer: usize, plan: &DispatchPlan) {
-        self.replanner
-            .observe(layer, &self.active.layers[layer], plan);
-    }
-
-    /// Epoch boundary between steps: evaluate, apply, and price the
-    /// weight migration through the backend at virtual time `at`.
-    /// Returns the seconds the migration blocks the serving pipeline.
-    fn tick(&mut self, cfg: &SimConfig, backend: &mut CommBackend,
-            at: f64, comm_total: &mut CommReport) -> f64 {
-        let delta = self.replanner.epoch_tick(&self.active);
-        if delta.is_empty() {
+    /// Epoch boundary at shard `r`'s step edge. With no rollout in
+    /// flight, evaluate the fleet-wide epoch against this shard's
+    /// active placement and prepare any accepted delta (the instance
+    /// tables are built *once* here — [`PreparedDelta`] — not once per
+    /// shard). Then, if the rolling cursor points at this shard in a
+    /// fresh epoch, price its migration through its own backend and
+    /// swap its placement. Returns the seconds the swap blocks this
+    /// shard's pipeline (the other shards never stall).
+    fn tick(&mut self, cfg: &SimConfig, r: usize, shard: &mut Shard,
+            comm_total: &mut CommReport) -> f64 {
+        if !self.rolling.in_flight() {
+            let delta = self.replanner.epoch_tick(&shard.active);
+            if !delta.is_empty() {
+                self.rolling
+                    .begin(PreparedDelta::new(&shard.active, delta));
+            }
+        }
+        let epoch = self.replanner.estimator().max_rounds()
+            / self.replanner.config().epoch_rounds;
+        if !self.rolling.due(r, epoch) {
             return 0.0;
         }
-        let traffic = replan::migration_traffic(
-            &delta,
-            &self.active,
-            self.replanner.cost().expert_bytes,
-        );
-        let rep = backend.flat_round_at(&traffic, &cfg.topo, at,
-                                        &mut self.mig_rng);
-        self.migration_bytes += delta.migration_bytes;
-        self.replans += 1;
-        self.active = replan::apply_delta(&self.active, &delta);
-        let secs = rep.time;
-        fold_comm(comm_total, &rep);
+        let secs;
+        {
+            let prep = self
+                .rolling
+                .prepared()
+                .expect("due implies a prepared delta");
+            let traffic = replan::migration_traffic(
+                prep.delta(),
+                &shard.active,
+                self.replanner.cost().expert_bytes,
+            );
+            let rep = shard.backend.flat_round_at(&traffic, &cfg.topo,
+                                                  shard.now,
+                                                  &mut self.mig_rng);
+            self.migration_bytes += prep.delta().migration_bytes;
+            shard.active = prep.apply(&shard.active);
+            fold_comm(comm_total, &rep);
+            secs = rep.time;
+        }
+        self.rolling.commit(r, epoch);
+        if !self.rolling.in_flight() {
+            self.replans += 1;
+        }
         secs
     }
 }
@@ -270,6 +445,34 @@ fn fold_comm(total: &mut CommReport, rep: &CommReport) {
     total.sync_time += rep.sync_time;
 }
 
+/// Fold shard `b`'s contention diagnostics into `a`: transfer/event
+/// counts and waits sum, utilizations and depths take the fleet max,
+/// and the event digests chain through an FNV-style mix so any shard's
+/// event-stream change perturbs the fleet digest. Folding a fleet of
+/// one is the identity.
+fn fold_contention(a: &mut ContentionReport, b: &ContentionReport) {
+    for (u, &v) in a
+        .per_link_utilization
+        .iter_mut()
+        .zip(&b.per_link_utilization)
+    {
+        *u = u.max(v);
+    }
+    a.max_utilization = a.max_utilization.max(b.max_utilization);
+    a.queue_depth_p50 = a.queue_depth_p50.max(b.queue_depth_p50);
+    a.queue_depth_p95 = a.queue_depth_p95.max(b.queue_depth_p95);
+    a.queue_depth_p99 = a.queue_depth_p99.max(b.queue_depth_p99);
+    a.queue_depth_max = a.queue_depth_max.max(b.queue_depth_max);
+    a.queued_wait_s += b.queued_wait_s;
+    a.straggler_stall_s += b.straggler_stall_s;
+    a.transfers += b.transfers;
+    a.events += b.events;
+    a.event_digest = a
+        .event_digest
+        .wrapping_mul(0x100000001b3)
+        .wrapping_add(b.event_digest);
+}
+
 /// Deterministic synthetic prompt for request `id`; priority class
 /// round-robins over `classes` so a mixed-priority trace interleaves
 /// urgent and background traffic uniformly.
@@ -282,28 +485,109 @@ fn synth_request(id: u64, prompt: usize, new_tokens: usize,
               priority: id as usize % classes.max(1) }
 }
 
-/// Replay the whole [`ServeLoad`] through scheduler + re-planner +
-/// network on the virtual clock.
+/// Route one arrival: shed it if the fleet admission queue is full,
+/// otherwise pick a shard (affinity scores computed against each
+/// shard's *current* placement when profiles are warm), account its
+/// outstanding tokens, land its prompt DMA on the chosen shard's
+/// ingress at the arrival instant, and enqueue it there.
+#[allow(clippy::too_many_arguments)]
+fn route_arrival(req: Request, ta: f64, shards: &mut [Shard],
+                 router: &mut FleetRouter,
+                 profiles: Option<&ClassProfiles>,
+                 outstanding: &mut [f64], shed: &mut Vec<u64>,
+                 queue_cap: usize, req_tokens: f64, n_gpus: usize,
+                 token_bytes: f64) {
+    let waiting: usize = shards.iter().map(|s| s.queue.len()).sum();
+    if waiting >= queue_cap {
+        shed.push(req.id);
+        return;
+    }
+    let scores: Option<Vec<f64>> = profiles.map(|p| {
+        shards
+            .iter()
+            .map(|s| p.score(&s.active, req.priority))
+            .collect()
+    });
+    let r = router.choose(outstanding, scores.as_deref());
+    outstanding[r] += req_tokens;
+    let dst = (req.id as usize) % n_gpus;
+    shards[r]
+        .backend
+        .ingest(dst, req.prompt.len() as f64 * token_bytes, ta);
+    shards[r].queue.push_back((req, ta));
+}
+
+/// Replay the whole [`ServeLoad`] through the sharded fleet — routing
+/// front-end, per-shard scheduler + network, fleet-wide re-planner —
+/// on the virtual clock.
 ///
-/// Each scheduler step routes its actual computed-token batch through
-/// every MoE layer (one dispatch round per layer, dispatch + combine
-/// collectives priced at the step's virtual time) and advances the
-/// clock by the resulting step seconds; arrivals land their prompt
-/// payloads on the network at their arrival instants. The whole replay
-/// is deterministic per [`SimConfig::seed`].
+/// Each scheduler step routes its shard's actual computed-token batch
+/// through every MoE layer (one dispatch round per layer, dispatch +
+/// combine collectives priced at the shard's virtual time) and
+/// advances that shard's clock by the resulting step seconds; arrivals
+/// land their prompt payloads on their shard's network at their
+/// arrival instants. Shards interleave by minimum virtual clock with
+/// lowest-index tie-breaks, so the whole replay is deterministic per
+/// [`SimConfig::seed`], and a single-replica fleet is bit-identical to
+/// the pre-sharding replay.
 pub fn replay_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetReport> {
     cfg.validate()?;
     let sim = &cfg.sim;
     let topo = &sim.topo;
     let n_gpus = topo.num_gpus();
     let token_bytes = sim.model.token_bytes();
+    let n = cfg.shard.replicas;
 
-    let placement = build_placement(&cfg.sys, sim);
-    let mut dispatcher =
-        coordinator(&cfg.sys, sim).dispatcher(token_bytes);
-    let mut rng = Rng::new(sim.seed ^ 0x5E21);
-    let mut backend = CommBackend::new(sim.comm_backend, topo);
-    let mut epoch = FleetEpoch::new(placement.clone(), &cfg.sys, sim);
+    // Per-replica placements: clones of the shared offline placement,
+    // or (with `replica_profiles`) per-class specialisations built
+    // from the class-shifted profiling trace. Shift 0 rebuilds the
+    // shared placement exactly, so replica 0 is always the baseline.
+    let base = build_placement(&cfg.sys, sim);
+    let placements: Vec<Placement> = (0..n)
+        .map(|r| {
+            let classes = cfg.priority_classes.max(1);
+            let shift = (r % classes) * sim.model.experts / classes;
+            if cfg.replica_profiles && shift > 0 {
+                let coord = coordinator(&cfg.sys, sim);
+                let trace = coord.profile_synthetic(
+                    &sim.model,
+                    sim.placement_profile,
+                    sim.profile_tokens,
+                );
+                coord.place(&trace.shift_experts(shift))
+            } else {
+                base.clone()
+            }
+        })
+        .collect();
+
+    let mut shards: Vec<Shard> = placements
+        .into_iter()
+        .enumerate()
+        .map(|(r, active)| -> anyhow::Result<Shard> {
+            let stride = (r as u64).wrapping_mul(SHARD_SEED_STRIDE);
+            Ok(Shard {
+                sched: Scheduler::new(SchedConfig {
+                    mode: SchedMode::Continuous,
+                    max_batch: cfg.max_batch,
+                    max_batch_tokens: cfg.max_batch_tokens,
+                    ctx: cfg.load.prompt + cfg.load.new_tokens,
+                    kv_cache: true,
+                    preempt: cfg.preempt,
+                    retain_cache_tokens: usize::MAX,
+                    ttft_slo: cfg.ttft_slo.clone(),
+                })?,
+                dispatcher: coordinator(&cfg.sys, sim)
+                    .dispatcher(token_bytes),
+                backend: CommBackend::new(sim.comm_backend, topo),
+                rng: Rng::new(sim.seed ^ 0x5E21 ^ stride),
+                active,
+                queue: VecDeque::new(),
+                now: 0.0,
+                seed: sim.seed ^ stride,
+            })
+        })
+        .collect::<anyhow::Result<Vec<_>>>()?;
 
     // Arrival schedule (ascending) and synthetic requests, from an RNG
     // stream decoupled from dispatch so both backends replay the same
@@ -321,121 +605,235 @@ pub fn replay_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetReport> {
         })
         .collect();
 
-    let mut sched = Scheduler::new(SchedConfig {
-        mode: SchedMode::Continuous,
-        max_batch: cfg.max_batch,
-        max_batch_tokens: cfg.max_batch_tokens,
-        ctx: cfg.load.prompt + cfg.load.new_tokens,
-        kv_cache: true,
-        preempt: cfg.preempt,
-        retain_cache_tokens: usize::MAX,
-        ttft_slo: cfg.ttft_slo.clone(),
-    })?;
-
+    let mut epochs = FleetEpochs::new(&cfg.sys, sim, n);
+    let mut router = FleetRouter::new(cfg.shard.route);
+    let mut profiles = (cfg.shard.route == FleetRoutePolicy::Affinity)
+        .then(|| ClassProfiles::new(cfg.priority_classes));
+    let mut outstanding = vec![0.0f64; n];
+    let req_tokens = (cfg.load.prompt + cfg.load.new_tokens) as f64;
+    let mut shed: Vec<u64> = Vec::new();
     let mut comm_total = CommReport::default();
-    let mut now = 0.0f64;
     let mut next_arrival = 0usize;
-    let mut next_ingest = 0usize;
     let mut measured_secs = 0.0f64;
     let mut measured_tokens = 0usize;
 
     loop {
-        // Prompt payload DMA: every request that has arrived by `now`
-        // occupies its host GPU's NIC-in/ingress path at the arrival
-        // instant (analytic backend: free, as in the α–β models).
-        while next_ingest < arrivals.len()
-            && arrivals[next_ingest].1 <= now
-        {
-            let (req, t) = &arrivals[next_ingest];
-            let dst = (req.id as usize) % n_gpus;
-            backend.ingest(dst, req.prompt.len() as f64 * token_bytes,
-                           *t);
-            next_ingest += 1;
-        }
-
-        // Offer arrived requests / admit from the pending queue.
-        loop {
-            if sched.wants_offer() && next_arrival < arrivals.len()
-                && arrivals[next_arrival].1 <= now
-            {
-                let (req, t) = arrivals[next_arrival].clone();
-                next_arrival += 1;
-                sched.offer(req, t);
+        // The routing horizon: the earliest instant any shard can act.
+        // Arrivals at or before it must be routed *now* so the acting
+        // shard sees every request it could admit (for one shard this
+        // is exactly the pre-sharding "ingest while ta ≤ now" loop).
+        let min_ready = shards
+            .iter()
+            .filter_map(Shard::ready_time)
+            .fold(None, |m: Option<f64>, t| {
+                Some(m.map_or(t, |m| m.min(t)))
+            });
+        match min_ready {
+            None => {
+                // Whole fleet idle and empty: done, or route the next
+                // arrival instant's batch (ties route together so jsq
+                // spreads a burst instead of stacking one shard).
+                if next_arrival >= arrivals.len() {
+                    break;
+                }
+                let t0 = arrivals[next_arrival].1;
+                while next_arrival < arrivals.len()
+                    && arrivals[next_arrival].1 == t0
+                {
+                    let (req, ta) = arrivals[next_arrival].clone();
+                    next_arrival += 1;
+                    route_arrival(req, ta, &mut shards, &mut router,
+                                  profiles.as_ref(), &mut outstanding,
+                                  &mut shed, cfg.shard.queue_cap,
+                                  req_tokens, n_gpus, token_bytes);
+                }
                 continue;
             }
-            let progressed = sched.admit_pending(now)?;
-            // No engine-side caches to keep in lockstep here — cached
-            // pricing self-accounts through `cached_len` (a dropped
-            // cache re-prices resume as a full prefill) — but the
-            // event buffer must not grow unboundedly over a 10⁵-request
-            // replay.
-            sched.take_events();
+            Some(horizon) => {
+                while next_arrival < arrivals.len()
+                    && arrivals[next_arrival].1 <= horizon
+                {
+                    let (req, ta) = arrivals[next_arrival].clone();
+                    next_arrival += 1;
+                    route_arrival(req, ta, &mut shards, &mut router,
+                                  profiles.as_ref(), &mut outstanding,
+                                  &mut shed, cfg.shard.queue_cap,
+                                  req_tokens, n_gpus, token_bytes);
+                }
+            }
+        }
+
+        // Min-virtual-clock interleave: always run the shard whose next
+        // work item is earliest; ties break to the lowest index so the
+        // interleave (and with it the whole replay) is deterministic.
+        let mut pick: Option<(usize, f64)> = None;
+        for (r, s) in shards.iter().enumerate() {
+            if let Some(t) = s.ready_time() {
+                if pick.map_or(true, |(_, bt)| t < bt) {
+                    pick = Some((r, t));
+                }
+            }
+        }
+        let Some((r, _)) = pick else { continue };
+        let shard = &mut shards[r];
+
+        // Idle shard with queued work: jump its clock to the head
+        // arrival (virtual time passes instantly when nothing is in
+        // flight).
+        if shard.sched.is_idle() {
+            if let Some(&(_, ta)) = shard.queue.front() {
+                shard.now = shard.now.max(ta);
+            } else {
+                continue;
+            }
+        }
+
+        // Offer arrived requests from this shard's queue / admit from
+        // its pending set.
+        loop {
+            if shard.sched.wants_offer() {
+                if let Some(&(_, ta)) = shard.queue.front() {
+                    if ta <= shard.now {
+                        let (req, t) =
+                            shard.queue.pop_front().expect("front");
+                        shard.sched.offer(req, t);
+                        continue;
+                    }
+                }
+            }
+            let progressed = shard.sched.admit_pending(shard.now)?;
+            // SLO-shed candidates leave this replica's outstanding-
+            // token account (they will never produce step work); the
+            // event buffer must not grow unboundedly over a
+            // 10⁵-request replay either way.
+            for e in shard.sched.take_events() {
+                if let SchedEvent::Rejected { .. } = e {
+                    outstanding[r] -= req_tokens;
+                }
+            }
             if !progressed {
                 break;
             }
         }
-        if sched.is_idle() {
-            if next_arrival >= arrivals.len() {
-                break;
-            }
-            now = now.max(arrivals[next_arrival].1);
+        if shard.sched.is_idle() {
+            // Everything offerable was shed or is still in the future;
+            // the next pass re-picks with updated ready times.
             continue;
         }
-        anyhow::ensure!(!sched.live().is_empty(),
+        anyhow::ensure!(!shard.sched.live().is_empty(),
                         "fleet scheduler stalled with a pending request");
 
-        // One batched step, priced through the network at `now`.
-        let batch = sched.microbatch();
-        let tokens = sched.step_tokens(&batch);
-        let step = sched.steps();
+        // One batched step, priced through this shard's network slice.
+        let batch = shard.sched.microbatch();
+        let tokens = shard.sched.step_tokens(&batch);
+        let step = shard.sched.steps();
+        // Per-token priority classes of the step's computed tokens, in
+        // tile order — the class-conditioned trace shift and the
+        // affinity gate profiles both key on it.
+        let token_classes: Option<Vec<usize>> =
+            (cfg.class_shift || profiles.is_some()).then(|| {
+                let mut cls = Vec::with_capacity(tokens);
+                for &i in &batch {
+                    let s = &shard.sched.live()[i];
+                    let fresh = s.ids.len() - s.cached_len;
+                    cls.extend(
+                        std::iter::repeat(s.req.priority).take(fresh),
+                    );
+                }
+                debug_assert_eq!(cls.len(), tokens);
+                cls
+            });
         let (dt, rounds) = network_step(
-            &cfg.sys, sim, &mut dispatcher, &mut backend, &placement,
-            &mut epoch, tokens, step, now, &mut rng, &mut comm_total,
+            &cfg.sys, sim, shard, tokens, step,
+            token_classes.as_deref(), cfg.class_shift,
+            cfg.priority_classes, &mut profiles, &mut epochs,
+            &mut comm_total,
         );
         let next: Vec<i32> = batch
             .iter()
-            .map(|&i| fake_decode_token(&sched.live()[i].ids))
+            .map(|&i| fake_decode_token(&shard.sched.live()[i].ids))
             .collect();
-        now += dt;
+        shard.now += dt;
         measured_secs += dt;
         measured_tokens += tokens;
-        sched.complete_step(&batch, &next, now, rounds)?;
+        for _id in
+            shard.sched.complete_step(&batch, &next, shard.now, rounds)?
+        {
+            outstanding[r] -= req_tokens;
+        }
 
-        // Epoch boundary between steps: refresh the payback gate's cost
-        // model from measured step time, then evaluate.
-        if let Some(s) = &mut epoch {
+        // Epoch boundary at this shard's step edge: refresh the
+        // payback gate's cost model from the fleet's measured
+        // throughput, then evaluate/roll (only this shard can swap
+        // here; the other N−1 keep serving).
+        if let Some(ep) = &mut epochs {
             if let Some(cost) = CostParams::from_observed(
                 &sim.model, measured_secs, measured_tokens)
             {
-                s.replanner.update_cost(cost);
+                ep.replanner.update_cost(cost);
             }
-            now += s.tick(sim, &mut backend, now, &mut comm_total);
+            let swap_secs = ep.tick(sim, r, shard, &mut comm_total);
+            shard.now += swap_secs;
         }
     }
 
-    let (_responses, serve) = sched.into_results(now);
-    let contention = backend.contention();
+    // Fold the fleet: per-replica metrics kept and merged, contention
+    // diagnostics folded, overflow-shed ids appended to the rejected
+    // list.
+    let mut per_replica = Vec::with_capacity(n);
+    let mut contention: Option<ContentionReport> = None;
+    for shard in shards {
+        let mut backend = shard.backend;
+        if let Some(c) = backend.contention() {
+            match &mut contention {
+                None => contention = Some(c),
+                Some(t) => fold_contention(t, &c),
+            }
+        }
+        let (_responses, m) = shard.sched.into_results(shard.now);
+        per_replica.push(m);
+    }
+    let mut serve = ServeMetrics::default();
+    for m in &per_replica {
+        serve.merge(m);
+    }
+    serve.rejected.extend(shed);
+    serve.rejected.sort_unstable();
+    serve.per_request.sort_by_key(|t| t.id);
+
     Ok(FleetReport {
         backend: sim.comm_backend,
+        replicas: n,
         serve,
+        per_replica,
         comm: comm_total,
         contention,
-        replans: epoch.as_ref().map_or(0, |s| s.replans),
-        migration_bytes: epoch.as_ref()
-            .map_or(0.0, |s| s.migration_bytes),
+        replans: epochs.as_ref().map_or(0, |e| e.replans),
+        swaps: epochs
+            .as_ref()
+            .map_or(0, |e| e.rolling.swaps() as usize),
+        swap_log: epochs
+            .as_ref()
+            .map_or_else(Vec::new, |e| e.rolling.log().to_vec()),
+        migration_bytes: epochs
+            .as_ref()
+            .map_or(0.0, |e| e.migration_bytes),
     })
 }
 
-/// Price one scheduler step: route `tokens` computed tokens through
-/// every MoE layer (dispatch + combine per layer through `backend` at
-/// the accumulating virtual time), mirroring the timing engine's
-/// per-layer cost model. Returns the step's seconds and its dispatch
+/// Price one scheduler step of one shard: route `tokens` computed
+/// tokens through every MoE layer (dispatch + combine per layer
+/// through the shard's backend at its accumulating virtual time),
+/// mirroring the timing engine's per-layer cost model. Feeds the
+/// fleet-wide re-planner and (for affinity routing) the per-class gate
+/// profiles along the way. Returns the step's seconds and its dispatch
 /// round count.
 #[allow(clippy::too_many_arguments)]
-fn network_step(sys: &SystemSpec, cfg: &SimConfig,
-                dispatcher: &mut Dispatcher, backend: &mut CommBackend,
-                placement: &Placement, epoch: &mut Option<FleetEpoch>,
-                tokens: usize, step: usize, at: f64, rng: &mut Rng,
+fn network_step(sys: &SystemSpec, cfg: &SimConfig, shard: &mut Shard,
+                tokens: usize, step: usize,
+                token_classes: Option<&[usize]>, class_shift: bool,
+                classes: usize, profiles: &mut Option<ClassProfiles>,
+                epochs: &mut Option<FleetEpochs>,
                 comm_total: &mut CommReport) -> (f64, usize) {
     let topo = &cfg.topo;
     let n_gpus = topo.num_gpus();
@@ -445,49 +843,62 @@ fn network_step(sys: &SystemSpec, cfg: &SimConfig,
         top_k: spec.top_k,
         layers: spec.moe_layers,
         profile: cfg.serve_profile,
-        seed: cfg
+        seed: shard
             .seed
             .wrapping_mul(0x1009)
             .wrapping_add(0xF1EE + step as u64),
     }
     .generate(tokens);
+    let class_stride = spec.experts / classes.max(1);
 
-    let mut t = at;
+    let mut t = shard.now;
     for (layer_idx, layer) in trace.layers.iter().enumerate() {
         let plan = {
-            let lp = match epoch {
-                Some(s) => &s.active.layers[layer_idx],
-                None => &placement.layers[layer_idx],
-            };
+            let lp = &shard.active.layers[layer_idx];
             let mut batch: Vec<Assignment> =
                 Vec::with_capacity(tokens * spec.top_k);
             for (tok, experts) in layer.tokens.iter().enumerate() {
                 let src = even_src(tok, tokens, n_gpus);
+                let class = token_classes.map_or(0, |c| c[tok]);
                 for &e in experts {
-                    let e = e as usize;
+                    let mut e = e as usize;
+                    if class_shift {
+                        e = (e + class * class_stride) % spec.experts;
+                    }
                     if sys.prune_remote > 0.0 {
                         let primary = lp.primary[e];
                         if !topo.same_node(src, primary)
-                            && rng.chance(sys.prune_remote)
+                            && shard.rng.chance(sys.prune_remote)
                         {
                             continue;
                         }
                     }
+                    if let Some(p) = profiles {
+                        p.observe(class, layer_idx, lp, e);
+                    }
                     batch.push(Assignment { token: tok, expert: e, src });
                 }
             }
-            dispatcher.dispatch(lp, layer_idx, &batch, rng)
+            shard
+                .dispatcher
+                .dispatch(lp, layer_idx, &batch, &mut shard.rng)
         };
+        if let Some(p) = profiles {
+            p.end_round(layer_idx, n_gpus, spec.experts);
+        }
 
         let overlap = if sys.comm == CommModel::Hsc {
             tokens as f64 * ROUTE_DECISION_COST / n_gpus as f64
         } else {
             0.0
         };
-        let mut comm = backend.round_at(sys.comm, sys.dedup_flat, topo,
-                                        &plan, overlap, t, rng);
-        let combine = backend.round_at(sys.comm, sys.dedup_flat, topo,
-                                       &plan, 0.0, t + comm.time, rng);
+        let mut comm = shard.backend.round_at(sys.comm, sys.dedup_flat,
+                                              topo, &plan, overlap, t,
+                                              &mut shard.rng);
+        let combine = shard.backend.round_at(sys.comm, sys.dedup_flat,
+                                             topo, &plan, 0.0,
+                                             t + comm.time,
+                                             &mut shard.rng);
         comm.accumulate(&combine);
 
         let mut t_max = 0.0f64;
@@ -501,11 +912,13 @@ fn network_step(sys: &SystemSpec, cfg: &SimConfig,
             + cfg.gpu.layer_overhead;
         t += comm.time * sys.comm_eff + t_max + dense;
         fold_comm(comm_total, &comm);
-        if let Some(s) = epoch {
-            s.observe(layer_idx, &plan);
+        if let Some(ep) = epochs {
+            ep.replanner.observe(layer_idx,
+                                 &shard.active.layers[layer_idx],
+                                 &plan);
         }
     }
-    (t - at, 2 * spec.moe_layers)
+    (t - shard.now, 2 * spec.moe_layers)
 }
 
 #[cfg(test)]
@@ -514,6 +927,7 @@ mod tests {
     use crate::cluster::Topology;
     use crate::config::{ArrivalProcess, ModelSpec, Workload};
     use crate::replan::ReplanConfig;
+    use crate::trace::Profile;
 
     fn small_sim(backend: CommBackendKind) -> SimConfig {
         let model = ModelSpec { moe_layers: 2, ..ModelSpec::olmoe() };
@@ -653,15 +1067,37 @@ mod tests {
     }
 
     #[test]
+    fn fleet_shape_validation_is_loud() {
+        // Regression: --replicas 0 and a queue smaller than the fleet
+        // must refuse at config time, before any request is consumed.
+        let mut no_replicas =
+            small_fleet(CommBackendKind::Analytic, 10.0);
+        no_replicas.shard.replicas = 0;
+        let err = replay_fleet(&no_replicas).unwrap_err();
+        assert!(err.to_string().contains("--replicas 0"), "{err}");
+
+        let mut tiny_queue = small_fleet(CommBackendKind::Analytic, 10.0);
+        tiny_queue.shard.replicas = 4;
+        tiny_queue.shard.queue_cap = 2;
+        let err = replay_fleet(&tiny_queue).unwrap_err();
+        assert!(err.to_string().contains("queue capacity"), "{err}");
+    }
+
+    #[test]
     fn report_serialises_key_fields() {
         let cfg = small_fleet(CommBackendKind::Des, 100.0);
         let v = replay_fleet(&cfg).unwrap().to_value();
         assert_eq!(v.str_or("backend", ""), "des");
         assert_eq!(v.req_usize("requests").unwrap(), 12);
+        assert_eq!(v.req_usize("replicas").unwrap(), 1);
+        assert_eq!(v.req_usize("swaps").unwrap(), 0);
+        assert_eq!(v.req_f64("fleet_imbalance").unwrap(), 1.0);
         assert!(v.req_f64("wall_time_s").unwrap() > 0.0);
         assert_eq!(v.req_usize("preemptions").unwrap(), 0);
         assert_eq!(v.req_usize("rejected").unwrap(), 0);
         assert!(v.req_f64("ttft_p95_class0_s").unwrap() > 0.0);
+        let r0 = v.req("replica0").unwrap();
+        assert_eq!(r0.req_usize("requests").unwrap(), 12);
         let c = v.req("contention").unwrap();
         assert_eq!(c.req_str("event_digest").unwrap().len(), 16);
     }
@@ -695,5 +1131,431 @@ mod tests {
             12,
             "every request either completes or is shed loudly"
         );
+    }
+
+    #[test]
+    fn single_replica_fleet_matches_the_unsharded_reference() {
+        // The parity oracle: a 1-replica fleet must reproduce the
+        // pre-sharding replay loop bit-for-bit, across backends,
+        // re-planning, and priority classes.
+        let mut configs = vec![
+            small_fleet(CommBackendKind::Analytic, 200.0),
+            small_fleet(CommBackendKind::Des, 300.0),
+        ];
+        let mut replan = small_fleet(CommBackendKind::Des, 300.0);
+        replan.sys = SystemSpec::grace_dyn(0.15);
+        replan.sim.replan =
+            Some(ReplanConfig { epoch_rounds: 2,
+                                ..ReplanConfig::default() });
+        configs.push(replan);
+        let mut classes = small_fleet(CommBackendKind::Analytic, 1e4);
+        classes.priority_classes = 2;
+        classes.preempt = true;
+        configs.push(classes);
+
+        for cfg in configs {
+            let sharded = replay_fleet(&cfg).unwrap();
+            let oracle = reference::replay_fleet_reference(&cfg).unwrap();
+            assert_eq!(sharded.to_value(), oracle.to_value(),
+                       "N=1 fleet diverged from the pre-sharding loop \
+                        ({:?} backend)", cfg.sim.comm_backend);
+        }
+    }
+
+    #[test]
+    fn four_replica_fleet_is_deterministic_and_spreads_load() {
+        let mut cfg = small_fleet(CommBackendKind::Des, 2000.0);
+        cfg.load.requests = 16;
+        cfg.shard.replicas = 4;
+        let a = replay_fleet(&cfg).unwrap();
+        let b = replay_fleet(&cfg).unwrap();
+        assert_eq!(a.to_value(), b.to_value(),
+                   "N=4 virtual-clock fleet must be bit-identical \
+                    across reruns");
+        assert_eq!(a.replicas, 4);
+        assert_eq!(a.serve.latencies.len(), 16);
+        assert_eq!(a.serve.generated_tokens, 16 * 3);
+        // jsq starts round-robin from empty, so every shard serves.
+        for (r, m) in a.per_replica.iter().enumerate() {
+            assert!(m.steps > 0, "replica {r} never stepped");
+            assert!(!m.latencies.is_empty(),
+                    "replica {r} served nothing");
+        }
+        let requests: usize =
+            a.per_replica.iter().map(|m| m.latencies.len()).sum();
+        assert_eq!(requests, 16);
+        assert!(a.fleet_imbalance() >= 1.0);
+    }
+
+    #[test]
+    fn wrr_fleet_round_robins_requests() {
+        let mut cfg = small_fleet(CommBackendKind::Analytic, 400.0);
+        cfg.load.requests = 12;
+        cfg.shard.replicas = 3;
+        cfg.shard.route = FleetRoutePolicy::Wrr;
+        let r = replay_fleet(&cfg).unwrap();
+        for m in &r.per_replica {
+            assert_eq!(m.latencies.len(), 4,
+                       "wrr must deal 12 requests 4-4-4");
+        }
+    }
+
+    #[test]
+    fn rolling_replan_keeps_the_fleet_serving() {
+        // Permissive gates + a serve profile that drifts from the
+        // placement profile, so deltas actually fire; then the rolling
+        // invariants: at most one swap per epoch, shards swap in cursor
+        // order, and every shard keeps stepping throughout.
+        let mut cfg = small_fleet(CommBackendKind::Analytic, 2000.0);
+        cfg.load.requests = 32;
+        cfg.shard.replicas = 4;
+        cfg.sys = SystemSpec::grace_dyn(0.15);
+        cfg.sim.serve_profile = Profile::Math;
+        cfg.sim.replan = Some(ReplanConfig {
+            epoch_rounds: 1,
+            min_drift: 0.0,
+            payback: 0.0,
+            ..ReplanConfig::default()
+        });
+        let a = replay_fleet(&cfg).unwrap();
+        let b = replay_fleet(&cfg).unwrap();
+        assert_eq!(a.to_value(), b.to_value());
+        assert_eq!(a.swaps, a.swap_log.len());
+        assert_eq!(a.replans, a.swaps / 4,
+                   "a rollout completes after all 4 shards swapped");
+        // ≤ 1 swap per epoch: epochs in the log strictly increase.
+        assert!(a.swap_log.windows(2).all(|w| w[0].0 < w[1].0),
+                "two swaps shared an epoch: {:?}", a.swap_log);
+        // Rollouts visit shards in cursor order 0,1,2,3,0,1,2,…
+        for (i, &(_, shard)) in a.swap_log.iter().enumerate() {
+            assert_eq!(shard, i % 4, "swap order broke: {:?}",
+                       a.swap_log);
+        }
+        // No global barrier: every shard kept serving to completion.
+        assert_eq!(a.serve.latencies.len(), 32);
+        for (r, m) in a.per_replica.iter().enumerate() {
+            assert!(m.steps > 0, "replica {r} stalled");
+        }
+    }
+
+    #[test]
+    fn class_conditioned_fleet_is_deterministic_and_complete() {
+        // The affinity-routing regime the bench compares: per-class
+        // expert shift, per-class replica placements, warm gate
+        // profiles. Every request completes and the replay stays
+        // bit-deterministic.
+        let mut cfg = small_fleet(CommBackendKind::Analytic, 2000.0);
+        cfg.load.requests = 16;
+        cfg.shard.replicas = 2;
+        cfg.shard.route = FleetRoutePolicy::Affinity;
+        cfg.priority_classes = 2;
+        cfg.class_shift = true;
+        cfg.replica_profiles = true;
+        let a = replay_fleet(&cfg).unwrap();
+        let b = replay_fleet(&cfg).unwrap();
+        assert_eq!(a.to_value(), b.to_value());
+        assert_eq!(a.serve.latencies.len(), 16);
+        assert_eq!(a.serve.generated_tokens, 16 * 3);
+    }
+
+    #[test]
+    fn finite_queue_cap_sheds_overflow_loudly() {
+        let mut cfg = small_fleet(CommBackendKind::Analytic, 1e6);
+        cfg.load.requests = 12;
+        cfg.shard.queue_cap = 2;
+        cfg.max_batch = 1;
+        cfg.max_batch_tokens = 16;
+        let r = replay_fleet(&cfg).unwrap();
+        assert!(!r.serve.rejected.is_empty(),
+                "a 2-deep queue under a 10⁶ req/s burst must shed");
+        assert_eq!(r.serve.latencies.len() + r.serve.rejected.len(), 12,
+                   "every request completes or sheds loudly");
+    }
+
+    /// The pre-sharding replay loop, kept verbatim as the parity
+    /// oracle for `single_replica_fleet_matches_the_unsharded_
+    /// reference`: if the generalized min-clock loop ever drifts from
+    /// this code path at N=1, that test fails.
+    mod reference {
+        use super::super::*;
+        use crate::routing::DispatchPlan;
+
+        struct FleetEpoch {
+            active: Placement,
+            replanner: Replanner,
+            mig_rng: Rng,
+            migration_bytes: f64,
+            replans: usize,
+        }
+
+        impl FleetEpoch {
+            fn new(active: Placement, sys: &SystemSpec,
+                   cfg: &SimConfig) -> Option<FleetEpoch> {
+                let rc = match (sys.online_replan, cfg.replan) {
+                    (true, Some(rc)) => rc,
+                    _ => return None,
+                };
+                let cost = CostParams::paper(&cfg.model, &cfg.gpu,
+                                             sys.compute_eff);
+                Some(FleetEpoch {
+                    active,
+                    replanner: Replanner::new(cfg.topo.clone(), rc,
+                                              cost),
+                    mig_rng: Rng::new(cfg.seed ^ 0x4D16),
+                    migration_bytes: 0.0,
+                    replans: 0,
+                })
+            }
+
+            fn observe(&mut self, layer: usize, plan: &DispatchPlan) {
+                self.replanner
+                    .observe(layer, &self.active.layers[layer], plan);
+            }
+
+            fn tick(&mut self, cfg: &SimConfig,
+                    backend: &mut CommBackend, at: f64,
+                    comm_total: &mut CommReport) -> f64 {
+                let delta = self.replanner.epoch_tick(&self.active);
+                if delta.is_empty() {
+                    return 0.0;
+                }
+                let traffic = replan::migration_traffic(
+                    &delta,
+                    &self.active,
+                    self.replanner.cost().expert_bytes,
+                );
+                let rep = backend.flat_round_at(&traffic, &cfg.topo, at,
+                                                &mut self.mig_rng);
+                self.migration_bytes += delta.migration_bytes;
+                self.replans += 1;
+                self.active = replan::apply_delta(&self.active, &delta);
+                let secs = rep.time;
+                fold_comm(comm_total, &rep);
+                secs
+            }
+        }
+
+        pub fn replay_fleet_reference(cfg: &FleetConfig)
+                                      -> anyhow::Result<FleetReport> {
+            cfg.validate()?;
+            let sim = &cfg.sim;
+            let topo = &sim.topo;
+            let n_gpus = topo.num_gpus();
+            let token_bytes = sim.model.token_bytes();
+
+            let placement = build_placement(&cfg.sys, sim);
+            let mut dispatcher =
+                coordinator(&cfg.sys, sim).dispatcher(token_bytes);
+            let mut rng = Rng::new(sim.seed ^ 0x5E21);
+            let mut backend = CommBackend::new(sim.comm_backend, topo);
+            let mut epoch =
+                FleetEpoch::new(placement.clone(), &cfg.sys, sim);
+
+            let mut arr_rng = Rng::new(sim.seed ^ 0xA441);
+            let arrivals: Vec<(Request, f64)> = cfg
+                .load
+                .arrival_times(&mut arr_rng)
+                .into_iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    (synth_request(i as u64, cfg.load.prompt,
+                                   cfg.load.new_tokens,
+                                   cfg.priority_classes),
+                     t)
+                })
+                .collect();
+
+            let mut sched = Scheduler::new(SchedConfig {
+                mode: SchedMode::Continuous,
+                max_batch: cfg.max_batch,
+                max_batch_tokens: cfg.max_batch_tokens,
+                ctx: cfg.load.prompt + cfg.load.new_tokens,
+                kv_cache: true,
+                preempt: cfg.preempt,
+                retain_cache_tokens: usize::MAX,
+                ttft_slo: cfg.ttft_slo.clone(),
+            })?;
+
+            let mut comm_total = CommReport::default();
+            let mut now = 0.0f64;
+            let mut next_arrival = 0usize;
+            let mut next_ingest = 0usize;
+            let mut measured_secs = 0.0f64;
+            let mut measured_tokens = 0usize;
+
+            loop {
+                while next_ingest < arrivals.len()
+                    && arrivals[next_ingest].1 <= now
+                {
+                    let (req, t) = &arrivals[next_ingest];
+                    let dst = (req.id as usize) % n_gpus;
+                    backend.ingest(dst,
+                                   req.prompt.len() as f64
+                                       * token_bytes,
+                                   *t);
+                    next_ingest += 1;
+                }
+
+                loop {
+                    if sched.wants_offer()
+                        && next_arrival < arrivals.len()
+                        && arrivals[next_arrival].1 <= now
+                    {
+                        let (req, t) = arrivals[next_arrival].clone();
+                        next_arrival += 1;
+                        sched.offer(req, t);
+                        continue;
+                    }
+                    let progressed = sched.admit_pending(now)?;
+                    sched.take_events();
+                    if !progressed {
+                        break;
+                    }
+                }
+                if sched.is_idle() {
+                    if next_arrival >= arrivals.len() {
+                        break;
+                    }
+                    now = now.max(arrivals[next_arrival].1);
+                    continue;
+                }
+                anyhow::ensure!(
+                    !sched.live().is_empty(),
+                    "fleet scheduler stalled with a pending request"
+                );
+
+                let batch = sched.microbatch();
+                let tokens = sched.step_tokens(&batch);
+                let step = sched.steps();
+                let (dt, rounds) = network_step_reference(
+                    &cfg.sys, sim, &mut dispatcher, &mut backend,
+                    &placement, &mut epoch, tokens, step, now,
+                    &mut rng, &mut comm_total,
+                );
+                let next: Vec<i32> = batch
+                    .iter()
+                    .map(|&i| fake_decode_token(&sched.live()[i].ids))
+                    .collect();
+                now += dt;
+                measured_secs += dt;
+                measured_tokens += tokens;
+                sched.complete_step(&batch, &next, now, rounds)?;
+
+                if let Some(s) = &mut epoch {
+                    if let Some(cost) = CostParams::from_observed(
+                        &sim.model, measured_secs, measured_tokens)
+                    {
+                        s.replanner.update_cost(cost);
+                    }
+                    now += s.tick(sim, &mut backend, now,
+                                  &mut comm_total);
+                }
+            }
+
+            let (_responses, serve) = sched.into_results(now);
+            let contention = backend.contention();
+            Ok(FleetReport {
+                backend: sim.comm_backend,
+                replicas: 1,
+                per_replica: vec![serve.clone()],
+                serve,
+                comm: comm_total,
+                contention,
+                replans: epoch.as_ref().map_or(0, |s| s.replans),
+                swaps: epoch.as_ref().map_or(0, |s| s.replans),
+                swap_log: Vec::new(),
+                migration_bytes: epoch.as_ref()
+                    .map_or(0.0, |s| s.migration_bytes),
+            })
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn network_step_reference(
+            sys: &SystemSpec, cfg: &SimConfig,
+            dispatcher: &mut Dispatcher, backend: &mut CommBackend,
+            placement: &Placement, epoch: &mut Option<FleetEpoch>,
+            tokens: usize, step: usize, at: f64, rng: &mut Rng,
+            comm_total: &mut CommReport) -> (f64, usize) {
+            let topo = &cfg.topo;
+            let n_gpus = topo.num_gpus();
+            let spec = &cfg.model;
+            let trace = TraceGen {
+                experts: spec.experts,
+                top_k: spec.top_k,
+                layers: spec.moe_layers,
+                profile: cfg.serve_profile,
+                seed: cfg
+                    .seed
+                    .wrapping_mul(0x1009)
+                    .wrapping_add(0xF1EE + step as u64),
+            }
+            .generate(tokens);
+
+            let mut t = at;
+            for (layer_idx, layer) in trace.layers.iter().enumerate() {
+                let plan = {
+                    let lp = match epoch {
+                        Some(s) => &s.active.layers[layer_idx],
+                        None => &placement.layers[layer_idx],
+                    };
+                    let mut batch: Vec<Assignment> =
+                        Vec::with_capacity(tokens * spec.top_k);
+                    for (tok, experts) in
+                        layer.tokens.iter().enumerate()
+                    {
+                        let src = even_src(tok, tokens, n_gpus);
+                        for &e in experts {
+                            let e = e as usize;
+                            if sys.prune_remote > 0.0 {
+                                let primary = lp.primary[e];
+                                if !topo.same_node(src, primary)
+                                    && rng.chance(sys.prune_remote)
+                                {
+                                    continue;
+                                }
+                            }
+                            batch.push(Assignment {
+                                token: tok,
+                                expert: e,
+                                src,
+                            });
+                        }
+                    }
+                    dispatcher.dispatch(lp, layer_idx, &batch, rng)
+                };
+
+                let overlap = if sys.comm == CommModel::Hsc {
+                    tokens as f64 * ROUTE_DECISION_COST
+                        / n_gpus as f64
+                } else {
+                    0.0
+                };
+                let mut comm = backend.round_at(sys.comm,
+                                                sys.dedup_flat, topo,
+                                                &plan, overlap, t, rng);
+                let combine = backend.round_at(sys.comm,
+                                               sys.dedup_flat, topo,
+                                               &plan, 0.0,
+                                               t + comm.time, rng);
+                comm.accumulate(&combine);
+
+                let mut t_max = 0.0f64;
+                for &c in plan.copies_per_gpu() {
+                    let tc = cfg.gpu.moe_time(spec, c as f64)
+                        / sys.compute_eff
+                        + cfg.gpu.layer_overhead;
+                    t_max = t_max.max(tc);
+                }
+                let dense = cfg.gpu
+                    .dense_time(spec, tokens as f64 / n_gpus as f64)
+                    + cfg.gpu.layer_overhead;
+                t += comm.time * sys.comm_eff + t_max + dense;
+                fold_comm(comm_total, &comm);
+                if let Some(s) = epoch {
+                    s.observe(layer_idx, &plan);
+                }
+            }
+            (t - at, 2 * spec.moe_layers)
+        }
     }
 }

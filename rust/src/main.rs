@@ -33,6 +33,7 @@ use grace_moe::placement::ReplicationMode;
 use grace_moe::replan::ReplanConfig;
 use grace_moe::report;
 use grace_moe::routing::RoutingPolicy;
+use grace_moe::server::shard::FleetRoutePolicy;
 use grace_moe::server::{MoEServer, Request, ServerConfig};
 use grace_moe::stats::Rng;
 use grace_moe::trace::Profile;
@@ -75,6 +76,16 @@ re-planning options with --system grace-dyn):
   --arrival-rate <req/s>            Poisson rate (default 256; must be
                                     finite and positive)
   --max-batch <n>  --max-batch-tokens <n>  scheduler admission limits
+  --replicas <n>                    replica shards behind the admission
+                                    front-end (default 1)
+  --fleet-route <jsq|wrr|affinity>  replica route policy (default jsq)
+  --queue-cap <n>                   fleet admission queue capacity;
+                                    overflow arrivals are shed loudly
+                                    (default: unbounded)
+  --class-shift <on|off>            condition the gate trace on priority
+                                    class (default off)
+  --replica-profiles <on|off>       per-class replica placements
+                                    (default off)
 
 RE-PLANNING OPTIONS (simulate --system grace-dyn, serve, replan):
   --replan-epoch <rounds>           epoch length in dispatch rounds
@@ -197,6 +208,17 @@ fn sim_config(args: &Args) -> anyhow::Result<SimConfig> {
     Ok(cfg)
 }
 
+/// Parse an `on|off` option (default off), rejecting anything else
+/// loudly instead of silently treating a typo as off.
+fn on_off(args: &Args, key: &str) -> anyhow::Result<bool> {
+    match args.str_or(key, "off") {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        other => anyhow::bail!("unknown --{key} '{other}' \
+                                (expected on|off)"),
+    }
+}
+
 /// Parse the `--system` selector shared by simulate and fleet.
 fn system_spec(args: &Args) -> anyhow::Result<SystemSpec> {
     let r = args.f64_or("r", 0.15)?;
@@ -297,11 +319,23 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     fc.priority_classes = classes;
     fc.preempt = preempt;
     fc.ttft_slo = slo;
+    fc.shard.replicas = args.usize_or("replicas", 1)?;
+    fc.shard.route =
+        FleetRoutePolicy::from_name(args.str_or("fleet-route", "jsq"))?;
+    if args.get("queue-cap").is_some() {
+        fc.shard.queue_cap = args.usize_or("queue-cap", 64)?;
+    }
+    fc.class_shift = on_off(args, "class-shift")?;
+    fc.replica_profiles = on_off(args, "replica-profiles")?;
+    // Shapes that would shed everything or serve nothing fail here,
+    // before the replay consumes a single request.
+    fc.shard.validate()?;
     if fc.sys.online_replan {
         fc.sim.replan = Some(replan_config(args, 64)?);
     }
-    eprintln!("fleet: {} on {} ({} backend)…", fc.load.label(),
-              fc.sys.name, fc.sim.comm_backend.name());
+    eprintln!("fleet: {} on {} ({} backend, {} replica(s), {} route)…",
+              fc.load.label(), fc.sys.name, fc.sim.comm_backend.name(),
+              fc.shard.replicas, fc.shard.route.name());
     let rep = replay_fleet(&fc)?;
     if args.flag("json") {
         println!("{}",
@@ -347,6 +381,19 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
         rep.comm.intra_bytes / 1e6, rep.comm.launches, rep.replans,
         rep.migration_bytes / 1e6
     );
+    if rep.replicas > 1 {
+        let per: Vec<String> = rep
+            .per_replica
+            .iter()
+            .map(|m| format!("{}req/{}step", m.latencies.len(), m.steps))
+            .collect();
+        println!(
+            "fleet     {} replicas [{}] | imbalance {:.2} | {} rolling \
+             swaps",
+            rep.replicas, per.join(" "), rep.fleet_imbalance(),
+            rep.swaps
+        );
+    }
     if let Some(c) = &rep.contention {
         println!("{}", contention_line(c));
     }

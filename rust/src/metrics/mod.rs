@@ -271,6 +271,29 @@ impl ServeMetrics {
             self.cached_tokens as f64 / total as f64
         }
     }
+
+    /// Fold another replica's metrics into this one — the fleet-wide
+    /// aggregation of `server::shard`: distributions and per-request
+    /// records concatenate, counters add, and `wall_time` takes the
+    /// max (replicas serve concurrently, so fleet wall-clock is the
+    /// slowest replica, not the sum). The caller re-sorts `per_request`
+    /// and `rejected` once after merging every replica.
+    pub fn merge(&mut self, other: &ServeMetrics) {
+        self.latencies.extend_from_slice(&other.latencies);
+        self.ttft.extend_from_slice(&other.ttft);
+        self.tpot.extend_from_slice(&other.tpot);
+        self.queue_wait.extend_from_slice(&other.queue_wait);
+        self.per_request.extend_from_slice(&other.per_request);
+        self.generated_tokens += other.generated_tokens;
+        self.wall_time = self.wall_time.max(other.wall_time);
+        self.steps += other.steps;
+        self.dispatch_rounds += other.dispatch_rounds;
+        self.computed_tokens += other.computed_tokens;
+        self.cached_tokens += other.cached_tokens;
+        self.preemptions += other.preemptions;
+        self.resumes += other.resumes;
+        self.rejected.extend_from_slice(&other.rejected);
+    }
 }
 
 #[cfg(test)]
@@ -347,6 +370,67 @@ mod tests {
         assert!(empty.tpot_summary().is_none());
         assert!(empty.queue_wait_summary().is_none());
         assert_eq!(empty.rounds_per_token(), 0.0);
+    }
+
+    #[test]
+    fn merge_concatenates_and_takes_max_wall_time() {
+        let t = |id: u64| RequestTiming {
+            id,
+            tokens: 2,
+            ..Default::default()
+        };
+        let mut a = ServeMetrics {
+            latencies: vec![0.4],
+            ttft: vec![0.1],
+            tpot: vec![0.02],
+            queue_wait: vec![0.0],
+            per_request: vec![t(2)],
+            generated_tokens: 10,
+            wall_time: 2.0,
+            steps: 5,
+            dispatch_rounds: 20,
+            computed_tokens: 30,
+            cached_tokens: 12,
+            preemptions: 1,
+            resumes: 1,
+            rejected: vec![9],
+            ..Default::default()
+        };
+        let b = ServeMetrics {
+            latencies: vec![0.5, 0.6],
+            ttft: vec![0.2],
+            tpot: vec![0.03],
+            queue_wait: vec![0.1],
+            per_request: vec![t(1)],
+            generated_tokens: 7,
+            wall_time: 3.5, // slowest replica sets fleet wall-clock
+            steps: 4,
+            dispatch_rounds: 16,
+            computed_tokens: 21,
+            cached_tokens: 8,
+            preemptions: 0,
+            resumes: 0,
+            rejected: vec![5],
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.latencies, vec![0.4, 0.5, 0.6]);
+        assert_eq!(a.ttft, vec![0.1, 0.2]);
+        assert_eq!(a.generated_tokens, 17);
+        assert_eq!(a.wall_time, 3.5);
+        assert_eq!(a.steps, 9);
+        assert_eq!(a.dispatch_rounds, 36);
+        assert_eq!(a.computed_tokens, 51);
+        assert_eq!(a.cached_tokens, 20);
+        assert_eq!(a.preemptions, 1);
+        assert_eq!(a.resumes, 1);
+        assert_eq!(a.rejected, vec![9, 5]);
+        assert_eq!(a.per_request.len(), 2);
+        // Merging the empty default is an identity on counters.
+        let snapshot_tokens = a.generated_tokens;
+        a.merge(&ServeMetrics::default());
+        assert_eq!(a.generated_tokens, snapshot_tokens);
+        assert_eq!(a.wall_time, 3.5);
     }
 
     #[test]

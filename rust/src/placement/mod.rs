@@ -6,6 +6,7 @@ use crate::cluster::{GpuId, Topology};
 use crate::grouping::Grouping;
 use crate::profile::{LayerProfile, ModelProfile};
 use crate::replication::{self, Replication};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// How replicas are chosen when building a placement.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -56,6 +57,7 @@ pub struct Placement {
 /// so a replanned layer can never disagree with an offline-built one.
 pub fn instances_for(primary: &[GpuId], replication: &Replication)
                      -> Vec<Vec<GpuId>> {
+    INSTANCES_BUILDS.fetch_add(1, Ordering::Relaxed);
     let mut instances: Vec<Vec<GpuId>> =
         primary.iter().map(|&p| vec![p]).collect();
     for &e in &replication.hot_experts {
@@ -66,6 +68,21 @@ pub fn instances_for(primary: &[GpuId], replication: &Replication)
         }
     }
     instances
+}
+
+/// Process-wide count of [`instances_for`] table builds — the
+/// allocation-per-rollout self-check handle of `benches/hotpath.rs`.
+/// Each build allocates one `Vec` per expert, so the *count* is the
+/// allocation story; [`crate::replan::PreparedDelta`] exists to keep it
+/// at one build per changed layer per rollout instead of one per
+/// replica.
+static INSTANCES_BUILDS: AtomicU64 = AtomicU64::new(0);
+
+/// Monotone snapshot of the process-wide [`instances_for`] build count.
+/// Benchmarks difference two snapshots around a code path to pin how
+/// many instance-table rebuilds it performed.
+pub fn instances_build_count() -> u64 {
+    INSTANCES_BUILDS.load(Ordering::Relaxed)
 }
 
 impl LayerPlacement {

@@ -46,6 +46,10 @@
 //! system); grouping is never changed online — regrouping would migrate
 //! primary weights wholesale, which the cost model prices out.
 
+pub mod rolling;
+
+pub use rolling::{PreparedDelta, RollingReplan};
+
 use crate::cluster::{GpuId, Topology};
 use crate::comm::traffic::TrafficMatrix;
 use crate::config::{GpuModel, ModelSpec};

@@ -1,0 +1,350 @@
+//! Rolling rollout of one [`ReplanDelta`] across a replica-sharded
+//! fleet: at most one replica swaps per epoch, the other N−1 keep
+//! serving, and the rebuilt instance tables are shared instead of being
+//! recomputed once per replica.
+//!
+//! Two pieces:
+//!
+//! * [`PreparedDelta`] — a [`ReplanDelta`] with every changed layer's
+//!   instance table prebuilt **once** via
+//!   [`crate::placement::instances_for`]. Applying it to a replica whose
+//!   primary map matches the one it was prepared against clones the
+//!   cached table (zero rebuilds); a replica with a different primary map
+//!   (class-specialised fleets) falls back to a fresh build, so the
+//!   cache can never produce a placement [`super::apply_delta`] would
+//!   not. An empty delta prepares and applies with **zero** rebuilds —
+//!   the hot-path win `benches/hotpath.rs` pins via
+//!   [`crate::placement::instances_build_count`].
+//! * [`RollingReplan`] — the rollout state machine: `begin` freezes one
+//!   prepared delta, then each replica commits its swap at its own step
+//!   boundary, cursor order 0‥N, gated to **at most one swap per epoch
+//!   index**. While a rollout is in flight no new delta may begin, so
+//!   the fleet never holds two placement generations plus a pending
+//!   third. With N = 1 the single replica swaps in the same epoch the
+//!   decision fired — exactly the pre-sharding immediate apply.
+
+use crate::cluster::GpuId;
+use crate::placement::{instances_for, Placement};
+
+use super::ReplanDelta;
+
+/// A [`ReplanDelta`] plus the per-changed-layer instance tables built
+/// once at preparation time, ready to be applied to every replica of a
+/// fleet without re-running [`instances_for`] per replica.
+#[derive(Clone, Debug)]
+pub struct PreparedDelta {
+    delta: ReplanDelta,
+    /// Per changed layer (same order as `delta.layers`): the primary
+    /// map the table was built against, and the prebuilt instance
+    /// table. The primary copy is the safety interlock — replicas whose
+    /// primaries diverged rebuild instead of reusing a wrong table.
+    prepared: Vec<(Vec<GpuId>, Vec<Vec<GpuId>>)>,
+}
+
+impl PreparedDelta {
+    /// Prepare `delta` against `base` (the placement the replanner
+    /// evaluated): one [`instances_for`] build per changed layer,
+    /// shared by every subsequent [`PreparedDelta::apply`]. An empty
+    /// delta builds nothing.
+    pub fn new(base: &Placement, delta: ReplanDelta) -> PreparedDelta {
+        let prepared = delta
+            .layers
+            .iter()
+            .map(|ld| {
+                let primary = base.layers[ld.layer].primary.clone();
+                let inst = instances_for(&primary, &ld.replication);
+                (primary, inst)
+            })
+            .collect();
+        PreparedDelta { delta, prepared }
+    }
+
+    /// The wrapped decision (migration pricing reads its traffic).
+    pub fn delta(&self) -> &ReplanDelta {
+        &self.delta
+    }
+
+    /// `true` when applying changes nothing.
+    pub fn is_empty(&self) -> bool {
+        self.delta.is_empty()
+    }
+
+    /// Apply to one replica's active placement. Structurally identical
+    /// to [`super::apply_delta`], but a replica whose primary map equals
+    /// the prepared one clones the cached instance table instead of
+    /// rebuilding it — the per-replica rebuild the rolling rollout would
+    /// otherwise pay N times.
+    pub fn apply(&self, p: &Placement) -> Placement {
+        let mut out = p.clone();
+        for (ld, (primary, inst)) in
+            self.delta.layers.iter().zip(&self.prepared)
+        {
+            let lp = &mut out.layers[ld.layer];
+            lp.instances = if lp.primary == *primary {
+                inst.clone()
+            } else {
+                instances_for(&lp.primary, &ld.replication)
+            };
+            lp.replication = ld.replication.clone();
+            lp.predicted = ld.predicted.clone();
+            lp.polling = ld.polling.clone();
+        }
+        out
+    }
+}
+
+/// Rollout state machine: one in-flight [`PreparedDelta`] swapped into
+/// replicas 0‥N in cursor order, at most one replica per epoch index.
+/// The driver asks [`RollingReplan::due`] at each replica's step
+/// boundary and calls [`RollingReplan::commit`] after pricing and
+/// applying the swap; everything here is bookkeeping, so the machine
+/// stays deterministic and engine-free (unit-testable without a fleet).
+#[derive(Clone, Debug)]
+pub struct RollingReplan {
+    replicas: usize,
+    pending: Option<PreparedDelta>,
+    cursor: usize,
+    last_swap_epoch: Option<u64>,
+    rollouts: u64,
+    swaps: u64,
+    log: Vec<(u64, usize)>,
+}
+
+impl RollingReplan {
+    /// Rollout machine for a fleet of `replicas` shards (≥ 1 — enforced
+    /// upstream by the fleet config validation).
+    pub fn new(replicas: usize) -> RollingReplan {
+        RollingReplan {
+            replicas: replicas.max(1),
+            pending: None,
+            cursor: 0,
+            last_swap_epoch: None,
+            rollouts: 0,
+            swaps: 0,
+            log: Vec::new(),
+        }
+    }
+
+    /// A rollout is mid-flight: some replicas run the new placement,
+    /// the rest still serve the old one. New deltas are refused until
+    /// the cursor has visited every replica.
+    pub fn in_flight(&self) -> bool {
+        self.pending.is_some()
+    }
+
+    /// Start rolling `prepared` out. Refused (returns `false`, dropping
+    /// the delta) while a rollout is in flight or when the delta is
+    /// empty — the replanner re-evaluates from live loads once the
+    /// current rollout completes, so a dropped decision is never stale
+    /// state, just a skipped epoch.
+    pub fn begin(&mut self, prepared: PreparedDelta) -> bool {
+        if self.in_flight() || prepared.is_empty() {
+            return false;
+        }
+        self.pending = Some(prepared);
+        self.cursor = 0;
+        true
+    }
+
+    /// May replica `replica` swap at its current step boundary, given
+    /// the fleet is at `epoch`? True only when it is the rollout
+    /// cursor's turn *and* no replica has swapped at this epoch index
+    /// yet — the "≥ N−1 replicas serving every epoch" invariant.
+    pub fn due(&self, replica: usize, epoch: u64) -> bool {
+        self.pending.is_some()
+            && self.cursor == replica
+            && self.last_swap_epoch != Some(epoch)
+    }
+
+    /// The in-flight prepared delta, if any.
+    pub fn prepared(&self) -> Option<&PreparedDelta> {
+        self.pending.as_ref()
+    }
+
+    /// Record that `replica` swapped at `epoch`: advance the cursor,
+    /// and when the last replica has swapped, complete the rollout.
+    /// Call only after [`RollingReplan::due`] returned `true`.
+    pub fn commit(&mut self, replica: usize, epoch: u64) {
+        debug_assert!(self.due(replica, epoch),
+                      "commit without a due swap");
+        self.last_swap_epoch = Some(epoch);
+        self.swaps += 1;
+        self.log.push((epoch, replica));
+        self.cursor += 1;
+        if self.cursor >= self.replicas {
+            self.pending = None;
+            self.cursor = 0;
+            self.rollouts += 1;
+        }
+    }
+
+    /// Completed rollouts (every replica swapped).
+    pub fn rollouts(&self) -> u64 {
+        self.rollouts
+    }
+
+    /// Per-replica swaps committed (N × rollouts once all complete).
+    pub fn swaps(&self) -> u64 {
+        self.swaps
+    }
+
+    /// Full swap history as `(epoch index, replica)` in commit order —
+    /// what the fleet tests assert the one-swap-per-epoch invariant on.
+    pub fn log(&self) -> &[(u64, usize)] {
+        &self.log
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{LayerDelta, ReplanDelta};
+    use super::*;
+    use crate::placement::LayerPlacement;
+    use crate::replication::Replication;
+
+    /// Hand-built 4-expert / 2-GPU placement (no profiling pipeline —
+    /// the machine under test is pure bookkeeping).
+    fn tiny_placement() -> Placement {
+        let groups = vec![vec![0usize, 1], vec![2, 3]];
+        let mut primary = vec![0usize; 4];
+        for (g, es) in groups.iter().enumerate() {
+            for &e in es {
+                primary[e] = g;
+            }
+        }
+        let replication = Replication::none();
+        let instances = instances_for(&primary, &replication);
+        let layer = LayerPlacement {
+            groups,
+            primary,
+            instances,
+            replication,
+            pre_loads: vec![10.0, 10.0],
+            predicted: vec![10.0, 10.0],
+            polling: vec![0.5, 0.5],
+        };
+        Placement { layers: vec![layer], experts: 4, num_gpus: 2 }
+    }
+
+    fn tiny_delta() -> ReplanDelta {
+        let replication = Replication {
+            hot_experts: vec![0],
+            replica_gpus: vec![1],
+            n_replica: 1,
+            w_max: 10.0,
+            w_r: 5.0,
+            computed: true,
+        };
+        let ld = LayerDelta {
+            layer: 0,
+            replication,
+            added: vec![(0, 1)],
+            removed: vec![],
+            predicted: vec![7.5, 12.5],
+            polling: vec![0.6, 0.4],
+            rho_live: 2.0,
+            migration_bytes: 64.0,
+            benefit_s: 1.0,
+            cost_s: 0.1,
+        };
+        ReplanDelta { layers: vec![ld], migration_bytes: 64.0,
+                      benefit_s: 1.0, cost_s: 0.1 }
+    }
+
+    // Exact instances_for build counts (1 per changed layer per
+    // rollout, 0 for empty deltas) are pinned in benches/hotpath.rs via
+    // placement::instances_build_count — the counter is process-global,
+    // so a parallel `cargo test` run cannot assert exact deltas here.
+    #[test]
+    fn prepared_apply_matches_apply_delta_for_every_replica() {
+        let p = tiny_placement();
+        let delta = tiny_delta();
+        let reference = super::super::apply_delta(&p, &delta);
+        let prep = PreparedDelta::new(&p, delta);
+        for a in (0..4).map(|_| prep.apply(&p)) {
+            assert_eq!(a.layers[0].instances, reference.layers[0].instances);
+            assert_eq!(a.layers[0].replication,
+                       reference.layers[0].replication);
+            assert_eq!(a.layers[0].polling, reference.layers[0].polling);
+        }
+    }
+
+    #[test]
+    fn empty_delta_is_an_identity_apply() {
+        let p = tiny_placement();
+        let prep = PreparedDelta::new(&p, ReplanDelta::default());
+        assert!(prep.is_empty());
+        let out = prep.apply(&p);
+        assert_eq!(out.layers[0].instances, p.layers[0].instances);
+    }
+
+    #[test]
+    fn diverged_primary_falls_back_to_a_fresh_build() {
+        let p = tiny_placement();
+        let prep = PreparedDelta::new(&p, tiny_delta());
+        // A replica whose expert 0 lives on GPU 1 instead of 0: the
+        // cached table (built for primary [0,0,1,1]) must NOT be
+        // reused — the fallback rebuild keeps primary-first intact.
+        let mut other = p.clone();
+        other.layers[0].primary = vec![1, 0, 1, 0];
+        let out = prep.apply(&other);
+        assert_eq!(out.layers[0].instances[0][0], 1,
+                   "primary-first invariant holds for the diverged map");
+        assert_eq!(
+            out.layers[0].instances,
+            super::super::apply_delta(&other, prep.delta()).layers[0]
+                .instances,
+            "fallback path must agree with apply_delta"
+        );
+    }
+
+    #[test]
+    fn rollout_visits_every_replica_once_one_epoch_apart() {
+        let p = tiny_placement();
+        let mut roll = RollingReplan::new(3);
+        assert!(!roll.in_flight());
+        assert!(roll.begin(PreparedDelta::new(&p, tiny_delta())));
+        // Same-epoch double swap is refused; cursor order is enforced.
+        assert!(roll.due(0, 5));
+        assert!(!roll.due(1, 5), "only the cursor replica is due");
+        roll.commit(0, 5);
+        assert!(!roll.due(1, 5), "second swap in epoch 5 must wait");
+        assert!(roll.due(1, 6));
+        roll.commit(1, 6);
+        assert!(roll.in_flight());
+        assert!(roll.due(2, 7));
+        roll.commit(2, 7);
+        assert!(!roll.in_flight(), "rollout completes after replica N−1");
+        assert_eq!(roll.rollouts(), 1);
+        assert_eq!(roll.swaps(), 3);
+        assert_eq!(roll.log(), &[(5, 0), (6, 1), (7, 2)]);
+    }
+
+    #[test]
+    fn busy_machine_refuses_new_deltas_and_empty_ones() {
+        let p = tiny_placement();
+        let mut roll = RollingReplan::new(2);
+        assert!(!roll.begin(PreparedDelta::new(&p, ReplanDelta::default())),
+                "an empty delta must not start a rollout");
+        assert!(roll.begin(PreparedDelta::new(&p, tiny_delta())));
+        assert!(!roll.begin(PreparedDelta::new(&p, tiny_delta())),
+                "a second delta must wait for the in-flight rollout");
+        roll.commit(0, 1);
+        roll.commit(1, 2);
+        assert!(roll.begin(PreparedDelta::new(&p, tiny_delta())),
+                "a completed rollout frees the machine");
+    }
+
+    #[test]
+    fn single_replica_swaps_in_the_decision_epoch() {
+        // N = 1: the pre-sharding immediate apply — begin and commit in
+        // the same epoch, machine free again right after.
+        let p = tiny_placement();
+        let mut roll = RollingReplan::new(1);
+        assert!(roll.begin(PreparedDelta::new(&p, tiny_delta())));
+        assert!(roll.due(0, 9));
+        roll.commit(0, 9);
+        assert!(!roll.in_flight());
+        assert_eq!(roll.rollouts(), 1);
+    }
+}

@@ -34,6 +34,7 @@
 //! (`tests/replan.rs`).
 
 pub mod sched;
+pub mod shard;
 
 use crate::cluster::{GpuId, Topology};
 use crate::coordinator::OnlineCoordinator;

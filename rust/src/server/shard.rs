@@ -1,0 +1,497 @@
+//! Fleet sharding: one admission front-end over N independent
+//! [`MoEServer`] replicas.
+//!
+//! A single machine tops out at one scheduler and one placement copy;
+//! GRACE-MoE's evaluation assumes the serving system scales *out*. This
+//! module is the scale-out seam: [`FleetFrontend`] holds N fully
+//! independent replicas — each with its own `Placement` copy,
+//! dispatcher, KV caches, and executor thread pool — routes every
+//! admitted request to exactly one of them through a pluggable
+//! [`FleetRoutePolicy`], and runs the replicas on real threads
+//! (`std::thread::scope`), so wall-clock throughput actually scales
+//! with replica count in PJRT mode.
+//!
+//! The same split exists in simulation: `engine::fleet` builds the
+//! virtual-clock analogue (deterministic min-clock interleave of N
+//! shards, rolling epoch re-plans through
+//! [`crate::replan::RollingReplan`]) from the same [`ShardConfig`] and
+//! [`FleetRouter`], so routing policies and validation are pinned once
+//! here and exercised identically in both worlds.
+//!
+//! Route policies:
+//!
+//! * **jsq** — join-shortest-queue by *outstanding tokens* (prompt +
+//!   requested decode tokens still in flight), the classic latency
+//!   workhorse.
+//! * **wrr** — weighted round-robin; with a homogeneous fleet the
+//!   weights are uniform, so this is plain round-robin (the baseline
+//!   that ignores load).
+//! * **affinity** — placement-affinity: score each replica by how much
+//!   of the request's class-predicted hot-expert mass
+//!   ([`ClassProfiles`], per-class [`LoadEstimator`] gate profiles) is
+//!   locally replicated, and fall back to jsq until profiles warm up.
+
+use crate::metrics::ServeMetrics;
+use crate::placement::Placement;
+use crate::routing::load::LoadEstimator;
+use crate::routing::LoadAware;
+use crate::server::{MoEServer, Request, Response};
+
+/// How the fleet front-end picks a replica for each admitted request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FleetRoutePolicy {
+    /// Join-shortest-queue by outstanding tokens (the default).
+    Jsq,
+    /// Weighted round-robin (uniform weights on a homogeneous fleet).
+    Wrr,
+    /// Placement-affinity: prefer the replica whose placement holds the
+    /// most instances of the request class's predicted hot experts;
+    /// falls back to [`FleetRoutePolicy::Jsq`] until the class profile
+    /// has observed at least one dispatch round.
+    Affinity,
+}
+
+impl FleetRoutePolicy {
+    /// Parse a `--fleet-route` name. Unknown names are a loud error
+    /// listing the valid spellings — a typo must not silently fall back
+    /// to the default policy.
+    pub fn from_name(name: &str) -> anyhow::Result<FleetRoutePolicy> {
+        match name {
+            "jsq" => Ok(FleetRoutePolicy::Jsq),
+            "wrr" => Ok(FleetRoutePolicy::Wrr),
+            "affinity" => Ok(FleetRoutePolicy::Affinity),
+            other => anyhow::bail!(
+                "unknown fleet route policy '{other}' \
+                 (expected jsq|wrr|affinity)"
+            ),
+        }
+    }
+
+    /// The CLI spelling of this policy.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FleetRoutePolicy::Jsq => "jsq",
+            FleetRoutePolicy::Wrr => "wrr",
+            FleetRoutePolicy::Affinity => "affinity",
+        }
+    }
+}
+
+/// Fleet-level tunables shared by the threaded front-end and the
+/// virtual-clock fleet replay.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardConfig {
+    /// Number of independent `MoEServer` replicas (≥ 1).
+    pub replicas: usize,
+    /// The route policy picking a replica per admitted request.
+    pub route: FleetRoutePolicy,
+    /// Fleet-wide admission queue capacity: requests beyond it are shed
+    /// (rejected) instead of queued, the bounded-ingress discipline.
+    pub queue_cap: usize,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            replicas: 1,
+            route: FleetRoutePolicy::Jsq,
+            queue_cap: 64,
+        }
+    }
+}
+
+impl ShardConfig {
+    /// Reject fleet shapes that would silently serve nothing or wedge:
+    /// zero replicas is a fleet of nothing, and a queue smaller than the
+    /// fleet cannot even hold one request per replica.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.replicas >= 1,
+            "ShardConfig: --replicas 0 would shard the fleet into \
+             nothing — every request would be shed"
+        );
+        anyhow::ensure!(
+            self.queue_cap >= 1,
+            "ShardConfig: queue_cap = 0 leaves no room to admit"
+        );
+        anyhow::ensure!(
+            self.queue_cap >= self.replicas,
+            "ShardConfig: queue capacity {} < {} replicas — the \
+             admission queue cannot even hold one request per replica; \
+             raise --queue-cap or lower --replicas",
+            self.queue_cap,
+            self.replicas
+        );
+        Ok(())
+    }
+}
+
+/// The routing decision engine: stateless for jsq, a rotating cursor
+/// for wrr, and affinity scores (when provided) for the affinity
+/// policy. One instance is shared fleet-wide; decisions are
+/// deterministic given the call sequence.
+#[derive(Clone, Debug)]
+pub struct FleetRouter {
+    policy: FleetRoutePolicy,
+    rr: usize,
+}
+
+impl FleetRouter {
+    /// A fresh router for `policy` (wrr cursor at replica 0).
+    pub fn new(policy: FleetRoutePolicy) -> FleetRouter {
+        FleetRouter { policy, rr: 0 }
+    }
+
+    /// The policy this router runs.
+    pub fn policy(&self) -> FleetRoutePolicy {
+        self.policy
+    }
+
+    /// Pick the replica for one request. `outstanding[r]` is replica
+    /// r's in-flight token load; `affinity`, when present, is the
+    /// per-replica placement-affinity score for the request's class.
+    /// Ties break to the lowest replica index so the decision — and
+    /// with it the whole virtual-clock fleet replay — is deterministic.
+    pub fn choose(&mut self, outstanding: &[f64],
+                  affinity: Option<&[f64]>) -> usize {
+        debug_assert!(!outstanding.is_empty());
+        match self.policy {
+            FleetRoutePolicy::Jsq => argmin(outstanding),
+            FleetRoutePolicy::Wrr => {
+                let pick = self.rr % outstanding.len();
+                self.rr += 1;
+                pick
+            }
+            FleetRoutePolicy::Affinity => {
+                let scores = affinity.filter(|s| {
+                    s.len() == outstanding.len()
+                        && s.iter().any(|&v| v > 0.0)
+                });
+                match scores {
+                    // Highest affinity wins; among tied-best replicas
+                    // prefer the least-loaded, then the lowest index.
+                    Some(s) => {
+                        let best = s.iter().cloned().fold(f64::MIN, f64::max);
+                        (0..s.len())
+                            .filter(|&r| s[r] == best)
+                            .min_by(|&a, &b| {
+                                outstanding[a]
+                                    .partial_cmp(&outstanding[b])
+                                    .unwrap_or(std::cmp::Ordering::Equal)
+                                    .then(a.cmp(&b))
+                            })
+                            .unwrap_or(0)
+                    }
+                    // Cold profiles: fall back to jsq.
+                    None => argmin(outstanding),
+                }
+            }
+        }
+    }
+}
+
+/// Lowest index attaining the minimum (deterministic tie-break).
+fn argmin(xs: &[f64]) -> usize {
+    let mut best = 0usize;
+    for (i, &x) in xs.iter().enumerate().skip(1) {
+        if x < xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Per-priority-class gate profiles for affinity routing: one smoothed
+/// [`LoadEstimator`] per class, fed from observed dispatch plans, read
+/// back as a per-replica placement-affinity score — "how much of this
+/// class's hot-expert mass does replica r hold locally-replicated?".
+#[derive(Debug)]
+pub struct ClassProfiles {
+    ests: Vec<LoadEstimator>,
+}
+
+impl ClassProfiles {
+    /// Profiles for `classes` priority classes (at least one).
+    pub fn new(classes: usize) -> ClassProfiles {
+        let n = classes.max(1);
+        ClassProfiles {
+            ests: (0..n)
+                .map(|_| LoadEstimator::new(LoadAware::DEFAULT_ALPHA))
+                .collect(),
+        }
+    }
+
+    /// Number of classes tracked.
+    pub fn classes(&self) -> usize {
+        self.ests.len()
+    }
+
+    /// Record one routed token copy for `class` (out-of-range classes
+    /// clamp to the last profile, mirroring request-priority clamping).
+    pub fn observe(&mut self, class: usize, layer: usize,
+                   lp: &crate::placement::LayerPlacement, expert: usize) {
+        let c = class.min(self.ests.len() - 1);
+        self.ests[c].record(layer, lp, expert);
+    }
+
+    /// Close one dispatch round on every class profile (classes that
+    /// saw no tokens this round are unchanged).
+    pub fn end_round(&mut self, layer: usize, n_gpus: usize,
+                     experts: usize) {
+        for est in &mut self.ests {
+            est.end_round(layer, n_gpus, experts);
+        }
+    }
+
+    /// Placement-affinity score of `placement` for `class`: the
+    /// class-predicted per-expert load weighted by how many instances
+    /// the placement hosts of each expert, summed over layers. More
+    /// local replicas of the class's hot experts ⇒ higher score; a cold
+    /// profile scores 0.0 (routers fall back to jsq).
+    pub fn score(&self, placement: &Placement, class: usize) -> f64 {
+        let c = class.min(self.ests.len() - 1);
+        let mut s = 0.0;
+        for (layer, lp) in placement.layers.iter().enumerate() {
+            if let Some(loads) = self.ests[c].expert_loads(layer) {
+                for (e, &w) in loads.iter().enumerate() {
+                    if e < lp.instances.len() {
+                        s += w * lp.instances[e].len() as f64;
+                    }
+                }
+            }
+        }
+        s
+    }
+}
+
+/// The threaded fleet front-end for PJRT (execute) mode: routes a
+/// closed workload across its replicas, then serves every replica's
+/// share on its own OS thread and merges the results.
+///
+/// Each replica is a full [`MoEServer`] — own placement copy, own
+/// dispatcher/coordinator (and with it an independent re-planner when
+/// configured: replicas re-plan on their own observations rather than
+/// through a global barrier), own KV caches and executor pool. The
+/// routing pre-pass uses outstanding-token jsq/wrr; the affinity policy
+/// needs warm gate profiles, which a closed one-shot workload does not
+/// have, so it routes through its documented jsq fallback here (the
+/// virtual-clock fleet replay in `engine::fleet` exercises the warm
+/// path).
+pub struct FleetFrontend {
+    replicas: Vec<MoEServer>,
+    cfg: ShardConfig,
+}
+
+impl FleetFrontend {
+    /// A front-end over `replicas` (one `MoEServer` each, already
+    /// built). Validates the shard config and that the replica vector
+    /// matches `cfg.replicas`.
+    pub fn new(replicas: Vec<MoEServer>, cfg: ShardConfig)
+               -> anyhow::Result<FleetFrontend> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            replicas.len() == cfg.replicas,
+            "FleetFrontend: {} replica servers built but cfg.replicas \
+             = {}",
+            replicas.len(),
+            cfg.replicas
+        );
+        Ok(FleetFrontend { replicas, cfg })
+    }
+
+    /// The replica servers (test/inspection handle).
+    pub fn replicas(&self) -> &[MoEServer] {
+        &self.replicas
+    }
+
+    /// Serve a closed workload across the fleet: requests beyond the
+    /// fleet admission queue capacity are shed up front (their ids are
+    /// returned in each metrics' `rejected` via the merged report),
+    /// the rest are routed one-by-one through the [`FleetRouter`], and
+    /// every replica serves its share on its own thread. Responses come
+    /// back sorted by request id; metrics are the fleet-wide merge plus
+    /// the per-replica breakdown.
+    pub fn serve(&mut self, requests: Vec<Request>)
+                 -> anyhow::Result<(Vec<Response>, ServeMetrics,
+                                    Vec<ServeMetrics>)> {
+        self.cfg.validate()?;
+        let n = self.replicas.len();
+        let mut router = FleetRouter::new(self.cfg.route);
+        let mut outstanding = vec![0.0f64; n];
+        let mut shares: Vec<Vec<Request>> = vec![Vec::new(); n];
+        let mut shed: Vec<u64> = Vec::new();
+        for (i, req) in requests.into_iter().enumerate() {
+            if i >= self.cfg.queue_cap {
+                shed.push(req.id);
+                continue;
+            }
+            let r = router.choose(&outstanding, None);
+            outstanding[r] +=
+                (req.prompt.len() + req.max_new_tokens) as f64;
+            shares[r].push(req);
+        }
+
+        // One OS thread per replica: scoped so the borrows of
+        // `self.replicas` need no 'static, joined before returning so a
+        // replica error surfaces after every thread has stopped.
+        let results: Vec<anyhow::Result<(Vec<Response>, ServeMetrics)>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = self
+                    .replicas
+                    .iter_mut()
+                    .zip(shares)
+                    .map(|(srv, share)| {
+                        scope.spawn(move || srv.serve(share))
+                    })
+                    .collect();
+                handles.into_iter().map(|h| {
+                    h.join().unwrap_or_else(|_| {
+                        Err(anyhow::anyhow!("fleet replica panicked"))
+                    })
+                }).collect()
+            });
+
+        let mut responses = Vec::new();
+        let mut per_replica = Vec::with_capacity(n);
+        for res in results {
+            let (rs, m) = res?;
+            responses.extend(rs);
+            per_replica.push(m);
+        }
+        responses.sort_by_key(|r| r.id);
+        let mut merged = ServeMetrics::default();
+        for m in &per_replica {
+            merged.merge(m);
+        }
+        merged.rejected.extend(shed);
+        merged.rejected.sort_unstable();
+        merged.per_request.sort_by_key(|t| t.id);
+        Ok((responses, merged, per_replica))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::profile::ModelProfile;
+    use crate::trace::{Profile, TraceGen};
+
+    #[test]
+    fn route_policy_names_round_trip_and_typos_are_loud() {
+        for p in [FleetRoutePolicy::Jsq, FleetRoutePolicy::Wrr,
+                  FleetRoutePolicy::Affinity]
+        {
+            assert_eq!(FleetRoutePolicy::from_name(p.name()).unwrap(), p);
+        }
+        let err = FleetRoutePolicy::from_name("jqs").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("jqs"), "{msg}");
+        assert!(msg.contains("jsq|wrr|affinity"), "{msg}");
+    }
+
+    #[test]
+    fn zero_replicas_and_tiny_queues_are_loud_errors() {
+        // Regression: --replicas 0 must refuse at config time, not shed
+        // the whole workload at runtime.
+        let cfg = ShardConfig { replicas: 0, ..ShardConfig::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("--replicas 0"), "{err}");
+
+        let cfg = ShardConfig {
+            replicas: 4,
+            queue_cap: 3,
+            ..ShardConfig::default()
+        };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("queue capacity 3 < 4"),
+                "{err}");
+
+        let cfg = ShardConfig {
+            replicas: 1,
+            queue_cap: 0,
+            ..ShardConfig::default()
+        };
+        assert!(cfg.validate().is_err());
+        assert!(ShardConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn jsq_picks_least_outstanding_with_low_index_ties() {
+        let mut r = FleetRouter::new(FleetRoutePolicy::Jsq);
+        assert_eq!(r.choose(&[3.0, 1.0, 2.0], None), 1);
+        assert_eq!(r.choose(&[5.0, 2.0, 2.0], None), 1);
+        assert_eq!(r.choose(&[0.0, 0.0, 0.0], None), 0);
+    }
+
+    #[test]
+    fn wrr_rotates_regardless_of_load() {
+        let mut r = FleetRouter::new(FleetRoutePolicy::Wrr);
+        let picks: Vec<usize> =
+            (0..5).map(|_| r.choose(&[9.0, 0.0, 0.0], None)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1]);
+    }
+
+    #[test]
+    fn affinity_prefers_high_scores_and_falls_back_cold() {
+        let mut r = FleetRouter::new(FleetRoutePolicy::Affinity);
+        // Warm scores: highest affinity wins even against lower load.
+        assert_eq!(r.choose(&[0.0, 9.0], Some(&[1.0, 5.0])), 1);
+        // Tied-best scores: least outstanding breaks the tie.
+        assert_eq!(r.choose(&[9.0, 2.0, 5.0], Some(&[3.0, 3.0, 1.0])), 1);
+        // Cold (all-zero) scores and missing scores: jsq fallback.
+        assert_eq!(r.choose(&[4.0, 1.0], Some(&[0.0, 0.0])), 1);
+        assert_eq!(r.choose(&[4.0, 1.0], None), 1);
+    }
+
+    fn two_gpu_placement(seed: u64) -> Placement {
+        let t = TraceGen {
+            experts: 8,
+            top_k: 2,
+            layers: 1,
+            profile: Profile::Math,
+            seed,
+        }
+        .generate(256);
+        let mp = ModelProfile::from_trace(&t);
+        let topo = Topology::two_by_two();
+        let mut rng = crate::stats::Rng::new(1);
+        Placement::build(
+            &mp,
+            crate::placement::ReplicationMode::None,
+            |lp| crate::grouping::hierarchical(lp, &topo, 0.15, &mut rng),
+        )
+    }
+
+    #[test]
+    fn class_profiles_score_replicated_hot_experts_higher() {
+        let base = two_gpu_placement(3);
+        let mut profiles = ClassProfiles::new(2);
+        // Cold profiles score zero everywhere (jsq-fallback regime).
+        assert_eq!(profiles.score(&base, 0), 0.0);
+
+        // Class 0 hammers expert 0; close the round so the estimator
+        // publishes per-expert loads.
+        for _ in 0..32 {
+            profiles.observe(0, 0, &base.layers[0], 0);
+        }
+        profiles.observe(0, 0, &base.layers[0], 1);
+        profiles.end_round(0, base.num_gpus, base.experts);
+
+        // A replica that replicates expert 0 onto a second GPU holds
+        // more of class 0's hot mass than the base placement.
+        let mut replicated = base.clone();
+        let other = 1 - replicated.layers[0].primary[0];
+        replicated.layers[0].instances[0].push(other);
+        let s_base = profiles.score(&base, 0);
+        let s_rep = profiles.score(&replicated, 0);
+        assert!(s_base > 0.0);
+        assert!(s_rep > s_base,
+                "replicating the hot expert must raise the score \
+                 ({s_rep} vs {s_base})");
+        // Class 1 never observed anything: still cold.
+        assert_eq!(profiles.score(&base, 1), 0.0);
+        // Out-of-range classes clamp instead of panicking.
+        assert_eq!(profiles.score(&base, 7), profiles.score(&base, 1));
+    }
+}
