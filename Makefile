@@ -7,9 +7,10 @@
 #                     mode — simulate mode and tier-1 tests run without it)
 #   make bench-smoke— compile every paper-figure bench without running it
 #   make bench-record — run the serving + cluster_sim + fleet_sharding
-#                     benches with the JSON emitter on, archiving
-#                     BENCH_serving.json, BENCH_cluster_sim.json, and
-#                     BENCH_fleet_sharding.json in the repo root
+#                     + prefetch benches with the JSON emitter on,
+#                     archiving BENCH_serving.json,
+#                     BENCH_cluster_sim.json, BENCH_fleet_sharding.json,
+#                     and BENCH_prefetch.json in the repo root
 #   make lint       — rustfmt + clippy, as CI runs them
 #   make docs       — rustdoc with warnings-as-errors (missing_docs,
 #                     broken intra-doc links) + check that every public
@@ -50,6 +51,7 @@ bench-record:
 	BENCH_JSON=$(CURDIR) cargo bench --bench serving
 	BENCH_JSON=$(CURDIR) cargo bench --bench cluster_sim
 	BENCH_JSON=$(CURDIR) cargo bench --bench fleet_sharding
+	BENCH_JSON=$(CURDIR) cargo bench --bench prefetch
 
 lint:
 	cargo fmt --all --check

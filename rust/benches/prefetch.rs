@@ -1,0 +1,298 @@
+//! Prefetch bench: the PR-10 acceptance bars, self-checked on every
+//! run.
+//!
+//! Three arms over the weight-tier engine
+//! ([`grace_moe::engine::PrefetchEngine`]), all replaying *identical*
+//! dispatch plans with prediction on vs off — token output is equal by
+//! construction, so every comparison isolates the staging policy:
+//!
+//! * **correlated** — an 8-expert round-robin trace whose layer-1 hot
+//!   set is a deterministic function of layer 0's (expert `e` → expert
+//!   `e+1`), under a 2-expert-per-GPU budget that cannot hold both
+//!   layers at once. The bar: prediction must stall strictly fewer
+//!   layer rounds than demand-only staging at equal token output, and
+//!   waste at most 25% of its prefetched bytes (only the final
+//!   warm-ahead can retire unused).
+//! * **contended** — the same trace priced on the discrete-event
+//!   network (`des`): the win must survive real link queueing, and two
+//!   replays must agree counter-for-counter (the determinism gate).
+//! * **uncorrelated** — layer 1 cycles through experts independently
+//!   of layer 0, so every prediction is stale. The bar is graceful
+//!   degradation: no more stalled rounds than demand-only staging and
+//!   no stall-time blow-up (mispredictions must skip resident keys
+//!   instead of thrashing the tier).
+//!
+//! Run: `cargo bench --bench prefetch`
+//! JSON archive: `cargo bench --bench prefetch -- --json`, or
+//! `BENCH_JSON=<dir>` (the `make bench-record` path) — writes
+//! `BENCH_prefetch.json` with all arms plus the self-check verdicts.
+
+use grace_moe::bench::{bench, JsonRecorder, Table};
+use grace_moe::cluster::Topology;
+use grace_moe::comm::{CommBackend, CommBackendKind};
+use grace_moe::config::PrefetchConfig;
+use grace_moe::configio::Value;
+use grace_moe::engine::PrefetchEngine;
+use grace_moe::linalg::Matrix;
+use grace_moe::metrics::PrefetchStats;
+use grace_moe::placement::{LayerPlacement, ReplicationMode};
+use grace_moe::profile::LayerProfile;
+use grace_moe::routing::{Assignment, DispatchPlan, Dispatcher,
+                         RoutingPolicy};
+use grace_moe::stats::Rng;
+
+const EXPERTS: usize = 8;
+const GPUS: usize = 4;
+const EXPERT_BYTES: f64 = 1e6;
+/// Correlated-arm rounds (each = one pass through both layers).
+const ROUNDS: usize = 6;
+/// Uncorrelated-arm rounds: two full cycles of the drifting hot set.
+const UROUNDS: usize = 16;
+
+/// 8 experts striped over 4 GPUs (GPU `g` owns `g` and `g+4`), no
+/// replication: Primary routing sends expert `e` to GPU `e % 4`
+/// deterministically.
+fn fixture() -> LayerPlacement {
+    let profile = LayerProfile {
+        affinity: Matrix::zeros(EXPERTS, EXPERTS),
+        load: vec![1.0; EXPERTS],
+        tokens: EXPERTS,
+    };
+    let groups = (0..GPUS)
+        .map(|g| vec![g, g + GPUS])
+        .collect();
+    LayerPlacement::build(&profile, groups, ReplicationMode::None)
+}
+
+/// Route `sets[t]` (the experts token `t` activates) through the real
+/// dispatcher — both arms replay the exact plans this returns.
+fn plan_for(lp: &LayerPlacement, layer: usize, sets: &[Vec<usize>])
+            -> DispatchPlan {
+    let topo = Topology::paper_testbed(1, GPUS);
+    let mut d = Dispatcher::new(topo, RoutingPolicy::Primary.build(),
+                                1.0);
+    let batch: Vec<Assignment> = sets
+        .iter()
+        .enumerate()
+        .flat_map(|(t, es)| {
+            es.iter().map(move |&e| Assignment {
+                token: t,
+                expert: e,
+                src: t % GPUS,
+            })
+        })
+        .collect();
+    d.dispatch(lp, layer, &batch, &mut Rng::new(5))
+}
+
+fn engine(predictive: bool, k: usize) -> PrefetchEngine {
+    let cfg = PrefetchConfig {
+        predictive,
+        k,
+        weight_budget: 2,
+        alpha: 0.5,
+    };
+    PrefetchEngine::new(cfg, 2, EXPERTS, GPUS, EXPERT_BYTES)
+}
+
+struct Arm {
+    stats: PrefetchStats,
+    /// Critical-path stall seconds summed over demand passes.
+    stall_time: f64,
+    /// Routed (token, expert) pairs replayed — the token-output
+    /// equality witness.
+    pairs: usize,
+}
+
+/// The correlated trace: every round layer 0 activates all 8 experts
+/// (token `t` → expert `t`) and layer 1 activates the shifted set
+/// (token `t` → expert `t+1`), so the cross-layer transition is fully
+/// learnable after one round.
+fn replay_correlated(predictive: bool, kind: CommBackendKind) -> Arm {
+    let lp = fixture();
+    let topo = Topology::paper_testbed(1, GPUS);
+    let mut backend = CommBackend::new(kind, &topo);
+    let mut eng = engine(predictive, EXPERTS);
+    let s0: Vec<Vec<usize>> = (0..EXPERTS).map(|t| vec![t]).collect();
+    let s1: Vec<Vec<usize>> =
+        (0..EXPERTS).map(|t| vec![(t + 1) % EXPERTS]).collect();
+    let p0 = plan_for(&lp, 0, &s0);
+    let p1 = plan_for(&lp, 1, &s1);
+    let mut stall_time = 0.0;
+    let mut pairs = 0;
+    for round in 0..ROUNDS {
+        let at = round as f64 * 1e-3;
+        stall_time += eng.demand_pass(0, &p0, &mut backend, &topo, at);
+        eng.prefetch_pass(0, &p0, &lp, &mut backend, &topo, at);
+        stall_time += eng.demand_pass(1, &p1, &mut backend, &topo, at);
+        eng.prefetch_pass(1, &p1, &lp, &mut backend, &topo, at);
+        pairs += p0.assignments().len() + p1.assignments().len();
+    }
+    eng.finish();
+    Arm { stats: eng.stats().clone(), stall_time, pairs }
+}
+
+/// The uncorrelated trace: layer 0 always activates expert 0 while
+/// layer 1 cycles `r % 8` — layer 1's next set is never predictable
+/// from layer 0's current one.
+fn replay_uncorrelated(predictive: bool) -> Arm {
+    let lp = fixture();
+    let topo = Topology::paper_testbed(1, GPUS);
+    let mut backend = CommBackend::new(CommBackendKind::Analytic, &topo);
+    let mut eng = engine(predictive, 2);
+    let p0 = plan_for(&lp, 0, &[vec![0]]);
+    let mut stall_time = 0.0;
+    let mut pairs = 0;
+    for round in 0..UROUNDS {
+        let at = round as f64 * 1e-3;
+        let p1 = plan_for(&lp, 1, &[vec![round % EXPERTS]]);
+        stall_time += eng.demand_pass(0, &p0, &mut backend, &topo, at);
+        eng.prefetch_pass(0, &p0, &lp, &mut backend, &topo, at);
+        stall_time += eng.demand_pass(1, &p1, &mut backend, &topo, at);
+        eng.prefetch_pass(1, &p1, &lp, &mut backend, &topo, at);
+        pairs += p0.assignments().len() + p1.assignments().len();
+    }
+    eng.finish();
+    Arm { stats: eng.stats().clone(), stall_time, pairs }
+}
+
+fn row(table: &mut Table, arm: &str, a: &Arm) {
+    table.row(vec![
+        arm.to_string(),
+        a.stats.stall_steps.to_string(),
+        a.stats.stalls.to_string(),
+        a.stats.hits.to_string(),
+        a.stats.prefetches.to_string(),
+        format!("{:.2}", a.stall_time * 1e3),
+        format!("{:.2}", a.stats.wasted_bytes / 1e6),
+    ]);
+}
+
+fn arm_json(a: &Arm) -> Value {
+    Value::object(vec![
+        ("stall_steps", Value::from(a.stats.stall_steps)),
+        ("stalls", Value::from(a.stats.stalls)),
+        ("hits", Value::from(a.stats.hits)),
+        ("prefetches", Value::from(a.stats.prefetches)),
+        ("evictions", Value::from(a.stats.evictions)),
+        ("hit_rate", Value::num(a.stats.hit_rate())),
+        ("stall_time_ms", Value::num(a.stall_time * 1e3)),
+        ("prefetch_bytes", Value::num(a.stats.prefetch_bytes)),
+        ("demand_bytes", Value::num(a.stats.demand_bytes)),
+        ("wasted_bytes", Value::num(a.stats.wasted_bytes)),
+        ("routed_pairs", Value::from(a.pairs)),
+    ])
+}
+
+fn main() {
+    let mut rec = JsonRecorder::from_env("prefetch");
+    let mut table = Table::new(&[
+        "ARM",
+        "STALL ROUNDS",
+        "STALLS",
+        "HITS",
+        "PREFETCHES",
+        "STALL (ms)",
+        "WASTED MB",
+    ]);
+
+    // ---- correlated: prediction must beat demand-only staging -------
+    let on = replay_correlated(true, CommBackendKind::Analytic);
+    let off = replay_correlated(false, CommBackendKind::Analytic);
+    row(&mut table, "correlated/on", &on);
+    row(&mut table, "correlated/off", &off);
+    rec.record_value("correlated/on", arm_json(&on));
+    rec.record_value("correlated/off", arm_json(&off));
+
+    assert_eq!(on.pairs, off.pairs,
+               "both arms must replay identical token output");
+    assert!(
+        on.stats.stall_steps < off.stats.stall_steps,
+        "prefetch-on must stall strictly fewer layer rounds than \
+         prefetch-off on a correlated trace: {} !< {}",
+        on.stats.stall_steps, off.stats.stall_steps
+    );
+    assert!(on.stall_time < off.stall_time,
+            "fewer stalled rounds must mean less critical-path time");
+    assert!(on.stats.prefetches > 0, "prediction never fired");
+    assert!(
+        on.stats.wasted_bytes <= 0.25 * on.stats.prefetch_bytes,
+        "wasted prefetch bytes past the pinned fraction: {:.1} MB of \
+         {:.1} MB prefetched",
+        on.stats.wasted_bytes / 1e6, on.stats.prefetch_bytes / 1e6
+    );
+    assert_eq!(off.stats.prefetches, 0);
+    assert_eq!(off.stats.prefetch_bytes, 0.0);
+    rec.record_value(
+        "self_check_correlated",
+        Value::object(vec![
+            ("stall_steps_on", Value::from(on.stats.stall_steps)),
+            ("stall_steps_off", Value::from(off.stats.stall_steps)),
+            ("wasted_frac",
+             Value::num(on.stats.wasted_bytes
+                 / on.stats.prefetch_bytes.max(1.0))),
+        ]),
+    );
+
+    // ---- contended: the win survives the DES network, bit-stably ----
+    let des_on = replay_correlated(true, CommBackendKind::Des);
+    let des_off = replay_correlated(false, CommBackendKind::Des);
+    row(&mut table, "des/on", &des_on);
+    row(&mut table, "des/off", &des_off);
+    rec.record_value("des/on", arm_json(&des_on));
+    rec.record_value("des/off", arm_json(&des_off));
+
+    assert!(des_on.stats.stall_steps < des_off.stats.stall_steps,
+            "the prefetch win must survive contended pricing");
+    assert!(des_on.stall_time > 0.0 && des_off.stall_time > 0.0,
+            "DES stages must take real time");
+    let again = replay_correlated(true, CommBackendKind::Des);
+    assert_eq!(again.stats, des_on.stats,
+               "DES staging counters diverge across reruns");
+    assert_eq!(again.stall_time, des_on.stall_time,
+               "DES stall timing diverges across reruns");
+    rec.record_value("self_check_des_deterministic", Value::from(true));
+
+    // ---- uncorrelated: stale predictions must degrade gracefully ----
+    let u_on = replay_uncorrelated(true);
+    let u_off = replay_uncorrelated(false);
+    row(&mut table, "uncorrelated/on", &u_on);
+    row(&mut table, "uncorrelated/off", &u_off);
+    rec.record_value("uncorrelated/on", arm_json(&u_on));
+    rec.record_value("uncorrelated/off", arm_json(&u_off));
+
+    assert_eq!(u_on.pairs, u_off.pairs);
+    assert!(
+        u_on.stats.stall_steps <= u_off.stats.stall_steps,
+        "an unpredictable trace must not stall more rounds with \
+         prediction on: {} > {}",
+        u_on.stats.stall_steps, u_off.stats.stall_steps
+    );
+    assert!(
+        u_on.stall_time <= u_off.stall_time * 1.25 + 1e-12,
+        "stale predictions blew up stall time: {:.3} ms vs {:.3} ms",
+        u_on.stall_time * 1e3, u_off.stall_time * 1e3
+    );
+    rec.record_value(
+        "self_check_uncorrelated",
+        Value::object(vec![
+            ("stall_steps_on", Value::from(u_on.stats.stall_steps)),
+            ("stall_steps_off", Value::from(u_off.stats.stall_steps)),
+        ]),
+    );
+
+    println!("{}", table.render());
+
+    // Wall-clock of the staging machinery itself (tier bookkeeping,
+    // prediction, pricing) — both arms end to end.
+    let r = bench("prefetch replay (on+off, analytic)", 2, 5, || {
+        let on = replay_correlated(true, CommBackendKind::Analytic);
+        let off = replay_correlated(false, CommBackendKind::Analytic);
+        assert!(on.stats.stall_steps < off.stats.stall_steps);
+    });
+    println!("{}", r.report_line());
+    rec.record(&r);
+    if let Some(path) = rec.finish().expect("write bench json") {
+        println!("wrote {}", path.display());
+    }
+}

@@ -284,6 +284,59 @@ impl ServeLoad {
     }
 }
 
+/// Knobs of the predictive-prefetch / weight-tier machinery
+/// ([`crate::engine::prefetch`]). `None` at the driver level means the
+/// whole subsystem is off and every expert weight is permanently
+/// resident (the pre-tier behaviour, bit-identical to older runs).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefetchConfig {
+    /// Run the cross-layer predictor and issue background staging for
+    /// its top-k picks. `false` keeps the tiered cache and demand
+    /// staging (the prefetch-*off* arm benches compare against).
+    pub predictive: bool,
+    /// How many predicted next-layer experts to prefetch per round
+    /// (`--prefetch-k`).
+    pub k: usize,
+    /// Hot-tier capacity in experts per GPU (`--weight-budget`);
+    /// lookups past it evict LRU into the cold tier.
+    pub weight_budget: usize,
+    /// EWMA smoothing factor of the co-activation predictor
+    /// (`--prefetch-alpha`), in `(0, 1]`.
+    pub alpha: f64,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        PrefetchConfig { predictive: true, k: 4, weight_budget: 8,
+                         alpha: 0.3 }
+    }
+}
+
+impl PrefetchConfig {
+    /// Loud shape validation against the model being served: a zero
+    /// weight budget can hold no expert at all, a prefetch depth past
+    /// the expert count can never be satisfied, and a NaN alpha would
+    /// silently poison every EWMA in the predictor.
+    pub fn validate(&self, experts_per_layer: usize)
+                    -> anyhow::Result<()> {
+        anyhow::ensure!(self.weight_budget >= 1,
+                        "the hot tier must hold at least one expert, \
+                         got --weight-budget 0");
+        anyhow::ensure!(self.k >= 1,
+                        "--prefetch-k must be at least 1 (use \
+                         --prefetch off to disable prediction)");
+        anyhow::ensure!(self.k <= experts_per_layer,
+                        "--prefetch-k {} exceeds the {} experts per \
+                         layer — nothing left to predict",
+                        self.k, experts_per_layer);
+        anyhow::ensure!(self.alpha.is_finite() && self.alpha > 0.0
+                        && self.alpha <= 1.0,
+                        "--prefetch-alpha must be a finite value in \
+                         (0, 1], got {}", self.alpha);
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -383,5 +436,32 @@ mod tests {
             };
             assert!(bad.validate().is_err(), "rate {rate} accepted");
         }
+    }
+
+    #[test]
+    fn prefetch_config_validation_is_loud() {
+        let good = PrefetchConfig::default();
+        assert!(good.validate(64).is_ok());
+        // Non-predictive arm still has to satisfy the tier knobs.
+        assert!(PrefetchConfig { predictive: false, ..good }
+            .validate(64)
+            .is_ok());
+
+        let zero_budget = PrefetchConfig { weight_budget: 0, ..good };
+        let msg = zero_budget.validate(64).unwrap_err().to_string();
+        assert!(msg.contains("--weight-budget 0"), "msg: {msg}");
+
+        let deep = PrefetchConfig { k: 65, ..good };
+        let msg = deep.validate(64).unwrap_err().to_string();
+        assert!(msg.contains("--prefetch-k 65"), "msg: {msg}");
+        assert!(PrefetchConfig { k: 64, ..good }.validate(64).is_ok());
+        assert!(PrefetchConfig { k: 0, ..good }.validate(64).is_err());
+
+        for alpha in [f64::NAN, 0.0, -0.5, 1.5, f64::INFINITY] {
+            let bad = PrefetchConfig { alpha, ..good };
+            assert!(bad.validate(64).is_err(), "alpha {alpha} accepted");
+        }
+        assert!(PrefetchConfig { alpha: 1.0, ..good }.validate(64)
+            .is_ok());
     }
 }

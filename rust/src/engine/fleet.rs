@@ -47,7 +47,8 @@ use crate::comm::model::{CommModel, CommReport};
 use crate::comm::sim::{CommBackend, CommBackendKind};
 use crate::config::ServeLoad;
 use crate::configio::Value;
-use crate::metrics::{ContentionReport, ServeMetrics};
+use crate::engine::prefetch::PrefetchEngine;
+use crate::metrics::{ContentionReport, PrefetchStats, ServeMetrics};
 use crate::placement::Placement;
 use crate::replan::{self, CostParams, PreparedDelta, Replanner,
                     RollingReplan};
@@ -61,8 +62,8 @@ use crate::testutil::fake_decode_token;
 use crate::trace::TraceGen;
 use std::collections::VecDeque;
 
-use super::sim::{build_placement, coordinator, SimConfig,
-                 ROUTE_DECISION_COST};
+use super::sim::{build_placement, coordinator, prefetch_engine,
+                 SimConfig, ROUTE_DECISION_COST};
 
 /// Per-shard seed decorrelation stride (splitmix64's golden-gamma);
 /// shard 0 keeps the base seed so a single-replica fleet replays the
@@ -193,6 +194,9 @@ pub struct FleetReport {
     pub swap_log: Vec<(u64, usize)>,
     /// Expert-weight bytes migrated by applied deltas.
     pub migration_bytes: f64,
+    /// Weight-staging counters summed over shards (`None` when the
+    /// replay ran without a weight tier — the bit-compatible default).
+    pub prefetch: Option<PrefetchStats>,
 }
 
 impl FleetReport {
@@ -301,6 +305,19 @@ impl FleetReport {
         for (k, v) in &replica_fields {
             fields.push((k.as_str(), v.clone()));
         }
+        if let Some(p) = &self.prefetch {
+            fields.push(("prefetch", Value::object(vec![
+                ("prefetches", Value::from(p.prefetches)),
+                ("hits", Value::from(p.hits)),
+                ("stalls", Value::from(p.stalls)),
+                ("stall_steps", Value::from(p.stall_steps)),
+                ("evictions", Value::from(p.evictions)),
+                ("hit_rate", Value::num(p.hit_rate())),
+                ("prefetch_bytes", Value::num(p.prefetch_bytes)),
+                ("demand_bytes", Value::num(p.demand_bytes)),
+                ("wasted_bytes", Value::num(p.wasted_bytes)),
+            ])));
+        }
         if let Some(c) = &self.contention {
             fields.push(("contention", Value::object(vec![
                 ("max_utilization", Value::num(c.max_utilization)),
@@ -334,6 +351,8 @@ struct Shard {
     now: f64,
     /// Base of this shard's per-step trace seeds.
     seed: u64,
+    /// Weight tier + predictor (None: every weight stays resident).
+    prefetch: Option<PrefetchEngine>,
 }
 
 impl Shard {
@@ -413,15 +432,30 @@ impl FleetEpochs {
                 .rolling
                 .prepared()
                 .expect("due implies a prepared delta");
-            let traffic = replan::migration_traffic(
-                prep.delta(),
-                &shard.active,
-                self.replanner.cost().expert_bytes,
-            );
+            let traffic = match &shard.prefetch {
+                Some(pf) => replan::migration_traffic_resident(
+                    prep.delta(),
+                    &shard.active,
+                    self.replanner.cost().expert_bytes,
+                    &|l, e, g| pf.is_resident(g, l, e),
+                ),
+                None => replan::migration_traffic(
+                    prep.delta(),
+                    &shard.active,
+                    self.replanner.cost().expert_bytes,
+                ),
+            };
             let rep = shard.backend.flat_round_at(&traffic, &cfg.topo,
                                                   shard.now,
                                                   &mut self.mig_rng);
-            self.migration_bytes += prep.delta().migration_bytes;
+            self.migration_bytes += traffic.total_bytes();
+            if let Some(pf) = &mut shard.prefetch {
+                for ld in &prep.delta().layers {
+                    for &(e, g) in &ld.added {
+                        pf.admit_migration(g, ld.layer, e);
+                    }
+                }
+            }
             shard.active = prep.apply(&shard.active);
             fold_comm(comm_total, &rep);
             secs = rep.time;
@@ -585,6 +619,7 @@ pub fn replay_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetReport> {
                 queue: VecDeque::new(),
                 now: 0.0,
                 seed: sim.seed ^ stride,
+                prefetch: prefetch_engine(sim),
             })
         })
         .collect::<anyhow::Result<Vec<_>>>()?;
@@ -782,12 +817,20 @@ pub fn replay_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetReport> {
     // list.
     let mut per_replica = Vec::with_capacity(n);
     let mut contention: Option<ContentionReport> = None;
+    let mut prefetch: Option<PrefetchStats> = None;
     for shard in shards {
         let mut backend = shard.backend;
         if let Some(c) = backend.contention() {
             match &mut contention {
                 None => contention = Some(c),
                 Some(t) => fold_contention(t, &c),
+            }
+        }
+        if let Some(mut pf) = shard.prefetch {
+            pf.finish();
+            match &mut prefetch {
+                None => prefetch = Some(pf.stats().clone()),
+                Some(t) => t.accumulate(pf.stats()),
             }
         }
         let (_responses, m) = shard.sched.into_results(shard.now);
@@ -818,6 +861,7 @@ pub fn replay_fleet(cfg: &FleetConfig) -> anyhow::Result<FleetReport> {
         migration_bytes: epochs
             .as_ref()
             .map_or(0.0, |e| e.migration_bytes),
+        prefetch,
     })
 }
 
@@ -887,6 +931,14 @@ fn network_step(sys: &SystemSpec, cfg: &SimConfig, shard: &mut Shard,
             p.end_round(layer_idx, n_gpus, spec.experts);
         }
 
+        // Weight residency: cold-tier demand loads block this round,
+        // priced on the shard's contended ingress at its virtual time.
+        let stall = match &mut shard.prefetch {
+            Some(pf) => pf.demand_pass(layer_idx, &plan,
+                                       &mut shard.backend, topo, t),
+            None => 0.0,
+        };
+
         let overlap = if sys.comm == CommModel::Hsc {
             tokens as f64 * ROUTE_DECISION_COST / n_gpus as f64
         } else {
@@ -910,12 +962,20 @@ fn network_step(sys: &SystemSpec, cfg: &SimConfig, shard: &mut Shard,
         let dense = cfg.gpu
             .dense_time(spec, tokens as f64 / n_gpus as f64)
             + cfg.gpu.layer_overhead;
-        t += comm.time * sys.comm_eff + t_max + dense;
+        t += comm.time * sys.comm_eff + t_max + dense + stall;
         fold_comm(comm_total, &comm);
         if let Some(ep) = epochs {
             ep.replanner.observe(layer_idx,
                                  &shard.active.layers[layer_idx],
                                  &plan);
+        }
+        // Overlapped with the layer's FFN compute: stage the next
+        // layer's predicted experts on the links, off the critical path.
+        if let Some(pf) = &mut shard.prefetch {
+            let next = pf.predictor().next_layer(layer_idx);
+            pf.prefetch_pass(layer_idx, &plan,
+                             &shard.active.layers[next],
+                             &mut shard.backend, topo, t);
         }
     }
     (t - shard.now, 2 * spec.moe_layers)
@@ -984,6 +1044,39 @@ mod tests {
         assert!(c.events >= 4 * c.transfers,
                 "each transfer arrives and departs on every leg");
         assert!(c.max_utilization > 0.0 && c.max_utilization <= 1.0);
+    }
+
+    #[test]
+    fn fleet_prefetch_rides_along_and_preserves_serving() {
+        let off_cfg = small_fleet(CommBackendKind::Analytic, 200.0);
+        let mut on_cfg = off_cfg.clone();
+        on_cfg.sim.prefetch =
+            Some(crate::config::PrefetchConfig::default());
+        let off = replay_fleet(&off_cfg).unwrap();
+        let on = replay_fleet(&on_cfg).unwrap();
+        // Token-for-token parity: the tier changes when weights move,
+        // never what is served.
+        assert_eq!(on.serve.generated_tokens,
+                   off.serve.generated_tokens);
+        assert_eq!(on.serve.latencies.len(),
+                   off.serve.latencies.len());
+        assert_eq!(on.comm.cross_bytes, off.comm.cross_bytes);
+        assert!(off.prefetch.is_none(), "off arm reports no tier");
+        let p = on.prefetch.clone().expect("tier configured");
+        assert!(p.stalls > 0, "cold start must stall");
+        assert!(on.serve.wall_time >= off.serve.wall_time);
+        // Deterministic replay, counters included.
+        let again = replay_fleet(&on_cfg).unwrap();
+        assert_eq!(again.prefetch.unwrap(), p);
+        assert_eq!(again.serve.wall_time, on.serve.wall_time);
+        // The JSON rendering carries the counters (the CI smoke greps
+        // them) — and only when the tier is configured.
+        let json = crate::configio::to_string_pretty(&on.to_value());
+        assert!(json.contains("\"stalls\""));
+        assert!(json.contains("\"hit_rate\""));
+        let off_json =
+            crate::configio::to_string_pretty(&off.to_value());
+        assert!(!off_json.contains("\"prefetch\""));
     }
 
     #[test]

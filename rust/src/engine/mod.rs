@@ -18,12 +18,19 @@
 //!   multi-sequence step ([`real::DistributedMoE::decode_step`]): the
 //!   whole live batch shares MoE dispatch tiles, and each logical
 //!   rank's FFN shard executes concurrently on a worker pool.
+//!
+//! All three share the [`prefetch`] weight-staging layer: a per-GPU
+//! capacity-bounded hot tier of expert weights plus the cross-layer
+//! activation predictor that stages the next layer's forecast experts
+//! while the current layer computes.
 
 pub mod fleet;
+pub mod prefetch;
 pub mod real;
 pub mod sim;
 
 pub use fleet::{replay_fleet, FleetConfig, FleetReport};
-pub use real::{DistributedMoE, FfnMode, RealModel};
+pub use prefetch::{HotTier, PrefetchEngine};
+pub use real::{CacheStats, DistributedMoE, FfnMode, RealModel};
 pub use sim::{simulate, simulate_rounds, simulate_with_contention,
               simulate_with_placement, ReplanReport, SimConfig};

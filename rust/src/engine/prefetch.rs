@@ -1,0 +1,575 @@
+//! Predictive expert-weight prefetching and the two-tier weight cache.
+//!
+//! GRACE-MoE's placement machinery decides which experts get replicas;
+//! this module manages whether a replica's *weights* are actually
+//! resident when a routed token arrives. Each GPU owns a
+//! capacity-bounded [`HotTier`] (`--weight-budget` experts, LRU
+//! eviction into an unbounded cold tier — host memory in the real
+//! engine); every layer round runs two passes over it:
+//!
+//! * **demand pass** — for each distinct `(expert, dst)` pair of the
+//!   finished [`DispatchPlan`], a resident weight is a *hit* (recency
+//!   bump), a missing one is a *stall*: the round blocks on a
+//!   cold-tier load priced on the destination's real ingress links
+//!   ([`CommBackend::ingest`] — the DES queues it behind whatever else
+//!   the NIC is carrying), and the total per-GPU serial stall time is
+//!   returned for the caller's critical path.
+//! * **prefetch pass** — the plan also feeds the
+//!   [`CrossLayerPredictor`]; if prediction is enabled, the top-k
+//!   experts forecast for layer `l+1` are staged to their replica
+//!   hosts *now*, overlapped with layer-`l` FFN compute: the transfer
+//!   is committed on the contended links (prefetch traffic can itself
+//!   cause queueing) but never on the critical path. If the forecast
+//!   was right, the next demand pass hits; if not, the entry ages out
+//!   of the LRU unused and its bytes are counted as *wasted*.
+//!
+//! The engine never touches routing: plans are observed after the
+//! fact, so a run with prefetching enabled computes token-for-token
+//! the same thing as one without — prefetch may change *when* weights
+//! move, never *what* is computed (the tier-1 parity property test
+//! pins this).
+//!
+//! Consumed by the timing engine ([`crate::engine::sim`]), the fleet
+//! driver ([`crate::engine::fleet`]), and — through
+//! [`crate::exec::JobHandle`]-tracked staging jobs — the real engine
+//! ([`crate::engine::real`]).
+
+use crate::cluster::{GpuId, Topology};
+use crate::comm::sim::CommBackend;
+use crate::config::PrefetchConfig;
+use crate::metrics::PrefetchStats;
+use crate::placement::LayerPlacement;
+use crate::routing::{CrossLayerPredictor, DispatchPlan};
+use std::collections::HashMap;
+
+/// Identity of one expert weight tensor: `(layer, expert)`.
+pub type WeightKey = (usize, usize);
+
+#[derive(Clone, Debug)]
+struct Entry {
+    last_use: u64,
+    /// Whether any demand lookup ever touched the entry. Demand-staged
+    /// entries are born used; prefetched ones stay unused until a hit
+    /// confirms the prediction — evicting (or retiring) an unused
+    /// entry is the overprediction cost the stats expose.
+    used: bool,
+}
+
+/// One GPU's resident expert-weight set: at most `budget` entries,
+/// least-recently-used eviction, deterministic victim selection
+/// (recency first, then the lower `(layer, expert)` key).
+#[derive(Clone, Debug)]
+pub struct HotTier {
+    budget: usize,
+    clock: u64,
+    entries: HashMap<WeightKey, Entry>,
+}
+
+impl HotTier {
+    /// A tier holding at most `budget >= 1` expert weights.
+    pub fn new(budget: usize) -> HotTier {
+        assert!(budget >= 1, "a zero-budget tier can hold nothing");
+        HotTier { budget, clock: 0, entries: HashMap::new() }
+    }
+
+    /// Capacity in experts.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Resident entries (never exceeds [`Self::budget`]).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether nothing is resident yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Whether `key` is resident (no recency side effect).
+    pub fn contains(&self, key: WeightKey) -> bool {
+        self.entries.contains_key(&key)
+    }
+
+    /// Demand lookup: if `key` is resident, bump its recency, mark it
+    /// used, and return `true`; a miss returns `false` untouched.
+    pub fn touch(&mut self, key: WeightKey) -> bool {
+        self.clock += 1;
+        match self.entries.get_mut(&key) {
+            Some(e) => {
+                e.last_use = self.clock;
+                e.used = true;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Stage `key` into the tier (`used` tells demand staging apart
+    /// from speculative prefetch). Staging a resident key is a no-op
+    /// recency bump — never a duplicate copy. Returns the evicted
+    /// `(key, was_used)` when the insert pushed the tier past budget.
+    pub fn insert(&mut self, key: WeightKey, used: bool)
+                  -> Option<(WeightKey, bool)> {
+        self.clock += 1;
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.last_use = self.clock;
+            e.used |= used;
+            return None;
+        }
+        self.entries.insert(key, Entry { last_use: self.clock, used });
+        if self.entries.len() <= self.budget {
+            return None;
+        }
+        let victim = self
+            .entries
+            .iter()
+            .min_by(|(ka, ea), (kb, eb)| {
+                ea.last_use.cmp(&eb.last_use).then(ka.cmp(kb))
+            })
+            .map(|(k, _)| *k)
+            .expect("tier past budget is non-empty");
+        let e = self.entries.remove(&victim).expect("victim resident");
+        Some((victim, e.used))
+    }
+
+    /// Count the still-resident never-used entries and mark them used
+    /// (so an end-of-run sweep is idempotent).
+    fn take_unused(&mut self) -> usize {
+        let mut n = 0;
+        for e in self.entries.values_mut() {
+            if !e.used {
+                e.used = true;
+                n += 1;
+            }
+        }
+        n
+    }
+}
+
+/// The per-run prefetch engine: one [`HotTier`] per GPU, one shared
+/// [`CrossLayerPredictor`], and the [`PrefetchStats`] ledger. Drivers
+/// call [`PrefetchEngine::demand_pass`] before a layer's FFN compute
+/// (its return value is critical-path stall time) and
+/// [`PrefetchEngine::prefetch_pass`] after dispatch, overlapped with
+/// compute.
+#[derive(Debug)]
+pub struct PrefetchEngine {
+    cfg: PrefetchConfig,
+    expert_bytes: f64,
+    predictor: CrossLayerPredictor,
+    tiers: Vec<HotTier>,
+    stats: PrefetchStats,
+}
+
+impl PrefetchEngine {
+    /// Engine for a model of `layers × experts` weights of
+    /// `expert_bytes` each, serving `num_gpus` tiers. Panics on a
+    /// config [`PrefetchConfig::validate`] would reject — drivers
+    /// validate at the CLI boundary first.
+    pub fn new(cfg: PrefetchConfig, layers: usize, experts: usize,
+               num_gpus: usize, expert_bytes: f64) -> PrefetchEngine {
+        cfg.validate(experts).expect("prefetch config rejected");
+        assert!(expert_bytes > 0.0 && num_gpus > 0,
+                "non-degenerate staging geometry");
+        PrefetchEngine {
+            cfg,
+            expert_bytes,
+            predictor: CrossLayerPredictor::new(layers, experts,
+                                                cfg.alpha),
+            tiers: (0..num_gpus)
+                .map(|_| HotTier::new(cfg.weight_budget))
+                .collect(),
+            stats: PrefetchStats::default(),
+        }
+    }
+
+    /// The knobs this engine runs under.
+    pub fn config(&self) -> &PrefetchConfig {
+        &self.cfg
+    }
+
+    /// Bytes one expert weight stage moves.
+    pub fn expert_bytes(&self) -> f64 {
+        self.expert_bytes
+    }
+
+    /// The staging counters accumulated so far.
+    pub fn stats(&self) -> &PrefetchStats {
+        &self.stats
+    }
+
+    /// The cross-layer predictor (read access for diagnostics/tests).
+    pub fn predictor(&self) -> &CrossLayerPredictor {
+        &self.predictor
+    }
+
+    /// Resident experts on `gpu`'s hot tier.
+    pub fn occupancy(&self, gpu: GpuId) -> usize {
+        self.tiers[gpu].len()
+    }
+
+    /// Whether `gpu`'s tier holds `(layer, expert)` right now — the
+    /// residency probe behind
+    /// [`crate::replan::migration_traffic_resident`]: a migrated
+    /// replica whose weights were already staged copies nothing.
+    pub fn is_resident(&self, gpu: GpuId, layer: usize, expert: usize)
+                       -> bool {
+        self.tiers[gpu].contains((layer, expert))
+    }
+
+    /// Admit a replica the re-planner migrated onto `gpu`: replan
+    /// swaps stage weights through the same tier the demand/prefetch
+    /// passes use, so the next routed token hits instead of paying the
+    /// copy a second time. Counted as demand-staged (`used`) — the
+    /// migration was asked for, not speculated.
+    pub fn admit_migration(&mut self, gpu: GpuId, layer: usize,
+                           expert: usize) {
+        self.admit(gpu, (layer, expert), true);
+    }
+
+    /// Tiers managed (one per GPU).
+    pub fn num_tiers(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// Price one cold-tier load into `dst` submitted at `at`: the DES
+    /// queues it on the destination's real ingress links; the analytic
+    /// backend charges the uncontended host-link latency + serialization.
+    fn stage_cost(&self, backend: &mut CommBackend, topo: &Topology,
+                  dst: GpuId, at: f64) -> f64 {
+        let done = backend.ingest(dst, self.expert_bytes, at);
+        if done > at {
+            done - at
+        } else {
+            topo.inter_lat + self.expert_bytes / topo.inter_bw
+        }
+    }
+
+    /// The demand pass over a routed round of `layer`: every distinct
+    /// `(expert, dst)` pair must be resident before `dst` can run its
+    /// FFN shard. Returns the round's blocking stall time (max over
+    /// GPUs of their serial cold-load chain; 0 when everything hit).
+    pub fn demand_pass(&mut self, layer: usize, plan: &DispatchPlan,
+                       backend: &mut CommBackend, topo: &Topology,
+                       at: f64) -> f64 {
+        let mut seen: Vec<(usize, GpuId)> = Vec::new();
+        for r in plan.assignments() {
+            if !seen.contains(&(r.expert, r.dst)) {
+                seen.push((r.expert, r.dst));
+            }
+        }
+        let mut serial: HashMap<GpuId, f64> = HashMap::new();
+        let mut stalled = false;
+        for (expert, dst) in seen {
+            let key = (layer, expert);
+            if self.tiers[dst].touch(key) {
+                self.stats.hits += 1;
+                continue;
+            }
+            stalled = true;
+            self.stats.stalls += 1;
+            self.stats.demand_bytes += self.expert_bytes;
+            let lag = serial.entry(dst).or_insert(0.0);
+            let dt = self.stage_cost(backend, topo, dst, at + *lag);
+            *lag += dt;
+            self.admit(dst, key, true);
+        }
+        if stalled {
+            self.stats.stall_steps += 1;
+        }
+        serial.values().copied().fold(0.0, f64::max)
+    }
+
+    /// The overlapped pass: feed the finished plan to the predictor
+    /// and — when prediction is on — stage the top-k layer-`l+1`
+    /// forecasts to their replica hosts. Transfers are committed on
+    /// the links at `at` (contending with everything else in flight)
+    /// but cost the caller nothing: they hide under layer-`l` compute.
+    pub fn prefetch_pass(&mut self, layer: usize, plan: &DispatchPlan,
+                         next_placement: &LayerPlacement,
+                         backend: &mut CommBackend, topo: &Topology,
+                         at: f64) {
+        self.predictor.observe_plan(layer, plan);
+        if !self.cfg.predictive {
+            return;
+        }
+        let next = self.predictor.next_layer(layer);
+        for expert in self.predictor.predict(layer, self.cfg.k) {
+            for &gpu in &next_placement.instances[expert] {
+                let key = (next, expert);
+                if self.tiers[gpu].contains(key) {
+                    continue;
+                }
+                let _ = self.stage_cost(backend, topo, gpu, at);
+                self.stats.prefetches += 1;
+                self.stats.prefetch_bytes += self.expert_bytes;
+                self.admit(gpu, key, false);
+            }
+        }
+    }
+
+    fn admit(&mut self, gpu: GpuId, key: WeightKey, used: bool) {
+        if let Some((_victim, was_used)) =
+            self.tiers[gpu].insert(key, used)
+        {
+            self.stats.evictions += 1;
+            if !was_used {
+                self.stats.wasted_bytes += self.expert_bytes;
+            }
+        }
+        debug_assert!(self.tiers[gpu].len() <= self.tiers[gpu].budget());
+    }
+
+    /// End-of-run sweep: prefetched entries still resident but never
+    /// demanded are overpredictions too — fold them into
+    /// `wasted_bytes`. Idempotent.
+    pub fn finish(&mut self) {
+        for tier in &mut self.tiers {
+            self.stats.wasted_bytes +=
+                tier.take_unused() as f64 * self.expert_bytes;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::sim::CommBackendKind;
+    use crate::linalg::Matrix;
+    use crate::placement::ReplicationMode;
+    use crate::profile::LayerProfile;
+    use crate::routing::{Assignment, Dispatcher, RoutingPolicy};
+    use crate::stats::Rng;
+
+    /// 4 experts, one per GPU, no replication: Primary routing sends
+    /// expert `e` to GPU `e` deterministically.
+    fn fixture() -> LayerPlacement {
+        let profile = LayerProfile {
+            affinity: Matrix::zeros(4, 4),
+            load: vec![4.0, 3.0, 2.0, 1.0],
+            tokens: 10,
+        };
+        LayerPlacement::build(
+            &profile,
+            vec![vec![0], vec![1], vec![2], vec![3]],
+            ReplicationMode::None,
+        )
+    }
+
+    fn plan_for(lp: &LayerPlacement, layer: usize, sets: &[Vec<u16>])
+                -> DispatchPlan {
+        let topo = Topology::paper_testbed(1, 4);
+        let mut d = Dispatcher::new(topo, RoutingPolicy::Primary.build(),
+                                    1.0);
+        let batch: Vec<Assignment> = sets
+            .iter()
+            .enumerate()
+            .flat_map(|(t, es)| {
+                es.iter().map(move |&e| Assignment {
+                    token: t,
+                    expert: e as usize,
+                    src: t % 4,
+                })
+            })
+            .collect();
+        d.dispatch(lp, layer, &batch, &mut Rng::new(5))
+    }
+
+    fn engine(predictive: bool, budget: usize) -> PrefetchEngine {
+        let cfg = PrefetchConfig {
+            predictive,
+            k: 2,
+            weight_budget: budget,
+            alpha: 0.5,
+        };
+        PrefetchEngine::new(cfg, 2, 4, 4, 1e6)
+    }
+
+    #[test]
+    fn hot_tier_lru_eviction_is_deterministic() {
+        let mut t = HotTier::new(2);
+        assert!(t.is_empty());
+        assert!(t.insert((0, 0), true).is_none());
+        assert!(t.insert((0, 1), true).is_none());
+        assert_eq!(t.len(), 2);
+        // (0, 0) is now the more recently used entry.
+        assert!(t.touch((0, 0)));
+        let evicted = t.insert((0, 2), true);
+        assert_eq!(evicted, Some(((0, 1), true)), "LRU victim");
+        assert_eq!(t.len(), 2);
+        assert!(t.contains((0, 0)) && t.contains((0, 2)));
+        assert!(!t.contains((0, 1)));
+        // Never past budget, whatever the insert pattern.
+        for e in 0..16 {
+            t.insert((1, e), false);
+            assert!(t.len() <= t.budget());
+        }
+    }
+
+    #[test]
+    fn hot_tier_reinsert_is_a_noop_touch() {
+        let mut t = HotTier::new(2);
+        t.insert((0, 7), false);
+        assert!(t.insert((0, 7), false).is_none(), "no duplicate copy");
+        assert_eq!(t.len(), 1);
+        // Re-staging an unused prefetched entry never clears its used
+        // bit once set, and a used re-insert upgrades it.
+        t.insert((0, 7), true);
+        assert_eq!(t.take_unused(), 0, "used flag upgraded in place");
+    }
+
+    #[test]
+    fn demand_pass_stalls_cold_then_hits_warm() {
+        let lp = fixture();
+        let topo = Topology::paper_testbed(1, 4);
+        let mut backend = CommBackend::new(CommBackendKind::Analytic,
+                                           &topo);
+        let mut eng = engine(false, 8);
+        let plan = plan_for(&lp, 0, &[vec![0, 1]]);
+
+        let dt = eng.demand_pass(0, &plan, &mut backend, &topo, 0.0);
+        // Experts 0 and 1 stall on different GPUs: they load in
+        // parallel, so the round blocks for exactly one stage.
+        let one_stage = topo.inter_lat + 1e6 / topo.inter_bw;
+        assert_eq!(eng.stats().stalls, 2);
+        assert_eq!(eng.stats().stall_steps, 1);
+        assert_eq!(eng.stats().demand_bytes, 2e6);
+        assert!((dt - one_stage).abs() < 1e-12, "dt {dt}");
+
+        // Same round again: everything is resident now.
+        let dt = eng.demand_pass(0, &plan, &mut backend, &topo, dt);
+        assert_eq!(dt, 0.0);
+        assert_eq!(eng.stats().hits, 2);
+        assert_eq!(eng.stats().stalls, 2, "no new stalls");
+        assert_eq!(eng.stats().stall_steps, 1);
+        assert!((eng.stats().hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefetch_wins_the_race_for_the_next_layer() {
+        // Both layers demand expert 0, whose weights live on GPU 0:
+        // with a budget of one expert the two layers' weights fight
+        // over the same tier slot, so prefetch-off stalls every round
+        // while prefetch-on rotates the slot ahead of each demand.
+        let lp = fixture();
+        let topo = Topology::paper_testbed(1, 4);
+        let run = |predictive: bool| -> PrefetchStats {
+            let mut backend =
+                CommBackend::new(CommBackendKind::Analytic, &topo);
+            let mut eng = engine(predictive, 1);
+            let p0 = plan_for(&lp, 0, &[vec![0]]);
+            let p1 = plan_for(&lp, 1, &[vec![0]]);
+            for round in 0..6 {
+                let at = round as f64;
+                eng.demand_pass(0, &p0, &mut backend, &topo, at);
+                eng.prefetch_pass(0, &p0, &lp, &mut backend, &topo, at);
+                eng.demand_pass(1, &p1, &mut backend, &topo, at);
+                eng.prefetch_pass(1, &p1, &lp, &mut backend, &topo, at);
+            }
+            eng.finish();
+            eng.stats().clone()
+        };
+        let on = run(true);
+        let off = run(false);
+        assert!(on.prefetches > 0, "prediction never fired");
+        assert!(on.hits > off.hits, "prefetch must win the race");
+        assert!(on.stalls < off.stalls, "prefetch must remove stalls");
+        assert!(on.stall_steps < off.stall_steps);
+        assert_eq!(off.prefetches, 0);
+        assert_eq!(off.prefetch_bytes, 0.0);
+        assert_eq!(off.hits, 0, "off arm thrashes the one-expert tier");
+        // At most the final in-flight prefetch retires unused.
+        assert!(on.wasted_bytes <= 1e6 + 1e-9,
+                "wasted {} of {} prefetched",
+                on.wasted_bytes, on.prefetch_bytes);
+        assert!(on.wasted_bytes < on.prefetch_bytes);
+    }
+
+    #[test]
+    fn wasted_prefetch_is_counted_on_retire_and_eviction() {
+        let lp = fixture();
+        let topo = Topology::paper_testbed(1, 4);
+        let mut backend = CommBackend::new(CommBackendKind::Analytic,
+                                           &topo);
+        let mut eng = engine(true, 1);
+        // Warm the 0 → 0 correlation, then switch the layer-1 demand
+        // to expert 3: the prefetch the stale correlation issues is
+        // never demanded and retires unused in the finish() sweep.
+        let p0 = plan_for(&lp, 0, &[vec![0]]);
+        let p1 = plan_for(&lp, 1, &[vec![0]]);
+        let q1 = plan_for(&lp, 1, &[vec![3]]);
+        eng.demand_pass(0, &p0, &mut backend, &topo, 0.0);
+        eng.prefetch_pass(0, &p0, &lp, &mut backend, &topo, 0.0);
+        eng.demand_pass(1, &p1, &mut backend, &topo, 0.0);
+        eng.prefetch_pass(1, &p1, &lp, &mut backend, &topo, 0.0);
+        eng.demand_pass(0, &p0, &mut backend, &topo, 1.0);
+        eng.prefetch_pass(0, &p0, &lp, &mut backend, &topo, 1.0);
+        eng.demand_pass(1, &q1, &mut backend, &topo, 1.0);
+        eng.prefetch_pass(1, &q1, &lp, &mut backend, &topo, 1.0);
+        assert!(eng.stats().prefetches > 0);
+        eng.finish();
+        assert_eq!(eng.stats().wasted_bytes,
+                   eng.stats().prefetch_bytes,
+                   "nothing prefetched was ever used");
+        // finish() is idempotent.
+        let before = eng.stats().clone();
+        eng.finish();
+        assert_eq!(*eng.stats(), before);
+    }
+
+    #[test]
+    fn des_backend_prices_demand_on_contended_links() {
+        let lp = fixture();
+        let topo = Topology::paper_testbed(1, 4);
+        let run = || -> (f64, PrefetchStats) {
+            let mut backend =
+                CommBackend::new(CommBackendKind::Des, &topo);
+            let mut eng = engine(true, 8);
+            let plan = plan_for(&lp, 0, &[vec![0, 1], vec![2]]);
+            let dt = eng.demand_pass(0, &plan, &mut backend, &topo, 0.0);
+            (dt, eng.stats().clone())
+        };
+        let (dt, stats) = run();
+        assert!(dt > 0.0, "DES stage must take real time");
+        assert_eq!(stats.stalls, 3);
+        // Deterministic replay: identical stats and timing.
+        let (dt2, stats2) = run();
+        assert_eq!(dt, dt2);
+        assert_eq!(stats, stats2);
+    }
+
+    #[test]
+    fn occupancy_never_exceeds_budget() {
+        let lp = fixture();
+        let topo = Topology::paper_testbed(1, 4);
+        let mut backend = CommBackend::new(CommBackendKind::Analytic,
+                                           &topo);
+        let mut eng = engine(true, 1);
+        for round in 0..6u16 {
+            for layer in 0..2usize {
+                let sets: Vec<Vec<u16>> =
+                    vec![vec![round % 4, (round + 1) % 4]];
+                let plan = plan_for(&lp, layer, &sets);
+                let at = round as f64;
+                eng.demand_pass(layer, &plan, &mut backend, &topo, at);
+                eng.prefetch_pass(layer, &plan, &lp, &mut backend,
+                                  &topo, at);
+                for gpu in 0..eng.num_tiers() {
+                    assert!(eng.occupancy(gpu) <= 1,
+                            "tier {gpu} past budget");
+                }
+            }
+        }
+        assert!(eng.stats().evictions > 0, "budget 1 must evict");
+    }
+
+    #[test]
+    #[should_panic(expected = "--weight-budget 0")]
+    fn zero_budget_engine_is_rejected() {
+        let cfg = PrefetchConfig { weight_budget: 0,
+                                   ..PrefetchConfig::default() };
+        let _ = PrefetchEngine::new(cfg, 2, 4, 4, 1e6);
+    }
+}

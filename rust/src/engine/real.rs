@@ -18,12 +18,14 @@
 
 use crate::baselines::GroupingStrategy;
 use crate::cluster::{GpuId, Topology};
+use crate::config::PrefetchConfig;
 use crate::coordinator::{Coordinator, OnlineCoordinator};
-use crate::exec::ThreadPool;
+use crate::exec::{JobHandle, ThreadPool};
+use crate::metrics::PrefetchStats;
 use crate::placement::Placement;
 use crate::replan::ReplanDelta;
-use crate::routing::{Assignment, DispatchPlan, Dispatcher,
-                     RoutingPolicy};
+use crate::routing::{Assignment, CrossLayerPredictor, DispatchPlan,
+                     Dispatcher, RoutingPolicy};
 use crate::runtime::manifest::{Manifest, TinyConfig};
 use crate::runtime::pjrt::{lit_f32, lit_i32, lit_scalar_i32, to_f32,
                            to_i32, PjrtEngine};
@@ -31,7 +33,8 @@ use crate::runtime::WeightStore;
 use crate::server::even_src;
 use crate::stats::Rng;
 use crate::trace::{GateTrace, LayerTrace};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 /// Per-layer weight literals, built once at load.
 struct LayerLits {
@@ -41,6 +44,38 @@ struct LayerLits {
     w1: xla::Literal,
     w3: xla::Literal,
     w2: xla::Literal,
+}
+
+/// Counters of the execute-mode expert weight tier (see
+/// [`RealModel::cache_stats`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Actual [`WeightStore`] fetches (literal builds). Staging an
+    /// already-resident expert never increments this — re-stages are
+    /// idempotent no-ops, so migration weight copies are paid once.
+    pub cold_loads: usize,
+    /// Lookups satisfied by a resident hot-tier entry.
+    pub hits: usize,
+    /// LRU evictions forced by the weight budget.
+    pub evictions: usize,
+}
+
+/// One resident expert in the hot tier.
+struct TierEntry {
+    lits: Arc<(xla::Literal, xla::Literal, xla::Literal)>,
+    /// Logical timestamp of the most recent lookup (LRU recency).
+    last_use: u64,
+}
+
+/// The capacity-bounded hot tier behind [`RealModel`]'s expert weight
+/// lookups. `budget = None` is the historical unbounded cache; with a
+/// budget, least-recently-used entries spill back to the cold tier
+/// (the [`WeightStore`]) and reload transparently on next use.
+struct WeightTier {
+    entries: HashMap<(usize, usize), TierEntry>,
+    budget: Option<usize>,
+    clock: u64,
+    stats: CacheStats,
 }
 
 /// A tiny model variant loaded for execution.
@@ -54,13 +89,7 @@ pub struct RealModel {
     emb: xla::Literal,
     layers: Vec<LayerLits>,
     ws: WeightStore,
-    #[allow(clippy::type_complexity)]
-    expert_cache: std::sync::Mutex<
-        std::collections::HashMap<
-            (usize, usize),
-            Arc<(xla::Literal, xla::Literal, xla::Literal)>,
-        >,
-    >,
+    expert_cache: Mutex<WeightTier>,
 }
 
 /// Which executable computes a rank's expert FFNs (§Perf).
@@ -108,9 +137,12 @@ impl RealModel {
             emb,
             layers,
             ws,
-            expert_cache: std::sync::Mutex::new(
-                std::collections::HashMap::new(),
-            ),
+            expert_cache: Mutex::new(WeightTier {
+                entries: HashMap::new(),
+                budget: None,
+                clock: 0,
+                stats: CacheStats::default(),
+            }),
         })
     }
 
@@ -222,27 +254,92 @@ impl RealModel {
     }
 
     /// One expert's (w1, w3, w2) weight literals, built on first use and
-    /// cached — the cache stands in for "expert weights resident on this
-    /// rank" in the logical-rank execution model.
+    /// held in the hot tier — residency stands in for "expert weights on
+    /// this rank" in the logical-rank execution model. The tier lock is
+    /// held across the cold fetch so racing ranks never build the same
+    /// literals twice.
     fn expert_weight_lits(&self, layer: usize, expert: usize)
                           -> anyhow::Result<
         Arc<(xla::Literal, xla::Literal, xla::Literal)>,
     > {
         let key = (layer, expert);
-        let mut cache = self.expert_cache.lock().unwrap();
-        if let Some(l) = cache.get(&key) {
-            return Ok(l.clone());
+        let mut tier = self.expert_cache.lock().unwrap();
+        tier.clock += 1;
+        let now = tier.clock;
+        if let Some(entry) = tier.entries.get_mut(&key) {
+            entry.last_use = now;
+            tier.stats.hits += 1;
+            return Ok(entry.lits.clone());
         }
+        tier.stats.cold_loads += 1;
         let (w1, s1) = self.ws.expert_tensor("w1", layer, expert)?;
         let (w3, s3) = self.ws.expert_tensor("w3", layer, expert)?;
         let (w2, s2) = self.ws.expert_tensor("w2", layer, expert)?;
-        let l = Arc::new((
+        let lits = Arc::new((
             lit_f32(w1, &s1)?,
             lit_f32(w3, &s3)?,
             lit_f32(w2, &s2)?,
         ));
-        cache.insert(key, l.clone());
-        Ok(l)
+        tier.entries
+            .insert(key, TierEntry { lits: lits.clone(), last_use: now });
+        Self::evict_to_budget(&mut tier);
+        Ok(lits)
+    }
+
+    /// Evict least-recently-used entries until the tier fits its
+    /// budget. Ties break to the smaller `(layer, expert)` key, so
+    /// eviction order is deterministic. An executing rank holding the
+    /// `Arc` keeps its literals alive; eviction only drops residency.
+    fn evict_to_budget(tier: &mut WeightTier) {
+        let Some(b) = tier.budget else { return };
+        while tier.entries.len() > b {
+            let victim = tier
+                .entries
+                .iter()
+                .min_by_key(|(k, e)| (e.last_use, **k))
+                .map(|(k, _)| *k)
+                .expect("tier over budget implies non-empty");
+            tier.entries.remove(&victim);
+            tier.stats.evictions += 1;
+        }
+    }
+
+    /// Cap the hot tier at `budget` resident experts (process-wide
+    /// across the logical ranks), evicting down immediately if already
+    /// over; `None` restores the historical keep-everything cache.
+    ///
+    /// # Panics
+    /// On `Some(0)` — a zero weight budget cannot hold any working set
+    /// (the CLI rejects `--weight-budget 0` before it gets here).
+    pub fn set_weight_budget(&self, budget: Option<usize>) {
+        if let Some(b) = budget {
+            assert!(b >= 1, "--weight-budget 0 cannot hold a working \
+                             set; use at least 1");
+        }
+        let mut tier = self.expert_cache.lock().unwrap();
+        tier.budget = budget;
+        Self::evict_to_budget(&mut tier);
+    }
+
+    /// Snapshot of the weight-tier counters.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.expert_cache.lock().unwrap().stats
+    }
+
+    /// Number of experts currently resident in the hot tier.
+    pub fn resident_experts(&self) -> usize {
+        self.expert_cache.lock().unwrap().entries.len()
+    }
+
+    /// Whether `(layer, expert)` is resident right now. A pure probe:
+    /// it bumps neither recency nor the hit counter, so prefetch
+    /// planning can ask without perturbing LRU order.
+    pub fn is_resident(&self, layer: usize, expert: usize) -> bool {
+        self.expert_cache
+            .lock()
+            .unwrap()
+            .entries
+            .contains_key(&(layer, expert))
     }
 
     /// Stage one expert's weights ahead of use: what an online replica
@@ -250,6 +347,10 @@ impl RealModel {
     /// executor calls this for every replica a
     /// [`crate::replan::ReplanDelta`] adds, so the weight-copy cost is
     /// paid at swap time, not silently on the first routed token.
+    ///
+    /// Idempotent: staging an already-resident expert is a no-op hit —
+    /// no duplicate literal build, no second cold load — so replan
+    /// executors and the prefetcher can re-stage defensively for free.
     pub fn stage_expert(&self, layer: usize, expert: usize)
                         -> anyhow::Result<()> {
         self.expert_weight_lits(layer, expert).map(|_| ())
@@ -447,6 +548,29 @@ pub struct DistributedMoE {
     /// Worker pool the per-rank FFN shards fan out over (one logical
     /// rank per job, capped by host parallelism).
     pool: ThreadPool,
+    /// Async weight staging (`None` until
+    /// [`DistributedMoE::enable_prefetch`]): every weight stays
+    /// resident and no background copies run, exactly the historical
+    /// behaviour.
+    prefetch: Option<RealPrefetch>,
+}
+
+/// Async weight-staging state of the execute-mode engine: the
+/// cross-layer predictor, the in-flight staging registry, and the
+/// dedicated background pool its copy jobs run on — separate from the
+/// FFN worker pool so weight copies overlap compute instead of
+/// stealing its workers.
+struct RealPrefetch {
+    cfg: PrefetchConfig,
+    predictor: CrossLayerPredictor,
+    /// Staging jobs in flight, keyed by `(layer, expert)`. A finished
+    /// job's handle stays registered until first use consumes it.
+    inflight: HashMap<(usize, usize), JobHandle>,
+    stager: ThreadPool,
+    stats: PrefetchStats,
+    /// Per-expert weight payload (w1 + w3 + w2, f32) for the byte
+    /// accounting.
+    expert_bytes: f64,
 }
 
 /// Result of one distributed MoE layer execution.
@@ -486,6 +610,7 @@ impl DistributedMoE {
             ffn_mode,
             dispatcher: coord.dispatcher(token_bytes),
             pool: ThreadPool::new(workers),
+            prefetch: None,
         }
     }
 
@@ -494,17 +619,90 @@ impl DistributedMoE {
         &self.placement
     }
 
+    /// Turn on the weight tier and the async staging pipeline: caps the
+    /// model's hot tier at `weight_budget × num_ranks` resident experts
+    /// (the execute-mode cache is host-wide, one logical budget share
+    /// per rank), builds the cross-layer predictor, and spins up the
+    /// staging pool. With `cfg.predictive` false only the tier and the
+    /// demand hit/stall accounting are active — no background copies.
+    pub fn enable_prefetch(&mut self, cfg: PrefetchConfig)
+                           -> anyhow::Result<()> {
+        let c = &self.model.cfg;
+        cfg.validate(c.experts)?;
+        self.model
+            .set_weight_budget(Some(cfg.weight_budget
+                                    * self.topo.num_gpus()));
+        let expert_bytes =
+            (3 * c.hidden * c.ffn * std::mem::size_of::<f32>()) as f64;
+        self.prefetch = Some(RealPrefetch {
+            cfg,
+            predictor: CrossLayerPredictor::new(c.layers, c.experts,
+                                                cfg.alpha),
+            inflight: HashMap::new(),
+            stager: ThreadPool::new(2),
+            stats: PrefetchStats::default(),
+            expert_bytes,
+        });
+        Ok(())
+    }
+
+    /// Prefetch counters so far (`None` until
+    /// [`Self::enable_prefetch`]); evictions are folded in from the
+    /// shared model tier so the snapshot is self-contained.
+    pub fn prefetch_stats(&self) -> Option<PrefetchStats> {
+        self.prefetch.as_ref().map(|pf| {
+            let mut s = pf.stats.clone();
+            s.evictions = self.model.cache_stats().evictions;
+            s
+        })
+    }
+
     /// Hot-swap the active placement at an epoch boundary: stage the
     /// expert weights every added replica needs (through the executor's
-    /// weight cache — the real cost a migration pays), then switch the
+    /// weight tier — the real cost a migration pays), then switch the
     /// placement. The dispatcher and its policy state survive; call only
     /// between dispatch rounds, never mid-round.
+    ///
+    /// With prefetching enabled the copies fan out over the same
+    /// background staging pool predictive prefetch uses (reusing any
+    /// already-in-flight job), with a barrier before the swap — an
+    /// epoch boundary publishes a fully staged placement. Staging is
+    /// idempotent, so replicas that are already resident (or were just
+    /// prefetched) cost nothing and are never double-counted.
     pub fn apply_replan(&mut self, new_placement: Arc<Placement>,
                         delta: &ReplanDelta) -> anyhow::Result<()> {
+        let mut keys: Vec<(usize, usize)> = Vec::new();
         for ld in &delta.layers {
             for &(expert, _gpu) in &ld.added {
-                self.model.stage_expert(ld.layer, expert)?;
+                if !keys.contains(&(ld.layer, expert)) {
+                    keys.push((ld.layer, expert));
+                }
             }
+        }
+        let model = self.model.clone();
+        if let Some(pf) = &mut self.prefetch {
+            let handles: Vec<JobHandle> = keys
+                .iter()
+                .map(|&(l, e)| match pf.inflight.get(&(l, e)) {
+                    Some(h) => h.clone(),
+                    None => {
+                        let m = model.clone();
+                        pf.stager.submit_tracked(move || {
+                            // Failures surface in the sync pass below.
+                            let _ = m.stage_expert(l, e);
+                        })
+                    }
+                })
+                .collect();
+            for h in &handles {
+                h.wait();
+            }
+        }
+        // Idempotent confirmation pass: resident entries are no-op
+        // hits; a failed background copy re-runs here and surfaces its
+        // error on the caller's thread.
+        for &(l, e) in &keys {
+            model.stage_expert(l, e)?;
         }
         self.placement = new_placement;
         Ok(())
@@ -538,6 +736,16 @@ impl DistributedMoE {
             }
         }
         let plan = self.dispatcher.dispatch(lp, layer, &batch, rng);
+
+        // Weight residency: consume any staging issued for this layer
+        // (hit when the background copy already landed, stall when we
+        // must block or demand-load), then kick off staging for the
+        // predicted next-layer experts — those jobs run on the staging
+        // pool while this layer's FFN shards execute below.
+        if let Some(pf) = &mut self.prefetch {
+            demand_ready(&self.model, pf, layer, &plan)?;
+            issue_prefetch(&self.model, pf, layer, &plan);
+        }
 
         // Per-rank buckets of (expert, token, gate weight) — the batch
         // index recovers each assignment's gate weight. Empty ranks are
@@ -830,6 +1038,78 @@ impl DistributedMoE {
             next.push(best as i32);
         }
         Ok(next)
+    }
+}
+
+/// Demand pass of one dispatch round: make every expert the plan
+/// routes resident before the FFN fan-out. An expert whose background
+/// staging already landed (or that never left the tier) is a *hit*;
+/// one still in flight or entirely cold is a *stall* — the round
+/// blocks on it, and any round with at least one stall counts a
+/// stall-step against the overlap.
+fn demand_ready(model: &RealModel, pf: &mut RealPrefetch, layer: usize,
+                plan: &DispatchPlan) -> anyhow::Result<()> {
+    let mut experts: Vec<usize> = Vec::new();
+    for r in plan.assignments() {
+        if !experts.contains(&r.expert) {
+            experts.push(r.expert);
+        }
+    }
+    let mut stalled = false;
+    for e in experts {
+        if let Some(h) = pf.inflight.remove(&(layer, e)) {
+            if h.is_done() {
+                pf.stats.hits += 1;
+            } else {
+                pf.stats.stalls += 1;
+                pf.stats.demand_bytes += pf.expert_bytes;
+                stalled = true;
+                h.wait();
+            }
+            // The background job swallows errors (fire-and-forget);
+            // the idempotent re-stage surfaces them on this thread.
+            model.stage_expert(layer, e)?;
+        } else if model.is_resident(layer, e) {
+            pf.stats.hits += 1;
+        } else {
+            pf.stats.stalls += 1;
+            pf.stats.demand_bytes += pf.expert_bytes;
+            stalled = true;
+            model.stage_expert(layer, e)?;
+        }
+    }
+    if stalled {
+        pf.stats.stall_steps += 1;
+    }
+    Ok(())
+}
+
+/// Prediction pass of one dispatch round: feed the finished plan to
+/// the cross-layer predictor, then stage the top-k predicted
+/// next-layer experts in the background. Already-resident and
+/// already-in-flight experts are skipped, so a stable hot set costs
+/// nothing once it is staged.
+fn issue_prefetch(model: &Arc<RealModel>, pf: &mut RealPrefetch,
+                  layer: usize, plan: &DispatchPlan) {
+    pf.predictor.observe_plan(layer, plan);
+    if !pf.cfg.predictive {
+        return;
+    }
+    let next = pf.predictor.next_layer(layer);
+    for e in pf.predictor.predict(layer, pf.cfg.k) {
+        if model.is_resident(next, e)
+            || pf.inflight.contains_key(&(next, e))
+        {
+            continue;
+        }
+        pf.stats.prefetches += 1;
+        pf.stats.prefetch_bytes += pf.expert_bytes;
+        let m = model.clone();
+        let h = pf.stager.submit_tracked(move || {
+            // Failure is re-checked (and surfaced) at first use.
+            let _ = m.stage_expert(next, e);
+        });
+        pf.inflight.insert((next, e), h);
     }
 }
 
@@ -1231,5 +1511,94 @@ mod tests {
                 assert_eq!(tok.len(), m.cfg.top_k);
             }
         }
+    }
+
+    #[test]
+    fn staging_is_idempotent_one_cold_load() {
+        // Satellite regression: re-staging a resident expert must not
+        // rebuild literals or recount the copy — a replan that re-adds
+        // an existing replica pays zero weight traffic.
+        let Some(m) = model() else { return };
+        assert_eq!(m.cache_stats(), CacheStats::default());
+        m.stage_expert(0, 1).unwrap();
+        let first = m.cache_stats();
+        assert_eq!(first.cold_loads, 1);
+        assert_eq!(m.resident_experts(), 1);
+        m.stage_expert(0, 1).unwrap();
+        let second = m.cache_stats();
+        assert_eq!(second.cold_loads, 1,
+                   "re-stage must not fetch the weights again");
+        assert_eq!(second.hits, first.hits + 1);
+        assert_eq!(m.resident_experts(), 1);
+    }
+
+    #[test]
+    fn weight_budget_bounds_residency_with_lru_eviction() {
+        let Some(m) = model() else { return };
+        m.set_weight_budget(Some(2));
+        m.stage_expert(0, 0).unwrap();
+        m.stage_expert(0, 1).unwrap();
+        assert_eq!(m.resident_experts(), 2);
+        m.stage_expert(0, 0).unwrap(); // bump (0,0)'s recency
+        m.stage_expert(0, 2).unwrap(); // must evict (0,1), the LRU
+        assert_eq!(m.resident_experts(), 2, "budget is a hard cap");
+        assert!(m.is_resident(0, 0));
+        assert!(!m.is_resident(0, 1), "LRU entry must be the victim");
+        assert!(m.is_resident(0, 2));
+        assert_eq!(m.cache_stats().evictions, 1);
+        // Evicted experts reload transparently (a fresh cold load).
+        m.stage_expert(0, 1).unwrap();
+        assert_eq!(m.cache_stats().cold_loads, 4);
+        assert_eq!(m.resident_experts(), 2);
+    }
+
+    #[test]
+    fn prefetched_decode_matches_unprefetched_token_for_token() {
+        // The parity invariant on real numerics: the tier + async
+        // staging change when weights move, never which tokens come
+        // out. Each arm loads its own model so residency cannot leak
+        // between them.
+        let topo = Topology::two_by_two();
+        let prompt: Vec<i32> =
+            (0..6).map(|i| (i * 37 % 512) as i32).collect();
+        let run = |prefetch: bool| -> Option<(Vec<i32>,
+                                              Option<PrefetchStats>)> {
+            let m = model()?;
+            let trace = profile_real(&m, 1, 43).unwrap();
+            let placement = Arc::new(place_real(
+                &m, &topo, &trace, ReplicationMode::Dynamic, 0.15, 43,
+            ));
+            let coord =
+                OnlineCoordinator::new(topo.clone(), RoutingPolicy::Tar);
+            let mut dist = DistributedMoE::new(
+                m.clone(), placement, &coord, FfnMode::PerExpert,
+            );
+            if prefetch {
+                dist.enable_prefetch(PrefetchConfig {
+                    predictive: true,
+                    k: 2,
+                    weight_budget: 2,
+                    alpha: 0.5,
+                })
+                .unwrap();
+            }
+            let mut ids = prompt.clone();
+            for _ in 0..3 {
+                let next = dist
+                    .decode_step(&[&ids], &mut Rng::new(3),
+                                 &mut |_, _| {})
+                    .unwrap();
+                ids.push(next[0]);
+            }
+            Some((ids, dist.prefetch_stats()))
+        };
+        let Some((off_ids, off_stats)) = run(false) else { return };
+        let (on_ids, on_stats) = run(true).unwrap();
+        assert_eq!(on_ids, off_ids, "prefetch changed decoded tokens");
+        assert!(off_stats.is_none(), "stats only when enabled");
+        let s = on_stats.unwrap();
+        assert!(s.stalls > 0, "a cold start must demand-stage");
+        assert!(s.stall_steps <= s.stalls);
+        assert!(s.hits + s.stalls > 0);
     }
 }

@@ -34,8 +34,9 @@ use crate::baselines::SystemSpec;
 use crate::cluster::Topology;
 use crate::comm::model::{self, CommModel};
 use crate::comm::sim::{CommBackend, CommBackendKind};
-use crate::config::{GpuModel, ModelSpec, Workload};
+use crate::config::{GpuModel, ModelSpec, PrefetchConfig, Workload};
 use crate::coordinator::Coordinator;
+use crate::engine::prefetch::PrefetchEngine;
 use crate::metrics::{ContentionReport, RunMetrics};
 use crate::placement::Placement;
 use crate::replan::{self, CostParams, ReplanConfig, Replanner};
@@ -77,6 +78,10 @@ pub struct SimConfig {
     /// bit-identical to the pre-seam engine) or discrete-event replay
     /// through the contended network ([`crate::comm::sim`]).
     pub comm_backend: CommBackendKind,
+    /// Weight-tier / predictive-prefetch knobs ([`PrefetchEngine`]
+    /// rides along when set). `None` (the default) keeps every expert
+    /// weight permanently resident — bit-identical to older runs.
+    pub prefetch: Option<PrefetchConfig>,
 }
 
 impl SimConfig {
@@ -96,8 +101,23 @@ impl SimConfig {
             max_chunk: 4096,
             replan: None,
             comm_backend: CommBackendKind::Analytic,
+            prefetch: None,
         }
     }
+}
+
+/// Build the optional prefetch engine for a run (off unless the config
+/// opts in). Shared with the fleet driver, which builds one per shard.
+pub(crate) fn prefetch_engine(cfg: &SimConfig) -> Option<PrefetchEngine> {
+    cfg.prefetch.map(|pc| {
+        PrefetchEngine::new(
+            pc,
+            cfg.model.moe_layers,
+            cfg.model.experts,
+            cfg.topo.num_gpus(),
+            cfg.model.expert_bytes(),
+        )
+    })
 }
 
 /// The L3 coordinator implementing `sys`'s placement/routing strategy for
@@ -151,6 +171,7 @@ pub fn simulate_with_contention(sys: &SystemSpec, cfg: &SimConfig,
     let mut backend = CommBackend::new(cfg.comm_backend, &cfg.topo);
     let mut metrics = RunMetrics::default();
     let mut epoch = epoch_state(sys, cfg, placement);
+    let mut prefetch = prefetch_engine(cfg);
 
     // Prefill: batch × prefill tokens through every layer.
     let prefill_tokens = cfg.workload.batch * cfg.workload.prefill;
@@ -159,9 +180,10 @@ pub fn simulate_with_contention(sys: &SystemSpec, cfg: &SimConfig,
         let scale = prefill_tokens as f64 / chunk as f64;
         let trace = serve_trace(cfg, chunk, 1);
         sim_phase(sys, cfg, &mut dispatcher, &mut backend, placement,
-                  &trace, scale, &mut rng, &mut metrics, &mut epoch);
+                  &trace, scale, &mut rng, &mut metrics, &mut epoch,
+                  &mut prefetch);
         if let Some(s) = &mut epoch {
-            s.tick(cfg, &mut metrics);
+            s.tick(cfg, &mut metrics, &mut prefetch);
         }
     }
 
@@ -173,13 +195,18 @@ pub fn simulate_with_contention(sys: &SystemSpec, cfg: &SimConfig,
             / dchunk as f64;
         let trace = serve_trace(cfg, dchunk, 2);
         sim_phase(sys, cfg, &mut dispatcher, &mut backend, placement,
-                  &trace, scale, &mut rng, &mut metrics, &mut epoch);
+                  &trace, scale, &mut rng, &mut metrics, &mut epoch,
+                  &mut prefetch);
         if let Some(s) = &mut epoch {
-            s.tick(cfg, &mut metrics);
+            s.tick(cfg, &mut metrics, &mut prefetch);
         }
     }
 
     metrics.tokens = cfg.workload.total_tokens();
+    if let Some(pf) = &mut prefetch {
+        pf.finish();
+        metrics.prefetch = pf.stats().clone();
+    }
     let contention = backend.contention();
     (metrics, contention)
 }
@@ -238,15 +265,16 @@ pub fn simulate_rounds(sys: &SystemSpec, cfg: &SimConfig,
     let mut report = ReplanReport::default();
     let mut epoch = replan_cfg
         .map(|rc| EpochState::new(placement.clone(), rc, sys, cfg));
+    let mut prefetch = prefetch_engine(cfg);
 
     for trace in rounds {
         report.rounds += 1;
         let copies = sim_phase(sys, cfg, &mut dispatcher, &mut backend,
                                placement, trace, 1.0, &mut rng,
-                               &mut metrics, &mut epoch);
+                               &mut metrics, &mut epoch, &mut prefetch);
         report.copies_rounds.push(copies);
         if let Some(s) = &mut epoch {
-            if s.tick(cfg, &mut metrics) {
+            if s.tick(cfg, &mut metrics, &mut prefetch) {
                 report.applied += 1;
             }
         }
@@ -255,6 +283,10 @@ pub fn simulate_rounds(sys: &SystemSpec, cfg: &SimConfig,
         report.migration_bytes = s.migration_bytes;
     }
     metrics.tokens = rounds.iter().map(GateTrace::num_tokens).sum();
+    if let Some(pf) = &mut prefetch {
+        pf.finish();
+        metrics.prefetch = pf.stats().clone();
+    }
     (metrics, report)
 }
 
@@ -322,27 +354,45 @@ impl EpochState {
     /// Epoch boundary: evaluate, apply an accepted delta to the active
     /// placement, and price the expert-weight migration through the
     /// flat collective model (weights move point-to-point exactly like
-    /// any other payload). Returns whether a delta was applied.
-    fn tick(&mut self, cfg: &SimConfig, metrics: &mut RunMetrics)
-            -> bool {
+    /// any other payload). With a weight tier riding along, replan
+    /// swaps stage through it: replicas already resident (prefetched
+    /// or left by an earlier epoch) copy nothing, and freshly staged
+    /// ones are admitted so the next demand pass hits. Returns whether
+    /// a delta was applied.
+    fn tick(&mut self, cfg: &SimConfig, metrics: &mut RunMetrics,
+            prefetch: &mut Option<PrefetchEngine>) -> bool {
         let delta = self.replanner.epoch_tick(&self.active);
         if delta.is_empty() {
             return false;
         }
-        let traffic = replan::migration_traffic(
-            &delta,
-            &self.active,
-            self.replanner.cost().expert_bytes,
-        );
+        let expert_bytes = self.replanner.cost().expert_bytes;
+        let traffic = match prefetch {
+            Some(pf) => replan::migration_traffic_resident(
+                &delta,
+                &self.active,
+                expert_bytes,
+                &|l, e, g| pf.is_resident(g, l, e),
+            ),
+            None => replan::migration_traffic(&delta, &self.active,
+                                              expert_bytes),
+        };
+        let moved = traffic.total_bytes();
         let rep =
             model::flat_all_to_all(&traffic, &cfg.topo, &mut self.mig_rng);
         metrics.e2e_time += rep.time;
         metrics.cross_bytes += rep.cross_bytes;
         metrics.intra_bytes += rep.intra_bytes;
         metrics.launches += rep.launches;
-        metrics.migration_bytes += delta.migration_bytes;
+        metrics.migration_bytes += moved;
         metrics.replans += 1;
-        self.migration_bytes += delta.migration_bytes;
+        self.migration_bytes += moved;
+        if let Some(pf) = prefetch {
+            for ld in &delta.layers {
+                for &(e, g) in &ld.added {
+                    pf.admit_migration(g, ld.layer, e);
+                }
+            }
+        }
         self.active = replan::apply_delta(&self.active, &delta);
         true
     }
@@ -379,13 +429,17 @@ fn serve_trace(cfg: &SimConfig, tokens: usize, phase_tag: u64) -> GateTrace {
 /// run's dispatcher, so the online phase uses exactly the policy the
 /// offline phase placed for. With an [`EpochState`] riding along, each
 /// layer round routes against the *active* (possibly re-planned)
-/// placement and is observed by the re-planner after dispatch.
+/// placement and is observed by the re-planner after dispatch. With a
+/// [`PrefetchEngine`] riding along, each finished plan additionally
+/// feeds the cross-layer predictor and stages the next layer's
+/// forecast experts, overlapped with the layer's compute.
 #[allow(clippy::too_many_arguments)]
 fn sim_phase(sys: &SystemSpec, cfg: &SimConfig,
              dispatcher: &mut Dispatcher, backend: &mut CommBackend,
              placement: &Placement, trace: &GateTrace, scale: f64,
              rng: &mut Rng, metrics: &mut RunMetrics,
-             epoch: &mut Option<EpochState>) -> Vec<f64> {
+             epoch: &mut Option<EpochState>,
+             prefetch: &mut Option<PrefetchEngine>) -> Vec<f64> {
     let chunk = trace.num_tokens();
     let mut phase_copies = vec![0.0f64; cfg.topo.num_gpus()];
 
@@ -396,7 +450,7 @@ fn sim_phase(sys: &SystemSpec, cfg: &SimConfig,
                 None => &placement.layers[layer_idx],
             };
             layer_round(sys, cfg, dispatcher, backend, lp, layer_idx,
-                        layer, chunk, scale, rng, metrics)
+                        layer, chunk, scale, rng, metrics, prefetch)
         };
         for (acc, &c) in phase_copies.iter_mut()
             .zip(plan.copies_per_gpu())
@@ -405,6 +459,16 @@ fn sim_phase(sys: &SystemSpec, cfg: &SimConfig,
         }
         if let Some(s) = epoch {
             s.observe(layer_idx, &plan);
+        }
+        if let Some(pf) = prefetch {
+            let next = pf.predictor().next_layer(layer_idx);
+            let np = match epoch {
+                Some(s) => &s.active.layers[next],
+                None => &placement.layers[next],
+            };
+            let at = backend.cursor();
+            pf.prefetch_pass(layer_idx, &plan, np, backend, &cfg.topo,
+                             at);
         }
     }
     phase_copies
@@ -419,7 +483,8 @@ fn layer_round(sys: &SystemSpec, cfg: &SimConfig,
                dispatcher: &mut Dispatcher, backend: &mut CommBackend,
                lp: &crate::placement::LayerPlacement, layer_idx: usize,
                layer: &LayerTrace, chunk: usize, scale: f64,
-               rng: &mut Rng, metrics: &mut RunMetrics) -> DispatchPlan {
+               rng: &mut Rng, metrics: &mut RunMetrics,
+               prefetch: &mut Option<PrefetchEngine>) -> DispatchPlan {
     let topo = &cfg.topo;
     let n_gpus = topo.num_gpus();
     let spec = &cfg.model;
@@ -454,6 +519,15 @@ fn layer_round(sys: &SystemSpec, cfg: &SimConfig,
         .map(|&c| c as f64)
         .collect();
 
+    // --- Weight residency: block on cold-tier demand loads. ---
+    let stall = match prefetch {
+        Some(pf) => {
+            let at = backend.cursor();
+            pf.demand_pass(layer_idx, &plan, backend, topo, at)
+        }
+        None => 0.0,
+    };
+
     // --- Communication: two A2A rounds (dispatch + combine). ---
     let overlap = if sys.comm == CommModel::Hsc {
         chunk as f64 * ROUTE_DECISION_COST / n_gpus as f64
@@ -487,11 +561,13 @@ fn layer_round(sys: &SystemSpec, cfg: &SimConfig,
         .layer_load_std
         .push(Summary::of(&copies).std() * scale);
     let layer_time = comm.time * sys.comm_eff + t_max;
-    metrics.moe_layer_time += layer_time * scale;
+    // Demand stalls are one-off staging events tied to the replayed
+    // chunk, not extensive with the workload — accumulate unscaled.
+    metrics.moe_layer_time += layer_time * scale + stall;
     // Dense (attention) part — identical across systems.
     let dense = cfg.gpu.dense_time(spec, chunk as f64 / n_gpus as f64)
         + cfg.gpu.layer_overhead;
-    metrics.e2e_time += (layer_time + dense) * scale;
+    metrics.e2e_time += (layer_time + dense) * scale + stall;
     plan
 }
 
@@ -594,6 +670,31 @@ mod tests {
         let share = report.max_load_share(0);
         assert!(share >= 0.25 && share <= 1.0, "share {share}");
         assert_eq!(report.max_load_share(99), 0.0, "empty range");
+    }
+
+    #[test]
+    fn prefetch_rides_along_and_preserves_routing() {
+        // Parity invariant: the tier/prefetch machinery may change
+        // *when* weights move, never *what* is computed.
+        let off_cfg = small_cfg(Topology::two_by_two());
+        let mut on_cfg = off_cfg.clone();
+        on_cfg.prefetch = Some(PrefetchConfig::default());
+        let sys = SystemSpec::grace(0.15);
+        let off = simulate(&sys, &off_cfg);
+        let on = simulate(&sys, &on_cfg);
+        assert_eq!(on.tokens, off.tokens);
+        assert_eq!(on.cross_bytes, off.cross_bytes);
+        assert_eq!(on.intra_bytes, off.intra_bytes);
+        assert_eq!(on.layer_load_std, off.layer_load_std);
+        // The tier is tight (8 of 64 experts): residency must cost.
+        assert!(on.prefetch.stalls > 0, "cold start must stall");
+        assert!(on.e2e_time >= off.e2e_time);
+        assert_eq!(off.prefetch,
+                   crate::metrics::PrefetchStats::default());
+        // Determinism of the prefetch arm itself.
+        let again = simulate(&sys, &on_cfg);
+        assert_eq!(on.e2e_time, again.e2e_time);
+        assert_eq!(on.prefetch, again.prefetch);
     }
 
     #[test]

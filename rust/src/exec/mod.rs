@@ -96,6 +96,50 @@ impl ThreadPool {
             .map(|o| o.expect("job dropped"))
             .collect()
     }
+
+    /// Submit a fire-and-forget job and get back a [`JobHandle`] that
+    /// signals its completion — the overlap primitive behind async
+    /// weight staging: the caller keeps computing and only `wait`s at
+    /// first use of the staged result.
+    pub fn submit_tracked(&self, job: impl FnOnce() + Send + 'static)
+                          -> JobHandle {
+        let state = Arc::new((Mutex::new(false), Condvar::new()));
+        let signal = state.clone();
+        self.submit(move || {
+            job();
+            let (lock, cvar) = (&signal.0, &signal.1);
+            *lock.lock().unwrap() = true;
+            cvar.notify_all();
+        });
+        JobHandle { state }
+    }
+}
+
+/// Completion signal of one job submitted through
+/// [`ThreadPool::submit_tracked`]. Cloning shares the signal; the job
+/// runs regardless of whether any handle is ever polled or waited on
+/// (fire-and-forget), so dropping every clone leaks nothing.
+#[derive(Clone)]
+pub struct JobHandle {
+    state: Arc<(Mutex<bool>, Condvar)>,
+}
+
+impl JobHandle {
+    /// Whether the job has finished (non-blocking — the prefetch *hit*
+    /// probe).
+    pub fn is_done(&self) -> bool {
+        *self.state.0.lock().unwrap()
+    }
+
+    /// Block until the job finishes (the prefetch *stall* path: first
+    /// use of a still-in-flight staged weight).
+    pub fn wait(&self) {
+        let (lock, cvar) = (&self.state.0, &self.state.1);
+        let mut done = lock.lock().unwrap();
+        while !*done {
+            done = cvar.wait(done).unwrap();
+        }
+    }
 }
 
 fn worker_loop(shared: Arc<PoolShared>) {
@@ -276,6 +320,49 @@ mod tests {
         let pool = ThreadPool::new(3);
         let out = pool.map((0..50).collect::<Vec<usize>>(), |x| x * 2);
         assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn tracked_job_signals_completion() {
+        let pool = ThreadPool::new(2);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = counter.clone();
+        let h = pool.submit_tracked(move || {
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        h.wait();
+        assert!(h.is_done());
+        assert_eq!(counter.load(Ordering::SeqCst), 1);
+        // A second wait on a finished job returns immediately.
+        h.wait();
+    }
+
+    #[test]
+    fn tracked_handles_are_independent_and_cloneable() {
+        let pool = ThreadPool::new(4);
+        let handles: Vec<JobHandle> = (0..16)
+            .map(|_| pool.submit_tracked(|| {}))
+            .collect();
+        let clones: Vec<JobHandle> = handles.clone();
+        pool.join();
+        for (h, c) in handles.iter().zip(&clones) {
+            assert!(h.is_done(), "joined pool left a job unfinished");
+            assert!(c.is_done(), "clone must share the signal");
+        }
+    }
+
+    #[test]
+    fn dropped_tracked_handle_still_runs_the_job() {
+        let pool = ThreadPool::new(1);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let c = counter.clone();
+        drop(pool.submit_tracked(move || {
+            c.fetch_add(1, Ordering::SeqCst);
+        }));
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 1,
+                   "fire-and-forget: the job must not be cancelled");
     }
 
     #[test]

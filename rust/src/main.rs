@@ -20,7 +20,8 @@ use grace_moe::baselines::{GroupingStrategy, SystemSpec};
 use grace_moe::cli::Args;
 use grace_moe::cluster::Topology;
 use grace_moe::comm::CommBackendKind;
-use grace_moe::config::{ArrivalProcess, ModelSpec, ServeLoad, Workload};
+use grace_moe::config::{ArrivalProcess, ModelSpec, PrefetchConfig,
+                        ServeLoad, Workload};
 use grace_moe::configio::Value;
 use grace_moe::coordinator::Coordinator;
 use grace_moe::engine::fleet::{replay_fleet, FleetConfig};
@@ -28,7 +29,7 @@ use grace_moe::engine::real::{profile_real, RealModel};
 use grace_moe::engine::sim::{build_placement, drifting_rounds,
                              simulate_rounds, simulate_with_contention};
 use grace_moe::engine::{simulate, SimConfig};
-use grace_moe::metrics::ContentionReport;
+use grace_moe::metrics::{ContentionReport, PrefetchStats};
 use grace_moe::placement::ReplicationMode;
 use grace_moe::replan::ReplanConfig;
 use grace_moe::report;
@@ -59,6 +60,19 @@ COMMON OPTIONS:
                                     analytic; des = contended
                                     discrete-event network)
   --json                            machine-readable output
+
+PREFETCH OPTIONS (simulate, fleet; default: no weight tier — every
+expert weight stays resident and timing is bit-identical to PR 9):
+  --prefetch <on|off>               predictive cross-layer expert
+                                    pre-staging (default off)
+  --weight-budget <n>               hot-tier capacity in experts per
+                                    GPU (default 8; passing it without
+                                    --prefetch on enables the tier
+                                    with demand staging only)
+  --prefetch-k <n>                  predicted experts staged per layer
+                                    (default 4)
+  --prefetch-alpha <f>              predictor EWMA decay in (0,1]
+                                    (default 0.3)
 
 PRIORITY OPTIONS (serve, fleet):
   --priority-classes <n>            round-robin request priority classes
@@ -205,7 +219,31 @@ fn sim_config(args: &Args) -> anyhow::Result<SimConfig> {
     cfg.comm_backend = CommBackendKind::from_name(comm)
         .ok_or_else(|| anyhow::anyhow!(
             "unknown --comm '{comm}' (expected analytic|des)"))?;
+    cfg.prefetch = prefetch_config(args, cfg.model.experts)?;
     Ok(cfg)
+}
+
+/// Parse the weight-tier knobs shared by every `SimConfig` consumer.
+/// `--prefetch on` enables the predictive pre-stager; `--weight-budget`
+/// alone enables the capacity-bounded hot tier with demand staging
+/// only; neither leaves the tier off entirely (the bit-compatible
+/// default). Degenerate values (`--weight-budget 0`, `--prefetch-k`
+/// above the expert count, NaN alpha) are loud parse errors.
+fn prefetch_config(args: &Args, experts: usize)
+                   -> anyhow::Result<Option<PrefetchConfig>> {
+    let predictive = on_off(args, "prefetch")?;
+    if !predictive && args.get("weight-budget").is_none() {
+        return Ok(None);
+    }
+    let d = PrefetchConfig::default();
+    let pc = PrefetchConfig {
+        predictive,
+        k: args.usize_or("prefetch-k", d.k)?,
+        weight_budget: args.usize_or("weight-budget", d.weight_budget)?,
+        alpha: args.f64_or("prefetch-alpha", d.alpha)?,
+    };
+    pc.validate(experts)?;
+    Ok(Some(pc))
 }
 
 /// Parse an `on|off` option (default off), rejecting anything else
@@ -272,6 +310,34 @@ fn contention_line(c: &ContentionReport) -> String {
     )
 }
 
+/// Weight-staging diagnostics as a JSON object (schema shared with the
+/// `prefetch` object in `fleet --json` output).
+fn prefetch_json(p: &PrefetchStats) -> Value {
+    Value::object(vec![
+        ("prefetches", Value::from(p.prefetches)),
+        ("hits", Value::from(p.hits)),
+        ("stalls", Value::from(p.stalls)),
+        ("stall_steps", Value::from(p.stall_steps)),
+        ("evictions", Value::from(p.evictions)),
+        ("hit_rate", Value::num(p.hit_rate())),
+        ("prefetch_bytes", Value::num(p.prefetch_bytes)),
+        ("demand_bytes", Value::num(p.demand_bytes)),
+        ("wasted_bytes", Value::num(p.wasted_bytes)),
+    ])
+}
+
+/// One-line human rendering of the weight-staging diagnostics.
+fn prefetch_line(p: &PrefetchStats) -> String {
+    format!(
+        "tier: {} prefetches | {} hits / {} stalls ({} stalled rounds, \
+         {:.0}% hit rate) | {:.1} MB pre-staged, {:.1} MB demand, \
+         {:.1} MB wasted | {} evictions",
+        p.prefetches, p.hits, p.stalls, p.stall_steps,
+        p.hit_rate() * 100.0, p.prefetch_bytes / 1e6,
+        p.demand_bytes / 1e6, p.wasted_bytes / 1e6, p.evictions
+    )
+}
+
 fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     let mut cfg = sim_config(args)?;
     let sys = system_spec(args)?;
@@ -284,16 +350,24 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         simulate_with_contention(&sys, &cfg, &placement);
     if args.flag("json") {
         let mut v = report::metrics_json(sys.name, &m);
-        if let Some(c) = &contention {
-            if let Value::Object(map) = &mut v {
+        if let Value::Object(map) = &mut v {
+            if let Some(c) = &contention {
                 map.insert("contention".to_string(), contention_json(c));
+            }
+            if cfg.prefetch.is_some() {
+                map.insert("prefetch".to_string(),
+                           prefetch_json(&m.prefetch));
             }
         }
         println!("{}", grace_moe::configio::to_string_pretty(&v));
     } else {
+        let pf = m.prefetch.clone();
         println!("{}", report::e2e_table(&[sys.name], &[m]).render());
         if let Some(c) = &contention {
             println!("{}", contention_line(c));
+        }
+        if cfg.prefetch.is_some() {
+            println!("{}", prefetch_line(&pf));
         }
     }
     Ok(())
@@ -396,6 +470,9 @@ fn cmd_fleet(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(c) = &rep.contention {
         println!("{}", contention_line(c));
+    }
+    if let Some(p) = &rep.prefetch {
+        println!("{}", prefetch_line(p));
     }
     Ok(())
 }

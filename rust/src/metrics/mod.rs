@@ -31,6 +31,62 @@ pub struct RunMetrics {
     pub migration_bytes: f64,
     /// Re-planning deltas applied (epochs that actually migrated).
     pub replans: usize,
+    /// Weight-staging counters of the prefetch/tier machinery (all
+    /// zero when no `--weight-budget` tier is configured).
+    pub prefetch: PrefetchStats,
+}
+
+/// Counters of the predictive-prefetch and weight-tier machinery
+/// ([`crate::engine::prefetch`]): how often a needed expert weight was
+/// already resident (*hit*), how often serving had to block on a
+/// cold-tier load (*stall*), and how much staging traffic prediction
+/// spent vs wasted.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PrefetchStats {
+    /// Predictive staging transfers issued (background, overlapped).
+    pub prefetches: usize,
+    /// Weight lookups satisfied from the resident hot tier.
+    pub hits: usize,
+    /// Weight lookups that blocked on a cold-tier load (demand stage
+    /// on the critical path).
+    pub stalls: usize,
+    /// Layer rounds that stalled at least once (the bench's
+    /// stall-step count — one slow round is one stall-step however
+    /// many experts it waited for).
+    pub stall_steps: usize,
+    /// Hot-tier evictions (LRU victim pushed back to the cold tier).
+    pub evictions: usize,
+    /// Bytes staged by predictive prefetch.
+    pub prefetch_bytes: f64,
+    /// Bytes staged on demand (stalls).
+    pub demand_bytes: f64,
+    /// Prefetched bytes evicted (or left over) without ever being
+    /// used — the overprediction cost the bench bounds.
+    pub wasted_bytes: f64,
+}
+
+impl PrefetchStats {
+    /// Accumulate another segment's counters.
+    pub fn accumulate(&mut self, other: &PrefetchStats) {
+        self.prefetches += other.prefetches;
+        self.hits += other.hits;
+        self.stalls += other.stalls;
+        self.stall_steps += other.stall_steps;
+        self.evictions += other.evictions;
+        self.prefetch_bytes += other.prefetch_bytes;
+        self.demand_bytes += other.demand_bytes;
+        self.wasted_bytes += other.wasted_bytes;
+    }
+
+    /// Hit fraction of all resident-tier lookups (0 before any lookup).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.stalls;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
 }
 
 impl RunMetrics {
@@ -58,6 +114,7 @@ impl RunMetrics {
         self.tokens += other.tokens;
         self.migration_bytes += other.migration_bytes;
         self.replans += other.replans;
+        self.prefetch.accumulate(&other.prefetch);
     }
 
     /// The five Table-1 metrics as (name, value) pairs.
@@ -325,6 +382,37 @@ mod tests {
         assert_eq!(a.cross_bytes, 20.0);
         assert_eq!(a.layer_load_std.len(), 2);
         assert_eq!(a.tokens, 10);
+    }
+
+    #[test]
+    fn prefetch_stats_accumulate_and_hit_rate() {
+        let mut a = PrefetchStats {
+            prefetches: 3,
+            hits: 6,
+            stalls: 2,
+            stall_steps: 1,
+            evictions: 4,
+            prefetch_bytes: 100.0,
+            demand_bytes: 50.0,
+            wasted_bytes: 25.0,
+        };
+        a.accumulate(&a.clone());
+        assert_eq!(a.prefetches, 6);
+        assert_eq!(a.hits, 12);
+        assert_eq!(a.stalls, 4);
+        assert_eq!(a.stall_steps, 2);
+        assert_eq!(a.evictions, 8);
+        assert_eq!(a.prefetch_bytes, 200.0);
+        assert_eq!(a.demand_bytes, 100.0);
+        assert_eq!(a.wasted_bytes, 50.0);
+        assert_eq!(a.hit_rate(), 0.75);
+        assert_eq!(PrefetchStats::default().hit_rate(), 0.0);
+
+        // RunMetrics carries the counters through its own accumulate.
+        let mut m = RunMetrics::default();
+        m.prefetch.stalls = 1;
+        m.accumulate(&m.clone());
+        assert_eq!(m.prefetch.stalls, 2);
     }
 
     #[test]

@@ -264,10 +264,26 @@ pub fn apply_delta(p: &Placement, delta: &ReplanDelta) -> Placement {
 /// migration like any other transfer.
 pub fn migration_traffic(delta: &ReplanDelta, active: &Placement,
                          expert_bytes: f64) -> TrafficMatrix {
+    migration_traffic_resident(delta, active, expert_bytes,
+                               &|_, _, _| false)
+}
+
+/// [`migration_traffic`] with a residency probe: an added replica whose
+/// destination already holds the expert's weights — staged earlier by
+/// the prefetcher ([`crate::engine::prefetch`]) or left in the hot tier
+/// by a previous epoch — copies nothing, so its bytes are skipped
+/// instead of being billed a second time. `resident(layer, expert,
+/// gpu)` answers whether `gpu`'s tier already holds that expert.
+pub fn migration_traffic_resident(
+    delta: &ReplanDelta, active: &Placement, expert_bytes: f64,
+    resident: &dyn Fn(usize, usize, GpuId) -> bool) -> TrafficMatrix {
     let mut m = TrafficMatrix::zeros(active.num_gpus);
     for ld in &delta.layers {
         let primary = &active.layers[ld.layer].primary;
         for &(e, g) in &ld.added {
+            if resident(ld.layer, e, g) {
+                continue;
+            }
             m.add(primary[e], g, expert_bytes);
         }
     }
@@ -799,5 +815,19 @@ mod tests {
         assert_eq!(m.get(3, 0), 1e6, "copied from expert 3's primary");
         assert_eq!(m.get(3, 1), 1e6);
         assert_eq!(m.total_bytes(), 2e6);
+
+        // Residency-aware accounting: a replica the destination's hot
+        // tier already holds (e.g. staged by the prefetcher) must not
+        // be billed again.
+        let filtered = migration_traffic_resident(
+            &delta, &p, 1e6, &|l, e, g| l == 0 && e == 3 && g == 1);
+        assert_eq!(filtered.get(3, 0), 1e6, "cold replica still copies");
+        assert_eq!(filtered.get(3, 1), 0.0,
+                   "resident replica must not be double-counted");
+        assert_eq!(filtered.total_bytes(), 1e6);
+        // A probe that knows nothing reproduces the plain accounting.
+        let all = migration_traffic_resident(&delta, &p, 1e6,
+                                             &|_, _, _| false);
+        assert_eq!(all.total_bytes(), m.total_bytes());
     }
 }

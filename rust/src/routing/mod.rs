@@ -23,6 +23,10 @@
 //!   one call and grouped into per-`(src, dst)` transfer lists with byte
 //!   accounting, which the engines hand to the communication models as
 //!   batched transfers.
+//! * **prediction** ([`CrossLayerPredictor`], in [`predict`]) — finished
+//!   plans additionally feed per-transition co-activation EWMAs, from
+//!   which the prefetch stage ([`crate::engine::prefetch`]) ranks the
+//!   experts layer `l+1` is about to activate.
 //!
 //! [`RoutingPolicy`] is the plain-data configuration enum (what a
 //! [`crate::baselines::SystemSpec`] or CLI flag names);
@@ -33,9 +37,11 @@
 
 pub mod dispatch;
 pub mod load;
+pub mod predict;
 
 pub use dispatch::{Assignment, DispatchPlan, Dispatcher, Routed};
 pub use load::LoadEstimator;
+pub use predict::CrossLayerPredictor;
 
 use crate::cluster::{GpuId, Topology};
 use crate::placement::LayerPlacement;

@@ -1,0 +1,381 @@
+//! Cross-layer activation prediction: which experts layer `l+1` will
+//! activate, conditioned on the gate outcome just observed at layer `l`.
+//!
+//! The paper's replication machinery (Eq. 3/4) and the online
+//! re-planner decide *where* expert copies live; this module predicts
+//! *when* a copy will be needed next, so the prefetch stage
+//! ([`crate::engine::prefetch`]) can stage weights while the current
+//! layer's FFNs are still running. The estimator mirrors the
+//! [`LoadEstimator`](crate::routing::LoadEstimator) measurement
+//! substrate: per-transition EWMAs fed from finished
+//! [`DispatchPlan`]s, one plan = one measurement round, first
+//! non-empty round seeds the EWMA directly (`α = 1`).
+//!
+//! The measured quantity is the *co-activation* count: for each token,
+//! every (expert at layer `l`, expert at layer `l+1`) pair of its gate
+//! picks. `P(e' active at l+1 | e active at l)` is then the EWMA joint
+//! count over the EWMA marginal of `e` — the conditional the
+//! [`CrossLayerPredictor::predict`] score sums over the currently
+//! active experts. Transitions wrap around: layer `L−1` predicts layer
+//! `0` of the *next* step, so the pipeline's first layer is
+//! prefetchable too (per-token pairing across the wrap is a heuristic —
+//! different tokens — but it captures exactly the hot-set persistence
+//! a decode loop exhibits).
+
+use crate::routing::DispatchPlan;
+
+/// EWMA state of one layer transition `l → (l+1) mod L`.
+#[derive(Clone, Debug, Default)]
+struct Transition {
+    /// EWMA of per-round joint co-activation counts, row-major
+    /// `[prev_expert * experts + next_expert]`.
+    ewma_joint: Vec<f64>,
+    /// EWMA of per-round previous-layer activation counts (the
+    /// marginal the conditional divides by).
+    ewma_prev: Vec<f64>,
+    /// Completed (non-empty) measurement rounds.
+    rounds: u64,
+}
+
+/// Per-transition EWMA estimator of cross-layer expert co-activation,
+/// plus the most recent gate outcome per layer — everything
+/// [`CrossLayerPredictor::predict`] needs to rank next-layer experts.
+///
+/// Layers never share state: co-activation structure differs per
+/// transition, so one blended estimate would smear a sharp `l → l+1`
+/// correlation across the whole stack.
+#[derive(Clone, Debug)]
+pub struct CrossLayerPredictor {
+    alpha: f64,
+    layers: usize,
+    experts: usize,
+    transitions: Vec<Transition>,
+    /// Most recent per-token expert picks observed at each layer
+    /// (token-major, as routed). `None` until the layer's first plan.
+    last: Vec<Option<Vec<Vec<u16>>>>,
+}
+
+impl CrossLayerPredictor {
+    /// Predictor over `layers` MoE layers of `experts` experts each,
+    /// with EWMA smoothing factor `alpha ∈ (0, 1]` (the weight of the
+    /// newest round).
+    pub fn new(layers: usize, experts: usize, alpha: f64)
+               -> CrossLayerPredictor {
+        assert!(layers > 0 && experts > 0, "non-degenerate model");
+        assert!(alpha.is_finite() && alpha > 0.0 && alpha <= 1.0,
+                "alpha in (0, 1]");
+        CrossLayerPredictor {
+            alpha,
+            layers,
+            experts,
+            transitions: vec![Transition::default(); layers],
+            last: vec![None; layers],
+        }
+    }
+
+    /// The layer a prediction made at `layer` targets: `(l+1) mod L`
+    /// (wrap-around — the last layer predicts the next step's first).
+    pub fn next_layer(&self, layer: usize) -> usize {
+        (layer + 1) % self.layers
+    }
+
+    /// Completed measurement rounds of the transition out of `layer`.
+    pub fn rounds(&self, layer: usize) -> u64 {
+        self.transitions[layer].rounds
+    }
+
+    /// Feed one finished [`DispatchPlan`] of `layer` (one measurement
+    /// round): fold the co-activation counts against the previous
+    /// layer's remembered outcome, then remember this layer's outcome
+    /// for the next transition.
+    pub fn observe_plan(&mut self, layer: usize, plan: &DispatchPlan) {
+        let mut sets: Vec<Vec<u16>> = Vec::new();
+        let mut current: Option<usize> = None;
+        for r in plan.assignments() {
+            if current != Some(r.token) {
+                sets.push(Vec::new());
+                current = Some(r.token);
+            }
+            sets.last_mut().expect("pushed").push(r.expert as u16);
+        }
+        self.observe_sets(layer, &sets);
+    }
+
+    /// [`Self::observe_plan`] on raw token-major expert picks (what a
+    /// gate trace holds before routing; pruning-free path for tests
+    /// and trace-driven engines).
+    pub fn observe_sets(&mut self, layer: usize, sets: &[Vec<u16>]) {
+        assert!(layer < self.layers, "layer out of range");
+        if sets.iter().all(|s| s.is_empty()) {
+            return; // empty round — keep the current estimate
+        }
+        let e_n = self.experts;
+        let prev_layer = (layer + self.layers - 1) % self.layers;
+        if let Some(prev) = &self.last[prev_layer] {
+            // Per-token pairing (min length guards cross-step chunk
+            // size changes on the wrap transition).
+            let n = prev.len().min(sets.len());
+            let mut joint = vec![0.0f64; e_n * e_n];
+            let mut marginal = vec![0.0f64; e_n];
+            for t in 0..n {
+                for &pe in &prev[t] {
+                    marginal[pe as usize] += 1.0;
+                    for &e in &sets[t] {
+                        joint[pe as usize * e_n + e as usize] += 1.0;
+                    }
+                }
+            }
+            if marginal.iter().sum::<f64>() > 0.0 {
+                let tr = &mut self.transitions[prev_layer];
+                if tr.ewma_joint.is_empty() {
+                    tr.ewma_joint = vec![0.0; e_n * e_n];
+                    tr.ewma_prev = vec![0.0; e_n];
+                }
+                tr.rounds += 1;
+                // First round seeds the EWMA directly (no stale zero
+                // history), exactly like the load estimator.
+                let a = if tr.rounds == 1 { 1.0 } else { self.alpha };
+                for (e, m) in tr.ewma_joint.iter_mut().zip(&joint) {
+                    *e = (1.0 - a) * *e + a * m;
+                }
+                for (e, m) in tr.ewma_prev.iter_mut().zip(&marginal) {
+                    *e = (1.0 - a) * *e + a * m;
+                }
+            }
+        }
+        self.last[layer] = Some(sets.to_vec());
+    }
+
+    /// Estimated `P(next active | prev active)` for the transition out
+    /// of `layer`; `None` until a round of that transition closed.
+    pub fn conditional(&self, layer: usize, prev: usize, next: usize)
+                       -> Option<f64> {
+        let tr = &self.transitions[layer];
+        if tr.rounds == 0 {
+            return None;
+        }
+        let m = tr.ewma_prev[prev];
+        if m <= 0.0 {
+            return Some(0.0);
+        }
+        Some(tr.ewma_joint[prev * self.experts + next] / m)
+    }
+
+    /// Top-`k` experts predicted active at [`Self::next_layer`]`(layer)`,
+    /// most likely first (ties break to the lower expert index, so the
+    /// ranking is deterministic). Scores sum the learned conditionals
+    /// over the experts just observed active at `layer`, weighted by
+    /// how often each fired. Empty until both the transition has a
+    /// closed round and `layer` has an observed outcome — no
+    /// prediction means no prefetch, never a guess.
+    pub fn predict(&self, layer: usize, k: usize) -> Vec<usize> {
+        let tr = &self.transitions[layer];
+        let (Some(cur), true) = (&self.last[layer], tr.rounds > 0) else {
+            return Vec::new();
+        };
+        let e_n = self.experts;
+        let mut activity = vec![0.0f64; e_n];
+        for set in cur {
+            for &e in set {
+                activity[e as usize] += 1.0;
+            }
+        }
+        let mut scores = vec![0.0f64; e_n];
+        for (pe, &act) in activity.iter().enumerate() {
+            if act <= 0.0 || tr.ewma_prev[pe] <= 0.0 {
+                continue;
+            }
+            let inv = act / tr.ewma_prev[pe];
+            let row = &tr.ewma_joint[pe * e_n..(pe + 1) * e_n];
+            for (s, &j) in scores.iter_mut().zip(row) {
+                *s += inv * j;
+            }
+        }
+        let mut order: Vec<usize> = (0..e_n).collect();
+        order.sort_by(|&a, &b| {
+            scores[b]
+                .partial_cmp(&scores[a])
+                .expect("scores are finite")
+                .then(a.cmp(&b))
+        });
+        // Zero score = zero evidence: staging such an expert would be
+        // a pure guess, so it is not a prediction at all.
+        order.retain(|&e| scores[e] > 0.0);
+        order.truncate(k.min(e_n));
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Topology;
+    use crate::linalg::Matrix;
+    use crate::placement::{LayerPlacement, ReplicationMode};
+    use crate::profile::LayerProfile;
+    use crate::routing::{Assignment, Dispatcher, RoutingPolicy};
+    use crate::stats::Rng;
+
+    const E: usize = 8;
+
+    /// Token-major picks where every token at layer 0 takes `e` and at
+    /// layer 1 takes `(e + shift) % E`.
+    fn shifted_round(hot: &[u16], shift: u16)
+                     -> (Vec<Vec<u16>>, Vec<Vec<u16>>) {
+        let l0: Vec<Vec<u16>> = hot.iter().map(|&e| vec![e]).collect();
+        let l1: Vec<Vec<u16>> = hot
+            .iter()
+            .map(|&e| vec![(e + shift) % E as u16])
+            .collect();
+        (l0, l1)
+    }
+
+    #[test]
+    fn converges_to_true_conditional_on_correlated_trace() {
+        // Two layers, deterministic structure: expert e at layer 0 ⇒
+        // expert (e+3)%8 at layer 1. The EWMA conditional must converge
+        // to exactly 1 on the shifted pair and 0 elsewhere.
+        let mut pred = CrossLayerPredictor::new(2, E, 0.3);
+        for round in 0..12u16 {
+            let hot = [round % 4, 4 + round % 4];
+            let (l0, l1) = shifted_round(&hot, 3);
+            pred.observe_sets(0, &l0);
+            pred.observe_sets(1, &l1);
+        }
+        assert!(pred.rounds(0) > 0);
+        for pe in 0..4usize {
+            let on = pred.conditional(0, pe, (pe + 3) % E).unwrap();
+            assert!((on - 1.0).abs() < 1e-9,
+                    "P({} | {pe}) = {on}, want 1", (pe + 3) % E);
+            let off = pred.conditional(0, pe, (pe + 4) % E).unwrap();
+            assert!(off.abs() < 1e-9, "spurious co-activation {off}");
+        }
+    }
+
+    #[test]
+    fn predicts_the_shifted_hot_set() {
+        let mut pred = CrossLayerPredictor::new(2, E, 0.5);
+        for _ in 0..4 {
+            let (l0, l1) = shifted_round(&[1, 5], 2);
+            pred.observe_sets(0, &l0);
+            pred.observe_sets(1, &l1);
+        }
+        let mut top = pred.predict(0, 2);
+        top.sort_unstable();
+        assert_eq!(top, vec![3, 7],
+                   "layer-1 prediction must be the shifted hot set");
+    }
+
+    #[test]
+    fn uniform_trace_gives_uniform_conditionals() {
+        // Every token activates every expert at both layers: the
+        // conditional must be 1 for every pair (no spurious structure)
+        // and predict() must still return exactly k valid experts.
+        let all: Vec<Vec<u16>> =
+            (0..4).map(|_| (0..E as u16).collect()).collect();
+        let mut pred = CrossLayerPredictor::new(2, E, 0.3);
+        for _ in 0..5 {
+            pred.observe_sets(0, &all);
+            pred.observe_sets(1, &all);
+        }
+        for pe in 0..E {
+            for e in 0..E {
+                let c = pred.conditional(0, pe, e).unwrap();
+                assert!((c - 1.0).abs() < 1e-9,
+                        "P({e} | {pe}) = {c} under uniform traffic");
+            }
+        }
+        let top = pred.predict(0, 3);
+        assert_eq!(top.len(), 3);
+        assert!(top.iter().all(|&e| e < E));
+        // Deterministic tie-break: uniform scores rank by index.
+        assert_eq!(top, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn cold_predictor_predicts_nothing() {
+        let pred = CrossLayerPredictor::new(4, E, 0.3);
+        assert!(pred.predict(0, 4).is_empty(),
+                "no rounds ⇒ no prediction ⇒ no prefetch");
+        assert!(pred.conditional(0, 0, 1).is_none());
+
+        // One layer-0 observation alone closes no transition round.
+        let mut pred = CrossLayerPredictor::new(4, E, 0.3);
+        pred.observe_sets(0, &[vec![1]]);
+        assert_eq!(pred.rounds(0), 0);
+        assert!(pred.predict(0, 2).is_empty());
+    }
+
+    #[test]
+    fn wraparound_transition_predicts_next_steps_first_layer() {
+        // L = 2: observing layer 1 then layer 0 (next step) feeds the
+        // 1 → 0 transition; a persistent hot set must become
+        // predictable across the wrap.
+        let mut pred = CrossLayerPredictor::new(2, E, 0.5);
+        for _ in 0..4 {
+            pred.observe_sets(0, &[vec![2]]);
+            pred.observe_sets(1, &[vec![6]]);
+        }
+        assert!(pred.rounds(1) > 0, "wrap transition never folded");
+        assert_eq!(pred.predict(1, 1), vec![2],
+                   "layer 1 must predict the next step's layer-0 set");
+    }
+
+    #[test]
+    fn observe_plan_matches_observe_sets() {
+        // The DispatchPlan feed must measure exactly what the raw gate
+        // sets would: route an identical batch both ways.
+        fn fixture() -> LayerPlacement {
+            let profile = LayerProfile {
+                affinity: Matrix::zeros(4, 4),
+                load: vec![4.0, 3.0, 2.0, 1.0],
+                tokens: 10,
+            };
+            LayerPlacement::build(
+                &profile,
+                vec![vec![0], vec![1], vec![2], vec![3]],
+                ReplicationMode::None,
+            )
+        }
+        let lp = fixture();
+        let topo = Topology::paper_testbed(1, 4);
+        let sets0: Vec<Vec<u16>> = vec![vec![0, 1], vec![2], vec![3, 0]];
+        let sets1: Vec<Vec<u16>> = vec![vec![1], vec![3, 2], vec![0]];
+        let mut via_plan = CrossLayerPredictor::new(2, 4, 0.4);
+        let mut via_sets = CrossLayerPredictor::new(2, 4, 0.4);
+        let mut d = Dispatcher::new(topo, RoutingPolicy::Primary.build(),
+                                    1.0);
+        let mut rng = Rng::new(9);
+        for (layer, sets) in [(0usize, &sets0), (1, &sets1)] {
+            let batch: Vec<Assignment> = sets
+                .iter()
+                .enumerate()
+                .flat_map(|(t, es)| {
+                    es.iter().map(move |&e| Assignment {
+                        token: t,
+                        expert: e as usize,
+                        src: t % 4,
+                    })
+                })
+                .collect();
+            let plan = d.dispatch(&lp, layer, &batch, &mut rng);
+            via_plan.observe_plan(layer, &plan);
+            via_sets.observe_sets(layer, sets);
+        }
+        assert_eq!(via_plan.rounds(0), via_sets.rounds(0));
+        for pe in 0..4 {
+            for e in 0..4 {
+                assert_eq!(via_plan.conditional(0, pe, e),
+                           via_sets.conditional(0, pe, e),
+                           "plan feed diverged at ({pe}, {e})");
+            }
+        }
+        assert_eq!(via_plan.predict(0, 2), via_sets.predict(0, 2));
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn nan_alpha_is_rejected() {
+        let _ = CrossLayerPredictor::new(2, E, f64::NAN);
+    }
+}

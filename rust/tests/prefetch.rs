@@ -1,0 +1,170 @@
+//! Integration tests for predictive expert prefetching and the
+//! two-tier weight cache: the PR-10 acceptance invariants pinned from
+//! outside the crate.
+//!
+//! * **parity** — a weight tier changes *when* weights move, never
+//!   *what* is computed: routing, traffic, and load metrics are
+//!   token-for-token identical with prefetch on vs off, on both
+//!   backends (prefetch only ever adds stall time);
+//! * **occupancy** — no GPU's hot tier ever exceeds `--weight-budget`
+//!   experts, whatever the demand/prefetch interleaving (the
+//!   acceptance property test);
+//! * **determinism** — same seed ⇒ identical staging counters and
+//!   timing across reruns, including on the contended DES network;
+//! * **validation** — degenerate knobs (`--weight-budget 0`,
+//!   `--prefetch-k` past the expert count, NaN alpha) fail loudly at
+//!   the config boundary, not as NaNs mid-run.
+
+use grace_moe::baselines::SystemSpec;
+use grace_moe::cluster::Topology;
+use grace_moe::comm::{CommBackend, CommBackendKind};
+use grace_moe::config::{ModelSpec, PrefetchConfig, Workload};
+use grace_moe::engine::sim::{build_placement, simulate_with_contention,
+                             SimConfig};
+use grace_moe::engine::PrefetchEngine;
+use grace_moe::metrics::PrefetchStats;
+use grace_moe::routing::{Assignment, Dispatcher, RoutingPolicy};
+use grace_moe::stats::Rng;
+
+fn small_sim(backend: CommBackendKind) -> SimConfig {
+    let model = ModelSpec { moe_layers: 2, ..ModelSpec::olmoe() };
+    let mut sim = SimConfig::new(
+        model,
+        Topology::two_by_two(),
+        Workload { batch: 8, prefill: 8, decode: 2 },
+    );
+    sim.profile_tokens = 256;
+    sim.max_chunk = 256;
+    sim.comm_backend = backend;
+    sim
+}
+
+// --- parity -----------------------------------------------------------------
+
+#[test]
+fn prefetch_preserves_routing_token_for_token() {
+    for backend in [CommBackendKind::Analytic, CommBackendKind::Des] {
+        let off = small_sim(backend);
+        let mut on = off.clone();
+        on.prefetch = Some(PrefetchConfig::default());
+        let sys = SystemSpec::grace(0.15);
+        let placement = build_placement(&sys, &off);
+        let (mo, _) = simulate_with_contention(&sys, &off, &placement);
+        let (mp, _) = simulate_with_contention(&sys, &on, &placement);
+        // Same tokens through the same plans: every routing-derived
+        // metric is bit-identical.
+        assert_eq!(mp.tokens, mo.tokens, "{backend:?}: token parity");
+        assert_eq!(mp.cross_bytes, mo.cross_bytes, "{backend:?}");
+        assert_eq!(mp.intra_bytes, mo.intra_bytes, "{backend:?}");
+        assert_eq!(mp.launches, mo.launches, "{backend:?}");
+        assert_eq!(mp.layer_load_std, mo.layer_load_std, "{backend:?}");
+        // The tier only ever *adds* stall time to the critical path.
+        assert!(mp.e2e_time >= mo.e2e_time,
+                "{backend:?}: staging cannot speed up the run \
+                 ({} vs {})", mp.e2e_time, mo.e2e_time);
+        assert_eq!(mo.prefetch, PrefetchStats::default(),
+                   "no tier, no counters");
+        assert!(mp.prefetch.stalls > 0, "{backend:?}: cold start stalls");
+        assert!(mp.prefetch.stall_steps > 0, "{backend:?}");
+        assert!(mp.prefetch.demand_bytes > 0.0, "{backend:?}");
+    }
+}
+
+// --- occupancy --------------------------------------------------------------
+
+#[test]
+fn hot_tier_occupancy_never_exceeds_weight_budget() {
+    let cfg = small_sim(CommBackendKind::Analytic);
+    let sys = SystemSpec::grace(0.15);
+    let placement = build_placement(&sys, &cfg);
+    let budget = 2;
+    let pc = PrefetchConfig {
+        predictive: true,
+        k: 3,
+        weight_budget: budget,
+        alpha: 0.4,
+    };
+    let mut eng = PrefetchEngine::new(pc, cfg.model.moe_layers,
+                                      cfg.model.experts,
+                                      cfg.topo.num_gpus(),
+                                      cfg.model.expert_bytes());
+    let mut backend = CommBackend::new(CommBackendKind::Analytic,
+                                       &cfg.topo);
+    let mut dispatcher = Dispatcher::new(cfg.topo.clone(),
+                                         RoutingPolicy::Tar.build(),
+                                         cfg.model.token_bytes());
+    let mut rng = Rng::new(7);
+    for round in 0..8usize {
+        for layer in 0..cfg.model.moe_layers {
+            let lp = &placement.layers[layer];
+            let batch: Vec<Assignment> = (0..32)
+                .map(|t| Assignment {
+                    token: t,
+                    expert: rng.index(cfg.model.experts),
+                    src: t % cfg.topo.num_gpus(),
+                })
+                .collect();
+            let plan = dispatcher.dispatch(lp, layer, &batch, &mut rng);
+            let at = round as f64;
+            eng.demand_pass(layer, &plan, &mut backend, &cfg.topo, at);
+            eng.prefetch_pass(layer, &plan, lp, &mut backend, &cfg.topo,
+                              at);
+            for gpu in 0..eng.num_tiers() {
+                assert!(eng.occupancy(gpu) <= budget,
+                        "GPU {gpu} tier holds {} > budget {budget} at \
+                         round {round} layer {layer}",
+                        eng.occupancy(gpu));
+            }
+        }
+    }
+    assert!(eng.stats().evictions > 0,
+            "a {budget}-expert budget under {}-expert demand must evict",
+            cfg.model.experts);
+    assert!(eng.stats().prefetches > 0,
+            "prediction never fired over 8 correlated rounds");
+    eng.finish();
+    assert!(eng.stats().wasted_bytes <= eng.stats().prefetch_bytes,
+            "waste cannot exceed what was prefetched");
+}
+
+// --- determinism ------------------------------------------------------------
+
+#[test]
+fn prefetch_metrics_are_deterministic_across_reruns() {
+    let mut cfg = small_sim(CommBackendKind::Des);
+    cfg.prefetch = Some(PrefetchConfig::default());
+    let sys = SystemSpec::grace(0.15);
+    let placement = build_placement(&sys, &cfg);
+    let (a, ca) = simulate_with_contention(&sys, &cfg, &placement);
+    let (b, cb) = simulate_with_contention(&sys, &cfg, &placement);
+    assert_eq!(a.prefetch, b.prefetch,
+               "staging counters diverge across reruns");
+    assert_eq!(a.e2e_time, b.e2e_time);
+    assert_eq!(a.a2a_time, b.a2a_time);
+    let (ca, cb) = (ca.expect("DES reports"), cb.expect("DES reports"));
+    assert_eq!(ca.event_digest, cb.event_digest,
+               "event logs diverge across reruns");
+    assert!(ca.transfers > 0);
+}
+
+// --- validation -------------------------------------------------------------
+
+#[test]
+fn degenerate_prefetch_configs_fail_loudly() {
+    let ok = PrefetchConfig::default();
+    assert!(ok.validate(64).is_ok());
+    assert!(PrefetchConfig { weight_budget: 0, ..ok }
+                .validate(64)
+                .is_err(),
+            "--weight-budget 0 must be rejected");
+    assert!(PrefetchConfig { k: 0, ..ok }.validate(64).is_err(),
+            "zero prediction depth must be rejected");
+    assert!(PrefetchConfig { k: 65, ..ok }.validate(64).is_err(),
+            "--prefetch-k past the expert count must be rejected");
+    assert!(PrefetchConfig { alpha: f64::NAN, ..ok }
+                .validate(64)
+                .is_err(),
+            "NaN alpha must be rejected");
+    assert!(PrefetchConfig { alpha: 0.0, ..ok }.validate(64).is_err());
+    assert!(PrefetchConfig { alpha: 1.5, ..ok }.validate(64).is_err());
+}
